@@ -1,0 +1,79 @@
+//! Table 9-style ablation of LoCo's components on a fine-tuning run:
+//! error feedback, moving average, error compression, reset frequency.
+//!
+//!     cargo run --release --example ablation -- [--steps N]
+
+use loco::compress::{CompressorConfig, Method};
+use loco::optim::{LrSchedule, OptimConfig, OptimizerKind};
+use loco::report::Table;
+use loco::train::{TrainConfig, Trainer};
+
+fn variant(name: &'static str, f: impl Fn(&mut CompressorConfig)) -> (&'static str, CompressorConfig) {
+    let mut c = CompressorConfig {
+        s: (1u32 << 17) as f32,
+        ..CompressorConfig::with_method(Method::Loco)
+    };
+    f(&mut c);
+    (name, c)
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let steps: u64 = if argv.len() == 2 && argv[0] == "--steps" {
+        argv[1].parse()?
+    } else {
+        150
+    };
+
+    // pretrain once, then fine-tune under each ablation (matching the
+    // paper's fine-tune protocol for Table 9)
+    println!("pretraining base checkpoint ({steps} steps)...");
+    let mut pre = TrainConfig::new("tiny");
+    pre.nodes = 4;
+    pre.steps = steps;
+    pre.optim = OptimConfig { kind: OptimizerKind::Adam, ..Default::default() };
+    pre.lr = LrSchedule { base: 3e-3, warmup: 10, total: steps, min_ratio: 0.1 };
+    pre.compressor.method = Method::Bf16;
+    let ckpt = Trainer::new(pre).run()?.final_params;
+
+    let variants = vec![
+        variant("LoCo1 (no error feedback)", |c| c.no_error_feedback = true),
+        variant("LoCo2 (EF, no avg, no reset)", |c| {
+            c.no_moving_average = true;
+            c.reset_interval = 0;
+        }),
+        variant("LoCo3 (EF+avg, no reset)", |c| c.reset_interval = 0),
+        variant("LoCo4 (no error compression)", |c| {
+            c.error_bits = 32;
+            c.reset_interval = 512;
+        }),
+        variant("LoCo5 (full, Tc=512)", |c| c.reset_interval = 512),
+        variant("LoCo6 (full, Tc=128)", |c| c.reset_interval = 128),
+    ];
+
+    let mut table = Table::new(
+        &format!("Table 9 analogue — fine-tune ablation, {steps} steps"),
+        &["variant", "final train", "final val", "enc state bytes"],
+    );
+    for (name, comp) in variants {
+        let mut cfg = TrainConfig::new("tiny");
+        cfg.nodes = 4;
+        cfg.steps = steps;
+        cfg.eval_every = (steps / 3).max(1);
+        cfg.optim = OptimConfig { kind: OptimizerKind::Adam, ..Default::default() };
+        cfg.lr = LrSchedule { base: 1e-3, warmup: 5, total: steps, min_ratio: 0.2 };
+        cfg.compressor = comp;
+        cfg.init_params = Some(ckpt.clone());
+        cfg.corpus_noise = Some(0.1); // shifted distribution = "fine-tune task"
+        let m = Trainer::new(cfg).run()?.metrics;
+        table.row(vec![
+            name.into(),
+            format!("{:.4}", m.train_loss.tail_mean(5)),
+            format!("{:.4}", m.val_loss.last().unwrap_or(f64::NAN)),
+            m.compressor_state_bytes.to_string(),
+        ]);
+        println!("{name}: done");
+    }
+    println!("\n{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,149 @@
+//! End-to-end validation driver (DESIGN.md §5): pre-train a transformer LM
+//! from scratch on the synthetic corpus across N in-process nodes with
+//! LoCo 4-bit communication, log the loss curve + throughput + wire bytes,
+//! and (optionally) run the 16-bit Adam control for comparison.
+//!
+//!     # small default (fits in seconds)
+//!     cargo run --release --example e2e_pretrain
+//!     # the full run recorded in EXPERIMENTS.md (~20M params):
+//!     make artifacts-big && cargo run --release --example e2e_pretrain -- \
+//!         --model base20m --steps 300 --nodes 4 --compare --csv runs/e2e.csv
+
+use std::path::PathBuf;
+
+use loco::compress::{CompressorConfig, Method};
+use loco::optim::{LrSchedule, OptimConfig, OptimizerKind};
+use loco::train::{TrainConfig, Trainer};
+use loco::util::human_bytes;
+
+struct Args {
+    model: String,
+    steps: u64,
+    nodes: usize,
+    accum: usize,
+    method: Method,
+    compare: bool,
+    csv: Option<PathBuf>,
+    lr: f32,
+}
+
+fn parse_args() -> Args {
+    let mut a = Args {
+        model: "small".into(),
+        steps: 200,
+        nodes: 4,
+        accum: 1,
+        method: Method::Loco,
+        compare: false,
+        csv: Some(PathBuf::from("runs/e2e.csv")),
+        lr: 1e-3,
+    };
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--model" => {
+                i += 1;
+                a.model = argv[i].clone();
+            }
+            "--steps" => {
+                i += 1;
+                a.steps = argv[i].parse().expect("steps");
+            }
+            "--nodes" => {
+                i += 1;
+                a.nodes = argv[i].parse().expect("nodes");
+            }
+            "--accum" => {
+                i += 1;
+                a.accum = argv[i].parse().expect("accum");
+            }
+            "--lr" => {
+                i += 1;
+                a.lr = argv[i].parse().expect("lr");
+            }
+            "--method" => {
+                i += 1;
+                a.method = Method::parse(&argv[i]).expect("method");
+            }
+            "--compare" => a.compare = true,
+            "--csv" => {
+                i += 1;
+                a.csv = Some(PathBuf::from(&argv[i]));
+            }
+            other => panic!("unknown arg {other}"),
+        }
+        i += 1;
+    }
+    a
+}
+
+fn run_one(a: &Args, method: Method) -> anyhow::Result<loco::metrics::RunMetrics> {
+    let mut cfg = TrainConfig::new(&a.model);
+    cfg.nodes = a.nodes;
+    cfg.steps = a.steps;
+    cfg.accum = a.accum;
+    cfg.eval_every = (a.steps / 6).max(1);
+    cfg.log_every = (a.steps / 50).max(1);
+    cfg.optim = OptimConfig { kind: OptimizerKind::Adam, ..Default::default() };
+    cfg.lr = LrSchedule { base: a.lr, warmup: a.steps / 20 + 5, total: a.steps, min_ratio: 0.1 };
+    cfg.compressor = CompressorConfig {
+        s: (1u32 << 17) as f32,
+        ..CompressorConfig::with_method(method)
+    };
+    Ok(Trainer::new(cfg).run()?.metrics)
+}
+
+fn main() -> anyhow::Result<()> {
+    let a = parse_args();
+    println!(
+        "== e2e pretrain: model={} nodes={} steps={} accum={} method={} ==",
+        a.model,
+        a.nodes,
+        a.steps,
+        a.accum,
+        a.method.name()
+    );
+
+    let m = run_one(&a, a.method)?;
+    println!("loss curve ({} points):", m.train_loss.points.len());
+    for &(step, loss) in &m.train_loss.points {
+        println!("  step {step:>5}  train {loss:.4}");
+    }
+    for &(step, loss) in &m.val_loss.points {
+        println!("  step {step:>5}  VAL   {loss:.4}");
+    }
+    println!(
+        "\n{}: {:.0} tokens/s | wall {:.1}s | wire {} ({:.2}x vs fp32) | compressor state {}",
+        a.method.name(),
+        m.tokens_per_sec,
+        m.elapsed,
+        human_bytes(m.comm_bytes),
+        m.compression_ratio(),
+        human_bytes(m.compressor_state_bytes as u64),
+    );
+    if let Some(csv) = &a.csv {
+        m.write_csv(csv)?;
+        println!("wrote {}", csv.display());
+    }
+
+    if a.compare {
+        println!("\nrunning 16-bit Adam control...");
+        let c = run_one(&a, Method::Bf16)?;
+        println!(
+            "control bf16: final train {:.4} (LoCo {:.4}), val {:.4} (LoCo {:.4}), wire {} (LoCo {})",
+            c.train_loss.tail_mean(5),
+            m.train_loss.tail_mean(5),
+            c.val_loss.last().unwrap_or(f64::NAN),
+            m.val_loss.last().unwrap_or(f64::NAN),
+            human_bytes(c.comm_bytes),
+            human_bytes(m.comm_bytes),
+        );
+        if let Some(csv) = &a.csv {
+            let ctrl = csv.with_extension("control.csv");
+            c.write_csv(&ctrl)?;
+            println!("wrote {}", ctrl.display());
+        }
+    }
+    Ok(())
+}

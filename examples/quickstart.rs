@@ -1,0 +1,45 @@
+//! Quickstart: train a tiny transformer with LoCo-Adam on 4 in-process
+//! nodes and compare the wire traffic against 16-bit Adam.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use loco::compress::{CompressorConfig, Method};
+use loco::optim::{LrSchedule, OptimConfig, OptimizerKind};
+use loco::train::{TrainConfig, Trainer};
+use loco::util::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = TrainConfig::new("tiny");
+    cfg.nodes = 4;
+    cfg.steps = 60;
+    cfg.eval_every = 20;
+    cfg.optim = OptimConfig { kind: OptimizerKind::Adam, ..Default::default() };
+    cfg.lr = LrSchedule { base: 3e-3, warmup: 10, total: 60, min_ratio: 0.2 };
+
+    println!("== LoCo quickstart: tiny GPT, 4 nodes, Zero-2 sharding ==\n");
+    let mut rows = Vec::new();
+    for method in [Method::Bf16, Method::Loco] {
+        let mut c = cfg.clone();
+        c.compressor = CompressorConfig {
+            s: (1u32 << 17) as f32,
+            ..CompressorConfig::with_method(method)
+        };
+        let r = Trainer::new(c).run()?;
+        let m = r.metrics;
+        println!(
+            "{:6}  train loss {:.4}  val loss {:.4}  grad+param wire {:>10}  state {:>9}",
+            method.name(),
+            m.train_loss.tail_mean(3),
+            m.val_loss.last().unwrap_or(f64::NAN),
+            human_bytes(m.comm_bytes),
+            human_bytes(m.compressor_state_bytes as u64),
+        );
+        rows.push((method, m));
+    }
+    let ratio = rows[0].1.comm_bytes as f64 / rows[1].1.comm_bytes as f64;
+    println!(
+        "\nLoCo moved {ratio:.2}x fewer bytes than 16-bit Adam at matching loss \
+         (4-bit gradients + int8 error store, Algorithm 1)."
+    );
+    Ok(())
+}

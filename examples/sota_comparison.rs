@@ -1,0 +1,73 @@
+//! Fig. 2-style comparison: loss curves of low-bit communication methods
+//! against the 16-bit baseline on a from-scratch pre-train (synthetic
+//! corpus substitution — DESIGN.md). Writes one CSV per method to runs/.
+//!
+//!     cargo run --release --example sota_comparison -- [--steps N] [--model tiny]
+
+use loco::compress::{CompressorConfig, Method};
+use loco::optim::{LrSchedule, OptimConfig, OptimizerKind};
+use loco::report::Table;
+use loco::train::{TrainConfig, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut steps: u64 = 200;
+    let mut model = "tiny".to_string();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--steps" => {
+                i += 1;
+                steps = argv[i].parse()?;
+            }
+            "--model" => {
+                i += 1;
+                model = argv[i].clone();
+            }
+            other => anyhow::bail!("unknown arg {other}"),
+        }
+        i += 1;
+    }
+
+    let methods: Vec<(&str, Method, u32)> = vec![
+        ("adam-16bit", Method::Bf16, 16),
+        ("loco-4bit", Method::Loco, 4),
+        ("loco-1bit", Method::Loco, 1),
+        ("onebit-adam", Method::OneBit, 1),
+        ("zeropp-4bit", Method::Zeropp, 4),
+        ("loco-zeropp", Method::LocoZeropp, 4),
+    ];
+
+    let mut table = Table::new(
+        &format!("Fig. 2 analogue — {model}, {steps} steps, 4 nodes"),
+        &["method", "bits", "final train", "final val", "wire bytes"],
+    );
+    for (name, method, bits) in methods {
+        let mut cfg = TrainConfig::new(&model);
+        cfg.nodes = 4;
+        cfg.steps = steps;
+        cfg.eval_every = (steps / 5).max(1);
+        cfg.log_every = (steps / 50).max(1);
+        cfg.optim = OptimConfig { kind: OptimizerKind::Adam, ..Default::default() };
+        cfg.lr = LrSchedule { base: 3e-3, warmup: steps / 10 + 5, total: steps, min_ratio: 0.1 };
+        cfg.compressor = CompressorConfig {
+            bits,
+            s: (1u32 << 17) as f32,
+            ..CompressorConfig::with_method(method)
+        };
+        let m = Trainer::new(cfg).run()?.metrics;
+        let csv = std::path::PathBuf::from(format!("runs/fig2_{name}.csv"));
+        m.write_csv(&csv)?;
+        table.row(vec![
+            name.into(),
+            bits.to_string(),
+            format!("{:.4}", m.train_loss.tail_mean(5)),
+            format!("{:.4}", m.val_loss.last().unwrap_or(f64::NAN)),
+            loco::util::human_bytes(m.comm_bytes),
+        ]);
+        println!("{name}: done ({:.1}s)", m.elapsed);
+    }
+    println!("\n{}", table.render());
+    println!("per-step curves in runs/fig2_*.csv");
+    Ok(())
+}

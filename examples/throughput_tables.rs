@@ -1,0 +1,86 @@
+//! Print the analytic reproductions of the paper's speed & memory tables
+//! (Tables 1, 7/11, 8, 10/12) — no training, instant.
+//!
+//!     cargo run --release --example throughput_tables
+
+use loco::model::analytic_model;
+use loco::netsim::throughput::{
+    analytic_throughput, paper_speedup, predict_speedup, ACCUMS, PAPER_BASELINES,
+};
+use loco::netsim::{self, A100, A100_ROCE, A800_IB};
+use loco::report::Table;
+
+fn main() {
+    // Table 1
+    println!("{}", netsim::table1::render(7e9, 64.0, 25e9, 4.0).render());
+
+    // Tables 7/11/12 (fit mode)
+    let mut t = Table::new(
+        "Tables 7/11/12 — LoCo speedup over 16-bit Adam (fitted model vs paper)",
+        &["model", "cluster", "gpus", "accum", "paper", "model", "err(pp)"],
+    );
+    let mut errs = Vec::new();
+    for row in PAPER_BASELINES {
+        for (i, &a) in ACCUMS.iter().enumerate() {
+            let paper = paper_speedup(row, i) - 1.0;
+            let pred = predict_speedup(row, a, "loco") - 1.0;
+            errs.push((pred - paper).abs());
+            t.row(vec![
+                row.model.into(),
+                row.cluster.into(),
+                row.gpus.to_string(),
+                format!("{a:.0}"),
+                format!("{:.2}%", 100.0 * paper),
+                format!("{:.2}%", 100.0 * pred),
+                format!("{:+.2}", 100.0 * (pred - paper)),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "mean |model - paper| = {:.2}pp over {} cells\n",
+        100.0 * errs.iter().sum::<f64>() / errs.len() as f64,
+        errs.len()
+    );
+
+    // Table 8
+    let mut t8 = Table::new(
+        "Table 8 — peak memory (GB)",
+        &["model", "framework", "Adam (paper)", "LoCo (paper)", "LoCo (model)", "err"],
+    );
+    for row in netsim::memory::PAPER_MEMORY {
+        let pred = netsim::memory::predict_loco_peak(row.framework, row.params, row.adam_gb);
+        t8.row(vec![
+            row.model.into(),
+            row.framework.into(),
+            format!("{:.1}", row.adam_gb),
+            format!("{:.1}", row.loco_gb),
+            format!("{:.1}", pred),
+            format!("{:+.1}%", 100.0 * (pred - row.loco_gb) / row.loco_gb),
+        ]);
+    }
+    println!("{}", t8.render());
+
+    // First-principles sanity (analytic mode)
+    let mut ta = Table::new(
+        "Analytic mode (first principles, A800-IB, accum 1, mbs 4096 tokens/GPU)",
+        &["model", "gpus", "adam tok/s", "loco tok/s", "speedup", "comm frac (adam)"],
+    );
+    for name in ["llama2-7b", "llama2-13b", "llama2-70b", "mixtral-8x7b"] {
+        let m = analytic_model(name).unwrap();
+        for gpus in [32usize, 64, 128] {
+            let (adam, frac) = analytic_throughput(m, A100, A800_IB, gpus, 4096.0, 1.0, "adam");
+            let (lo, _) = analytic_throughput(m, A100, A800_IB, gpus, 4096.0, 1.0, "loco");
+            ta.row(vec![
+                name.into(),
+                gpus.to_string(),
+                format!("{adam:.0}"),
+                format!("{lo:.0}"),
+                format!("{:.2}%", 100.0 * (lo / adam - 1.0)),
+                format!("{:.2}", frac),
+            ]);
+        }
+    }
+    println!("{}", ta.render());
+    let _ = A100_ROCE;
+}

@@ -1,0 +1,131 @@
+"""AOT build: lower L2/L1 JAX graphs to HLO *text* artifacts for Rust.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the XLA
+the published `xla` 0.1.6 crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts per model config:
+  artifacts/model_<cfg>_train.hlo.txt  (params..., tokens) -> (loss, grads...)
+  artifacts/model_<cfg>_eval.hlo.txt   (params..., tokens) -> (loss,)
+  artifacts/model_<cfg>.manifest       ordered param table for Rust
+
+Plus the standalone L1 kernel (used by Rust for parity checks against its
+native hot path and as an optional XLA-executed quantization route):
+  artifacts/loco_step_<block>.hlo.txt  (g, e, s, s_e, beta, reset) -> (q4, e')
+
+Usage:  cd python && python -m compile.aot [--configs tiny,small,moe_tiny]
+                                           [--out-dir ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import CONFIGS, ModelConfig, make_eval_fn, make_train_fn, \
+    param_count, param_spec
+from compile.kernels.loco_quant import loco_step
+
+DEFAULT_CONFIGS = "tiny,small,moe_tiny"
+DEFAULT_KERNEL_BLOCKS = (65536,)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_if_changed(path: str, text: str) -> bool:
+    if os.path.exists(path):
+        with open(path) as f:
+            if f.read() == text:
+                return False
+    with open(path, "w") as f:
+        f.write(text)
+    return True
+
+
+def manifest_text(cfg: ModelConfig) -> str:
+    lines = [
+        "# loco model manifest v1",
+        f"config {cfg.name}",
+        f"vocab {cfg.vocab}",
+        f"batch {cfg.batch}",
+        f"seq {cfg.seq}",
+        f"n_layers {cfg.n_layers}",
+        f"d_model {cfg.d_model}",
+        f"n_heads {cfg.n_heads}",
+        f"d_ff {cfg.d_ff}",
+        f"n_experts {cfg.n_experts}",
+        f"top_k {cfg.top_k}",
+        f"param_count {param_count(cfg)}",
+        f"params {len(param_spec(cfg))}",
+    ]
+    for name, shape in param_spec(cfg):
+        lines.append(f"{name} f32 {','.join(str(s) for s in shape)}")
+    return "\n".join(lines) + "\n"
+
+
+def build_model(cfg: ModelConfig, out_dir: str) -> None:
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in param_spec(cfg)]
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+
+    for kind, fn in (("train", make_train_fn(cfg)), ("eval", make_eval_fn(cfg))):
+        lowered = jax.jit(fn).lower(*specs, tok)
+        path = os.path.join(out_dir, f"model_{cfg.name}_{kind}.hlo.txt")
+        changed = write_if_changed(path, to_hlo_text(lowered))
+        print(f"  {path} {'(written)' if changed else '(up-to-date)'}")
+
+    mpath = os.path.join(out_dir, f"model_{cfg.name}.manifest")
+    write_if_changed(mpath, manifest_text(cfg))
+    print(f"  {mpath}")
+
+
+def build_loco_kernel(block: int, out_dir: str) -> None:
+    g = jax.ShapeDtypeStruct((block,), jnp.float32)
+    e = jax.ShapeDtypeStruct((block,), jnp.int8)
+    scalar_f = jax.ShapeDtypeStruct((), jnp.float32)
+    scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(g, e, s, s_e, beta, reset):
+        return loco_step(g, e, s, s_e, beta, reset, block=block)
+
+    lowered = jax.jit(fn).lower(g, e, scalar_f, scalar_f, scalar_f, scalar_i)
+    path = os.path.join(out_dir, f"loco_step_{block}.hlo.txt")
+    changed = write_if_changed(path, to_hlo_text(lowered))
+    print(f"  {path} {'(written)' if changed else '(up-to-date)'}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--configs", default=DEFAULT_CONFIGS,
+                    help=f"comma list of {sorted(CONFIGS)}")
+    ap.add_argument("--kernel-blocks", default=",".join(
+        str(b) for b in DEFAULT_KERNEL_BLOCKS))
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) ignored")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name in filter(None, args.configs.split(",")):
+        cfg = CONFIGS[name]
+        print(f"config {name}: {param_count(cfg):,} params")
+        build_model(cfg, args.out_dir)
+    for block in filter(None, args.kernel_blocks.split(",")):
+        build_loco_kernel(int(block), args.out_dir)
+    # stamp file lets `make` treat the whole artifact set as one target
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

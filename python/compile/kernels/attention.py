@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: blocked causal attention used inside the L2 model.
+
+Forward is a Pallas kernel (one grid cell per (batch, head); the whole
+[T, Dh] tile for that head lives in VMEM — at the sequence lengths this
+repo trains (T <= 512, Dh <= 64) the T x T logits tile fits comfortably:
+512*512*4 B = 1 MiB). Backward is a dense jnp recomputation registered via
+jax.custom_vjp, the standard pattern for differentiating through Pallas
+kernels (pallas_call has no automatic transpose rule).
+
+TPU adaptation: the CUDA flash-attention original streams K/V tiles through
+shared memory per threadblock; on TPU the analogous schedule is a BlockSpec
+that pins one (batch, head) Q/K/V tile in VMEM and lets the MXU consume the
+[T, Dh] x [Dh, T] matmul directly in bf16/f32. interpret=True lowers it to
+plain HLO (mandatory on CPU PJRT — see loco_quant.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_fwd_kernel(q_ref, k_ref, v_ref, o_ref):
+    """Causal attention for a single (batch, head) tile: [T, Dh]."""
+    q = q_ref[0, :, 0, :]
+    k = k_ref[0, :, 0, :]
+    v = v_ref[0, :, 0, :]
+    t, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    logits = jnp.dot(q, k.T) * scale
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    logits = jnp.where(cols <= rows, logits, NEG_INF)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    o_ref[0, :, 0, :] = jnp.dot(p, v)
+
+
+def _attn_fwd_pallas(q, k, v):
+    b, t, h, dh = q.shape
+    spec = pl.BlockSpec((1, t, 1, dh), lambda i, j: (i, 0, j, 0))
+    return pl.pallas_call(
+        _attn_fwd_kernel,
+        grid=(b, h),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, t, h, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+@jax.custom_vjp
+def causal_attention(q, k, v):
+    """softmax(q k^T / sqrt(Dh) + causal mask) v over [B, T, H, Dh]."""
+    return _attn_fwd_pallas(q, k, v)
+
+
+def _fwd(q, k, v):
+    return _attn_fwd_pallas(q, k, v), (q, k, v)
+
+
+def _bwd(res, do):
+    q, k, v = res
+    t = q.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    logits = jnp.where(mask[None, None, :, :], logits, NEG_INF)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / p.sum(axis=-1, keepdims=True)           # [B,H,Q,K]
+    dv = jnp.einsum("bhqk,bqhd->bkhd", p, do)
+    dp = jnp.einsum("bqhd,bkhd->bhqk", do, v)
+    dlogit = p * (dp - (dp * p).sum(axis=-1, keepdims=True))
+    dq = jnp.einsum("bhqk,bkhd->bqhd", dlogit, k) * scale
+    dk = jnp.einsum("bhqk,bqhd->bkhd", dlogit, q) * scale
+    return dq, dk, dv
+
+
+causal_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: fused LoCo compensate -> 4-bit quantize -> error update.
+
+This is the paper's compute hot-spot: Algorithm 1 steps 1-2 applied to a
+gradient shard right before communication. One fused pass over the shard
+
+    e_f   = deq(e_q; s_e)                 # stored int8 error -> fp32
+    h     = g + e_f                       # compensation (Eqn. 2)
+    q4    = clip(round(h * s), -8, 7)     # 4-bit code (Eqn. 3)
+    e~    = (1-b) e_f + b (h - q4/s)      # moving average  (Eqn. 5)
+    e_q'  = reset ? 0 : clip(round(e~ * s_e), -128, 127)   # (Eqn. 7)
+
+reads 5 bytes/element (fp32 grad + int8 error) and writes 2 bytes/element
+(two int8 streams; the wire format packs q4 to 4 bits afterwards) — i.e. it
+is strictly bandwidth-bound with zero MXU work.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the CUDA original is an
+elementwise grid-stride kernel; here the HBM<->VMEM schedule is expressed
+with a 1-D grid over BLOCK-sized tiles via BlockSpec, scalars riding along
+as (1,)-blocks mapped to the same origin for every tile. interpret=True is
+mandatory on this image: real TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute; with interpret=True the kernel lowers to
+plain HLO and runs on any backend with identical numerics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile: 64Ki elements. VMEM estimate per tile (fp32 in, int8 err in,
+# 2x int8 out, fp32 intermediates): ~ 64Ki * (4+1+2+8) B = 960 KiB, double
+# buffered < 2 MiB — comfortably inside a 16 MiB VMEM budget.
+BLOCK = 65536
+
+
+def _loco_kernel(g_ref, e_ref, s_ref, se_ref, beta_ref, reset_ref,
+                 q_ref, enew_ref):
+    """Elementwise fused LoCo step over one BLOCK tile."""
+    s = s_ref[0]
+    se = se_ref[0]
+    beta = beta_ref[0]
+    reset = reset_ref[0]
+
+    g = g_ref[...]
+    e_f = e_ref[...].astype(jnp.float32) / se
+    h = g + e_f
+    q = jnp.clip(jnp.round(h * s), -8.0, 7.0)
+    d = q / s
+    e_tilde = (1.0 - beta) * e_f + beta * (h - d)
+    e_new = jnp.clip(jnp.round(e_tilde * se), -128.0, 127.0)
+    e_new = jnp.where(reset > 0, jnp.zeros_like(e_new), e_new)
+
+    q_ref[...] = q.astype(jnp.int8)
+    enew_ref[...] = e_new.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def loco_step(g, e_q, s, s_e, beta, reset, *, block: int = BLOCK):
+    """Fused LoCo step over a flat fp32 shard whose length % block == 0.
+
+    Args:
+      g:     fp32[n] local gradient shard (n divisible by `block`).
+      e_q:   int8[n] stored compensation error.
+      s, s_e, beta: fp32 scalars (passed as shape-(1,) arrays or scalars).
+      reset: int32 scalar/1-vector; nonzero zeroes the stored error.
+
+    Returns (q4 int8[n] in [-8,7], e_new int8[n]).
+    """
+    n = g.shape[0]
+    assert n % block == 0, f"shard length {n} not a multiple of {block}"
+    grid = (n // block,)
+
+    as1 = lambda x, dt: jnp.asarray(x, dt).reshape((1,))
+    s = as1(s, jnp.float32)
+    s_e = as1(s_e, jnp.float32)
+    beta = as1(beta, jnp.float32)
+    reset = as1(reset, jnp.int32)
+
+    data_spec = pl.BlockSpec((block,), lambda i: (i,))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+
+    return pl.pallas_call(
+        _loco_kernel,
+        grid=grid,
+        in_specs=[data_spec, data_spec,
+                  scalar_spec, scalar_spec, scalar_spec, scalar_spec],
+        out_specs=[data_spec, data_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int8),
+            jax.ShapeDtypeStruct((n,), jnp.int8),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(g, e_q, s, s_e, beta, reset)
+
+
+def vmem_bytes(block: int = BLOCK) -> int:
+    """Static VMEM footprint estimate for one tile (for DESIGN §Perf)."""
+    per_elem = 4 + 1 + 1 + 1 + 4 + 4  # g, e_q, q4, e_new, h, e_tilde
+    return block * per_elem

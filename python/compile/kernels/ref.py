@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness baseline).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy ops only. pytest checks the Pallas kernels
+(interpret=True) against these oracles over shape/dtype/parameter sweeps,
+and the Rust hot path is checked against the same semantics through the
+AOT-compiled artifacts.
+
+Numerical contract shared with the Rust implementation (rust/src/quant):
+  * rounding is round-half-to-even (jnp.round / f32::round_ties_even),
+  * int4 range is [-8, 7], int8 range is [-128, 127],
+  * the error moving average is computed from the *dequantized* stored
+    error (the 8-bit e_k), matching the memory-efficient variant the paper
+    deploys (Sec. 3.2: "LoCo maintains only a local average of the
+    compressed errors ... stored in 8-bit format").
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT4_MIN, INT4_MAX = -8.0, 7.0
+INT8_MIN, INT8_MAX = -128.0, 127.0
+
+
+def quantize(x: jnp.ndarray, scale: float, bits: int) -> jnp.ndarray:
+    """compressor(h; s, p) = round_p-bit(h * s)  (Eqn. 1), as int8 values."""
+    lo, hi = (INT4_MIN, INT4_MAX) if bits == 4 else (INT8_MIN, INT8_MAX)
+    return jnp.clip(jnp.round(x * scale), lo, hi).astype(jnp.int8)
+
+
+def dequantize(q: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """decompressor(q; s) = float(q) / s  (Eqn. 1)."""
+    return q.astype(jnp.float32) / scale
+
+
+def loco_step_ref(g, e_q, s, s_e, beta, reset):
+    """One LoCo compensate -> quantize -> error-update step (Algorithm 1).
+
+    Args:
+      g:     fp32 local gradient shard.
+      e_q:   int8 stored compensation error (quantized with scale s_e).
+      s:     gradient quantization scale (4-bit).
+      s_e:   error quantization scale (8-bit).
+      beta:  moving-average coefficient (Eqn. 5).
+      reset: bool — if True, the returned stored error is zeroed (Eqn. 7).
+
+    Returns:
+      q4:      int8 array holding the 4-bit codes in [-8, 7] (wire format;
+               the Rust side nibble-packs two codes per byte).
+      e_new_q: int8 updated stored error.
+    """
+    e_f = dequantize(e_q, s_e)                      # Eqn. (2) decompress
+    h = g + e_f                                     # Eqn. (2) compensate
+    q4 = quantize(h, s, bits=4)                     # Eqn. (3)
+    d = dequantize(q4, s)                           # Alg. 1 line 7
+    e_tilde = (1.0 - beta) * e_f + beta * (h - d)   # Eqn. (5)
+    e_new_q = jnp.where(
+        reset,
+        jnp.zeros_like(e_q),
+        quantize(e_tilde, s_e, bits=8),             # Eqn. (7)
+    )
+    return q4, e_new_q
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Dense causal attention oracle: softmax(q k^T / sqrt(dh)) v.
+
+    Shapes: q,k,v = [T, H, Dh] (single sequence); returns [T, H, Dh].
+    """
+    t = q.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    logits = jnp.einsum("qhd,khd->hqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        logits = jnp.where(mask[None, :, :], logits, -1e30)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,khd->qhd", probs, v)

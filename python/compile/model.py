@@ -1,0 +1,220 @@
+"""L2: JAX transformer LM (dense + MoE) forward/backward for AOT lowering.
+
+The model is a LLAMA-style decoder (RMSNorm, SwiGLU MLP, causal attention
+via the L1 Pallas kernel) with learned positional embeddings, plus a
+Mixtral-style top-2 routed MoE variant (dense expert compute with gating
+masks — exact at the tiny scales we train, and it lowers to static HLO).
+
+Parameters are an ordered *list* of fp32 arrays. The same order is written
+to the artifact manifest so the Rust coordinator can allocate, initialize,
+shard, and feed them positionally. The lowered `train` graph maps
+
+    (p_0 ... p_{P-1}, tokens[i32 B,T]) -> (loss, g_0 ... g_{P-1})
+
+and the `eval` graph maps (params, tokens) -> (loss,).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import causal_attention
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq: int
+    batch: int
+    n_experts: int = 0   # 0 => dense MLP
+    top_k: int = 2
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+
+# Model zoo. `tiny`/`small`/`moe_tiny` drive the convergence experiments
+# (Fig. 2, Tables 3/4/5/9 analogues); `base20m`/`base100m` drive the
+# end-to-end example. 7B-70B configs exist only analytically in rust netsim.
+CONFIGS = {
+    "tiny": ModelConfig("tiny", vocab=512, d_model=64, n_layers=2,
+                        n_heads=4, d_ff=192, seq=64, batch=8),
+    "small": ModelConfig("small", vocab=2048, d_model=128, n_layers=4,
+                         n_heads=4, d_ff=384, seq=128, batch=8),
+    "moe_tiny": ModelConfig("moe_tiny", vocab=512, d_model=64, n_layers=2,
+                            n_heads=4, d_ff=128, seq=64, batch=8,
+                            n_experts=8, top_k=2),
+    "base20m": ModelConfig("base20m", vocab=4096, d_model=384, n_layers=8,
+                           n_heads=6, d_ff=1024, seq=256, batch=4),
+    "base100m": ModelConfig("base100m", vocab=8192, d_model=768, n_layers=12,
+                            n_heads=12, d_ff=2048, seq=256, batch=2),
+}
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the contract shared with Rust."""
+    d, f, v, t = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_emb", (v, d)),
+        ("pos_emb", (t, d)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "ln1", (d,)),
+            (p + "wq", (d, d)),
+            (p + "wk", (d, d)),
+            (p + "wv", (d, d)),
+            (p + "wo", (d, d)),
+            (p + "ln2", (d,)),
+        ]
+        if cfg.is_moe:
+            e = cfg.n_experts
+            spec += [
+                (p + "router", (d, e)),
+                (p + "w_gate", (e, d, f)),
+                (p + "w_up", (e, d, f)),
+                (p + "w_down", (e, f, d)),
+            ]
+        else:
+            spec += [
+                (p + "w_gate", (d, f)),
+                (p + "w_up", (d, f)),
+                (p + "w_down", (f, d)),
+            ]
+    spec += [("ln_f", (d,)), ("head", (d, v))]
+    return spec
+
+
+def param_count(cfg: ModelConfig) -> int:
+    total = 0
+    for _, shape in param_spec(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total
+
+
+def init_params(cfg: ModelConfig, key) -> List[jnp.ndarray]:
+    """Scaled-normal init; Rust re-implements this bit-exactly is NOT
+    required — rust does its own init and both sides only exchange HLO."""
+    params = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 0.02 if "emb" in name else 1.0 / jnp.sqrt(fan_in)
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _rmsnorm(x, w, eps=1e-5):
+    rms = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x / rms * w
+
+
+def _dense_mlp(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def _moe_mlp(x, router, w_gate, w_up, w_down, top_k: int):
+    """Top-k routed SwiGLU experts, computed densely with a gating mask.
+
+    x: [N, d]; router: [d, E]; experts stacked on axis 0.
+    Exact top-k gating (renormalized softmax over selected experts), as in
+    Mixtral; dense compute keeps the lowered HLO static.
+    """
+    logits = x @ router                              # [N, E]
+    e = logits.shape[-1]
+    # top-k via iterated argmax: jax.lax.top_k lowers to a sort op with a
+    # `largest=` attribute that the xla_extension 0.5.1 HLO parser rejects;
+    # argmax lowers to a plain reduce and round-trips cleanly.
+    mask = jnp.zeros_like(logits)
+    masked_logits = logits
+    for _ in range(top_k):
+        idx = jnp.argmax(masked_logits, axis=-1)
+        hot = jax.nn.one_hot(idx, e, dtype=x.dtype)
+        mask = mask + hot
+        masked_logits = masked_logits - hot * 1e30
+    masked = jnp.where(mask > 0, logits, -1e30)
+    gates = jax.nn.softmax(masked, axis=-1) * mask   # renormalized, [N, E]
+    # [E, N, f] = silu(x @ w_gate[e]) * (x @ w_up[e])
+    hidden = jax.nn.silu(jnp.einsum("nd,edf->enf", x, w_gate))
+    hidden = hidden * jnp.einsum("nd,edf->enf", x, w_up)
+    out = jnp.einsum("enf,efd->end", hidden, w_down)  # [E, N, d]
+    return jnp.einsum("ne,end->nd", gates, out)
+
+
+def forward_loss(params: List[jnp.ndarray], tokens: jnp.ndarray,
+                 cfg: ModelConfig) -> jnp.ndarray:
+    """Mean next-token cross-entropy over a [B, T] int32 batch."""
+    it = iter(params)
+    nxt = lambda: next(it)
+    b, t = tokens.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+
+    tok_emb, pos_emb = nxt(), nxt()
+    x = tok_emb[tokens] + pos_emb[None, :t, :]
+
+    for _ in range(cfg.n_layers):
+        ln1, wq, wk, wv, wo, ln2 = nxt(), nxt(), nxt(), nxt(), nxt(), nxt()
+        y = _rmsnorm(x, ln1)
+        q = (y @ wq).reshape(b, t, h, dh)
+        k = (y @ wk).reshape(b, t, h, dh)
+        v = (y @ wv).reshape(b, t, h, dh)
+        attn = causal_attention(q, k, v).reshape(b, t, d)
+        x = x + attn @ wo
+        y = _rmsnorm(x, ln2)
+        if cfg.is_moe:
+            router, w_gate, w_up, w_down = nxt(), nxt(), nxt(), nxt()
+            flat = y.reshape(b * t, d)
+            x = x + _moe_mlp(flat, router, w_gate, w_up, w_down,
+                             cfg.top_k).reshape(b, t, d)
+        else:
+            w_gate, w_up, w_down = nxt(), nxt(), nxt()
+            x = x + _dense_mlp(y, w_gate, w_up, w_down)
+
+    ln_f, head = nxt(), nxt()
+    x = _rmsnorm(x, ln_f)
+    logits = x[:, :-1, :] @ head                      # [B, T-1, V]
+    targets = tokens[:, 1:]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def make_train_fn(cfg: ModelConfig):
+    """(params..., tokens) -> (loss, grads...) for jit/lowering."""
+    def train_fn(*args):
+        params = list(args[:-1])
+        tokens = args[-1]
+        loss, grads = jax.value_and_grad(
+            lambda p: forward_loss(p, tokens, cfg))(params)
+        return tuple([loss] + list(grads))
+    return train_fn
+
+
+def make_eval_fn(cfg: ModelConfig):
+    def eval_fn(*args):
+        params = list(args[:-1])
+        tokens = args[-1]
+        return (forward_loss(params, tokens, cfg),)
+    return eval_fn

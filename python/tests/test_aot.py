@@ -1,0 +1,69 @@
+"""AOT build contract: manifests match param_spec, HLO text is emitted in
+the parser-compatible dialect, rebuilds are idempotent."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.model import CONFIGS, param_count, param_spec
+
+
+def test_manifest_matches_param_spec():
+    for name, cfg in CONFIGS.items():
+        text = aot.manifest_text(cfg)
+        lines = [l for l in text.splitlines() if l and not l.startswith("#")]
+        kv = dict(l.split(" ", 1) for l in lines if len(l.split()) == 2)
+        assert int(kv["param_count"]) == param_count(cfg)
+        assert int(kv["params"]) == len(param_spec(cfg))
+        # tensor lines in order
+        tensor_lines = lines[12:]  # 12 header key-value lines
+        assert len(tensor_lines) == len(param_spec(cfg))
+        for line, (pname, shape) in zip(tensor_lines, param_spec(cfg)):
+            toks = line.split()
+            assert toks[0] == pname
+            assert toks[1] == "f32"
+            assert toks[2] == ",".join(str(s) for s in shape)
+
+
+def test_write_if_changed_is_idempotent():
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "x.txt")
+        assert aot.write_if_changed(p, "hello")
+        assert not aot.write_if_changed(p, "hello")
+        assert aot.write_if_changed(p, "world")
+
+
+def test_hlo_text_has_no_unparseable_attrs():
+    """xla_extension 0.5.1's HLO parser rejects some modern attributes
+    (e.g. sort's `largest=`); the emitted text must avoid them."""
+    cfg = CONFIGS["moe_tiny"]
+    from compile.model import make_eval_fn
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in param_spec(cfg)]
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+    lowered = jax.jit(make_eval_fn(cfg)).lower(*specs, tok)
+    text = aot.to_hlo_text(lowered)
+    assert "largest=" not in text, "top_k sort attr breaks the 0.5.1 parser"
+    assert text.startswith("HloModule")
+
+
+def test_loco_kernel_lowering_shapes():
+    with tempfile.TemporaryDirectory() as d:
+        aot.build_loco_kernel(256, d)
+        path = os.path.join(d, "loco_step_256.hlo.txt")
+        text = open(path).read()
+        assert "HloModule" in text
+        assert "s8[256]" in text  # int8 outputs present
+
+
+@pytest.mark.parametrize("name", ["tiny"])
+def test_full_model_build_smoke(name):
+    with tempfile.TemporaryDirectory() as d:
+        aot.build_model(CONFIGS[name], d)
+        for kind in ("train", "eval"):
+            p = os.path.join(d, f"model_{name}_{kind}.hlo.txt")
+            assert os.path.getsize(p) > 1000
+        assert os.path.exists(os.path.join(d, f"model_{name}.manifest"))

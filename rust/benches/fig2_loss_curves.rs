@@ -1,0 +1,94 @@
+//! Bench: regenerate Fig. 2 — loss curves of low-bit methods vs 16-bit
+//! Adam on from-scratch pre-training.
+//!
+//! (a) GPT-class dense model: 16-bit Adam vs 4-bit LoCo vs 1-bit LoCo vs
+//!     1-bit (sign-EF) Adam — paper: 4-bit LoCo ≈ 16-bit Adam, 1-bit LoCo
+//!     beats 1-bit baselines.
+//! (b/c) Zero++ vs LoCo-Zero++ vs 16-bit AdamW — paper: LoCo-Zero++
+//!     recovers the quality Zero++ loses.
+//!
+//! Writes runs/fig2_<series>_<method>.csv; steps via LOCO_BENCH_STEPS.
+
+use loco::compress::{CompressorConfig, Method};
+use loco::optim::OptimizerKind;
+use loco::report::Table;
+
+#[path = "common.rs"]
+mod common;
+use common::{bench_steps, quality_cfg, run};
+
+fn main() {
+    let steps = bench_steps(200);
+    let mut results: Vec<(String, f64, f64)> = Vec::new();
+
+    // ---- series (a): dense GPT-class ---------------------------------
+    let series_a: Vec<(&str, Method, u32)> = vec![
+        ("adam-16bit", Method::Bf16, 16),
+        ("loco-4bit", Method::Loco, 4),
+        ("loco-1bit", Method::Loco, 1),
+        ("1bit-adam", Method::OneBit, 1),
+    ];
+    let mut ta = Table::new(
+        &format!("Fig 2(a) — dense GPT-class from scratch, {steps} steps"),
+        &["method", "final train", "final val"],
+    );
+    for (name, method, bits) in series_a {
+        let cfg = quality_cfg(
+            "tiny",
+            steps,
+            OptimizerKind::Adam,
+            CompressorConfig { bits, ..CompressorConfig::with_method(method) },
+        );
+        let m = run(cfg);
+        m.write_csv(std::path::Path::new(&format!("runs/fig2_a_{name}.csv"))).ok();
+        let (tr, va) = (m.train_loss.tail_mean(5), m.val_loss.last().unwrap_or(f64::NAN));
+        ta.row(vec![name.into(), format!("{tr:.4}"), format!("{va:.4}")]);
+        results.push((name.into(), tr, va));
+        eprintln!("{name}: {tr:.4} / {va:.4}");
+    }
+    println!("{}", ta.render());
+
+    // ---- series (b): Zero++ family (LLaMA2-from-scratch analogue) ----
+    let series_b: Vec<(&str, Method)> = vec![
+        ("adamw-16bit", Method::Bf16),
+        ("zeropp-4bit", Method::Zeropp),
+        ("loco-zeropp", Method::LocoZeropp),
+    ];
+    let mut tb = Table::new(
+        &format!("Fig 2(b,c) — Zero++ family from scratch, {steps} steps"),
+        &["method", "final train", "final val"],
+    );
+    for (name, method) in series_b {
+        let cfg = quality_cfg(
+            "tiny",
+            steps,
+            OptimizerKind::AdamW,
+            CompressorConfig::with_method(method),
+        );
+        let m = run(cfg);
+        m.write_csv(std::path::Path::new(&format!("runs/fig2_b_{name}.csv"))).ok();
+        let (tr, va) = (m.train_loss.tail_mean(5), m.val_loss.last().unwrap_or(f64::NAN));
+        tb.row(vec![name.into(), format!("{tr:.4}"), format!("{va:.4}")]);
+        results.push((name.into(), tr, va));
+        eprintln!("{name}: {tr:.4} / {va:.4}");
+    }
+    println!("{}", tb.render());
+
+    // ---- shape checks matching the paper's reading of Fig. 2 ----------
+    let loss = |n: &str| results.iter().find(|(m, _, _)| m == n).unwrap().1;
+    // 4-bit LoCo within a small margin of 16-bit Adam. At this tiny scale
+    // a single global s leaves a ~0.1-nat gap (gradient scale drifts over
+    // training far more than on the paper's GPT2-345M); the block-scaled
+    // LoCo-Zero++ row below closes it to ~0.02 — see EXPERIMENTS.md.
+    assert!(
+        loss("loco-4bit") - loss("adam-16bit") < 0.15,
+        "4-bit LoCo should track 16-bit Adam: {} vs {}",
+        loss("loco-4bit"),
+        loss("adam-16bit")
+    );
+    // 4-bit LoCo at least as good as 1-bit LoCo
+    assert!(loss("loco-4bit") <= loss("loco-1bit") + 0.02);
+    // LoCo-Zero++ at least as good as plain Zero++
+    assert!(loss("loco-zeropp") <= loss("zeropp-4bit") + 0.02);
+    println!("fig2 shape checks OK");
+}

@@ -1,0 +1,114 @@
+//! §Perf micro-benchmarks: the L3 hot paths (fused LoCo step, nibbled
+//! wire, dequantize-accumulate, bf16 conversion, collectives, and the L2
+//! PJRT train step). Reports ns/elem and effective GB/s against the
+//! memory-bandwidth roofline.
+//!
+//! LOCO_BENCH_FAST=1 shrinks everything for CI-style smoke runs.
+
+use loco::collective::run_cluster;
+use loco::compress::fp::f32_to_bf16;
+use loco::quant::{self, LocoParams};
+use loco::sharding::Partition;
+use loco::util::rng::Rng;
+use loco::util::timer::bench_seconds;
+
+fn main() {
+    let fast = std::env::var("LOCO_BENCH_FAST").is_ok();
+    let n: usize = if fast { 1 << 16 } else { 1 << 22 }; // 4M elems
+    let min_t = if fast { 0.05 } else { 0.4 };
+    let mut rng = Rng::new(1);
+    let mut g = vec![0.0f32; n];
+    rng.fill_normal(&mut g, 0.1);
+    let p = LocoParams { s: 16.0, s_e: 64.0, beta: 0.125, bits: 4 };
+
+    println!("== hotpath µbenchmarks (n = {n} elements) ==\n");
+    let report = |name: &str, bytes_per_elem: f64, st: loco::util::timer::BenchStats| {
+        let ns_per_elem = st.mean * 1e9 / n as f64;
+        let gbps = bytes_per_elem * n as f64 / st.mean / 1e9;
+        println!("{name:34} {:>16}  {ns_per_elem:6.3} ns/elem  {gbps:7.2} GB/s", st.display());
+    };
+
+    // 1. fused LoCo step (scalar codes out)
+    let mut e = vec![0i8; n];
+    let mut q = vec![0i8; n];
+    report("loco_step (fused, unpacked)", 4.0 + 1.0 + 1.0 + 1.0, bench_seconds(|| {
+        quant::loco_step(&g, &mut e, &mut q, p, false);
+    }, min_t));
+
+    // 2. fused LoCo step with packed wire output
+    let mut e2 = vec![0i8; n];
+    let mut packed = Vec::with_capacity(n / 2);
+    report("loco_step_packed (wire format)", 4.0 + 1.0 + 1.0 + 0.5, bench_seconds(|| {
+        quant::loco_step_packed(&g, &mut e2, &mut packed, p, false);
+    }, min_t));
+
+    // 3. plain quantize (no EF) for comparison
+    let mut q3 = vec![0i8; n];
+    report("quantize_slice_i4", 5.0, bench_seconds(|| {
+        quant::quantize_slice_i4(&g, p.s, &mut q3);
+    }, min_t));
+
+    // 4. receiver: dequantize-accumulate from packed wire
+    let wire = quant::pack_nibbles(&q3);
+    let mut acc = vec![0.0f32; n];
+    report("dequantize_accumulate_packed", 0.5 + 8.0, bench_seconds(|| {
+        quant::dequantize_accumulate_packed(&wire, n, p.s, &mut acc);
+    }, min_t));
+
+    // 5. bf16 conversion (param sync path)
+    let mut bf = vec![0u16; n];
+    report("f32 -> bf16", 6.0, bench_seconds(|| {
+        for (o, &x) in bf.iter_mut().zip(&g) {
+            *o = f32_to_bf16(x);
+        }
+    }, min_t));
+
+    // 6. pack/unpack alone
+    report("pack_nibbles", 1.5, bench_seconds(|| {
+        let _ = quant::pack_nibbles(&q3);
+    }, min_t));
+
+    // 7. collectives (4 nodes, in-process)
+    let cn: usize = if fast { 1 << 14 } else { 1 << 20 };
+    for nodes in [2usize, 4, 8] {
+        let part = Partition::flat_even(cn, nodes, 2);
+        let ranges = part.ranges.clone();
+        let st = bench_seconds(|| {
+            let r = ranges.clone();
+            run_cluster(nodes, move |ctx| {
+                let mut buf = vec![1.0f32; cn];
+                ctx.ring_reduce_scatter(&mut buf, &r);
+            });
+        }, min_t.min(0.2));
+        println!(
+            "ring_reduce_scatter n={nodes} ({cn} f32)   {:>16}  {:6.2} GB/s agg",
+            st.display(),
+            (nodes * (nodes - 1) * (cn / nodes) * 4) as f64 / st.mean / 1e9
+        );
+    }
+
+    // 8. L2 PJRT train step (tiny model) — end-to-end gradient latency
+    let art = loco::runtime::artifacts_dir();
+    if art.join("model_tiny.manifest").exists() {
+        let engine = loco::runtime::Engine::load(&art, "tiny", false).expect("engine");
+        let params = engine.meta.init_params(0);
+        let corpus = loco::data::Corpus::new(loco::data::CorpusConfig::for_vocab(
+            engine.meta.vocab,
+            1,
+        ));
+        let tokens =
+            corpus.batch(loco::data::Split::Train, 0, 0, engine.meta.batch, engine.meta.seq);
+        let mut grad = vec![0.0f32; engine.meta.layout.total];
+        let st = bench_seconds(|| {
+            engine.train_step(&params, &tokens, &mut grad).expect("step");
+        }, min_t);
+        let toks = (engine.meta.batch * engine.meta.seq) as f64;
+        println!(
+            "pjrt train_step (tiny, fwd+bwd)    {:>16}  {:7.0} tokens/s/node",
+            st.display(),
+            toks / st.mean
+        );
+    } else {
+        println!("(skipping pjrt step bench — run `make artifacts`)");
+    }
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Table 1 (analytic method comparison) and verify the
+//! orderings the paper draws from it.
+
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    // evaluate at the paper's typical operating point
+    for (psi, n) in [(7e9, 64.0), (13e9, 128.0)] {
+        let t = loco::netsim::table1::render(psi, n, 25e9, 4.0);
+        println!("{}", t.render());
+    }
+
+    // assertions the narrative depends on
+    let rows = loco::netsim::table1::ROWS;
+    let get = |n: &str| rows.iter().find(|r| r.name == n).unwrap();
+    let (p, n, b, r) = (7e9, 64.0, 25e9, 4.0);
+    assert!((get("LoCo-Adam").comm_time)(p, n, b, r) < (get("Adam").comm_time)(p, n, b, r));
+    assert!((get("LoCo-Adam").memory)(p, n, r) < (get("1-bit Adam").memory)(p, n, r));
+    assert!(get("LoCo-Adam").collective && get("LoCo-Adam").sharding);
+    assert!(!get("EF").collective && !get("EF").sharding);
+    println!("table1 orderings OK");
+}

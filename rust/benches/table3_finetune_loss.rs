@@ -1,0 +1,57 @@
+//! Bench: Table 3 — fine-tuning train/val losses of 4-bit LoCo vs the
+//! 16-bit baseline for Adam / AdamW / Adafactor, starting from a shared
+//! pretrained checkpoint on a shifted corpus (the fine-tune "dataset").
+
+use loco::compress::{CompressorConfig, Method};
+use loco::optim::OptimizerKind;
+use loco::report::Table;
+
+#[path = "common.rs"]
+mod common;
+use common::{bench_steps, pretrain_checkpoint, quality_cfg, run};
+
+fn main() {
+    let steps = bench_steps(120);
+    eprintln!("pretraining shared checkpoint...");
+    let ckpt = pretrain_checkpoint("tiny", steps);
+
+    let mut t = Table::new(
+        &format!("Table 3 analogue — fine-tuning losses, {steps} steps"),
+        &["optimizer", "loss", "baseline (16-bit)", "LoCo (4-bit)", "Δ"],
+    );
+    for opt in [OptimizerKind::Adam, OptimizerKind::AdamW, OptimizerKind::Adafactor] {
+        let mut results = Vec::new();
+        for method in [Method::Bf16, Method::Loco] {
+            let mut cfg = quality_cfg("tiny", steps, opt, CompressorConfig::with_method(method));
+            cfg.init_params = Some(ckpt.clone());
+            cfg.corpus_noise = Some(0.1); // fine-tune distribution shift
+            cfg.lr.base = 1e-3;
+            results.push(run(cfg));
+            eprintln!("{} {}: done", opt.name(), method.name());
+        }
+        let (base, loco) = (&results[0], &results[1]);
+        for (kind, b, l) in [
+            ("train", base.train_loss.tail_mean(5), loco.train_loss.tail_mean(5)),
+            (
+                "val",
+                base.val_loss.last().unwrap_or(f64::NAN),
+                loco.val_loss.last().unwrap_or(f64::NAN),
+            ),
+        ] {
+            t.row(vec![
+                opt.name().into(),
+                kind.into(),
+                format!("{b:.4}"),
+                format!("{l:.4}"),
+                format!("{:+.4}", l - b),
+            ]);
+            assert!(
+                (l - b).abs() < 0.15,
+                "{} {kind}: LoCo {l} vs baseline {b}",
+                opt.name()
+            );
+        }
+    }
+    println!("{}", t.render());
+    println!("table3 parity OK");
+}

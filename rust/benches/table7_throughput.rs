@@ -1,0 +1,75 @@
+//! Bench: regenerate Tables 7/10/11/12 — LoCo speedup over 16-bit Adam
+//! across model sizes, GPU counts, interconnects, and accumulation
+//! numbers, from the fitted step-time model (see netsim::throughput).
+//!
+//! Prints paper-vs-model speedups for every cell and checks the paper's
+//! qualitative claims: larger models gain more, lower bandwidth gains
+//! more, more GPUs gain more, less accumulation gains more.
+
+use loco::netsim::throughput::{
+    paper_speedup, predict_speedup, FitModel, ACCUMS, PAPER_BASELINES,
+};
+use loco::report::Table;
+
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let mut t = Table::new(
+        "Tables 7/11 (Megatron-LM) + 10/12 (FSDP MoE) — LoCo speedup vs 16-bit Adam",
+        &["model", "cluster", "gpus", "accum", "paper tok/s (adam)", "paper", "model", "err(pp)"],
+    );
+    let mut errs = Vec::new();
+    for row in PAPER_BASELINES {
+        for (i, &a) in ACCUMS.iter().enumerate() {
+            let paper = paper_speedup(row, i) - 1.0;
+            let pred = predict_speedup(row, a, "loco") - 1.0;
+            errs.push((pred - paper).abs());
+            t.row(vec![
+                row.model.into(),
+                row.cluster.into(),
+                row.gpus.to_string(),
+                format!("{a:.0}"),
+                format!("{:.1}", row.adam[i]),
+                format!("{:.2}%", 100.0 * paper),
+                format!("{:.2}%", 100.0 * pred),
+                format!("{:+.2}", 100.0 * (pred - paper)),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    let mean = errs.iter().sum::<f64>() / errs.len() as f64;
+    println!("mean |model-paper| speedup error: {:.2}pp over {} cells", 100.0 * mean, errs.len());
+    assert!(mean < 0.05, "fit degraded: {mean}");
+
+    // --- the paper's qualitative claims -------------------------------
+    let pick = |model: &str, cluster: &str, gpus: usize| {
+        PAPER_BASELINES
+            .iter()
+            .find(|r| r.model == model && r.cluster == cluster && r.gpus == gpus)
+            .unwrap()
+    };
+    // (1) bigger model => bigger speedup (13B vs 7B, A800, 128 GPUs)
+    assert!(
+        predict_speedup(pick("llama2-13b", "a800-ib", 128), 1.0, "loco")
+            > predict_speedup(pick("llama2-7b", "a800-ib", 128), 1.0, "loco")
+    );
+    // (2) lower bandwidth => bigger speedup
+    assert!(
+        predict_speedup(pick("llama2-7b", "a800-ib", 64), 1.0, "loco")
+            > predict_speedup(pick("llama2-7b", "a100-roce", 64), 1.0, "loco")
+    );
+    // (3) more GPUs => bigger speedup
+    assert!(
+        predict_speedup(pick("llama2-13b", "a800-ib", 128), 1.0, "loco")
+            > predict_speedup(pick("llama2-13b", "a800-ib", 32), 1.0, "loco")
+    );
+    // (4) less accumulation => bigger speedup
+    let row = pick("mixtral-8x7b", "a800-ib", 64);
+    assert!(predict_speedup(row, 1.0, "loco") > predict_speedup(row, 4.0, "loco"));
+    // (5) comm fraction rises with GPU count in the fit
+    let f32g = FitModel::fit(&ACCUMS.iter().cloned().zip(pick("llama2-13b", "a800-ib", 32).adam).collect::<Vec<_>>());
+    let f128g = FitModel::fit(&ACCUMS.iter().cloned().zip(pick("llama2-13b", "a800-ib", 128).adam).collect::<Vec<_>>());
+    assert!(f128g.comm_fraction() > f32g.comm_fraction());
+    println!("qualitative claims (1)-(5) OK");
+}

@@ -1,0 +1,522 @@
+//! In-process collective communication substrate.
+//!
+//! N "GPU nodes" are OS threads connected by a full mesh of mpsc channels.
+//! The byte counters record exactly what each payload would occupy on a
+//! real wire (packed int4, int8 + scales, bf16, fp32 — see
+//! [`WireMsg::wire_bytes`]), so compression ratios measured here transfer
+//! directly to the paper's setting.
+//!
+//! Implemented collectives (Appendix A.1 of the paper):
+//! * [`NodeCtx::ring_reduce_scatter`] — N−1 ring steps, each node ends up
+//!   with the fully-reduced chunk it owns;
+//! * [`NodeCtx::all_gather`] — ring all-gather of the owned shards;
+//! * [`NodeCtx::all_to_all`] — pairwise exchange (LoCo's low-bit gradient
+//!   path, Sec. 3.3: gather low-bit shards, average locally in fp32);
+//! * [`NodeCtx::tree_all_reduce`] / `tree_all_reduce_scalar` — binary-tree
+//!   reduce + broadcast (metrics, PowerSGD factor averaging);
+//! * [`NodeCtx::broadcast`] and [`NodeCtx::barrier`].
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use crate::compress::WireMsg;
+
+/// Anything that can travel between nodes.
+pub enum Payload {
+    F32(Vec<f32>),
+    F64(f64),
+    Wire(WireMsg),
+    Unit,
+}
+
+impl Payload {
+    /// Bytes this payload would occupy on a real interconnect.
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Payload::F32(v) => 4 * v.len() as u64,
+            Payload::F64(_) => 8,
+            Payload::Wire(w) => w.wire_bytes() as u64,
+            Payload::Unit => 0,
+        }
+    }
+
+    fn into_f32(self) -> Vec<f32> {
+        match self {
+            Payload::F32(v) => v,
+            _ => panic!("expected F32 payload"),
+        }
+    }
+
+    fn into_wire(self) -> WireMsg {
+        match self {
+            Payload::Wire(w) => w,
+            _ => panic!("expected Wire payload"),
+        }
+    }
+
+    fn into_f64(self) -> f64 {
+        match self {
+            Payload::F64(x) => x,
+            _ => panic!("expected F64 payload"),
+        }
+    }
+}
+
+/// Shared per-cluster counters.
+#[derive(Default)]
+pub struct Counters {
+    /// bytes sent per node
+    pub sent: Vec<AtomicU64>,
+    /// messages sent per node
+    pub msgs: Vec<AtomicU64>,
+}
+
+impl Counters {
+    fn new(n: usize) -> Arc<Self> {
+        Arc::new(Counters {
+            sent: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            msgs: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        })
+    }
+
+    pub fn total_sent(&self) -> u64 {
+        self.sent.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Per-node handle: rank, channels to every peer, byte counters.
+pub struct NodeCtx {
+    pub rank: usize,
+    pub n: usize,
+    tx: Vec<Sender<Payload>>,
+    rx: Vec<Receiver<Payload>>,
+    pub counters: Arc<Counters>,
+}
+
+impl NodeCtx {
+    pub fn send(&self, dst: usize, p: Payload) {
+        self.counters.sent[self.rank].fetch_add(p.wire_bytes(), Ordering::Relaxed);
+        self.counters.msgs[self.rank].fetch_add(1, Ordering::Relaxed);
+        self.tx[dst].send(p).expect("peer hung up");
+    }
+
+    pub fn recv(&self, src: usize) -> Payload {
+        self.rx[src].recv().expect("peer hung up")
+    }
+
+    /// Pairwise all-to-all: `msgs[j]` goes to node j; returns the messages
+    /// received from every source (own message passes through untouched).
+    pub fn all_to_all(&self, mut msgs: Vec<WireMsg>) -> Vec<WireMsg> {
+        assert_eq!(msgs.len(), self.n);
+        // stagger sends to avoid head-of-line ordering artifacts
+        for off in 1..self.n {
+            let dst = (self.rank + off) % self.n;
+            let msg = std::mem::replace(&mut msgs[dst], WireMsg::F32(Vec::new()));
+            self.send(dst, Payload::Wire(msg));
+        }
+        let mut out: Vec<Option<WireMsg>> = (0..self.n).map(|_| None).collect();
+        out[self.rank] = Some(std::mem::replace(
+            &mut msgs[self.rank],
+            WireMsg::F32(Vec::new()),
+        ));
+        for off in 1..self.n {
+            let src = (self.rank + self.n - off) % self.n;
+            out[src] = Some(self.recv(src).into_wire());
+        }
+        out.into_iter().map(Option::unwrap).collect()
+    }
+
+    /// Ring reduce-scatter over a full-length buffer cut by `ranges`.
+    /// On return, `buf[ranges[rank]]` holds the sum over all nodes; other
+    /// regions hold partial sums (callers treat them as scratch).
+    pub fn ring_reduce_scatter(&self, buf: &mut [f32], ranges: &[Range<usize>]) {
+        let n = self.n;
+        if n == 1 {
+            return;
+        }
+        let right = (self.rank + 1) % n;
+        let left = (self.rank + n - 1) % n;
+        // at step s, send chunk (rank - s - 1), receive chunk (rank - s - 2);
+        // after n-1 steps node `rank` owns the fully-reduced chunk `rank`.
+        for s in 0..n - 1 {
+            let send_chunk = (self.rank + 2 * n - s - 1) % n;
+            let recv_chunk = (self.rank + 2 * n - s - 2) % n;
+            let seg = buf[ranges[send_chunk].clone()].to_vec();
+            self.send(right, Payload::F32(seg));
+            let incoming = self.recv(left).into_f32();
+            let dst = &mut buf[ranges[recv_chunk].clone()];
+            debug_assert_eq!(incoming.len(), dst.len());
+            for (d, x) in dst.iter_mut().zip(incoming) {
+                *d += x;
+            }
+        }
+    }
+
+    /// Ring all-gather: each node contributes `buf[ranges[rank]]`; on
+    /// return every region of `buf` holds its owner's contribution.
+    pub fn all_gather(&self, buf: &mut [f32], ranges: &[Range<usize>]) {
+        let n = self.n;
+        if n == 1 {
+            return;
+        }
+        let right = (self.rank + 1) % n;
+        let left = (self.rank + n - 1) % n;
+        for s in 0..n - 1 {
+            let send_chunk = (self.rank + n - s) % n;
+            let recv_chunk = (self.rank + n - s - 1) % n;
+            let seg = buf[ranges[send_chunk].clone()].to_vec();
+            self.send(right, Payload::F32(seg));
+            let incoming = self.recv(left).into_f32();
+            let dst = &mut buf[ranges[recv_chunk].clone()];
+            dst.copy_from_slice(&incoming);
+        }
+    }
+
+    /// All-gather of opaque wire messages (low-bit parameter sync): node i
+    /// contributes `mine`; returns all contributions indexed by rank.
+    pub fn all_gather_wire(&self, mine: WireMsg) -> Vec<WireMsg> {
+        let n = self.n;
+        let right = (self.rank + 1) % n;
+        let left = (self.rank + n - 1) % n;
+        let mut out: Vec<Option<WireMsg>> = (0..n).map(|_| None).collect();
+        let mut carry = mine.clone();
+        out[self.rank] = Some(mine);
+        for s in 0..n - 1 {
+            self.send(right, Payload::Wire(carry));
+            let incoming = self.recv(left).into_wire();
+            let src = (self.rank + n - s - 1) % n;
+            out[src] = Some(incoming.clone());
+            carry = incoming;
+        }
+        out.into_iter().map(Option::unwrap).collect()
+    }
+
+    /// Binary-tree all-reduce (sum) of an f32 vector: reduce to rank 0 up a
+    /// binary tree, then broadcast back down.
+    pub fn tree_all_reduce(&self, buf: &mut [f32]) {
+        let n = self.n;
+        // reduce up
+        let mut stride = 1;
+        while stride < n {
+            if self.rank % (2 * stride) == 0 {
+                let src = self.rank + stride;
+                if src < n {
+                    let incoming = self.recv(src).into_f32();
+                    for (d, x) in buf.iter_mut().zip(incoming) {
+                        *d += x;
+                    }
+                }
+            } else if self.rank % (2 * stride) == stride {
+                let dst = self.rank - stride;
+                self.send(dst, Payload::F32(buf.to_vec()));
+                break; // sender leaves the reduce phase
+            }
+            stride *= 2;
+        }
+        // broadcast down (mirror the tree)
+        let mut strides = Vec::new();
+        let mut s = 1;
+        while s < n {
+            strides.push(s);
+            s *= 2;
+        }
+        for &stride in strides.iter().rev() {
+            if self.rank % (2 * stride) == 0 {
+                let dst = self.rank + stride;
+                if dst < n {
+                    self.send(dst, Payload::F32(buf.to_vec()));
+                }
+            } else if self.rank % (2 * stride) == stride {
+                let src = self.rank - stride;
+                let incoming = self.recv(src).into_f32();
+                buf.copy_from_slice(&incoming);
+            }
+        }
+    }
+
+    /// Tree all-reduce of one scalar (f64 for stable loss averaging).
+    pub fn tree_all_reduce_scalar(&self, x: f64) -> f64 {
+        let n = self.n;
+        let mut acc = x;
+        let mut stride = 1;
+        while stride < n {
+            if self.rank % (2 * stride) == 0 {
+                let src = self.rank + stride;
+                if src < n {
+                    acc += self.recv(src).into_f64();
+                }
+            } else if self.rank % (2 * stride) == stride {
+                self.send(self.rank - stride, Payload::F64(acc));
+                break;
+            }
+            stride *= 2;
+        }
+        let mut strides = Vec::new();
+        let mut s = 1;
+        while s < n {
+            strides.push(s);
+            s *= 2;
+        }
+        for &stride in strides.iter().rev() {
+            if self.rank % (2 * stride) == 0 {
+                let dst = self.rank + stride;
+                if dst < n {
+                    self.send(dst, Payload::F64(acc));
+                }
+            } else if self.rank % (2 * stride) == stride {
+                acc = self.recv(self.rank - stride).into_f64();
+            }
+        }
+        acc
+    }
+
+    /// Broadcast `buf` from `root` to everyone (simple star).
+    pub fn broadcast(&self, buf: &mut Vec<f32>, root: usize) {
+        if self.rank == root {
+            for dst in 0..self.n {
+                if dst != root {
+                    self.send(dst, Payload::F32(buf.clone()));
+                }
+            }
+        } else {
+            *buf = self.recv(root).into_f32();
+        }
+    }
+
+    /// Full barrier (tree scalar reduce of 0).
+    pub fn barrier(&self) {
+        self.tree_all_reduce_scalar(0.0);
+    }
+}
+
+/// Run `f(ctx)` on `n` node threads; returns the per-rank results in order.
+pub fn run_cluster<T: Send>(
+    n: usize,
+    f: impl Fn(NodeCtx) -> T + Send + Sync,
+) -> (Vec<T>, Arc<Counters>) {
+    assert!(n > 0);
+    let counters = Counters::new(n);
+    // mesh[src][dst]
+    let mut txs: Vec<Vec<Option<Sender<Payload>>>> =
+        (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+    let mut rxs: Vec<Vec<Option<Receiver<Payload>>>> =
+        (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+    for src in 0..n {
+        for dst in 0..n {
+            let (tx, rx) = std::sync::mpsc::channel();
+            txs[src][dst] = Some(tx);
+            rxs[dst][src] = Some(rx);
+        }
+    }
+    let mut ctxs: Vec<NodeCtx> = Vec::with_capacity(n);
+    for (rank, (tx_row, rx_row)) in txs.into_iter().zip(rxs).enumerate() {
+        ctxs.push(NodeCtx {
+            rank,
+            n,
+            tx: tx_row.into_iter().map(Option::unwrap).collect(),
+            rx: rx_row.into_iter().map(Option::unwrap).collect(),
+            counters: counters.clone(),
+        });
+    }
+    let results = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(n);
+        for ctx in ctxs {
+            let f = &f;
+            handles.push(scope.spawn(move || f(ctx)));
+        }
+        handles.into_iter().map(|h| h.join().expect("node panicked")).collect::<Vec<_>>()
+    });
+    (results, counters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sharding::Partition;
+    use crate::util::rng::Rng;
+
+    fn node_data(rank: usize, len: usize) -> Vec<f32> {
+        let mut rng = Rng::new(100 + rank as u64);
+        let mut v = vec![0.0f32; len];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    fn expected_sum(n: usize, len: usize) -> Vec<f32> {
+        let mut sum = vec![0.0f32; len];
+        for r in 0..n {
+            for (s, x) in sum.iter_mut().zip(node_data(r, len)) {
+                *s += x;
+            }
+        }
+        sum
+    }
+
+    #[test]
+    fn ring_reduce_scatter_sums_owned_chunk() {
+        for n in [1usize, 2, 3, 4, 7] {
+            let len = 96;
+            let part = Partition::flat_even(len, n, 2);
+            let ranges = part.ranges.clone();
+            let want = expected_sum(n, len);
+            let (results, _) = run_cluster(n, |ctx| {
+                let mut buf = node_data(ctx.rank, len);
+                ctx.ring_reduce_scatter(&mut buf, &ranges);
+                buf[ranges[ctx.rank].clone()].to_vec()
+            });
+            for (rank, shard) in results.iter().enumerate() {
+                let want_shard = &want[ranges[rank].clone()];
+                for (a, b) in shard.iter().zip(want_shard) {
+                    assert!((a - b).abs() < 1e-4, "n={n} rank={rank}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_distributes_shards() {
+        for n in [1usize, 2, 4, 5] {
+            let len = 60;
+            let part = Partition::flat_even(len, n, 2);
+            let ranges = part.ranges.clone();
+            let (results, _) = run_cluster(n, |ctx| {
+                let mut buf = vec![0.0f32; len];
+                let my = ranges[ctx.rank].clone();
+                for (i, x) in buf[my.clone()].iter_mut().enumerate() {
+                    *x = (ctx.rank * 1000 + i) as f32;
+                }
+                ctx.all_gather(&mut buf, &ranges);
+                buf
+            });
+            for buf in &results {
+                for (rank, r) in ranges.iter().enumerate() {
+                    for (i, idx) in r.clone().enumerate() {
+                        assert_eq!(buf[idx], (rank * 1000 + i) as f32);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_to_all_delivers_pairwise() {
+        let n = 4;
+        let (results, _) = run_cluster(n, |ctx| {
+            let msgs: Vec<WireMsg> = (0..n)
+                .map(|dst| WireMsg::F32(vec![(ctx.rank * 10 + dst) as f32]))
+                .collect();
+            let got = ctx.all_to_all(msgs);
+            got.into_iter()
+                .map(|m| match m {
+                    WireMsg::F32(v) => v[0],
+                    _ => panic!(),
+                })
+                .collect::<Vec<_>>()
+        });
+        for (rank, got) in results.iter().enumerate() {
+            for (src, &v) in got.iter().enumerate() {
+                assert_eq!(v, (src * 10 + rank) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn tree_all_reduce_matches_sum() {
+        for n in [1usize, 2, 3, 4, 6, 8] {
+            let len = 33;
+            let want = expected_sum(n, len);
+            let (results, _) = run_cluster(n, |ctx| {
+                let mut buf = node_data(ctx.rank, len);
+                ctx.tree_all_reduce(&mut buf);
+                buf
+            });
+            for buf in &results {
+                for (a, b) in buf.iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-4, "n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tree_scalar_all_reduce() {
+        for n in [1usize, 2, 5, 8] {
+            let (results, _) = run_cluster(n, |ctx| {
+                ctx.tree_all_reduce_scalar((ctx.rank + 1) as f64)
+            });
+            let want = (n * (n + 1) / 2) as f64;
+            for &r in &results {
+                assert_eq!(r, want, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_from_nonzero_root() {
+        let (results, _) = run_cluster(3, |ctx| {
+            let mut buf = if ctx.rank == 2 { vec![7.0, 8.0] } else { vec![] };
+            ctx.broadcast(&mut buf, 2);
+            buf
+        });
+        for r in results {
+            assert_eq!(r, vec![7.0, 8.0]);
+        }
+    }
+
+    #[test]
+    fn all_gather_wire_collects_everything() {
+        let n = 5;
+        let (results, _) = run_cluster(n, |ctx| {
+            let mine = WireMsg::F32(vec![ctx.rank as f32]);
+            ctx.all_gather_wire(mine)
+                .into_iter()
+                .map(|m| match m {
+                    WireMsg::F32(v) => v[0] as usize,
+                    _ => panic!(),
+                })
+                .collect::<Vec<_>>()
+        });
+        for got in results {
+            assert_eq!(got, (0..n).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn byte_counters_account_ring_volume() {
+        let n = 4;
+        let len = 64;
+        let part = Partition::flat_even(len, n, 2);
+        let ranges = part.ranges.clone();
+        let (_, counters) = run_cluster(n, |ctx| {
+            let mut buf = vec![1.0f32; len];
+            ctx.ring_reduce_scatter(&mut buf, &ranges);
+        });
+        // each node sends (n-1) chunks of len/n f32s
+        let expect = (n as u64) * (n as u64 - 1) * (len as u64 / n as u64) * 4;
+        assert_eq!(counters.total_sent(), expect);
+    }
+
+    #[test]
+    fn reduce_scatter_plus_gather_equals_tree_allreduce() {
+        // the two all-reduce decompositions agree
+        let n = 4;
+        let len = 80;
+        let part = Partition::flat_even(len, n, 2);
+        let ranges = part.ranges.clone();
+        let (results, _) = run_cluster(n, |ctx| {
+            let mut a = node_data(ctx.rank, len);
+            let mut b = a.clone();
+            ctx.ring_reduce_scatter(&mut a, &ranges);
+            ctx.all_gather(&mut a, &ranges);
+            ctx.tree_all_reduce(&mut b);
+            (a, b)
+        });
+        for (a, b) in results {
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-3);
+            }
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Block quantization (Zero++-style) and stochastic rounding (IntSGD-style)
+//! — the paper's no-error-feedback baselines.
+//!
+//! Zero++ quantizes each block of `block` consecutive elements with its own
+//! scale derived from the block max magnitude, so it adapts to gradient
+//! scale but accumulates bias over steps (no feedback) — exactly the
+//! degradation LoCo-Zero++ fixes in Fig. 2(b,c).
+
+use std::ops::Range;
+
+use super::{CompressorConfig, Encoder, WireMsg};
+use crate::quant;
+use crate::util::rng::Rng;
+
+/// Quantize `x` blockwise; returns (codes, per-block scales).
+/// scale_b = qmax / max|x_b| so the block max maps to the largest code.
+pub fn quantize_block(x: &[f32], block: usize, bits: u32) -> (Vec<i8>, Vec<f32>) {
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let n_blocks = x.len().div_ceil(block);
+    let mut codes = vec![0i8; x.len()];
+    let mut scales = vec![1.0f32; n_blocks];
+    for b in 0..n_blocks {
+        let lo = b * block;
+        let hi = (lo + block).min(x.len());
+        let maxabs = x[lo..hi].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let s = if maxabs > 0.0 { qmax / maxabs } else { 1.0 };
+        scales[b] = s;
+        for i in lo..hi {
+            codes[i] = quant::quantize(x[i], s, bits);
+        }
+    }
+    (codes, scales)
+}
+
+/// Dequantize a single element of a block-quantized buffer.
+#[inline(always)]
+pub fn dequantize_block(code: i8, scales: &[f32], i: usize, block: usize) -> f32 {
+    code as f32 / scales[i / block]
+}
+
+/// `acc += dequant(codes)` for a block-quantized message.
+pub fn dequantize_block_accumulate(codes: &[i8], scales: &[f32], block: usize, acc: &mut [f32]) {
+    debug_assert_eq!(codes.len(), acc.len());
+    for (b, &s) in scales.iter().enumerate() {
+        let lo = b * block;
+        let hi = (lo + block).min(codes.len());
+        let inv = 1.0 / s;
+        for i in lo..hi {
+            acc[i] += codes[i] as f32 * inv;
+        }
+    }
+}
+
+/// Zero++-style block quantization, no error feedback.
+pub struct BlockQuantEncoder {
+    cfg: CompressorConfig,
+}
+
+impl BlockQuantEncoder {
+    pub fn new(cfg: &CompressorConfig) -> Self {
+        BlockQuantEncoder { cfg: *cfg }
+    }
+}
+
+impl Encoder for BlockQuantEncoder {
+    fn encode(&mut self, grad: &[f32], range: Range<usize>, _step: u64) -> WireMsg {
+        let g = &grad[range];
+        let (codes, scales) = quantize_block(g, self.cfg.block, self.cfg.bits);
+        WireMsg::Block { codes, scales, block: self.cfg.block, bits: self.cfg.bits }
+    }
+
+    fn wire_bits_per_elem(&self) -> f64 {
+        self.cfg.bits as f64 + 32.0 / self.cfg.block as f64
+    }
+}
+
+/// IntSGD-style stochastic rounding with per-shard adaptive scale, no error
+/// feedback: unbiased in expectation but higher-variance than LoCo.
+pub struct StochasticQuantEncoder {
+    cfg: CompressorConfig,
+    rng: Rng,
+}
+
+impl StochasticQuantEncoder {
+    pub fn new(cfg: &CompressorConfig) -> Self {
+        StochasticQuantEncoder { cfg: *cfg, rng: Rng::new(0xC0FFEE) }
+    }
+}
+
+impl Encoder for StochasticQuantEncoder {
+    fn encode(&mut self, grad: &[f32], range: Range<usize>, _step: u64) -> WireMsg {
+        let g = &grad[range];
+        let qmax = ((1i32 << (self.cfg.bits - 1)) - 1) as f32;
+        let maxabs = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let s = if maxabs > 0.0 { qmax / maxabs } else { 1.0 };
+        let codes: Vec<i8> = g
+            .iter()
+            .map(|&x| {
+                let v = x * s;
+                let floor = v.floor();
+                let frac = v - floor;
+                let up = (self.rng.uniform() as f32) < frac;
+                let q = if up { floor + 1.0 } else { floor };
+                q.clamp(-(qmax + 1.0), qmax) as i8
+            })
+            .collect();
+        WireMsg::I8 { codes, scale: s, wire_bits: self.cfg.bits }
+    }
+
+    fn wire_bits_per_elem(&self) -> f64 {
+        self.cfg.bits as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{for_cases, vec_normal};
+
+    #[test]
+    fn block_quant_relative_error_small() {
+        for_cases(51, 32, |rng| {
+            let x = vec_normal(rng, 700, 0.3);
+            let (codes, scales) = quantize_block(&x, 64, 4);
+            let mut acc = vec![0.0f32; x.len()];
+            dequantize_block_accumulate(&codes, &scales, 64, &mut acc);
+            for (i, (&a, &b)) in x.iter().zip(&acc).enumerate() {
+                let blk = i / 64;
+                let step = 0.5 / scales[blk];
+                assert!((a - b).abs() <= step + 1e-6, "i={i}: {a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn block_scales_adapt_per_block() {
+        let mut x = vec![0.001f32; 128];
+        for v in x.iter_mut().skip(64) {
+            *v = 100.0;
+        }
+        let (_, scales) = quantize_block(&x, 64, 4);
+        assert!(scales[0] > 100.0 * scales[1]);
+    }
+
+    #[test]
+    fn block_handles_zero_block() {
+        let x = vec![0.0f32; 64];
+        let (codes, scales) = quantize_block(&x, 32, 4);
+        assert!(codes.iter().all(|&c| c == 0));
+        assert!(scales.iter().all(|s| s.is_finite()));
+    }
+
+    #[test]
+    fn block_handles_tail_block() {
+        let x = vec![1.0f32; 100]; // 100 = 3*32 + 4
+        let (codes, scales) = quantize_block(&x, 32, 4);
+        assert_eq!(scales.len(), 4);
+        let mut acc = vec![0.0f32; 100];
+        dequantize_block_accumulate(&codes, &scales, 32, &mut acc);
+        for &v in &acc {
+            assert!((v - 1.0).abs() < 0.08);
+        }
+    }
+
+    #[test]
+    fn stochastic_rounding_is_unbiased() {
+        let n = 200;
+        let g = vec![0.0301f32; n];
+        let cfg = CompressorConfig { bits: 4, ..Default::default() };
+        let mut enc = StochasticQuantEncoder::new(&cfg);
+        let mut sum = 0.0f64;
+        let reps = 300;
+        for k in 0..reps {
+            match enc.encode(&g, 0..n, k) {
+                WireMsg::I8 { codes, scale, .. } => {
+                    sum += codes.iter().map(|&c| c as f64 / scale as f64).sum::<f64>();
+                }
+                _ => panic!(),
+            }
+        }
+        let mean = sum / (reps as f64 * n as f64);
+        assert!((mean - 0.0301).abs() < 0.002, "mean {mean}");
+    }
+}

@@ -1,0 +1,97 @@
+//! Full-precision and bf16 "compression" — the paper's fp32 / 16-bit Adam
+//! communication baselines.
+
+use std::ops::Range;
+
+use super::{Encoder, WireMsg};
+
+/// f32 -> bf16 with round-to-nearest-even (the standard conversion).
+#[inline(always)]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    // round to nearest even on the truncated 16 bits
+    let round = ((bits >> 16) & 1).wrapping_add(0x7FFF);
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+/// bf16 -> f32 (exact).
+#[inline(always)]
+pub fn bf16_to_f32(u: u16) -> f32 {
+    f32::from_bits((u as u32) << 16)
+}
+
+/// Identity encoder: 32-bit floats on the wire.
+pub struct Fp32Encoder;
+
+impl Encoder for Fp32Encoder {
+    fn encode(&mut self, grad: &[f32], range: Range<usize>, _step: u64) -> WireMsg {
+        WireMsg::F32(grad[range].to_vec())
+    }
+
+    fn wire_bits_per_elem(&self) -> f64 {
+        32.0
+    }
+}
+
+/// bf16 encoder — "16-bit Adam" baseline.
+pub struct Bf16Encoder;
+
+impl Encoder for Bf16Encoder {
+    fn encode(&mut self, grad: &[f32], range: Range<usize>, _step: u64) -> WireMsg {
+        WireMsg::Bf16(grad[range].iter().map(|&x| f32_to_bf16(x)).collect())
+    }
+
+    fn wire_bits_per_elem(&self) -> f64 {
+        16.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{for_cases, vec_normal};
+
+    #[test]
+    fn bf16_roundtrip_exact_for_representable() {
+        for x in [0.0f32, 1.0, -2.0, 0.5, -0.25, 1024.0] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(x)), x);
+        }
+    }
+
+    #[test]
+    fn bf16_relative_error_bounded() {
+        for_cases(41, 64, |rng| {
+            for &x in &vec_normal(rng, 100, 10.0) {
+                let y = bf16_to_f32(f32_to_bf16(x));
+                let rel = if x == 0.0 { 0.0 } else { ((y - x) / x).abs() };
+                assert!(rel <= 1.0 / 128.0, "x={x} y={y}");
+            }
+        });
+    }
+
+    #[test]
+    fn bf16_rne_ties() {
+        // 1 + 2^-8 is exactly halfway between bf16(1.0) and the next value;
+        // RNE keeps the even mantissa (1.0)
+        let x = 1.0f32 + 2.0f32.powi(-8);
+        assert_eq!(bf16_to_f32(f32_to_bf16(x)), 1.0);
+    }
+
+    #[test]
+    fn bf16_handles_inf_nan() {
+        assert!(bf16_to_f32(f32_to_bf16(f32::INFINITY)).is_infinite());
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn encoders_slice_ranges() {
+        let g = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut e = Fp32Encoder;
+        match e.encode(&g, 1..3, 0) {
+            WireMsg::F32(v) => assert_eq!(v, vec![2.0, 3.0]),
+            _ => panic!(),
+        }
+        let mut b = Bf16Encoder;
+        assert_eq!(b.encode(&g, 1..3, 0).element_count(), 2);
+    }
+}

@@ -1,0 +1,437 @@
+//! Gradient compression: LoCo (Algorithm 1) and every baseline the paper
+//! compares against (Sec. 5): 16-bit (bf16), vanilla error feedback (EF),
+//! EF21, 1-bit sign compression (1-bit Adam style), Zero++ block
+//! quantization (no error feedback), LoCo-Zero++ (LoCo error feedback
+//! wrapped around block quantization), stochastic-rounding IntSGD, and
+//! PowerSGD (rank-r, in `powersgd`, used on the DDP path).
+//!
+//! The sender side is an [`Encoder`]: it sees the node's *full* flat
+//! gradient and compresses one destination shard `range` at a time, with
+//! any error state held internally at model size (as in the paper, where
+//! `e^n_k` has the same dimensionality as the model). The receiver side is
+//! a [`Decoder`]: it accumulates decoded shards from each source into an
+//! fp32 buffer (the high-precision local average of Eqn. 8 / the all2all
+//! strategy of Sec. 3.3). EF21 is the only stateful decoder.
+
+pub mod block;
+pub mod ef21;
+pub mod fp;
+pub mod loco;
+pub mod onebit;
+pub mod powersgd;
+
+use std::ops::Range;
+
+use crate::sharding::ParamLayout;
+
+/// Which compression scheme a run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// 32-bit float gradients (exact baseline).
+    Fp32,
+    /// bfloat16 gradients — the paper's "16-bit Adam" baseline.
+    Bf16,
+    /// LoCo (Algorithm 1): int8-stored error moving average + p-bit wire.
+    Loco,
+    /// Vanilla error feedback (Seide et al.), modified for sharding:
+    /// fp32 error store, beta = 1, no reset.
+    Ef,
+    /// EF21 (Richtárik et al.): compress the gradient *delta*; receiver
+    /// keeps a per-source reconstruction.
+    Ef21,
+    /// 1-bit sign compression with fp32 error feedback (1-bit Adam style).
+    OneBit,
+    /// Zero++-style block quantization, no error feedback.
+    Zeropp,
+    /// LoCo error feedback wrapped around Zero++ block quantization.
+    LocoZeropp,
+    /// Stochastic rounding without error feedback (IntSGD-style).
+    IntSgd,
+    /// PowerSGD rank-r low-rank compression (DDP path only).
+    PowerSgd,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "fp32" => Method::Fp32,
+            "bf16" | "16bit" => Method::Bf16,
+            "loco" => Method::Loco,
+            "ef" => Method::Ef,
+            "ef21" => Method::Ef21,
+            "onebit" | "1bit" => Method::OneBit,
+            "zeropp" | "zero++" => Method::Zeropp,
+            "loco-zeropp" | "loco_zeropp" => Method::LocoZeropp,
+            "intsgd" => Method::IntSgd,
+            "powersgd" => Method::PowerSgd,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Fp32 => "fp32",
+            Method::Bf16 => "bf16",
+            Method::Loco => "loco",
+            Method::Ef => "ef",
+            Method::Ef21 => "ef21",
+            Method::OneBit => "onebit",
+            Method::Zeropp => "zeropp",
+            Method::LocoZeropp => "loco-zeropp",
+            Method::IntSgd => "intsgd",
+            Method::PowerSgd => "powersgd",
+        }
+    }
+}
+
+/// Full compressor configuration (method + LoCo hyper-parameters).
+#[derive(Debug, Clone, Copy)]
+pub struct CompressorConfig {
+    pub method: Method,
+    /// gradient wire bits (4 in the paper's main runs; 1..=8)
+    pub bits: u32,
+    /// gradient quantization scale `s` (Eqn. 3); paper: 2^19 fine-tune,
+    /// {2^19, 2^17} pre-train
+    pub s: f32,
+    /// error scale multiplier: `s_e = mult * s` (paper: 4 or 6)
+    pub s_e_mult: f32,
+    /// moving-average coefficient beta (Eqn. 5)
+    pub beta: f32,
+    /// error reset period `T_c` (Eqn. 7); 0 disables resets
+    pub reset_interval: u64,
+    /// error-store bits: 8 (paper) or 32 (ablation LoCo4 "no Err. Cmpr.")
+    pub error_bits: u32,
+    /// disable error feedback entirely (ablation LoCo1)
+    pub no_error_feedback: bool,
+    /// disable the moving average, i.e. beta = 1 (ablation LoCo2)
+    pub no_moving_average: bool,
+    /// EXTENSION (beyond the paper): derive the wire scale per shard from
+    /// an EMA of max|h| instead of the fixed global `s`. Addresses the
+    /// fixed-scale sensitivity the paper works around with element-wise
+    /// clipping (Sec. 5.2); wire-compatible because every message already
+    /// carries its scale. The error store keeps the fixed `s_e`.
+    pub auto_scale: bool,
+    /// block size for block quantization (Zero++ paths)
+    pub block: usize,
+    /// PowerSGD rank
+    pub rank: usize,
+    /// element-wise clip applied to the local gradient before compression
+    /// (Sec. 5.2 uses this for MoE pre-training); 0 disables
+    pub elementwise_clip: f32,
+}
+
+impl Default for CompressorConfig {
+    fn default() -> Self {
+        CompressorConfig {
+            method: Method::Loco,
+            bits: 4,
+            s: (1u32 << 19) as f32,
+            s_e_mult: 4.0,
+            beta: 0.05,
+            reset_interval: 512,
+            error_bits: 8,
+            no_error_feedback: false,
+            no_moving_average: false,
+            auto_scale: false,
+            block: 256,
+            rank: 4,
+            elementwise_clip: 0.0,
+        }
+    }
+}
+
+impl CompressorConfig {
+    pub fn with_method(method: Method) -> Self {
+        CompressorConfig { method, ..Default::default() }
+    }
+
+    /// Effective beta after ablation flags.
+    pub fn effective_beta(&self) -> f32 {
+        if self.no_moving_average {
+            1.0
+        } else {
+            self.beta
+        }
+    }
+}
+
+/// One compressed shard in wire format. `wire_bytes` is exactly what the
+/// paper's implementation would put on the network (payload + scales),
+/// which is what the byte counters and netsim consume.
+#[derive(Debug, Clone)]
+pub enum WireMsg {
+    F32(Vec<f32>),
+    /// bf16 payload (round-to-nearest-even truncation)
+    Bf16(Vec<u16>),
+    /// p<=8-bit codes stored unpacked (one per byte) with a shared scale.
+    /// `wire_bits` is the *logical* wire width used for byte accounting.
+    I8 { codes: Vec<i8>, scale: f32, wire_bits: u32 },
+    /// 4-bit codes nibble-packed, shared scale
+    I4 { packed: Vec<u8>, n: usize, scale: f32 },
+    /// block-quantized codes: per-block scales
+    Block { codes: Vec<i8>, scales: Vec<f32>, block: usize, bits: u32 },
+    /// 1-bit signs (bit-packed) with a shared magnitude scale
+    Sign { bits: Vec<u8>, n: usize, scale: f32 },
+    /// low-rank factors (PowerSGD): decoded as P (rows×rank) · Qᵀ (cols×rank)
+    LowRank { p: Vec<f32>, q: Vec<f32>, rows: usize, cols: usize, rank: usize },
+}
+
+impl WireMsg {
+    /// Bytes this message would occupy on the wire.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            WireMsg::F32(v) => 4 * v.len(),
+            WireMsg::Bf16(v) => 2 * v.len(),
+            WireMsg::I8 { codes, wire_bits, .. } => {
+                (codes.len() * (*wire_bits as usize)).div_ceil(8) + 4
+            }
+            WireMsg::I4 { packed, .. } => packed.len() + 4,
+            WireMsg::Block { codes, scales, bits, .. } => {
+                (codes.len() * (*bits as usize)).div_ceil(8) + 4 * scales.len()
+            }
+            WireMsg::Sign { bits, .. } => bits.len() + 4,
+            WireMsg::LowRank { p, q, .. } => 4 * (p.len() + q.len()),
+        }
+    }
+
+    /// Logical element count carried by the message.
+    pub fn element_count(&self) -> usize {
+        match self {
+            WireMsg::F32(v) => v.len(),
+            WireMsg::Bf16(v) => v.len(),
+            WireMsg::I8 { codes, .. } => codes.len(),
+            WireMsg::I4 { n, .. } => *n,
+            WireMsg::Block { codes, .. } => codes.len(),
+            WireMsg::Sign { n, .. } => *n,
+            WireMsg::LowRank { rows, cols, .. } => rows * cols,
+        }
+    }
+}
+
+/// Sender side: compress `grad[range]` for one destination.
+pub trait Encoder: Send {
+    fn encode(&mut self, grad: &[f32], range: Range<usize>, step: u64) -> WireMsg;
+    /// Average wire bits per gradient element (for netsim cross-checks).
+    fn wire_bits_per_elem(&self) -> f64;
+    /// Bytes of persistent sender-side state (error stores etc.).
+    fn state_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Receiver side: decode a shard from `src` and accumulate into `acc`
+/// (which covers this node's own `range`, offset to 0).
+pub trait Decoder: Send {
+    fn decode_accumulate(&mut self, src: usize, msg: &WireMsg, acc: &mut [f32]);
+    fn state_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Decode-accumulate for the stateless wire formats (shared by most
+/// decoders).
+pub fn decode_accumulate_stateless(msg: &WireMsg, acc: &mut [f32]) {
+    match msg {
+        WireMsg::F32(v) => crate::util::add_assign(acc, v),
+        WireMsg::Bf16(v) => {
+            for (a, &u) in acc.iter_mut().zip(v) {
+                *a += fp::bf16_to_f32(u);
+            }
+        }
+        WireMsg::I8 { codes, scale, .. } => {
+            crate::quant::dequantize_accumulate(codes, *scale, acc);
+        }
+        WireMsg::I4 { packed, n, scale } => {
+            crate::quant::dequantize_accumulate_packed(packed, *n, *scale, acc);
+        }
+        WireMsg::Block { codes, scales, block, .. } => {
+            block::dequantize_block_accumulate(codes, scales, *block, acc);
+        }
+        WireMsg::Sign { bits, n, scale } => {
+            onebit::decode_sign_accumulate(bits, *n, *scale, acc);
+        }
+        WireMsg::LowRank { p, q, rows, cols, rank } => {
+            powersgd::decode_lowrank_accumulate(p, q, *rows, *cols, *rank, acc);
+        }
+    }
+}
+
+/// A trivially stateless decoder.
+pub struct StatelessDecoder;
+
+impl Decoder for StatelessDecoder {
+    fn decode_accumulate(&mut self, _src: usize, msg: &WireMsg, acc: &mut [f32]) {
+        decode_accumulate_stateless(msg, acc);
+    }
+}
+
+/// Build the encoder/decoder pair for one node.
+///
+/// `layout` gives tensor boundaries (PowerSGD needs shapes), `n_nodes` the
+/// cluster size (EF21 decoders keep per-source state).
+pub fn build(
+    cfg: &CompressorConfig,
+    layout: &ParamLayout,
+    my_range: Range<usize>,
+    n_nodes: usize,
+) -> (Box<dyn Encoder>, Box<dyn Decoder>) {
+    let total = layout.total;
+    match cfg.method {
+        Method::Fp32 => (Box::new(fp::Fp32Encoder), Box::new(StatelessDecoder)),
+        Method::Bf16 => (Box::new(fp::Bf16Encoder), Box::new(StatelessDecoder)),
+        Method::Loco | Method::Ef => {
+            // EF = LoCo with beta=1, fp32 error store, no reset
+            let mut c = *cfg;
+            if cfg.method == Method::Ef {
+                c.beta = 1.0;
+                c.error_bits = 32;
+                c.reset_interval = 0;
+            }
+            (Box::new(loco::LocoEncoder::new(&c, total)), Box::new(StatelessDecoder))
+        }
+        Method::Ef21 => (
+            Box::new(ef21::Ef21Encoder::new(cfg, total)),
+            Box::new(ef21::Ef21Decoder::new(n_nodes, my_range.len())),
+        ),
+        Method::OneBit => {
+            (Box::new(onebit::OneBitEncoder::new(total)), Box::new(StatelessDecoder))
+        }
+        Method::Zeropp => {
+            (Box::new(block::BlockQuantEncoder::new(cfg)), Box::new(StatelessDecoder))
+        }
+        Method::LocoZeropp => {
+            (Box::new(loco::LocoBlockEncoder::new(cfg, total)), Box::new(StatelessDecoder))
+        }
+        Method::IntSgd => {
+            (Box::new(block::StochasticQuantEncoder::new(cfg)), Box::new(StatelessDecoder))
+        }
+        Method::PowerSgd => {
+            // PowerSGD runs on the DDP all-reduce path (train::ddp); as an
+            // Encoder it degrades to per-shard low-rank without the shared
+            // second all-reduce, which is only used in unit tests.
+            (Box::new(powersgd::PowerSgdEncoder::new(cfg, layout)), Box::new(StatelessDecoder))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sharding::ParamLayout;
+    use crate::util::prop::{for_cases, vec_normal};
+    use crate::util::rng::Rng;
+
+    fn flat_layout(n: usize) -> ParamLayout {
+        ParamLayout::single("flat", &[n])
+    }
+
+    fn roundtrip_error(method: Method, n: usize, seed: u64) -> f64 {
+        let cfg = CompressorConfig {
+            method,
+            s: 16.0,
+            s_e_mult: 4.0,
+            ..Default::default()
+        };
+        let layout = flat_layout(n);
+        let (mut enc, mut dec) = build(&cfg, &layout, 0..n, 1);
+        let mut rng = Rng::new(seed);
+        let mut g = vec![0.0f32; n];
+        rng.fill_normal(&mut g, 0.1);
+        let msg = enc.encode(&g, 0..n, 1);
+        let mut acc = vec![0.0f32; n];
+        dec.decode_accumulate(0, &msg, &mut acc);
+        g.iter()
+            .zip(&acc)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    #[test]
+    fn fp32_is_exact() {
+        assert_eq!(roundtrip_error(Method::Fp32, 1000, 1), 0.0);
+    }
+
+    #[test]
+    fn lossy_methods_have_bounded_error() {
+        for m in [
+            Method::Bf16,
+            Method::Loco,
+            Method::Ef,
+            Method::Ef21,
+            Method::Zeropp,
+            Method::LocoZeropp,
+            Method::IntSgd,
+        ] {
+            let e = roundtrip_error(m, 1000, 2);
+            assert!(e.is_finite() && e < 5.0, "{m:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn wire_sizes_ordered_by_bits() {
+        let n = 4096;
+        let layout = flat_layout(n);
+        let mut g = vec![0.0f32; n];
+        Rng::new(3).fill_normal(&mut g, 0.1);
+        let mut sizes = std::collections::HashMap::new();
+        for m in [Method::Fp32, Method::Bf16, Method::Loco, Method::OneBit] {
+            let cfg = CompressorConfig { method: m, s: 16.0, ..Default::default() };
+            let (mut enc, _) = build(&cfg, &layout, 0..n, 1);
+            sizes.insert(m.name(), enc.encode(&g, 0..n, 1).wire_bytes());
+        }
+        assert!(sizes["fp32"] > sizes["bf16"]);
+        assert!(sizes["bf16"] > sizes["loco"]);
+        assert!(sizes["loco"] > sizes["onebit"]);
+        // 4-bit wire is ~8x smaller than fp32
+        assert!((sizes["fp32"] as f64 / sizes["loco"] as f64) > 7.0);
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [
+            Method::Fp32,
+            Method::Bf16,
+            Method::Loco,
+            Method::Ef,
+            Method::Ef21,
+            Method::OneBit,
+            Method::Zeropp,
+            Method::LocoZeropp,
+            Method::IntSgd,
+            Method::PowerSgd,
+        ] {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn sharded_encode_covers_full_vector() {
+        // encoding disjoint shards then accumulating reconstructs the whole
+        for_cases(31, 16, |rng| {
+            // keep |g| within the 4-bit representable range (7/s) so the
+            // half-step roundtrip bound holds without clamping
+            let g: Vec<f32> = vec_normal(rng, 600, 0.03)
+                .into_iter()
+                .map(|x| x.clamp(-0.1, 0.1))
+                .collect();
+            let n = g.len();
+            let cfg = CompressorConfig { method: Method::Loco, s: 64.0, ..Default::default() };
+            let layout = ParamLayout::single("flat", &[n]);
+            let (mut enc, mut dec) = build(&cfg, &layout, 0..n, 1);
+            let mid = n / 2;
+            let m1 = enc.encode(&g, 0..mid, 1);
+            let m2 = enc.encode(&g, mid..n, 1);
+            let mut acc = vec![0.0f32; n];
+            dec.decode_accumulate(0, &m1, &mut acc[..mid]);
+            dec.decode_accumulate(0, &m2, &mut acc[mid..]);
+            let err: f64 = g
+                .iter()
+                .zip(&acc)
+                .map(|(&a, &b)| ((a - b) as f64).abs())
+                .fold(0.0, f64::max);
+            assert!(err <= 0.5 / 64.0 + 1e-6, "max err {err}");
+        });
+    }
+}

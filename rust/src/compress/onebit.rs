@@ -1,0 +1,142 @@
+//! 1-bit sign compression with error feedback (the compressor at the heart
+//! of 1-bit SGD / 1-bit Adam / 1-bit LAMB).
+//!
+//! Wire format: one sign bit per element plus a single fp32 magnitude
+//! scale (the mean |h| of the shard), decoded as `sign * scale`. The fp32
+//! error store carries the residual h - sign*scale to the next step.
+
+use std::ops::Range;
+
+use super::{Encoder, WireMsg};
+
+/// `acc[i] += sign_i * scale` from a bit-packed sign vector.
+pub fn decode_sign_accumulate(bits: &[u8], n: usize, scale: f32, acc: &mut [f32]) {
+    debug_assert!(acc.len() >= n);
+    for i in 0..n {
+        let bit = (bits[i / 8] >> (i % 8)) & 1;
+        acc[i] += if bit == 1 { scale } else { -scale };
+    }
+}
+
+pub struct OneBitEncoder {
+    err: Vec<f32>,
+}
+
+impl OneBitEncoder {
+    pub fn new(total: usize) -> Self {
+        OneBitEncoder { err: vec![0.0; total] }
+    }
+}
+
+impl Encoder for OneBitEncoder {
+    fn encode(&mut self, grad: &[f32], range: Range<usize>, _step: u64) -> WireMsg {
+        let g = &grad[range.clone()];
+        let e = &mut self.err[range];
+        let n = g.len();
+        // compensate
+        let mut h = vec![0.0f32; n];
+        let mut mag = 0.0f64;
+        for i in 0..n {
+            h[i] = g[i] + e[i];
+            mag += h[i].abs() as f64;
+        }
+        let scale = (mag / n.max(1) as f64) as f32;
+        // sign-compress + error update
+        let mut bits = vec![0u8; n.div_ceil(8)];
+        for i in 0..n {
+            let dec = if h[i] >= 0.0 {
+                bits[i / 8] |= 1 << (i % 8);
+                scale
+            } else {
+                -scale
+            };
+            e[i] = h[i] - dec;
+        }
+        WireMsg::Sign { bits, n, scale }
+    }
+
+    fn wire_bits_per_elem(&self) -> f64 {
+        1.0
+    }
+
+    fn state_bytes(&self) -> usize {
+        4 * self.err.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::decode_accumulate_stateless;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sign_decode_roundtrip() {
+        let n = 20;
+        let mut bits = vec![0u8; 3];
+        for i in (0..n).step_by(2) {
+            bits[i / 8] |= 1 << (i % 8);
+        }
+        let mut acc = vec![0.0f32; n];
+        decode_sign_accumulate(&bits, n, 2.0, &mut acc);
+        for i in 0..n {
+            assert_eq!(acc[i], if i % 2 == 0 { 2.0 } else { -2.0 });
+        }
+    }
+
+    #[test]
+    fn wire_is_one_bit_per_elem() {
+        let n = 4096;
+        let mut g = vec![0.0f32; n];
+        Rng::new(9).fill_normal(&mut g, 1.0);
+        let mut enc = OneBitEncoder::new(n);
+        let msg = enc.encode(&g, 0..n, 0);
+        assert_eq!(msg.wire_bytes(), n / 8 + 4);
+    }
+
+    #[test]
+    fn error_feedback_time_average_tracks_mean() {
+        // constant positive gradient: signs all +, scale = g, exact
+        let n = 32;
+        let g = vec![0.5f32; n];
+        let mut enc = OneBitEncoder::new(n);
+        let msg = enc.encode(&g, 0..n, 0);
+        let mut acc = vec![0.0f32; n];
+        decode_accumulate_stateless(&msg, &mut acc);
+        for &v in &acc {
+            assert!((v - 0.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn accumulated_sum_stays_bounded() {
+        // EF keeps the accumulated decode near the accumulated truth
+        let n = 64;
+        let mut rng = Rng::new(10);
+        let mut enc = OneBitEncoder::new(n);
+        let mut sum_true = vec![0.0f64; n];
+        let mut sum_dec = vec![0.0f64; n];
+        let mut g = vec![0.0f32; n];
+        for k in 0..300 {
+            rng.fill_normal(&mut g, 0.1);
+            for i in 0..n {
+                sum_true[i] += g[i] as f64;
+            }
+            let msg = enc.encode(&g, 0..n, k);
+            let mut acc = vec![0.0f32; n];
+            decode_accumulate_stateless(&msg, &mut acc);
+            for i in 0..n {
+                sum_dec[i] += acc[i] as f64;
+            }
+        }
+        // residual equals the current error state, which is bounded by the
+        // scale magnitude; with sigma=0.1 scales are ~0.08
+        for i in 0..n {
+            assert!(
+                (sum_true[i] - sum_dec[i]).abs() < 1.0,
+                "coord {i} drift {}",
+                (sum_true[i] - sum_dec[i]).abs()
+            );
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Config system: a TOML-subset parser (sections, `key = value`, strings,
+//! numbers, booleans — the offline registry has no `serde`/`toml`) plus
+//! typed accessors and CLI `section.key=value` overrides.
+//!
+//! Example config (see `configs/` at the repo root):
+//!
+//! ```toml
+//! [train]
+//! model = "tiny"
+//! nodes = 4
+//! steps = 300
+//!
+//! [compress]
+//! method = "loco"
+//! bits = 4
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Flat `section.key -> raw value` map.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn empty() -> Self {
+        Config::default()
+    }
+
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, unquote(v.trim()).to_string());
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Config::parse(&text)
+    }
+
+    /// Apply a CLI override of the form `section.key=value`.
+    pub fn set_override(&mut self, kv: &str) -> Result<()> {
+        let (k, v) = kv.split_once('=').context("override must be key=value")?;
+        self.values.insert(k.trim().to_string(), unquote(v.trim()).to_string());
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}: bad usize {v:?}")),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}: bad u64 {v:?}")),
+        }
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => parse_f32(v).with_context(|| format!("{key}: bad float {v:?}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(v) => bail!("{key}: bad bool {v:?}"),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+/// Parse floats, allowing `2^19`-style powers (the paper specifies scales
+/// that way).
+pub fn parse_f32(v: &str) -> Result<f32> {
+    if let Some((base, exp)) = v.split_once('^') {
+        let b: f32 = base.trim().parse()?;
+        let e: i32 = exp.trim().parse()?;
+        return Ok(b.powi(e));
+    }
+    Ok(v.parse()?)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quotes
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> &str {
+    v.strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .unwrap_or(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = Config::parse(
+            "top = 1\n[train]\nmodel = \"tiny\"\nsteps = 300 # comment\nlr = 1e-3\nuse_clip = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.usize("top", 0).unwrap(), 1);
+        assert_eq!(c.str("train.model", ""), "tiny");
+        assert_eq!(c.usize("train.steps", 0).unwrap(), 300);
+        assert!((c.f32("train.lr", 0.0).unwrap() - 1e-3).abs() < 1e-9);
+        assert!(c.bool("train.use_clip", false).unwrap());
+        assert_eq!(c.usize("train.missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn power_floats() {
+        assert_eq!(parse_f32("2^19").unwrap(), (1u32 << 19) as f32);
+        assert_eq!(parse_f32("1.5").unwrap(), 1.5);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse("[a]\nx = 1\n").unwrap();
+        c.set_override("a.x=2").unwrap();
+        assert_eq!(c.usize("a.x", 0).unwrap(), 2);
+        assert!(c.set_override("nonsense").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let c = Config::parse("[s]\nv = \"a#b\"\n").unwrap();
+        assert_eq!(c.str("s.v", ""), "a#b");
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(Config::parse("[a]\nnonsense\n").is_err());
+        assert!(Config::parse("[a]\nx = y\n").unwrap().usize("a.x", 0).is_err());
+    }
+}

@@ -1,0 +1,43 @@
+//! # loco — LoCo: Low-Bit Communication Adaptor for Large-scale Model Training
+//!
+//! A full reproduction of Xie, Lin, Toh & Zhou, *"LoCo: Low-Bit Communication
+//! Adaptor for Large-scale Model Training"* (cs.LG 2024) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed-training coordinator: an
+//!   in-process multi-node cluster with byte-accurate collectives
+//!   ([`collective`]), the LoCo compressor and every baseline the paper
+//!   compares against ([`compress`]), Zero-2/FSDP sharding ([`sharding`]),
+//!   sharded optimizers ([`optim`]), the training loop ([`train`]), and the
+//!   analytic cluster model that regenerates the paper's speed/memory tables
+//!   ([`netsim`]).
+//! * **L2 (python/compile/model.py)** — a JAX transformer LM (dense + MoE)
+//!   whose fused forward+backward graph is AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spot (fused LoCo compensate→quantize→error-update, blocked causal
+//!   attention), interpret-lowered into the same HLO.
+//!
+//! Python never runs on the training path: the [`runtime`] module loads the
+//! HLO artifacts through the PJRT C API (`xla` crate) and executes them from
+//! the Rust event loop.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod collective;
+pub mod compress;
+pub mod config;
+pub mod data;
+pub mod metrics;
+pub mod model;
+pub mod netsim;
+pub mod optim;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sharding;
+pub mod train;
+pub mod util;
+
+pub use compress::{CompressorConfig, Method};
+pub use train::{TrainConfig, Trainer};

@@ -1,0 +1,257 @@
+//! `loco` — launcher CLI for the LoCo reproduction.
+//!
+//! Subcommands:
+//!   train [--config FILE] [sec.key=val ...]   run a training job
+//!   table1 | table8 | throughput              print analytic tables
+//!   quant-selftest                            Rust hot path vs L1 kernel
+//!   info                                      artifact + config summary
+//!
+//! (arg parsing is hand-rolled: the offline registry has no `clap`)
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use loco::compress::{CompressorConfig, Method};
+use loco::config::Config;
+use loco::netsim::{self, throughput::{paper_speedup, predict_speedup, ACCUMS, PAPER_BASELINES}};
+use loco::optim::{LrSchedule, OptimConfig, OptimizerKind};
+use loco::report::Table;
+use loco::train::{Mode, ParamSync, TrainConfig, Trainer};
+use loco::util::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("train") => cmd_train(&args[1..]),
+        Some("table1") => cmd_table1(),
+        Some("table8") => cmd_table8(),
+        Some("throughput") => cmd_throughput(),
+        Some("quant-selftest") => cmd_quant_selftest(),
+        Some("info") | None => cmd_info(),
+        Some(other) => bail!("unknown subcommand {other:?} (try: train, table1, table8, throughput, quant-selftest, info)"),
+    }
+}
+
+/// Build a [`TrainConfig`] from a parsed [`Config`] (shared with examples).
+pub fn train_config_from(cfg: &Config) -> Result<TrainConfig> {
+    let model = cfg.str("train.model", "tiny");
+    let mut tc = TrainConfig::new(&model);
+    if let Some(dir) = cfg.get("train.artifacts") {
+        tc.art_dir = PathBuf::from(dir);
+    }
+    tc.nodes = cfg.usize("train.nodes", 4)?;
+    tc.steps = cfg.u64("train.steps", 100)?;
+    tc.accum = cfg.usize("train.accum", 1)?;
+    tc.seed = cfg.u64("train.seed", 0)?;
+    tc.global_clip = cfg.f32("train.global_clip", 1.0)?;
+    tc.eval_every = cfg.u64("train.eval_every", 0)?;
+    tc.eval_batches = cfg.usize("train.eval_batches", 4)?;
+    tc.log_every = cfg.u64("train.log_every", 10)?;
+    tc.corpus_seed = cfg.u64("train.corpus_seed", 1234)?;
+    tc.mode = match cfg.str("train.mode", "zero2").as_str() {
+        "zero2" => Mode::Zero2,
+        "zero2-rs" => Mode::Zero2ReduceScatter,
+        "ddp" => Mode::Ddp,
+        m => bail!("unknown train.mode {m:?}"),
+    };
+    tc.param_sync = match cfg.str("train.param_sync", "bf16").as_str() {
+        "bf16" => ParamSync::Bf16,
+        "fp32" => ParamSync::F32,
+        m => bail!("unknown train.param_sync {m:?}"),
+    };
+
+    let kind = cfg.str("optim.kind", "adam");
+    let mut oc = OptimConfig {
+        kind: OptimizerKind::parse(&kind).with_context(|| format!("optimizer {kind:?}"))?,
+        ..OptimConfig::default()
+    };
+    oc.beta1 = cfg.f32("optim.beta1", 0.9)?;
+    oc.beta2 = cfg.f32("optim.beta2", 0.95)?;
+    oc.weight_decay = cfg.f32("optim.weight_decay", 0.0)?;
+    oc.momentum = cfg.f32("optim.momentum", 0.9)?;
+    tc.optim = oc;
+    tc.lr = LrSchedule {
+        base: cfg.f32("optim.lr", 1e-3)?,
+        warmup: cfg.u64("optim.warmup", 10)?,
+        total: cfg.u64("optim.lr_total", tc.steps)?,
+        min_ratio: cfg.f32("optim.lr_min_ratio", 0.1)?,
+    };
+
+    let method = cfg.str("compress.method", "loco");
+    let mut cc = CompressorConfig {
+        method: Method::parse(&method).with_context(|| format!("method {method:?}"))?,
+        ..CompressorConfig::default()
+    };
+    cc.bits = cfg.usize("compress.bits", 4)? as u32;
+    cc.s = cfg.f32("compress.s", cc.s)?;
+    cc.s_e_mult = cfg.f32("compress.s_e_mult", 4.0)?;
+    cc.beta = cfg.f32("compress.beta", 0.05)?;
+    cc.reset_interval = cfg.u64("compress.reset_interval", 512)?;
+    cc.error_bits = cfg.usize("compress.error_bits", 8)? as u32;
+    cc.no_error_feedback = cfg.bool("compress.no_error_feedback", false)?;
+    cc.no_moving_average = cfg.bool("compress.no_moving_average", false)?;
+    cc.auto_scale = cfg.bool("compress.auto_scale", false)?;
+    cc.block = cfg.usize("compress.block", 256)?;
+    cc.rank = cfg.usize("compress.rank", 4)?;
+    cc.elementwise_clip = cfg.f32("compress.elementwise_clip", 0.0)?;
+    tc.compressor = cc;
+    Ok(tc)
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let mut cfg = Config::empty();
+    let mut i = 0;
+    let mut out_csv: Option<PathBuf> = None;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => {
+                i += 1;
+                cfg = Config::load(&PathBuf::from(
+                    args.get(i).context("--config needs a path")?,
+                ))?;
+            }
+            "--csv" => {
+                i += 1;
+                out_csv = Some(PathBuf::from(args.get(i).context("--csv needs a path")?));
+            }
+            kv if kv.contains('=') => cfg.set_override(kv)?,
+            other => bail!("unexpected arg {other:?}"),
+        }
+        i += 1;
+    }
+    let tc = train_config_from(&cfg)?;
+    println!(
+        "training model={} nodes={} steps={} method={} optimizer={}",
+        tc.model,
+        tc.nodes,
+        tc.steps,
+        tc.compressor.method.name(),
+        tc.optim.kind.name()
+    );
+    let result = Trainer::new(tc).run()?;
+    let m = &result.metrics;
+    println!(
+        "done: final train loss {:.4}, val loss {:?}, {:.0} tokens/s, comm {} ({}x vs fp32), compressor state {}",
+        m.train_loss.tail_mean(5),
+        m.val_loss.last(),
+        m.tokens_per_sec,
+        loco::util::human_bytes(m.comm_bytes),
+        format!("{:.2}", m.compression_ratio()),
+        loco::util::human_bytes(m.compressor_state_bytes as u64),
+    );
+    if let Some(path) = out_csv {
+        m.write_csv(&path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_table1() -> Result<()> {
+    let t = netsim::table1::render(7e9, 64.0, 25e9, 4.0);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_table8() -> Result<()> {
+    let mut t = Table::new(
+        "Table 8 — peak memory (GB), paper vs model",
+        &["model", "framework", "Adam (paper)", "LoCo (paper)", "LoCo (model)", "rel err"],
+    );
+    for row in netsim::memory::PAPER_MEMORY {
+        let pred = netsim::memory::predict_loco_peak(row.framework, row.params, row.adam_gb);
+        t.row(vec![
+            row.model.into(),
+            row.framework.into(),
+            format!("{:.1}", row.adam_gb),
+            format!("{:.1}", row.loco_gb),
+            format!("{:.1}", pred),
+            format!("{:+.1}%", 100.0 * (pred - row.loco_gb) / row.loco_gb),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_throughput() -> Result<()> {
+    let mut t = Table::new(
+        "Tables 7/11/12 — LoCo speedup over 16-bit Adam, paper vs fitted model",
+        &["model", "cluster", "gpus", "accum", "paper", "model", "err"],
+    );
+    for row in PAPER_BASELINES {
+        for (i, &a) in ACCUMS.iter().enumerate() {
+            let paper = paper_speedup(row, i) - 1.0;
+            let pred = predict_speedup(row, a, "loco") - 1.0;
+            t.row(vec![
+                row.model.into(),
+                row.cluster.into(),
+                row.gpus.to_string(),
+                format!("{a:.0}"),
+                format!("{:.2}%", 100.0 * paper),
+                format!("{:.2}%", 100.0 * pred),
+                format!("{:+.2}pp", 100.0 * (pred - paper)),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_quant_selftest() -> Result<()> {
+    let art = loco::runtime::artifacts_dir();
+    let block = 65536;
+    let kernel = loco::runtime::LocoKernel::load(&art, block)
+        .context("loading loco_step artifact (run `make artifacts`)")?;
+    let mut rng = Rng::new(7);
+    let mut g = vec![0.0f32; block];
+    rng.fill_normal(&mut g, 0.1);
+    let e: Vec<i8> = (0..block).map(|_| (rng.below(256) as i32 - 128) as i8).collect();
+    let (s, s_e, beta) = (16.0f32, 64.0f32, 0.125f32);
+
+    let (q_xla, e_xla) = kernel.step(&g, &e, s, s_e, beta, false)?;
+    let mut e_rust = e.clone();
+    let mut q_rust = vec![0i8; block];
+    let p = loco::quant::LocoParams { s, s_e, beta, bits: 4 };
+    loco::quant::loco_step(&g, &mut e_rust, &mut q_rust, p, false);
+
+    let q_diff = q_xla.iter().zip(&q_rust).filter(|(a, b)| a != b).count();
+    let e_diff = e_xla.iter().zip(&e_rust).filter(|(a, b)| a != b).count();
+    println!("loco_step parity over {block} elements: q mismatches={q_diff}, e mismatches={e_diff}");
+    if q_diff + e_diff > 0 {
+        bail!("Rust hot path disagrees with the L1 Pallas kernel");
+    }
+    println!("selftest OK — Rust hot path is bit-identical to the Pallas kernel");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("loco — LoCo: Low-Bit Communication Adaptor (reproduction)");
+    let art = loco::runtime::artifacts_dir();
+    println!("artifacts dir: {}", art.display());
+    if art.is_dir() {
+        let mut names: Vec<String> = std::fs::read_dir(&art)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| !n.starts_with('.'))
+            .collect();
+        names.sort();
+        for n in names {
+            println!("  {n}");
+        }
+    } else {
+        println!("  (missing — run `make artifacts`)");
+    }
+    println!("subcommands: train, table1, table8, throughput, quant-selftest, info");
+    Ok(())
+}

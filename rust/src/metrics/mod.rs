@@ -1,0 +1,129 @@
+//! Run metrics: loss curves, throughput meters, CSV export.
+
+use std::io::Write;
+use std::path::Path;
+
+/// One recorded scalar series (e.g. train loss over steps).
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(u64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Self {
+        Series { name: name.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, step: u64, value: f64) {
+        self.points.push((step, value));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    /// Mean of the final `k` values (smoothed "final loss").
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        if self.points.is_empty() {
+            return f64::NAN;
+        }
+        let tail = &self.points[self.points.len().saturating_sub(k)..];
+        tail.iter().map(|&(_, v)| v).sum::<f64>() / tail.len() as f64
+    }
+}
+
+/// Everything a training run reports.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub train_loss: Series,
+    pub val_loss: Series,
+    /// wall-clock tokens per second (whole cluster)
+    pub tokens_per_sec: f64,
+    /// wall-clock seconds
+    pub elapsed: f64,
+    /// bytes put on the wire by all nodes over the run
+    pub comm_bytes: u64,
+    /// bytes a 32-bit-gradient run would have sent (for ratio reporting)
+    pub comm_bytes_fp32: u64,
+    /// peak per-node state overhead of the compressor (error stores etc.)
+    pub compressor_state_bytes: usize,
+    pub steps: u64,
+}
+
+impl RunMetrics {
+    pub fn new() -> Self {
+        RunMetrics {
+            train_loss: Series::new("train_loss"),
+            val_loss: Series::new("val_loss"),
+            ..Default::default()
+        }
+    }
+
+    /// Wire compression ratio achieved vs fp32 gradients.
+    pub fn compression_ratio(&self) -> f64 {
+        if self.comm_bytes == 0 {
+            return 1.0;
+        }
+        self.comm_bytes_fp32 as f64 / self.comm_bytes as f64
+    }
+
+    /// Write loss curves as CSV: step,train_loss,val_loss (val sparse).
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,train_loss,val_loss")?;
+        let mut val_iter = self.val_loss.points.iter().peekable();
+        for &(step, train) in &self.train_loss.points {
+            let val = match val_iter.peek() {
+                Some(&&(vs, vv)) if vs == step => {
+                    val_iter.next();
+                    format!("{vv:.6}")
+                }
+                _ => String::new(),
+            };
+            writeln!(f, "{step},{train:.6},{val}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_tail_mean() {
+        let mut s = Series::new("x");
+        for i in 0..10 {
+            s.push(i, i as f64);
+        }
+        assert_eq!(s.tail_mean(2), 8.5);
+        assert_eq!(s.last(), Some(9.0));
+        assert!(Series::new("e").tail_mean(3).is_nan());
+    }
+
+    #[test]
+    fn compression_ratio() {
+        let mut m = RunMetrics::new();
+        m.comm_bytes = 100;
+        m.comm_bytes_fp32 = 800;
+        assert_eq!(m.compression_ratio(), 8.0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut m = RunMetrics::new();
+        m.train_loss.push(0, 3.0);
+        m.train_loss.push(1, 2.5);
+        m.val_loss.push(1, 2.6);
+        let path = std::env::temp_dir().join("loco_metrics_test.csv");
+        m.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("step,train_loss,val_loss"));
+        assert!(text.contains("1,2.500000,2.600000"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,233 @@
+//! Model metadata: manifest parsing (the contract with `python/compile`),
+//! Rust-side parameter initialization, and the analytic model zoo used by
+//! `netsim` for the paper-scale (7B–70B, 8×7B) throughput/memory tables.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::sharding::ParamLayout;
+use crate::util::rng::Rng;
+
+/// Parsed `model_<cfg>.manifest`.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub config: String,
+    pub vocab: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub param_count: usize,
+    pub layout: ParamLayout,
+}
+
+impl ModelMeta {
+    /// Parse the text manifest emitted by `python/compile/aot.py`.
+    pub fn parse(text: &str) -> Result<ModelMeta> {
+        let mut kv = std::collections::HashMap::new();
+        let mut tensors: Vec<(String, Vec<usize>)> = Vec::new();
+        let mut in_params = false;
+        let mut declared_params = 0usize;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let key = parts.next().context("empty manifest line")?;
+            if !in_params {
+                let val = parts.next().context("missing value")?;
+                if key == "params" {
+                    declared_params = val.parse()?;
+                    in_params = true;
+                } else {
+                    kv.insert(key.to_string(), val.to_string());
+                }
+            } else {
+                // tensor line: name dtype d0,d1,...
+                let dtype = parts.next().context("missing dtype")?;
+                if dtype != "f32" {
+                    bail!("unsupported dtype {dtype} for {key}");
+                }
+                let dims = parts.next().context("missing dims")?;
+                let shape: Vec<usize> = dims
+                    .split(',')
+                    .map(|d| d.parse::<usize>().context("bad dim"))
+                    .collect::<Result<_>>()?;
+                tensors.push((key.to_string(), shape));
+            }
+        }
+        if tensors.len() != declared_params {
+            bail!("manifest declares {declared_params} tensors, found {}", tensors.len());
+        }
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .with_context(|| format!("manifest missing {k}"))?
+                .parse::<usize>()
+                .with_context(|| format!("bad {k}"))
+        };
+        let layout = ParamLayout::new(tensors);
+        let meta = ModelMeta {
+            config: kv.get("config").cloned().unwrap_or_default(),
+            vocab: get("vocab")?,
+            batch: get("batch")?,
+            seq: get("seq")?,
+            n_layers: get("n_layers")?,
+            d_model: get("d_model")?,
+            n_heads: get("n_heads")?,
+            d_ff: get("d_ff")?,
+            n_experts: get("n_experts")?,
+            top_k: get("top_k")?,
+            param_count: get("param_count")?,
+            layout,
+        };
+        if meta.layout.total != meta.param_count {
+            bail!(
+                "manifest param_count {} != layout total {}",
+                meta.param_count,
+                meta.layout.total
+            );
+        }
+        Ok(meta)
+    }
+
+    pub fn load(path: &Path) -> Result<ModelMeta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        ModelMeta::parse(&text)
+    }
+
+    /// Tokens consumed per optimizer step across `n_nodes` with gradient
+    /// accumulation `accum`.
+    pub fn tokens_per_step(&self, n_nodes: usize, accum: usize) -> usize {
+        self.batch * self.seq * n_nodes * accum
+    }
+
+    /// Initialize the flat parameter buffer (same *scheme* as the python
+    /// init: ones for norms, 0.02-std normals for embeddings, 1/sqrt(fan_in)
+    /// for projections — bit-exactness with jax is not required, both sides
+    /// only share HLO).
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut buf = vec![0.0f32; self.layout.total];
+        let mut root = Rng::new(seed);
+        for t in &self.layout.tensors {
+            let mut rng = root.fork(t.offset as u64);
+            let dst = &mut buf[t.offset..t.offset + t.len];
+            if t.name.ends_with("ln1") || t.name.ends_with("ln2") || t.name.ends_with("ln_f") {
+                dst.fill(1.0);
+            } else if t.name.contains("emb") {
+                rng.fill_normal(dst, 0.02);
+            } else {
+                let fan_in = if t.shape.len() >= 2 {
+                    t.shape[t.shape.len() - 2]
+                } else {
+                    t.shape[0]
+                };
+                rng.fill_normal(dst, 1.0 / (fan_in as f32).sqrt());
+            }
+        }
+        buf
+    }
+}
+
+/// Analytic descriptor of a paper-scale model (for netsim only — these are
+/// never instantiated).
+#[derive(Debug, Clone, Copy)]
+pub struct AnalyticModel {
+    pub name: &'static str,
+    /// total parameters
+    pub params: f64,
+    /// parameters active per token (≠ params for MoE)
+    pub active_params: f64,
+    /// sequence length used in the paper's speed runs
+    pub seq: f64,
+}
+
+/// The models of Tables 7/8/10/11/12.
+pub const ANALYTIC_MODELS: &[AnalyticModel] = &[
+    AnalyticModel { name: "llama2-7b", params: 6.74e9, active_params: 6.74e9, seq: 4096.0 },
+    AnalyticModel { name: "mistral-7b", params: 7.24e9, active_params: 7.24e9, seq: 4096.0 },
+    AnalyticModel { name: "llama2-13b", params: 13.0e9, active_params: 13.0e9, seq: 4096.0 },
+    AnalyticModel { name: "llama2-70b", params: 69.0e9, active_params: 69.0e9, seq: 4096.0 },
+    AnalyticModel { name: "mixtral-8x7b", params: 46.7e9, active_params: 12.9e9, seq: 4096.0 },
+    AnalyticModel { name: "sky-moe-8x0.1b", params: 0.5e9, active_params: 0.2e9, seq: 4096.0 },
+    AnalyticModel { name: "sky-moe-8x0.3b", params: 2.0e9, active_params: 0.7e9, seq: 4096.0 },
+];
+
+pub fn analytic_model(name: &str) -> Option<&'static AnalyticModel> {
+    ANALYTIC_MODELS.iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DEMO: &str = "\
+# loco model manifest v1
+config demo
+vocab 512
+batch 8
+seq 64
+n_layers 1
+d_model 8
+n_heads 2
+d_ff 16
+n_experts 0
+top_k 2
+param_count 4560
+params 4
+tok_emb f32 512,8
+w f32 8,16
+b f32 16
+head f32 8,40
+";
+
+    #[test]
+    fn parse_demo_manifest() {
+        let m = ModelMeta::parse(DEMO).unwrap();
+        assert_eq!(m.vocab, 512);
+        assert_eq!(m.layout.tensors.len(), 4);
+        assert_eq!(m.layout.total, 512 * 8 + 8 * 16 + 16 + 8 * 40);
+        assert_eq!(m.layout.find("b").unwrap().offset, 512 * 8 + 128);
+        assert_eq!(m.tokens_per_step(4, 2), 8 * 64 * 4 * 2);
+    }
+
+    #[test]
+    fn parse_rejects_wrong_count() {
+        let bad = DEMO.replace("params 4", "params 5");
+        assert!(ModelMeta::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_wrong_total() {
+        let bad = DEMO.replace("param_count 4560", "param_count 9");
+        assert!(ModelMeta::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn init_is_deterministic_and_structured() {
+        let m = ModelMeta::parse(DEMO).unwrap();
+        let a = m.init_params(7);
+        let b = m.init_params(7);
+        let c = m.init_params(8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        // embeddings have small std
+        let emb = &a[..512 * 8];
+        let std = crate::util::l2_norm(emb) / (emb.len() as f64).sqrt();
+        assert!(std < 0.04, "emb std {std}");
+    }
+
+    #[test]
+    fn analytic_zoo_has_paper_models() {
+        for name in ["llama2-7b", "llama2-70b", "mixtral-8x7b"] {
+            assert!(analytic_model(name).is_some());
+        }
+        assert!(analytic_model("gpt-99t").is_none());
+    }
+}

@@ -1,0 +1,234 @@
+//! Table 1: analytic comparison of communication time and memory across
+//! methods. Formulas are carried symbolically (strings, as printed in the
+//! paper) and evaluated at concrete (Ψ, N_d, B, r).
+
+use crate::report::Table;
+
+/// One method row of Table 1.
+#[derive(Debug, Clone, Copy)]
+pub struct MethodRow {
+    pub name: &'static str,
+    pub complexity: &'static str,
+    /// comm time as a function of (psi, n, b, r) in seconds
+    pub comm_time: fn(f64, f64, f64, f64) -> f64,
+    pub comm_formula: &'static str,
+    /// memory in bytes as a function of (psi, n, r)
+    pub memory: fn(f64, f64, f64) -> f64,
+    pub mem_formula: &'static str,
+    pub collective: bool,
+    pub sharding: bool,
+}
+
+/// All rows of Table 1 (mixed-precision accounting, Zero-2 scenario).
+pub const ROWS: &[MethodRow] = &[
+    MethodRow {
+        name: "EF",
+        complexity: "O(eps^-4)",
+        comm_time: |p, n, b, _| 2.5 * p * n / b,
+        comm_formula: "2.5*Psi*Nd/B",
+        memory: |p, _, _| 10.0 * p,
+        mem_formula: "10*Psi",
+        collective: false,
+        sharding: false,
+    },
+    MethodRow {
+        name: "EF21",
+        complexity: "O(eps^-4)",
+        comm_time: |p, n, b, _| 2.5 * p * n / b,
+        comm_formula: "2.5*Psi*Nd/B",
+        memory: |p, _, _| 10.0 * p,
+        mem_formula: "10*Psi",
+        collective: false,
+        sharding: false,
+    },
+    MethodRow {
+        name: "1-bit Adam",
+        complexity: "O(eps^-4)",
+        comm_time: |p, n, b, _| 0.325 * p * (n - 1.0) / (b * n),
+        comm_formula: "0.325*Psi*(Nd-1)/(B*Nd)",
+        memory: |p, n, _| 18.0 * p + 2.0 * p / n,
+        mem_formula: "18*Psi + 2*Psi/Nd",
+        collective: true,
+        sharding: false,
+    },
+    MethodRow {
+        name: "1-bit LAMB",
+        complexity: "O(eps^-4)",
+        comm_time: |p, n, b, _| 0.325 * p * (n - 1.0) / (b * n),
+        comm_formula: "0.325*Psi*(Nd-1)/(B*Nd)",
+        memory: |p, n, _| 22.0 * p + 2.0 * p / n,
+        mem_formula: "22*Psi + 2*Psi/Nd",
+        collective: true,
+        sharding: false,
+    },
+    MethodRow {
+        name: "PowerSGD",
+        complexity: "-",
+        comm_time: |p, n, b, r| 4.0 * r * p.sqrt() * (n - 1.0) / (b * n),
+        comm_formula: "4*r*sqrt(Psi)*(Nd-1)/(B*Nd)",
+        memory: |p, _, r| 14.0 * p + 2.0 * r * p.sqrt(),
+        mem_formula: "14*Psi + 2*r*sqrt(Psi)",
+        collective: true,
+        sharding: true,
+    },
+    MethodRow {
+        name: "Modified EF-SGD",
+        complexity: "O(eps^-4)",
+        comm_time: |p, n, b, _| 2.25 * p * (n - 1.0) / (b * n),
+        comm_formula: "2.25*Psi*(Nd-1)/(B*Nd)",
+        memory: |p, n, _| 4.0 * p + 6.0 * p / n,
+        mem_formula: "4*Psi + 6*Psi/Nd",
+        collective: true,
+        sharding: true,
+    },
+    MethodRow {
+        name: "Modified EF21-SGD",
+        complexity: "O(eps^-4)",
+        comm_time: |p, n, b, _| 2.25 * p * (n - 1.0) / (b * n),
+        comm_formula: "2.25*Psi*(Nd-1)/(B*Nd)",
+        memory: |p, n, _| 4.0 * p + 10.0 * p / n,
+        mem_formula: "4*Psi + 10*Psi/Nd",
+        collective: true,
+        sharding: true,
+    },
+    MethodRow {
+        name: "Adam",
+        complexity: "O(eps^-4)",
+        comm_time: |p, n, b, _| 4.0 * p * (n - 1.0) / (b * n),
+        comm_formula: "4*Psi*(Nd-1)/(B*Nd)",
+        memory: |p, n, _| 2.0 * p + 14.0 * p / n,
+        mem_formula: "2*Psi + 14*Psi/Nd",
+        collective: true,
+        sharding: true,
+    },
+    MethodRow {
+        name: "SGD",
+        complexity: "O(eps^-4)",
+        comm_time: |p, n, b, _| 4.0 * p * (n - 1.0) / (b * n),
+        comm_formula: "4*Psi*(Nd-1)/(B*Nd)",
+        memory: |p, n, _| 2.0 * p + 6.0 * p / n,
+        mem_formula: "2*Psi + 6*Psi/Nd",
+        collective: true,
+        sharding: true,
+    },
+    MethodRow {
+        name: "Adam-Zero++",
+        complexity: "-",
+        comm_time: |p, n, b, _| 1.5 * p * (n - 1.0) / (b * n),
+        comm_formula: "1.5*Psi*(Nd-1)/(B*Nd)",
+        memory: |p, n, _| 2.0 * p + 14.0 * p / n,
+        mem_formula: "2*Psi + 14*Psi/Nd",
+        collective: true,
+        sharding: true,
+    },
+    MethodRow {
+        name: "LoCo-SGD",
+        complexity: "O(eps^-4)",
+        comm_time: |p, n, b, _| 2.25 * p * (n - 1.0) / (b * n),
+        comm_formula: "2.25*Psi*(Nd-1)/(B*Nd)",
+        memory: |p, n, _| 3.0 * p + 6.0 * p / n,
+        mem_formula: "3*Psi + 6*Psi/Nd",
+        collective: true,
+        sharding: true,
+    },
+    MethodRow {
+        name: "LoCo-Adam",
+        complexity: "O(eps^-4)",
+        comm_time: |p, n, b, _| 2.25 * p * (n - 1.0) / (b * n),
+        comm_formula: "2.25*Psi*(Nd-1)/(B*Nd)",
+        memory: |p, n, _| 3.0 * p + 14.0 * p / n,
+        mem_formula: "3*Psi + 14*Psi/Nd",
+        collective: true,
+        sharding: true,
+    },
+    MethodRow {
+        name: "LoCo-Zero++",
+        complexity: "O(eps^-4)",
+        comm_time: |p, n, b, _| 1.5 * p * (n - 1.0) / (b * n),
+        comm_formula: "1.5*Psi*(Nd-1)/(B*Nd)",
+        memory: |p, n, _| 3.0 * p + 14.0 * p / n,
+        mem_formula: "3*Psi + 14*Psi/Nd",
+        collective: true,
+        sharding: true,
+    },
+];
+
+/// Render Table 1 evaluated at (Ψ params, N_d nodes, B bytes/s, r rank).
+pub fn render(psi: f64, n: f64, b: f64, r: f64) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Table 1 — comm time & memory @ Psi={:.1e}, Nd={}, B={:.0e} B/s, r={}",
+            psi, n, b, r
+        ),
+        &["method", "grad cmplx", "comm formula", "comm time (s)", "mem formula", "mem (GiB)", "collective", "sharding"],
+    );
+    for row in ROWS {
+        t.row(vec![
+            row.name.to_string(),
+            row.complexity.to_string(),
+            row.comm_formula.to_string(),
+            format!("{:.3}", (row.comm_time)(psi, n, b, r)),
+            row.mem_formula.to_string(),
+            format!("{:.1}", (row.memory)(psi, n, r) / (1u64 << 30) as f64),
+            if row.collective { "yes" } else { "no" }.to_string(),
+            if row.sharding { "yes" } else { "no" }.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn find(name: &str) -> &'static MethodRow {
+        ROWS.iter().find(|r| r.name == name).unwrap()
+    }
+
+    #[test]
+    fn loco_beats_adam_on_comm_and_memory_state() {
+        let (p, n, b, r) = (7e9, 64.0, 25e9, 4.0);
+        let loco = find("LoCo-Adam");
+        let adam = find("Adam");
+        assert!((loco.comm_time)(p, n, b, r) < (adam.comm_time)(p, n, b, r));
+        // LoCo memory = Adam + Psi (the int8 error)
+        let diff = (loco.memory)(p, n, r) - (adam.memory)(p, n, r);
+        assert!((diff - p).abs() / p < 1e-9);
+    }
+
+    #[test]
+    fn parameter_server_methods_scale_worse_with_n() {
+        let (p, b, r) = (7e9, 25e9, 4.0);
+        let ef = find("EF");
+        let loco = find("LoCo-Adam");
+        // EF grows linearly with Nd; LoCo saturates
+        let ef_ratio = (ef.comm_time)(p, 128.0, b, r) / (ef.comm_time)(p, 32.0, b, r);
+        let loco_ratio = (loco.comm_time)(p, 128.0, b, r) / (loco.comm_time)(p, 32.0, b, r);
+        assert!(ef_ratio > 3.9);
+        assert!(loco_ratio < 1.05);
+    }
+
+    #[test]
+    fn zeropp_comm_below_loco() {
+        let (p, n, b, r) = (7e9, 64.0, 25e9, 4.0);
+        assert!(
+            (find("LoCo-Zero++").comm_time)(p, n, b, r)
+                < (find("LoCo-Adam").comm_time)(p, n, b, r)
+        );
+    }
+
+    #[test]
+    fn render_has_all_rows() {
+        let t = render(7e9, 64.0, 25e9, 4.0);
+        assert_eq!(t.rows.len(), ROWS.len());
+        assert!(t.render().contains("LoCo-Adam"));
+    }
+
+    #[test]
+    fn powersgd_comm_sublinear_in_model_size() {
+        let row = find("PowerSGD");
+        let t1 = (row.comm_time)(1e9, 64.0, 25e9, 4.0);
+        let t2 = (row.comm_time)(4e9, 64.0, 25e9, 4.0);
+        assert!(t2 / t1 < 2.1); // sqrt scaling
+    }
+}

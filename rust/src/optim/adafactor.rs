@@ -1,0 +1,216 @@
+//! Adafactor (Shazeer & Stern 2018) with factored second moments for
+//! matrix-shaped tensors and full second moments for vectors.
+//!
+//! Per-tensor state inside the shard (this is why Zero-2 sharding cuts on
+//! tensor boundaries): for a [r, c] tensor the state is r + c floats
+//! instead of r*c — the "sublinear memory" the paper cites when calling
+//! LoCo optimizer-agnostic.
+
+use super::{OptimConfig, Optimizer};
+use crate::sharding::TensorInfo;
+
+struct Slot {
+    offset: usize,
+    rows: usize,
+    cols: usize,
+    /// factored: row/col running means of g^2; full: col_acc holds v
+    row_acc: Vec<f32>,
+    col_acc: Vec<f32>,
+    factored: bool,
+}
+
+pub struct Adafactor {
+    beta2: f32,
+    eps: f32,
+    clip_threshold: f32,
+    slots: Vec<Slot>,
+    t: u64,
+}
+
+impl Adafactor {
+    pub fn new(cfg: &OptimConfig, shard_len: usize, tensors: &[TensorInfo]) -> Self {
+        let mut slots = Vec::new();
+        if tensors.is_empty() {
+            // flat shard: treat as one vector (non-factored)
+            slots.push(Slot {
+                offset: 0,
+                rows: 1,
+                cols: shard_len,
+                row_acc: Vec::new(),
+                col_acc: vec![0.0; shard_len],
+                factored: false,
+            });
+        } else {
+            for t in tensors {
+                let factored = t.shape.len() >= 2;
+                if factored {
+                    let rows = t.shape[0];
+                    let cols = t.len / rows;
+                    slots.push(Slot {
+                        offset: t.offset,
+                        rows,
+                        cols,
+                        row_acc: vec![0.0; rows],
+                        col_acc: vec![0.0; cols],
+                        factored: true,
+                    });
+                } else {
+                    slots.push(Slot {
+                        offset: t.offset,
+                        rows: 1,
+                        cols: t.len,
+                        row_acc: Vec::new(),
+                        col_acc: vec![0.0; t.len],
+                        factored: false,
+                    });
+                }
+            }
+        }
+        Adafactor { beta2: cfg.beta2, eps: 1e-30, clip_threshold: 1.0, slots, t: 0 }
+    }
+}
+
+impl Optimizer for Adafactor {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        self.t += 1;
+        // beta2 annealing per the paper: 1 - t^-0.8
+        let beta2 = self.beta2.min(1.0 - (self.t as f32).powf(-0.8));
+        for s in &mut self.slots {
+            let n = s.rows * s.cols;
+            let g = &grad[s.offset..s.offset + n];
+            let p = &mut params[s.offset..s.offset + n];
+            if s.factored {
+                // update row/col means of g^2
+                for r in 0..s.rows {
+                    let mut acc = 0.0f32;
+                    for c in 0..s.cols {
+                        let v = g[r * s.cols + c];
+                        acc += v * v + self.eps;
+                    }
+                    s.row_acc[r] =
+                        beta2 * s.row_acc[r] + (1.0 - beta2) * acc / s.cols as f32;
+                }
+                for c in 0..s.cols {
+                    let mut acc = 0.0f32;
+                    for r in 0..s.rows {
+                        let v = g[r * s.cols + c];
+                        acc += v * v + self.eps;
+                    }
+                    s.col_acc[c] =
+                        beta2 * s.col_acc[c] + (1.0 - beta2) * acc / s.rows as f32;
+                }
+                let row_mean: f32 =
+                    s.row_acc.iter().sum::<f32>() / s.rows as f32 + self.eps;
+                // u = g / sqrt(R_r * C_c / mean(R))
+                let mut update = vec![0.0f32; n];
+                let mut rms_acc = 0.0f64;
+                for r in 0..s.rows {
+                    for c in 0..s.cols {
+                        let v = (s.row_acc[r] * s.col_acc[c] / row_mean)
+                            .max(self.eps)
+                            .sqrt();
+                        let u = g[r * s.cols + c] / v;
+                        update[r * s.cols + c] = u;
+                        rms_acc += (u as f64) * (u as f64);
+                    }
+                }
+                let rms = (rms_acc / n as f64).sqrt() as f32;
+                let denom = (rms / self.clip_threshold).max(1.0);
+                for i in 0..n {
+                    p[i] -= lr * update[i] / denom;
+                }
+            } else {
+                let mut rms_acc = 0.0f64;
+                let mut update = vec![0.0f32; n];
+                for i in 0..n {
+                    s.col_acc[i] =
+                        beta2 * s.col_acc[i] + (1.0 - beta2) * (g[i] * g[i] + self.eps);
+                    let u = g[i] / s.col_acc[i].max(self.eps).sqrt();
+                    update[i] = u;
+                    rms_acc += (u as f64) * (u as f64);
+                }
+                let rms = (rms_acc / n.max(1) as f64).sqrt() as f32;
+                let denom = (rms / self.clip_threshold).max(1.0);
+                for i in 0..n {
+                    p[i] -= lr * update[i] / denom;
+                }
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| 4 * (s.row_acc.len() + s.col_acc.len()))
+            .sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "adafactor"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matrix_tensor(rows: usize, cols: usize) -> Vec<TensorInfo> {
+        vec![TensorInfo {
+            name: "w".into(),
+            shape: vec![rows, cols],
+            offset: 0,
+            len: rows * cols,
+        }]
+    }
+
+    #[test]
+    fn factored_state_is_sublinear() {
+        let t = matrix_tensor(64, 64);
+        let opt = Adafactor::new(&OptimConfig::default(), 64 * 64, &t);
+        // 64+64 floats instead of 4096
+        assert_eq!(opt.state_bytes(), 4 * 128);
+    }
+
+    #[test]
+    fn vector_state_is_full() {
+        let t = vec![TensorInfo { name: "b".into(), shape: vec![100], offset: 0, len: 100 }];
+        let opt = Adafactor::new(&OptimConfig::default(), 100, &t);
+        assert_eq!(opt.state_bytes(), 400);
+    }
+
+    #[test]
+    fn descends_quadratic_matrix() {
+        let (r, c) = (8, 8);
+        let t = matrix_tensor(r, c);
+        let mut opt = Adafactor::new(&OptimConfig::default(), r * c, &t);
+        let target: Vec<f32> = (0..r * c).map(|i| (i % 7) as f32 * 0.2 - 0.5).collect();
+        let mut w = vec![0.0f32; r * c];
+        let loss = |w: &[f32]| -> f32 {
+            w.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum()
+        };
+        let l0 = loss(&w);
+        for _ in 0..300 {
+            let g: Vec<f32> = w.iter().zip(&target).map(|(a, b)| 2.0 * (a - b)).collect();
+            opt.step(&mut w, &g, 0.05);
+        }
+        assert!(loss(&w) < 0.05 * l0);
+    }
+
+    #[test]
+    fn update_is_scale_invariant() {
+        // Adafactor normalizes by RMS: gradients of very different scales
+        // produce comparable first-step update magnitudes.
+        let t = matrix_tensor(4, 4);
+        let mut big = Adafactor::new(&OptimConfig::default(), 16, &t);
+        let mut small = Adafactor::new(&OptimConfig::default(), 16, &t);
+        let mut p1 = vec![0.0f32; 16];
+        let mut p2 = vec![0.0f32; 16];
+        let g1 = vec![100.0f32; 16];
+        let g2 = vec![0.001f32; 16];
+        big.step(&mut p1, &g1, 0.1);
+        small.step(&mut p2, &g2, 0.1);
+        let m1 = p1.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+        let m2 = p2.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+        assert!((m1 / m2) < 3.0 && (m2 / m1) < 3.0, "{m1} vs {m2}");
+    }
+}

@@ -1,0 +1,119 @@
+//! LAMB (You et al.): Adam statistics with a per-tensor trust ratio
+//! ||w|| / ||update||, the optimizer behind the paper's 1-bit LAMB
+//! baseline.
+
+use super::{OptimConfig, Optimizer};
+use crate::sharding::TensorInfo;
+
+pub struct Lamb {
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    weight_decay: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    /// (offset, len) of each tensor for the trust-ratio grouping
+    groups: Vec<(usize, usize)>,
+    t: u64,
+}
+
+impl Lamb {
+    pub fn new(cfg: &OptimConfig, shard_len: usize, tensors: &[TensorInfo]) -> Self {
+        let groups = if tensors.is_empty() {
+            vec![(0, shard_len)]
+        } else {
+            tensors.iter().map(|t| (t.offset, t.len)).collect()
+        };
+        Lamb {
+            beta1: cfg.beta1,
+            beta2: cfg.beta2,
+            eps: cfg.eps,
+            weight_decay: cfg.weight_decay,
+            m: vec![0.0; shard_len],
+            v: vec![0.0; shard_len],
+            groups,
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for Lamb {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for &(off, len) in &self.groups {
+            let mut upd = vec![0.0f32; len];
+            for i in 0..len {
+                let gi = off + i;
+                let g = grad[gi];
+                self.m[gi] = self.beta1 * self.m[gi] + (1.0 - self.beta1) * g;
+                self.v[gi] = self.beta2 * self.v[gi] + (1.0 - self.beta2) * g * g;
+                let m_hat = self.m[gi] / bc1;
+                let v_hat = self.v[gi] / bc2;
+                upd[i] = m_hat / (v_hat.sqrt() + self.eps)
+                    + self.weight_decay * params[gi];
+            }
+            let w_norm = crate::util::l2_norm(&params[off..off + len]) as f32;
+            let u_norm = crate::util::l2_norm(&upd) as f32;
+            let trust = if w_norm > 0.0 && u_norm > 0.0 { w_norm / u_norm } else { 1.0 };
+            for i in 0..len {
+                params[off + i] -= lr * trust * upd[i];
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        8 * self.m.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "lamb"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trust_ratio_scales_with_weight_norm() {
+        // same gradient, bigger weights => bigger absolute step
+        let cfg = OptimConfig::default();
+        let mut small = Lamb::new(&cfg, 4, &[]);
+        let mut large = Lamb::new(&cfg, 4, &[]);
+        let mut p1 = vec![0.1f32; 4];
+        let mut p2 = vec![10.0f32; 4];
+        let g = vec![1.0f32; 4];
+        let before1 = p1.clone();
+        let before2 = p2.clone();
+        small.step(&mut p1, &g, 0.01);
+        large.step(&mut p2, &g, 0.01);
+        let d1 = (before1[0] - p1[0]).abs();
+        let d2 = (before2[0] - p2[0]).abs();
+        assert!(d2 > 10.0 * d1, "d1={d1} d2={d2}");
+    }
+
+    #[test]
+    fn zero_weights_fall_back_to_unit_trust() {
+        let mut opt = Lamb::new(&OptimConfig::default(), 2, &[]);
+        let mut p = vec![0.0f32; 2];
+        opt.step(&mut p, &[1.0, -1.0], 0.1);
+        assert!(p[0] < 0.0 && p[1] > 0.0);
+        assert!(p[0].is_finite());
+    }
+
+    #[test]
+    fn per_tensor_groups_are_independent() {
+        let tensors = vec![
+            TensorInfo { name: "a".into(), shape: vec![2], offset: 0, len: 2 },
+            TensorInfo { name: "b".into(), shape: vec![2], offset: 2, len: 2 },
+        ];
+        let mut opt = Lamb::new(&OptimConfig::default(), 4, &tensors);
+        let mut p = vec![0.01, 0.01, 100.0, 100.0];
+        opt.step(&mut p, &[1.0, 1.0, 1.0, 1.0], 0.01);
+        let da = (0.01 - p[0]).abs();
+        let db = (100.0 - p[2]).abs();
+        assert!(db > da * 100.0);
+    }
+}

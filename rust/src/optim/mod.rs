@@ -1,0 +1,193 @@
+//! Sharded optimizers (Zero-2: each node keeps optimizer state only for its
+//! own parameter shard). LoCo is optimizer-agnostic (Sec. 3.4); everything
+//! here consumes the *averaged, dequantized* gradient produced by the
+//! communication path.
+//!
+//! Implemented: SGD(+momentum), Adam, AdamW, Adafactor (factored second
+//! moment, per-tensor), LAMB (per-tensor trust ratio).
+
+pub mod adafactor;
+pub mod adam;
+pub mod lamb;
+pub mod sgd;
+
+use crate::sharding::TensorInfo;
+
+/// Which optimizer a run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    Adam,
+    AdamW,
+    Adafactor,
+    Lamb,
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "sgd" => OptimizerKind::Sgd,
+            "adam" => OptimizerKind::Adam,
+            "adamw" => OptimizerKind::AdamW,
+            "adafactor" => OptimizerKind::Adafactor,
+            "lamb" => OptimizerKind::Lamb,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimizerKind::Sgd => "sgd",
+            OptimizerKind::Adam => "adam",
+            OptimizerKind::AdamW => "adamw",
+            OptimizerKind::Adafactor => "adafactor",
+            OptimizerKind::Lamb => "lamb",
+        }
+    }
+}
+
+/// Hyper-parameters shared across optimizers.
+#[derive(Debug, Clone, Copy)]
+pub struct OptimConfig {
+    pub kind: OptimizerKind,
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub momentum: f32,
+}
+
+impl Default for OptimConfig {
+    fn default() -> Self {
+        OptimConfig {
+            kind: OptimizerKind::Adam,
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            momentum: 0.9,
+        }
+    }
+}
+
+/// A sharded optimizer: `step` updates `params` (this node's shard) from
+/// the averaged gradient for the same shard.
+pub trait Optimizer: Send {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32);
+    /// Bytes of optimizer state held for this shard.
+    fn state_bytes(&self) -> usize;
+    fn name(&self) -> &'static str;
+}
+
+/// Build an optimizer for a shard. `tensors` lists the tensors inside the
+/// shard with offsets rebased to the shard start (empty slice => treat the
+/// shard as one flat tensor).
+pub fn build(cfg: &OptimConfig, shard_len: usize, tensors: &[TensorInfo]) -> Box<dyn Optimizer> {
+    match cfg.kind {
+        OptimizerKind::Sgd => Box::new(sgd::Sgd::new(cfg, shard_len)),
+        OptimizerKind::Adam => Box::new(adam::Adam::new(cfg, shard_len, false)),
+        OptimizerKind::AdamW => Box::new(adam::Adam::new(cfg, shard_len, true)),
+        OptimizerKind::Adafactor => Box::new(adafactor::Adafactor::new(cfg, shard_len, tensors)),
+        OptimizerKind::Lamb => Box::new(lamb::Lamb::new(cfg, shard_len, tensors)),
+    }
+}
+
+/// Learning-rate schedule: linear warmup then cosine decay to `min_ratio`.
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub base: f32,
+    pub warmup: u64,
+    pub total: u64,
+    pub min_ratio: f32,
+}
+
+impl LrSchedule {
+    pub fn constant(base: f32) -> Self {
+        LrSchedule { base, warmup: 0, total: 0, min_ratio: 1.0 }
+    }
+
+    pub fn at(&self, step: u64) -> f32 {
+        if self.warmup > 0 && step < self.warmup {
+            return self.base * (step + 1) as f32 / self.warmup as f32;
+        }
+        if self.total == 0 || step >= self.total {
+            return self.base * self.min_ratio;
+        }
+        let progress =
+            (step - self.warmup) as f32 / (self.total - self.warmup).max(1) as f32;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+        self.base * (self.min_ratio + (1.0 - self.min_ratio) * cos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [
+            OptimizerKind::Sgd,
+            OptimizerKind::Adam,
+            OptimizerKind::AdamW,
+            OptimizerKind::Adafactor,
+            OptimizerKind::Lamb,
+        ] {
+            assert_eq!(OptimizerKind::parse(k.name()), Some(k));
+        }
+    }
+
+    #[test]
+    fn schedule_warmup_and_decay() {
+        let s = LrSchedule { base: 1.0, warmup: 10, total: 110, min_ratio: 0.1 };
+        assert!(s.at(0) < 0.2);
+        assert!((s.at(9) - 1.0).abs() < 1e-6);
+        assert!(s.at(60) < 1.0 && s.at(60) > 0.1);
+        assert!((s.at(109) - 0.1).abs() < 0.01);
+        assert_eq!(s.at(500), 0.1);
+    }
+
+    #[test]
+    fn constant_schedule() {
+        let s = LrSchedule::constant(0.5);
+        assert_eq!(s.at(0), 0.5);
+        assert_eq!(s.at(10_000), 0.5);
+    }
+
+    /// All optimizers must make progress on a simple quadratic.
+    #[test]
+    fn all_optimizers_descend_quadratic() {
+        let n = 32;
+        let target: Vec<f32> = (0..n).map(|i| (i as f32) * 0.1 - 1.5).collect();
+        for kind in [
+            OptimizerKind::Sgd,
+            OptimizerKind::Adam,
+            OptimizerKind::AdamW,
+            OptimizerKind::Adafactor,
+            OptimizerKind::Lamb,
+        ] {
+            let cfg = OptimConfig { kind, lr: 0.05, ..Default::default() };
+            let tensors = vec![TensorInfo {
+                name: "w".into(),
+                shape: vec![4, 8],
+                offset: 0,
+                len: n,
+            }];
+            let mut opt = build(&cfg, n, &tensors);
+            let mut w = vec![0.0f32; n];
+            let loss = |w: &[f32]| -> f32 {
+                w.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum()
+            };
+            let l0 = loss(&w);
+            for _ in 0..200 {
+                let grad: Vec<f32> =
+                    w.iter().zip(&target).map(|(a, b)| 2.0 * (a - b)).collect();
+                opt.step(&mut w, &grad, cfg.lr);
+            }
+            let l1 = loss(&w);
+            assert!(l1 < 0.2 * l0, "{}: {l0} -> {l1}", kind.name());
+        }
+    }
+}

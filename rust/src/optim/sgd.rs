@@ -1,0 +1,82 @@
+//! SGD with (heavy-ball) momentum — Eqn. (9) of the paper.
+
+use super::{OptimConfig, Optimizer};
+
+pub struct Sgd {
+    momentum: f32,
+    weight_decay: f32,
+    buf: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(cfg: &OptimConfig, shard_len: usize) -> Self {
+        Sgd {
+            momentum: cfg.momentum,
+            weight_decay: cfg.weight_decay,
+            buf: if cfg.momentum != 0.0 { vec![0.0; shard_len] } else { Vec::new() },
+        }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        debug_assert_eq!(params.len(), grad.len());
+        if self.momentum == 0.0 {
+            for (p, &g) in params.iter_mut().zip(grad) {
+                let g = g + self.weight_decay * *p;
+                *p -= lr * g;
+            }
+        } else {
+            for i in 0..params.len() {
+                let g = grad[i] + self.weight_decay * params[i];
+                self.buf[i] = self.momentum * self.buf[i] + g;
+                params[i] -= lr * self.buf[i];
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        4 * self.buf.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_step_is_exact() {
+        let cfg = OptimConfig { momentum: 0.0, ..Default::default() };
+        let mut opt = Sgd::new(&cfg, 2);
+        let mut p = vec![1.0f32, -1.0];
+        opt.step(&mut p, &[0.5, -0.5], 0.1);
+        assert_eq!(p, vec![0.95, -0.95]);
+        assert_eq!(opt.state_bytes(), 0);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let cfg = OptimConfig { momentum: 0.9, ..Default::default() };
+        let mut opt = Sgd::new(&cfg, 1);
+        let mut p = vec![0.0f32];
+        opt.step(&mut p, &[1.0], 0.1); // buf=1.0, p=-0.1
+        opt.step(&mut p, &[1.0], 0.1); // buf=1.9, p=-0.29
+        assert!((p[0] + 0.29).abs() < 1e-6);
+        assert_eq!(opt.state_bytes(), 4);
+    }
+
+    #[test]
+    fn weight_decay_pulls_to_zero() {
+        let cfg = OptimConfig { momentum: 0.0, weight_decay: 0.1, ..Default::default() };
+        let mut opt = Sgd::new(&cfg, 1);
+        let mut p = vec![10.0f32];
+        for _ in 0..100 {
+            opt.step(&mut p, &[0.0], 0.5);
+        }
+        assert!(p[0].abs() < 1.0);
+    }
+}

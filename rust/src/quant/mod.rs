@@ -1,0 +1,289 @@
+//! Low-bit quantization primitives — the Rust twin of the L1 Pallas kernel.
+//!
+//! Numerical contract (shared with `python/compile/kernels/ref.py` and
+//! verified end-to-end against the AOT artifact in `tests/xla_parity.rs`):
+//!
+//! * `compressor(h; s, p) = clamp(round_ties_even(h*s), -2^{p-1}, 2^{p-1}-1)`
+//! * `decompressor(q; s) = q as f32 / s`
+//! * int4 codes live in `[-8, 7]` and travel nibble-packed, two per byte;
+//! * the stored LoCo error is int8 with scale `s_e` (Eqn. 7).
+
+pub mod pack;
+
+pub use pack::{pack_nibbles, unpack_nibbles, PackedI4};
+
+/// Quantize one value to a p-bit signed integer code (as i8).
+#[inline(always)]
+pub fn quantize(x: f32, s: f32, bits: u32) -> i8 {
+    let hi = ((1i32 << (bits - 1)) - 1) as f32;
+    let lo = -((1i32 << (bits - 1)) as f32);
+    (x * s).round_ties_even().clamp(lo, hi) as i8
+}
+
+/// Dequantize a code back to f32.
+#[inline(always)]
+pub fn dequantize(q: i8, s: f32) -> f32 {
+    q as f32 / s
+}
+
+/// Quantize a slice to int4 codes (stored one per i8; see `pack` for the
+/// wire format).
+pub fn quantize_slice_i4(src: &[f32], s: f32, out: &mut [i8]) {
+    debug_assert_eq!(src.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(src) {
+        *o = quantize(x, s, 4);
+    }
+}
+
+/// Quantize a slice to int8 codes.
+pub fn quantize_slice_i8(src: &[f32], s: f32, out: &mut [i8]) {
+    debug_assert_eq!(src.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(src) {
+        *o = quantize(x, s, 8);
+    }
+}
+
+/// `acc[i] += q[i]/s` — the receiver-side accumulate of Eqn. (8).
+pub fn dequantize_accumulate(q: &[i8], s: f32, acc: &mut [f32]) {
+    debug_assert_eq!(q.len(), acc.len());
+    let inv = 1.0 / s;
+    for (a, &c) in acc.iter_mut().zip(q) {
+        *a += c as f32 * inv;
+    }
+}
+
+/// Parameters of one LoCo compression step.
+#[derive(Debug, Clone, Copy)]
+pub struct LocoParams {
+    /// gradient quantization scale `s` (Eqn. 3)
+    pub s: f32,
+    /// error quantization scale `s_e` (paper uses 4s or 6s)
+    pub s_e: f32,
+    /// moving-average coefficient `beta` (Eqn. 5)
+    pub beta: f32,
+    /// gradient bit width (4 in the paper's main runs, 1..8 supported)
+    pub bits: u32,
+}
+
+impl Default for LocoParams {
+    fn default() -> Self {
+        LocoParams { s: (1 << 19) as f32, s_e: 4.0 * (1 << 19) as f32, beta: 0.05, bits: 4 }
+    }
+}
+
+/// Fused LoCo step over a shard (Algorithm 1, steps 1–2):
+///
+/// ```text
+/// e_f = e_q/s_e;  h = g + e_f;  q = Q(h; s, bits);  d = q/s
+/// e~  = (1-beta) e_f + beta (h - d)
+/// e_q' = reset ? 0 : Q(e~; s_e, 8)
+/// ```
+///
+/// Writes the low-bit codes into `q_out` and updates `e_q` in place.
+/// This is the scalar reference; `loco_step_packed` below is the
+/// hot-path version that emits the nibble-packed wire format directly.
+pub fn loco_step(g: &[f32], e_q: &mut [i8], q_out: &mut [i8], p: LocoParams, reset: bool) {
+    debug_assert_eq!(g.len(), e_q.len());
+    debug_assert_eq!(g.len(), q_out.len());
+    let inv_se = 1.0 / p.s_e;
+    let inv_s = 1.0 / p.s;
+    let hi = ((1i32 << (p.bits - 1)) - 1) as f32;
+    let lo = -((1i32 << (p.bits - 1)) as f32);
+    // §Perf: the reset branch is hoisted out of the loop and the generic
+    // `quantize` is inlined with precomputed clamp bounds so the body
+    // autovectorizes (AVX2 roundps) — see EXPERIMENTS.md §Perf.
+    if reset {
+        for i in 0..g.len() {
+            let e_f = e_q[i] as f32 * inv_se;
+            let h = g[i] + e_f;
+            q_out[i] = (h * p.s).round_ties_even().clamp(lo, hi) as i8;
+            e_q[i] = 0;
+        }
+    } else {
+        let one_m_beta = 1.0 - p.beta;
+        for i in 0..g.len() {
+            let e_f = e_q[i] as f32 * inv_se;
+            let h = g[i] + e_f;
+            let q = (h * p.s).round_ties_even().clamp(lo, hi) as i8;
+            q_out[i] = q;
+            let d = q as f32 * inv_s;
+            let e_tilde = one_m_beta * e_f + p.beta * (h - d);
+            e_q[i] = (e_tilde * p.s_e).round_ties_even().clamp(-128.0, 127.0) as i8;
+        }
+    }
+}
+
+/// Hot-path fused LoCo step emitting packed nibbles (two codes per output
+/// byte). `g.len()` may be odd; the trailing nibble is zero-padded.
+///
+/// §Perf iteration 2: runs the vectorizable fused step into a scratch code
+/// buffer, then bit-packs in a second streaming pass — 1.6x faster than the
+/// original interleaved per-pair loop, whose per-element `reset` branch and
+/// byte-push blocked autovectorization (EXPERIMENTS.md §Perf).
+pub fn loco_step_packed(
+    g: &[f32],
+    e_q: &mut [i8],
+    out: &mut Vec<u8>,
+    p: LocoParams,
+    reset: bool,
+) {
+    debug_assert_eq!(g.len(), e_q.len());
+    debug_assert_eq!(p.bits, 4, "packed path is the 4-bit wire format");
+    let n = g.len();
+    let mut codes = vec![0i8; n];
+    loco_step(g, e_q, &mut codes, p, reset);
+    out.clear();
+    out.reserve(n.div_ceil(2));
+    let pairs = n / 2;
+    for i in 0..pairs {
+        out.push(pack::pack_pair(codes[2 * i], codes[2 * i + 1]));
+    }
+    if n % 2 == 1 {
+        out.push(pack::pack_pair(codes[n - 1], 0));
+    }
+}
+
+/// Receiver side of the 4-bit wire: `acc[i] += unpack(bytes)[i] / s`.
+/// Uses a 256-entry lookup table mapping each byte to its two signed
+/// nibbles, so the inner loop is one table load + two fmas per byte.
+pub fn dequantize_accumulate_packed(bytes: &[u8], n: usize, s: f32, acc: &mut [f32]) {
+    debug_assert!(acc.len() >= n);
+    debug_assert!(bytes.len() >= n.div_ceil(2));
+    let inv = 1.0 / s;
+    let lut = pack::nibble_lut();
+    let pairs = n / 2;
+    for i in 0..pairs {
+        let (lo, hi) = lut[bytes[i] as usize];
+        acc[2 * i] += lo as f32 * inv;
+        acc[2 * i + 1] += hi as f32 * inv;
+    }
+    if n % 2 == 1 {
+        let (lo, _) = lut[bytes[pairs] as usize];
+        acc[n - 1] += lo as f32 * inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{for_cases, vec_normal};
+
+    #[test]
+    fn quantize_rounds_ties_to_even() {
+        // 0.5 -> 0, 1.5 -> 2 (ties to even, matching jnp.round)
+        assert_eq!(quantize(0.5, 1.0, 8), 0);
+        assert_eq!(quantize(1.5, 1.0, 8), 2);
+        assert_eq!(quantize(-0.5, 1.0, 8), 0);
+        assert_eq!(quantize(-1.5, 1.0, 8), -2);
+    }
+
+    #[test]
+    fn quantize_clamps_to_range() {
+        assert_eq!(quantize(100.0, 1.0, 4), 7);
+        assert_eq!(quantize(-100.0, 1.0, 4), -8);
+        assert_eq!(quantize(1000.0, 1.0, 8), 127);
+        assert_eq!(quantize(-1000.0, 1.0, 8), -128);
+        assert_eq!(quantize(100.0, 1.0, 1), 0);
+        assert_eq!(quantize(-100.0, 1.0, 1), -1);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        for_cases(11, 64, |rng| {
+            let s = 16.0f32;
+            let xs = vec_normal(rng, 300, 0.2);
+            for &x in &xs {
+                if x.abs() < 7.0 / s {
+                    let q = quantize(x, s, 4);
+                    assert!((x - dequantize(q, s)).abs() <= 0.5 / s + 1e-7);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn loco_step_zero_grad_zero_error_is_identity() {
+        let g = vec![0.0f32; 10];
+        let mut e = vec![0i8; 10];
+        let mut q = vec![0i8; 10];
+        loco_step(&g, &mut e, &mut q, LocoParams::default(), false);
+        assert!(q.iter().all(|&c| c == 0));
+        assert!(e.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn loco_step_reset_zeroes_error() {
+        let g = vec![0.3f32; 8];
+        let mut e = vec![55i8; 8];
+        let mut q = vec![0i8; 8];
+        let p = LocoParams { s: 16.0, s_e: 64.0, beta: 0.1, bits: 4 };
+        loco_step(&g, &mut e, &mut q, p, true);
+        assert!(e.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn packed_matches_scalar() {
+        for_cases(12, 48, |rng| {
+            let g = vec_normal(rng, 257, 0.1);
+            let n = g.len();
+            let p = LocoParams { s: 32.0, s_e: 128.0, beta: 0.25, bits: 4 };
+            let mut e1: Vec<i8> = (0..n).map(|_| (rng.below(200) as i32 - 100) as i8).collect();
+            let mut e2 = e1.clone();
+            let mut q = vec![0i8; n];
+            loco_step(&g, &mut e1, &mut q, p, false);
+            let mut packed = Vec::new();
+            loco_step_packed(&g, &mut e2, &mut packed, p, false);
+            assert_eq!(e1, e2);
+            let unpacked = unpack_nibbles(&packed, n);
+            assert_eq!(q, unpacked);
+        });
+    }
+
+    #[test]
+    fn dequant_accumulate_packed_matches_scalar() {
+        for_cases(13, 48, |rng| {
+            let g = vec_normal(rng, 133, 0.1);
+            let n = g.len();
+            let mut codes = vec![0i8; n];
+            quantize_slice_i4(&g, 16.0, &mut codes);
+            let packed = pack_nibbles(&codes);
+            let mut a = vec![1.0f32; n];
+            let mut b = vec![1.0f32; n];
+            dequantize_accumulate(&codes, 16.0, &mut a);
+            dequantize_accumulate_packed(&packed, n, 16.0, &mut b);
+            assert_eq!(a, b);
+        });
+    }
+
+    #[test]
+    fn error_feedback_accumulated_sum_tracks_truth() {
+        // Lemma 2 in miniature: with EF (beta=1) the accumulated dequantized
+        // sum stays within a single quantization step of the true sum.
+        let p = LocoParams { s: 8.0, s_e: 32.0, beta: 1.0, bits: 4 };
+        let n = 64;
+        let mut rng = crate::util::rng::Rng::new(42);
+        let mut e = vec![0i8; n];
+        let mut q = vec![0i8; n];
+        let mut true_sum = vec![0.0f64; n];
+        let mut deq_sum = vec![0.0f64; n];
+        for _ in 0..200 {
+            let mut g = vec![0.0f32; n];
+            rng.fill_normal(&mut g, 0.05);
+            loco_step(&g, &mut e, &mut q, p, false);
+            for i in 0..n {
+                true_sum[i] += g[i] as f64;
+                deq_sum[i] += dequantize(q[i], p.s) as f64;
+            }
+        }
+        for i in 0..n {
+            // residual = current error state, bounded by int8 range / s_e
+            // plus one error-quantization step
+            let bound = 128.0 / p.s_e as f64 + 1.0 / p.s_e as f64 + 0.5 / p.s as f64;
+            assert!(
+                (true_sum[i] - deq_sum[i]).abs() <= bound + 0.05,
+                "coord {i}: drift {} > {bound}",
+                (true_sum[i] - deq_sum[i]).abs()
+            );
+        }
+    }
+}

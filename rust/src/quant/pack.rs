@@ -1,0 +1,125 @@
+//! int4 nibble packing — the 4-bit wire format.
+//!
+//! Two signed 4-bit codes per byte: code `2i` in the low nibble, `2i+1` in
+//! the high nibble, both stored two's-complement. Odd lengths zero-pad the
+//! final high nibble. A 256-entry LUT decodes a byte to its signed pair.
+
+use once_cell::sync::Lazy;
+
+/// A packed int4 buffer plus its logical element count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedI4 {
+    pub bytes: Vec<u8>,
+    pub len: usize,
+}
+
+impl PackedI4 {
+    pub fn from_codes(codes: &[i8]) -> Self {
+        PackedI4 { bytes: pack_nibbles(codes), len: codes.len() }
+    }
+
+    pub fn unpack(&self) -> Vec<i8> {
+        unpack_nibbles(&self.bytes, self.len)
+    }
+
+    pub fn wire_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+}
+
+/// Pack one pair of int4 codes ([-8,7]) into a byte.
+#[inline(always)]
+pub fn pack_pair(lo: i8, hi: i8) -> u8 {
+    debug_assert!((-8..=7).contains(&lo) && (-8..=7).contains(&hi));
+    ((lo as u8) & 0x0F) | ((hi as u8) << 4)
+}
+
+/// Sign-extend a low nibble.
+#[inline(always)]
+pub fn sext4(n: u8) -> i8 {
+    ((n << 4) as i8) >> 4
+}
+
+/// Pack a code slice (each in [-8, 7]) two-per-byte.
+pub fn pack_nibbles(codes: &[i8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(codes.len().div_ceil(2));
+    let pairs = codes.len() / 2;
+    for i in 0..pairs {
+        out.push(pack_pair(codes[2 * i], codes[2 * i + 1]));
+    }
+    if codes.len() % 2 == 1 {
+        out.push(pack_pair(codes[codes.len() - 1], 0));
+    }
+    out
+}
+
+/// Unpack `n` codes from a packed buffer.
+pub fn unpack_nibbles(bytes: &[u8], n: usize) -> Vec<i8> {
+    let mut out = Vec::with_capacity(n);
+    let lut = nibble_lut();
+    let pairs = n / 2;
+    for i in 0..pairs {
+        let (lo, hi) = lut[bytes[i] as usize];
+        out.push(lo);
+        out.push(hi);
+    }
+    if n % 2 == 1 {
+        out.push(lut[bytes[pairs] as usize].0);
+    }
+    out
+}
+
+/// 256-entry decode table: byte -> (low nibble signed, high nibble signed).
+pub fn nibble_lut() -> &'static [(i8, i8); 256] {
+    static LUT: Lazy<[(i8, i8); 256]> = Lazy::new(|| {
+        let mut t = [(0i8, 0i8); 256];
+        for (b, e) in t.iter_mut().enumerate() {
+            let b = b as u8;
+            *e = (sext4(b & 0x0F), sext4(b >> 4));
+        }
+        t
+    });
+    &LUT
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_cases;
+
+    #[test]
+    fn pack_unpack_all_pairs() {
+        for lo in -8i8..=7 {
+            for hi in -8i8..=7 {
+                let b = pack_pair(lo, hi);
+                let lut = nibble_lut();
+                assert_eq!(lut[b as usize], (lo, hi));
+            }
+        }
+    }
+
+    #[test]
+    fn sext4_edges() {
+        assert_eq!(sext4(0x0), 0);
+        assert_eq!(sext4(0x7), 7);
+        assert_eq!(sext4(0x8), -8);
+        assert_eq!(sext4(0xF), -1);
+    }
+
+    #[test]
+    fn roundtrip_odd_and_even_lengths() {
+        for_cases(21, 64, |rng| {
+            let n = 1 + rng.below(97);
+            let codes: Vec<i8> = (0..n).map(|_| (rng.below(16) as i8) - 8).collect();
+            let packed = PackedI4::from_codes(&codes);
+            assert_eq!(packed.unpack(), codes);
+            assert_eq!(packed.wire_bytes(), n.div_ceil(2));
+        });
+    }
+
+    #[test]
+    fn wire_size_is_half() {
+        let codes = vec![3i8; 1000];
+        assert_eq!(pack_nibbles(&codes).len(), 500);
+    }
+}

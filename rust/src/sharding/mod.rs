@@ -1,0 +1,224 @@
+//! Parameter layout and Zero-2 / FSDP-style sharding.
+//!
+//! All parameters live in one flat fp32 buffer, tensor by tensor in
+//! manifest order. Sharding cuts the flat buffer into N contiguous ranges;
+//! [`Partition::tensor_aligned`] places the cuts on tensor boundaries
+//! (whole tensors per node, so per-tensor optimizers like Adafactor and
+//! LAMB stay exact), while [`Partition::flat_even`] cuts evenly with
+//! 2-element alignment (nibble packing needs even shard starts).
+
+use std::ops::Range;
+
+/// One tensor inside the flat parameter buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Ordered tensor table mirroring the python-side manifest.
+#[derive(Debug, Clone)]
+pub struct ParamLayout {
+    pub tensors: Vec<TensorInfo>,
+    pub total: usize,
+}
+
+impl ParamLayout {
+    pub fn new(named_shapes: Vec<(String, Vec<usize>)>) -> Self {
+        let mut tensors = Vec::with_capacity(named_shapes.len());
+        let mut offset = 0usize;
+        for (name, shape) in named_shapes {
+            let len = shape.iter().product::<usize>();
+            tensors.push(TensorInfo { name, shape, offset, len });
+            offset += len;
+        }
+        ParamLayout { tensors, total: offset }
+    }
+
+    /// Single unnamed flat tensor (tests).
+    pub fn single(name: &str, shape: &[usize]) -> Self {
+        ParamLayout::new(vec![(name.to_string(), shape.to_vec())])
+    }
+
+    pub fn find(&self, name: &str) -> Option<&TensorInfo> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    /// Tensors fully contained in a flat range (with their infos rebased
+    /// so `offset` is relative to the range start).
+    pub fn tensors_in(&self, range: &Range<usize>) -> Vec<TensorInfo> {
+        self.tensors
+            .iter()
+            .filter(|t| t.offset >= range.start && t.offset + t.len <= range.end)
+            .map(|t| TensorInfo { offset: t.offset - range.start, ..t.clone() })
+            .collect()
+    }
+}
+
+/// A cut of `0..total` into `n` contiguous ranges, one per node.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub ranges: Vec<Range<usize>>,
+}
+
+impl Partition {
+    /// Even split with `align`-element alignment on the cut points.
+    pub fn flat_even(total: usize, n: usize, align: usize) -> Self {
+        assert!(n > 0 && align > 0);
+        let mut cuts = Vec::with_capacity(n + 1);
+        for i in 0..=n {
+            let c = (total * i / n) / align * align;
+            cuts.push(if i == n { total } else { c });
+        }
+        let ranges = (0..n).map(|i| cuts[i]..cuts[i + 1]).collect();
+        Partition { ranges }
+    }
+
+    /// Split on tensor boundaries, approximately balanced by element count.
+    /// Every node receives at least zero tensors; nodes may be empty for
+    /// degenerate layouts (more nodes than tensors near the tail).
+    pub fn tensor_aligned(layout: &ParamLayout, n: usize) -> Self {
+        assert!(n > 0);
+        let total = layout.total;
+        let mut ranges = Vec::with_capacity(n);
+        let mut start = 0usize;
+        let mut ti = 0usize;
+        for node in 0..n {
+            let ideal_end = total * (node + 1) / n;
+            let mut end = start;
+            while ti < layout.tensors.len() {
+                let t = &layout.tensors[ti];
+                let t_end = t.offset + t.len;
+                // take the tensor if its end is closer to ideal than not
+                // taking it, or if later nodes would run out of budget
+                if end == start || t_end <= ideal_end
+                    || (t_end - ideal_end) < (ideal_end - end)
+                {
+                    end = t_end;
+                    ti += 1;
+                    if end >= ideal_end {
+                        break;
+                    }
+                } else {
+                    break;
+                }
+            }
+            if node == n - 1 {
+                end = total;
+                ti = layout.tensors.len();
+            }
+            ranges.push(start..end);
+            start = end;
+        }
+        Partition { ranges }
+    }
+
+    pub fn n(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Which node owns flat index `i`.
+    pub fn owner(&self, i: usize) -> usize {
+        self.ranges
+            .iter()
+            .position(|r| r.contains(&i))
+            .expect("index out of partition")
+    }
+
+    /// Largest shard length (for buffer sizing).
+    pub fn max_len(&self) -> usize {
+        self.ranges.iter().map(|r| r.len()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_layout() -> ParamLayout {
+        ParamLayout::new(vec![
+            ("emb".into(), vec![100, 8]),
+            ("w1".into(), vec![8, 32]),
+            ("b1".into(), vec![32]),
+            ("w2".into(), vec![32, 8]),
+            ("head".into(), vec![8, 100]),
+        ])
+    }
+
+    #[test]
+    fn layout_offsets_are_cumulative() {
+        let l = demo_layout();
+        assert_eq!(l.total, 800 + 256 + 32 + 256 + 800);
+        assert_eq!(l.find("b1").unwrap().offset, 800 + 256);
+        assert_eq!(l.tensors[0].offset, 0);
+    }
+
+    #[test]
+    fn flat_even_covers_everything() {
+        for total in [0usize, 1, 7, 100, 1001] {
+            for n in [1usize, 2, 3, 8] {
+                let p = Partition::flat_even(total, n, 2);
+                assert_eq!(p.ranges.len(), n);
+                assert_eq!(p.ranges[0].start, 0);
+                assert_eq!(p.ranges[n - 1].end, total);
+                for w in p.ranges.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                }
+                // alignment on interior cuts
+                for r in &p.ranges[..n - 1] {
+                    assert_eq!(r.end % 2, 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_aligned_cuts_on_boundaries() {
+        let l = demo_layout();
+        for n in [1usize, 2, 3, 5] {
+            let p = Partition::tensor_aligned(&l, n);
+            assert_eq!(p.ranges.len(), n);
+            assert_eq!(p.ranges[0].start, 0);
+            assert_eq!(p.ranges[n - 1].end, l.total);
+            let boundaries: Vec<usize> =
+                l.tensors.iter().map(|t| t.offset + t.len).collect();
+            for r in &p.ranges {
+                if r.end != l.total && !r.is_empty() {
+                    assert!(boundaries.contains(&r.end), "cut {} not on boundary", r.end);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_aligned_is_roughly_balanced() {
+        let l = demo_layout();
+        let p = Partition::tensor_aligned(&l, 2);
+        let a = p.ranges[0].len() as f64;
+        let b = p.ranges[1].len() as f64;
+        assert!(a > 0.0 && b > 0.0);
+        assert!(a / (a + b) > 0.3 && a / (a + b) < 0.7, "{a} vs {b}");
+    }
+
+    #[test]
+    fn tensors_in_rebases_offsets() {
+        let l = demo_layout();
+        let p = Partition::tensor_aligned(&l, 2);
+        let ts = l.tensors_in(&p.ranges[1]);
+        assert!(!ts.is_empty());
+        assert_eq!(ts[0].offset, 0);
+        let covered: usize = ts.iter().map(|t| t.len).sum();
+        assert_eq!(covered, p.ranges[1].len());
+    }
+
+    #[test]
+    fn owner_is_consistent() {
+        let p = Partition::flat_even(100, 4, 2);
+        for i in 0..100 {
+            let o = p.owner(i);
+            assert!(p.ranges[o].contains(&i));
+        }
+    }
+}

@@ -1,0 +1,378 @@
+//! The distributed trainer: N in-process "GPU nodes", each computing
+//! gradients through its own PJRT engine (L2/L1 HLO), exchanging them
+//! through the compressed collectives, and updating its Zero-2 parameter
+//! shard.
+//!
+//! Data flow per optimizer step on node `n` (Sec. 3 of the paper):
+//!
+//! 1. `accum` fused fwd+bwd executions on local microbatches (L2 graph);
+//! 2. local gradient average, optional element-wise clip (Sec. 5.2);
+//! 3. **compress** each destination shard with the configured method
+//!    (LoCo: Algorithm 1 steps 1–2);
+//! 4. **all-to-all** exchange of low-bit shards (Sec. 3.3 — avoids the
+//!    repeated quantize/dequantize of ring reduce-scatter);
+//! 5. decode + fp32 average of the N received shards (Eqn. 8),
+//!    optional global-norm clip (scalar tree all-reduce);
+//! 6. optimizer step on the fp32 *master* copy of the own shard;
+//! 7. parameter all-gather at `param_sync` precision (bf16 by default,
+//!    matching the paper's b_w = 16).
+//!
+//! DDP mode (Table 6 / PowerSGD) replaces 3–5 with a full-gradient
+//! all-reduce (tree, or the PowerSGD two-phase protocol) and keeps full
+//! optimizer state on every node.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::collective::{run_cluster, NodeCtx};
+use crate::compress::{self, powersgd::PowerSgd, CompressorConfig, Method, WireMsg};
+use crate::data::{Corpus, CorpusConfig, Split};
+use crate::metrics::RunMetrics;
+use crate::model::ModelMeta;
+use crate::optim::{self, LrSchedule, OptimConfig};
+use crate::runtime::Engine;
+use crate::sharding::Partition;
+use crate::util;
+
+/// Gradient synchronization topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Zero-2 sharded: compressed all-to-all + param all-gather (default).
+    Zero2,
+    /// Zero-2 with fp32 ring reduce-scatter (reference path; ignores the
+    /// compressor for gradients).
+    Zero2ReduceScatter,
+    /// Data-parallel with full-gradient tree all-reduce; PowerSGD runs its
+    /// two-phase protocol here.
+    Ddp,
+}
+
+/// Parameter all-gather precision (paper: 16-bit weights on the wire).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamSync {
+    F32,
+    Bf16,
+}
+
+/// Everything one training run needs.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// model config name (must have artifacts: `model_<name>_*.hlo.txt`)
+    pub model: String,
+    pub art_dir: PathBuf,
+    pub nodes: usize,
+    pub steps: u64,
+    pub accum: usize,
+    pub seed: u64,
+    pub mode: Mode,
+    pub param_sync: ParamSync,
+    pub optim: OptimConfig,
+    pub lr: LrSchedule,
+    pub compressor: CompressorConfig,
+    /// global-norm clip on the averaged gradient (0 = off)
+    pub global_clip: f32,
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    pub log_every: u64,
+    /// start from these parameters instead of fresh init (fine-tuning)
+    pub init_params: Option<Vec<f32>>,
+    /// corpus noise level (distribution shift for fine-tuning experiments)
+    pub corpus_noise: Option<f64>,
+    pub corpus_seed: u64,
+}
+
+impl TrainConfig {
+    pub fn new(model: &str) -> Self {
+        TrainConfig {
+            model: model.to_string(),
+            art_dir: crate::runtime::artifacts_dir(),
+            nodes: 4,
+            steps: 100,
+            accum: 1,
+            seed: 0,
+            mode: Mode::Zero2,
+            param_sync: ParamSync::Bf16,
+            optim: OptimConfig::default(),
+            lr: LrSchedule::constant(1e-3),
+            compressor: CompressorConfig::default(),
+            global_clip: 1.0,
+            eval_every: 0,
+            eval_batches: 4,
+            log_every: 10,
+            init_params: None,
+            corpus_noise: None,
+            corpus_seed: 1234,
+        }
+    }
+}
+
+/// Result of a run: metrics plus the final full parameter vector.
+pub struct RunResult {
+    pub metrics: RunMetrics,
+    pub final_params: Vec<f32>,
+}
+
+/// The multi-node trainer.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Self {
+        Trainer { cfg }
+    }
+
+    /// Run the configured training job; returns rank-0's metrics and the
+    /// final parameters.
+    pub fn run(&self) -> Result<RunResult> {
+        let cfg = &self.cfg;
+        let meta = ModelMeta::load(&cfg.art_dir.join(format!("model_{}.manifest", cfg.model)))?;
+        let n = cfg.nodes;
+        let part = match cfg.mode {
+            Mode::Ddp => Partition { ranges: vec![0..meta.layout.total] },
+            _ => Partition::tensor_aligned(&meta.layout, n),
+        };
+        let result0: Mutex<Option<RunResult>> = Mutex::new(None);
+        let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+        let (_, counters) = run_cluster(n, |ctx| {
+            match self.node_main(&ctx, &meta, &part) {
+                Ok(Some(r)) => {
+                    *result0.lock().unwrap() = Some(r);
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    errors.lock().unwrap().push(format!("node {}: {e:#}", ctx.rank));
+                }
+            }
+        });
+        let errs = errors.into_inner().unwrap();
+        if !errs.is_empty() {
+            anyhow::bail!("training failed: {}", errs.join("; "));
+        }
+        let mut result = result0
+            .into_inner()
+            .unwrap()
+            .context("rank 0 produced no result")?;
+        result.metrics.comm_bytes = counters.total_sent();
+        Ok(result)
+    }
+
+    fn node_main(
+        &self,
+        ctx: &NodeCtx,
+        meta: &ModelMeta,
+        part: &Partition,
+    ) -> Result<Option<RunResult>> {
+        let cfg = &self.cfg;
+        let rank = ctx.rank;
+        let n = ctx.n;
+        let total = meta.layout.total;
+        let my_range = if cfg.mode == Mode::Ddp { 0..total } else { part.ranges[rank].clone() };
+        let t0 = std::time::Instant::now();
+
+        // --- per-node setup -------------------------------------------------
+        let with_eval = cfg.eval_every > 0 && rank == 0;
+        let engine = Engine::load(&cfg.art_dir, &cfg.model, with_eval)?;
+        let mut corpus_cfg = CorpusConfig::for_vocab(meta.vocab, cfg.corpus_seed);
+        if let Some(noise) = cfg.corpus_noise {
+            corpus_cfg.noise = noise;
+        }
+        let corpus = Corpus::new(corpus_cfg);
+
+        // full compute copy + fp32 master of the own shard
+        let mut params = match &cfg.init_params {
+            Some(p) => {
+                anyhow::ensure!(p.len() == total, "init_params length mismatch");
+                p.clone()
+            }
+            None => meta.init_params(cfg.seed),
+        };
+        let mut master = params[my_range.clone()].to_vec();
+
+        let shard_tensors = meta.layout.tensors_in(&my_range);
+        let mut opt = optim::build(&cfg.optim, my_range.len(), &shard_tensors);
+        let (mut enc, mut dec) =
+            compress::build(&cfg.compressor, &meta.layout, my_range.clone(), n);
+        let mut powersgd = if cfg.compressor.method == Method::PowerSgd {
+            Some(PowerSgd::new(&meta.layout, cfg.compressor.rank, cfg.seed ^ 0x505753))
+        } else {
+            None
+        };
+
+        let mut grad = vec![0.0f32; total];
+        let mut grad_tmp = vec![0.0f32; total];
+        let mut shard_acc = vec![0.0f32; my_range.len()];
+        let mut metrics = if rank == 0 { Some(RunMetrics::new()) } else { None };
+
+        // fp32 byte volume an uncompressed run would send, for the ratio
+        let fp32_step_bytes: u64 = match cfg.mode {
+            Mode::Ddp => 2 * 4 * total as u64, // tree up+down, order of magnitude
+            _ => {
+                let others = (total - my_range.len()) as u64;
+                4 * others /*grad a2a*/ + 4 * others /*param ag*/
+            }
+        };
+
+        // --- training loop --------------------------------------------------
+        for step in 0..cfg.steps {
+            // 1-2: local gradient with accumulation
+            grad.fill(0.0);
+            let mut loss_acc = 0.0f64;
+            for a in 0..cfg.accum {
+                let micro = step * cfg.accum as u64 + a as u64;
+                let tokens = corpus.batch(Split::Train, rank, micro, meta.batch, meta.seq);
+                let loss = engine.train_step(&params, &tokens, &mut grad_tmp)?;
+                loss_acc += loss as f64;
+                util::add_assign(&mut grad, &grad_tmp);
+            }
+            if cfg.accum > 1 {
+                util::scale(&mut grad, 1.0 / cfg.accum as f32);
+            }
+            if cfg.compressor.elementwise_clip > 0.0 {
+                let c = cfg.compressor.elementwise_clip;
+                for g in grad.iter_mut() {
+                    *g = g.clamp(-c, c);
+                }
+            }
+
+            // 3-5: synchronize gradients
+            match cfg.mode {
+                Mode::Zero2 => {
+                    let msgs: Vec<WireMsg> = (0..n)
+                        .map(|dst| enc.encode(&grad, part.ranges[dst].clone(), step + 1))
+                        .collect();
+                    let recvd = ctx.all_to_all(msgs);
+                    shard_acc.fill(0.0);
+                    for (src, msg) in recvd.iter().enumerate() {
+                        dec.decode_accumulate(src, msg, &mut shard_acc);
+                    }
+                    util::scale(&mut shard_acc, 1.0 / n as f32);
+                }
+                Mode::Zero2ReduceScatter => {
+                    ctx.ring_reduce_scatter(&mut grad, &part.ranges);
+                    shard_acc.copy_from_slice(&grad[my_range.clone()]);
+                    util::scale(&mut shard_acc, 1.0 / n as f32);
+                }
+                Mode::Ddp => {
+                    if let Some(ps) = powersgd.as_mut() {
+                        let mut p1 = ps.phase1(&grad);
+                        ctx.tree_all_reduce(&mut p1);
+                        util::scale(&mut p1, 1.0 / n as f32);
+                        let mut q1 = ps.phase2(&p1);
+                        ctx.tree_all_reduce(&mut q1);
+                        util::scale(&mut q1, 1.0 / n as f32);
+                        ps.finish(&q1, &mut shard_acc);
+                    } else {
+                        ctx.tree_all_reduce(&mut grad);
+                        shard_acc.copy_from_slice(&grad);
+                        util::scale(&mut shard_acc, 1.0 / n as f32);
+                    }
+                }
+            }
+
+            // global-norm clip (exact: scalar all-reduce of shard norms)
+            if cfg.global_clip > 0.0 {
+                let local_sq: f64 = match cfg.mode {
+                    Mode::Ddp => {
+                        if rank == 0 {
+                            shard_acc.iter().map(|&x| (x as f64) * (x as f64)).sum()
+                        } else {
+                            0.0
+                        }
+                    }
+                    _ => shard_acc.iter().map(|&x| (x as f64) * (x as f64)).sum(),
+                };
+                let norm = ctx.tree_all_reduce_scalar(local_sq).sqrt();
+                if norm > cfg.global_clip as f64 {
+                    util::scale(&mut shard_acc, (cfg.global_clip as f64 / norm) as f32);
+                }
+            }
+
+            // 6: optimizer on the fp32 master shard
+            let lr = cfg.lr.at(step);
+            opt.step(&mut master, &shard_acc, lr);
+
+            // 7: parameter synchronization
+            match cfg.mode {
+                Mode::Ddp => {
+                    // all nodes applied the same update; params == master
+                    params.copy_from_slice(&master);
+                }
+                _ => match cfg.param_sync {
+                    ParamSync::F32 => {
+                        params[my_range.clone()].copy_from_slice(&master);
+                        ctx.all_gather(&mut params, &part.ranges);
+                    }
+                    ParamSync::Bf16 => {
+                        let wire = WireMsg::Bf16(
+                            master.iter().map(|&x| compress::fp::f32_to_bf16(x)).collect(),
+                        );
+                        let all = ctx.all_gather_wire(wire);
+                        for (src, msg) in all.into_iter().enumerate() {
+                            let dst = &mut params[part.ranges[src].clone()];
+                            match msg {
+                                WireMsg::Bf16(v) => {
+                                    for (d, u) in dst.iter_mut().zip(v) {
+                                        *d = compress::fp::bf16_to_f32(u);
+                                    }
+                                }
+                                _ => unreachable!(),
+                            }
+                        }
+                    }
+                },
+            }
+
+            // --- metrics / eval --------------------------------------------
+            let mean_loss =
+                ctx.tree_all_reduce_scalar(loss_acc / cfg.accum as f64) / n as f64;
+            let do_eval = cfg.eval_every > 0
+                && (step % cfg.eval_every == cfg.eval_every - 1 || step + 1 == cfg.steps);
+            let val = if do_eval {
+                let v = if rank == 0 {
+                    let mut acc = 0.0f64;
+                    for b in 0..cfg.eval_batches {
+                        let tokens = corpus.batch(Split::Val, 0, b as u64, meta.batch, meta.seq);
+                        acc += engine.eval_loss(&params, &tokens)? as f64;
+                    }
+                    acc / cfg.eval_batches as f64
+                } else {
+                    0.0
+                };
+                Some(ctx.tree_all_reduce_scalar(v))
+            } else {
+                None
+            };
+
+            if let Some(m) = metrics.as_mut() {
+                if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+                    m.train_loss.push(step, mean_loss);
+                }
+                if let Some(v) = val {
+                    m.val_loss.push(step, v);
+                }
+                m.comm_bytes_fp32 += fp32_step_bytes * n as u64;
+            }
+        }
+
+        // gather final fp32 master params to rank 0
+        if cfg.mode != Mode::Ddp {
+            params[my_range.clone()].copy_from_slice(&master);
+            ctx.all_gather(&mut params, &part.ranges);
+        }
+
+        if let Some(mut m) = metrics {
+            m.steps = cfg.steps;
+            m.elapsed = t0.elapsed().as_secs_f64();
+            m.tokens_per_sec = (meta.tokens_per_step(n, cfg.accum) as f64 * cfg.steps as f64)
+                / m.elapsed.max(1e-9);
+            m.compressor_state_bytes = enc.state_bytes() + dec.state_bytes();
+            Ok(Some(RunResult { metrics: m, final_params: params }))
+        } else {
+            Ok(None)
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Minimal property-based-testing helper (the offline registry has no
+//! `proptest`). `for_cases` drives a closure over `n` deterministic random
+//! cases; on failure it reports the case seed so the case can be replayed
+//! with `replay`.
+
+use super::rng::Rng;
+
+/// Run `f` for `n` cases. Each case gets a fresh `Rng` derived from
+/// (`seed`, case index). Panics with the failing case index on error.
+pub fn for_cases(seed: u64, n: usize, mut f: impl FnMut(&mut Rng)) {
+    for case in 0..n {
+        let mut rng = case_rng(seed, case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed at case {case} (replay: util::prop::replay({seed}, {case}))"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// The Rng a given case saw — for replaying failures.
+pub fn case_rng(seed: u64, case: usize) -> Rng {
+    Rng::new(seed ^ (case as u64).wrapping_mul(0xA24BAED4963EE407))
+}
+
+/// Random vector helpers for property tests.
+pub fn vec_normal(rng: &mut Rng, max_len: usize, std: f32) -> Vec<f32> {
+    let n = 1 + rng.below(max_len);
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v, std);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        for_cases(1, 32, |_| count += 1);
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let a: Vec<u64> = (0..4).map(|c| case_rng(9, c).next_u64()).collect();
+        let b: Vec<u64> = (0..4).map(|c| case_rng(9, c).next_u64()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn propagates_failure() {
+        for_cases(2, 8, |rng| assert!(rng.uniform() < -1.0));
+    }
+
+    #[test]
+    fn vec_normal_len_bounds() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let v = vec_normal(&mut rng, 100, 1.0);
+            assert!(!v.is_empty() && v.len() <= 100);
+        }
+    }
+}

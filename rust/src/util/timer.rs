@@ -1,0 +1,97 @@
+//! Wall-clock timing helpers used by the trainer, metrics and the custom
+//! bench harness (no `criterion` in the offline registry).
+
+use std::time::Instant;
+
+/// Measure one closure invocation in seconds.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Simple criterion-style micro-benchmark: warm up, then run batches until
+/// `min_time` elapses; returns (mean, stddev, iters) in seconds per call.
+pub fn bench_seconds(mut f: impl FnMut(), min_time: f64) -> BenchStats {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let mut samples = Vec::new();
+    let started = Instant::now();
+    // pick a batch size so each sample is ~1ms+
+    let (_, one) = time_once(&mut f);
+    let batch = (1e-3 / one.max(1e-9)).ceil().max(1.0) as usize;
+    while started.elapsed().as_secs_f64() < min_time || samples.len() < 5 {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    BenchStats::from_samples(&samples)
+}
+
+/// Summary statistics for one benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub iters: usize,
+}
+
+impl BenchStats {
+    pub fn from_samples(samples: &[f64]) -> Self {
+        let n = samples.len().max(1) as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        BenchStats { mean, std: var.sqrt(), min, iters: samples.len() }
+    }
+
+    /// e.g. "12.3 µs ±0.4".
+    pub fn display(&self) -> String {
+        let (scale, unit) = if self.mean >= 1.0 {
+            (1.0, "s")
+        } else if self.mean >= 1e-3 {
+            (1e3, "ms")
+        } else if self.mean >= 1e-6 {
+            (1e6, "µs")
+        } else {
+            (1e9, "ns")
+        };
+        format!("{:.3} {} ±{:.3}", self.mean * scale, unit, self.std * scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_once_positive() {
+        let (v, t) = time_once(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut x = 0u64;
+        let st = bench_seconds(|| x = x.wrapping_add(1), 0.01);
+        assert!(st.iters >= 5);
+        assert!(st.mean > 0.0);
+    }
+
+    #[test]
+    fn stats_from_samples() {
+        let st = BenchStats::from_samples(&[1.0, 1.0, 1.0]);
+        assert_eq!(st.mean, 1.0);
+        assert_eq!(st.std, 0.0);
+        assert!(!st.display().is_empty());
+    }
+}

@@ -1,0 +1,225 @@
+//! Theorems 1–2 in miniature: LoCo-integrated SGD/Adam match their
+//! full-precision counterparts on synthetic nonconvex objectives, and the
+//! accumulated compression error stays O(eta) (Eqn. 6 / Lemma 2).
+//!
+//! These tests use the compression stack directly (no XLA) on a
+//! deterministic "cluster" of N simulated nodes with stochastic gradients.
+
+use loco::compress::{self, CompressorConfig, Method};
+use loco::optim::{self, OptimConfig, OptimizerKind};
+use loco::sharding::ParamLayout;
+use loco::util::rng::Rng;
+
+/// Nonconvex test objective: f(w) = sum_i [ (w_i - t_i)^2 + 0.3 sin(3 w_i) ].
+/// grad_i = 2 (w_i - t_i) + 0.9 cos(3 w_i); stochastic version adds noise.
+struct Objective {
+    target: Vec<f32>,
+}
+
+impl Objective {
+    fn new(d: usize) -> Self {
+        Objective { target: (0..d).map(|i| ((i % 13) as f32) * 0.1 - 0.6).collect() }
+    }
+
+    fn loss(&self, w: &[f32]) -> f64 {
+        w.iter()
+            .zip(&self.target)
+            .map(|(&x, &t)| ((x - t) * (x - t) + 0.3 * (3.0 * x).sin()) as f64)
+            .sum()
+    }
+
+    fn grad(&self, w: &[f32], noise: &mut Rng, sigma: f32, out: &mut [f32]) {
+        for i in 0..w.len() {
+            out[i] = 2.0 * (w[i] - self.target[i])
+                + 0.9 * (3.0 * w[i]).cos()
+                + sigma * noise.normal() as f32;
+        }
+    }
+}
+
+/// Run `steps` of N-node data-parallel training with the given method;
+/// returns (final loss, iterate trajectory distance to the fp32 run).
+fn run(
+    method: Method,
+    opt_kind: OptimizerKind,
+    steps: u64,
+    lr: f32,
+) -> (f64, Vec<f32>) {
+    let d = 256;
+    let n_nodes = 4;
+    let obj = Objective::new(d);
+    let layout = ParamLayout::single("w", &[16, 16]);
+    let cfg = CompressorConfig {
+        method,
+        s: 64.0,
+        s_e_mult: 4.0,
+        beta: 0.1,
+        reset_interval: 64,
+        ..Default::default()
+    };
+    // per-node encoders; one shared decode buffer (we simulate the all2all
+    // result directly: every node would see the same average)
+    let mut encs: Vec<_> = (0..n_nodes)
+        .map(|node| {
+            let (enc, _) = compress::build(&cfg, &layout, 0..d, n_nodes);
+            let _ = node;
+            enc
+        })
+        .collect();
+    let (_, mut dec) = compress::build(&cfg, &layout, 0..d, n_nodes);
+
+    let ocfg = OptimConfig { kind: opt_kind, lr, beta1: 0.9, beta2: 0.99, ..Default::default() };
+    let mut opt = optim::build(&ocfg, d, &layout.tensors);
+    let mut w = vec![0.0f32; d];
+    let mut noises: Vec<Rng> = (0..n_nodes).map(|i| Rng::new(100 + i as u64)).collect();
+    let mut g = vec![0.0f32; d];
+    let mut avg = vec![0.0f32; d];
+
+    for step in 1..=steps {
+        avg.fill(0.0);
+        for node in 0..n_nodes {
+            obj.grad(&w, &mut noises[node], 0.05, &mut g);
+            let msg = encs[node].encode(&g, 0..d, step);
+            dec.decode_accumulate(node, &msg, &mut avg);
+        }
+        for a in avg.iter_mut() {
+            *a /= n_nodes as f32;
+        }
+        opt.step(&mut w, &avg, lr);
+    }
+    (obj.loss(&w), w)
+}
+
+fn dist(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| ((x - y) as f64).powi(2)).sum::<f64>().sqrt()
+}
+
+#[test]
+fn theorem1_loco_sgd_matches_sgd() {
+    let (loss_fp, w_fp) = run(Method::Fp32, OptimizerKind::Sgd, 400, 0.05);
+    let (loss_loco, w_loco) = run(Method::Loco, OptimizerKind::Sgd, 400, 0.05);
+    // same stationary region, O(eta)-close iterates
+    assert!((loss_loco - loss_fp).abs() < 0.5, "{loss_loco} vs {loss_fp}");
+    assert!(dist(&w_fp, &w_loco) < 1.0, "iterate distance {}", dist(&w_fp, &w_loco));
+}
+
+#[test]
+fn theorem2_loco_adam_matches_adam() {
+    let (loss_fp, w_fp) = run(Method::Fp32, OptimizerKind::Adam, 400, 0.02);
+    let (loss_loco, w_loco) = run(Method::Loco, OptimizerKind::Adam, 400, 0.02);
+    assert!((loss_loco - loss_fp).abs() < 0.5, "{loss_loco} vs {loss_fp}");
+    assert!(dist(&w_fp, &w_loco) < 1.0);
+}
+
+#[test]
+fn plain_quantization_without_feedback_stalls() {
+    // LoCo1 ablation: without error feedback, gradients below half a
+    // quantization step round to zero and optimization stalls far from the
+    // optimum; error feedback accumulates them and keeps moving.
+    let d = 256;
+    let obj = Objective::new(d);
+    let layout = ParamLayout::single("w", &[16, 16]);
+    let run_with = |no_ef: bool| -> f64 {
+        let cfg = CompressorConfig {
+            method: Method::Loco,
+            s: 4.0, // coarse: quant step 0.25
+            s_e_mult: 8.0,
+            beta: 1.0,
+            no_error_feedback: no_ef,
+            ..Default::default()
+        };
+        let (mut enc, mut dec) = compress::build(&cfg, &layout, 0..d, 1);
+        let mut opt = optim::build(
+            &OptimConfig { kind: OptimizerKind::Sgd, momentum: 0.0, ..Default::default() },
+            d,
+            &layout.tensors,
+        );
+        let mut w = vec![0.0f32; d];
+        let mut noise = Rng::new(77);
+        let mut g = vec![0.0f32; d];
+        let mut avg = vec![0.0f32; d];
+        for step in 1..=600 {
+            obj.grad(&w, &mut noise, 0.005, &mut g);
+            avg.fill(0.0);
+            let msg = enc.encode(&g, 0..d, step);
+            dec.decode_accumulate(0, &msg, &mut avg);
+            opt.step(&mut w, &avg, 0.03);
+        }
+        obj.loss(&w)
+    };
+    let loss_ef = run_with(false);
+    let loss_noef = run_with(true);
+    assert!(
+        loss_noef > loss_ef + 0.2,
+        "no-EF should stall: {loss_noef} vs EF {loss_ef}"
+    );
+}
+
+#[test]
+fn lemma2_accumulated_error_stays_bounded() {
+    // || sum_k (g~_k - g_k) || <= Tc sqrt(d) alpha c_inf + sqrt(d) k / (2 s_e)
+    let d = 128;
+    let steps = 600u64;
+    let s = 32.0f32;
+    let s_e = 4.0 * s;
+    let tc = 64u64;
+    let layout = ParamLayout::single("w", &[d]);
+    let cfg = CompressorConfig {
+        method: Method::Loco,
+        s,
+        s_e_mult: 4.0,
+        beta: 0.2,
+        reset_interval: tc,
+        ..Default::default()
+    };
+    let (mut enc, mut dec) = compress::build(&cfg, &layout, 0..d, 1);
+    let mut rng = Rng::new(9);
+    let mut g = vec![0.0f32; d];
+    let mut drift = vec![0.0f64; d];
+    let c_inf = 0.15f64; // ~3 sigma of the gradient stream below
+    for step in 1..=steps {
+        rng.fill_normal(&mut g, 0.05);
+        for x in g.iter_mut() {
+            *x = x.clamp(-(c_inf as f32), c_inf as f32);
+        }
+        let msg = enc.encode(&g, 0..d, step);
+        let mut dec_buf = vec![0.0f32; d];
+        dec.decode_accumulate(0, &msg, &mut dec_buf);
+        for i in 0..d {
+            drift[i] += (dec_buf[i] - g[i]) as f64;
+        }
+        // Lemma 2 bound at this k (alpha <= 1)
+        let bound = tc as f64 * (d as f64).sqrt() * c_inf
+            + (d as f64).sqrt() * step as f64 / (2.0 * s_e as f64);
+        let norm = drift.iter().map(|&x| x * x).sum::<f64>().sqrt();
+        assert!(norm <= bound, "step {step}: drift {norm} > bound {bound}");
+    }
+    // and much tighter in practice: the drift must not grow linearly
+    let norm = drift.iter().map(|&x| x * x).sum::<f64>().sqrt();
+    let naive_linear = steps as f64 * 0.5 / s as f64 * (d as f64).sqrt();
+    assert!(norm < naive_linear, "drift {norm} vs linear accumulation {naive_linear}");
+}
+
+#[test]
+fn error_reset_bounds_error_scale() {
+    // with resets the stored error magnitude stays bounded by Tc*beta*c_inf
+    // (Lemma 6); without resets it can keep growing for adversarial inputs
+    let d = 64;
+    let layout = ParamLayout::single("w", &[d]);
+    let cfg = CompressorConfig {
+        method: Method::Loco,
+        s: 1024.0, // aggressive clamping -> persistent error growth
+        s_e_mult: 4.0,
+        beta: 1.0,
+        reset_interval: 32,
+        ..Default::default()
+    };
+    let (mut enc, _) = compress::build(&cfg, &layout, 0..d, 1);
+    let g = vec![0.05f32; d]; // constant gradient far above the clamp range
+    for step in 1..=200 {
+        let _ = enc.encode(&g, 0..d, step);
+    }
+    // the int8 error store is intrinsically bounded; the reset additionally
+    // guarantees it returns to zero periodically. Check state sane:
+    assert!(enc.state_bytes() == d);
+}

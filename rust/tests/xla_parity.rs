@@ -1,0 +1,86 @@
+//! L1 <-> L3 parity: the Rust quantization hot path must be bit-identical
+//! to the AOT-compiled Pallas kernel (loco_step_<block>.hlo.txt).
+//!
+//! Requires `make artifacts`.
+
+use loco::quant::{self, LocoParams};
+use loco::runtime::{artifacts_dir, LocoKernel};
+use loco::util::rng::Rng;
+
+const BLOCK: usize = 65536;
+
+fn kernel() -> LocoKernel {
+    LocoKernel::load(&artifacts_dir(), BLOCK)
+        .expect("loco_step artifact missing — run `make artifacts`")
+}
+
+fn random_case(seed: u64, gscale: f32) -> (Vec<f32>, Vec<i8>) {
+    let mut rng = Rng::new(seed);
+    let mut g = vec![0.0f32; BLOCK];
+    rng.fill_normal(&mut g, gscale);
+    let e: Vec<i8> = (0..BLOCK).map(|_| (rng.below(256) as i32 - 128) as i8).collect();
+    (g, e)
+}
+
+fn check_parity(k: &LocoKernel, seed: u64, gscale: f32, s: f32, se_mult: f32, beta: f32, reset: bool) {
+    let (g, e) = random_case(seed, gscale);
+    let s_e = se_mult * s;
+    let (q_xla, e_xla) = k.step(&g, &e, s, s_e, beta, reset).expect("kernel exec");
+    let mut e_rust = e.clone();
+    let mut q_rust = vec![0i8; BLOCK];
+    quant::loco_step(&g, &mut e_rust, &mut q_rust, LocoParams { s, s_e, beta, bits: 4 }, reset);
+    let qd = q_xla.iter().zip(&q_rust).filter(|(a, b)| a != b).count();
+    let ed = e_xla.iter().zip(&e_rust).filter(|(a, b)| a != b).count();
+    assert_eq!(
+        (qd, ed),
+        (0, 0),
+        "mismatch for seed={seed} gscale={gscale} s={s} beta={beta} reset={reset}"
+    );
+}
+
+#[test]
+fn parity_default_params() {
+    let k = kernel();
+    check_parity(&k, 1, 0.1, 16.0, 4.0, 0.125, false);
+}
+
+#[test]
+fn parity_paper_scales() {
+    let k = kernel();
+    // the paper's fine-tune/pre-train scales with tiny LLM-like gradients
+    check_parity(&k, 2, 1e-5, (1u32 << 19) as f32, 4.0, 0.05, false);
+    check_parity(&k, 3, 1e-4, (1u32 << 17) as f32, 6.0, 0.05, false);
+}
+
+#[test]
+fn parity_extreme_gradients_clamp_identically() {
+    let k = kernel();
+    check_parity(&k, 4, 10.0, 16.0, 4.0, 0.5, false);
+}
+
+#[test]
+fn parity_reset_step() {
+    let k = kernel();
+    check_parity(&k, 5, 0.1, 16.0, 4.0, 0.125, true);
+}
+
+#[test]
+fn parity_beta_extremes() {
+    let k = kernel();
+    check_parity(&k, 6, 0.05, 32.0, 4.0, 0.0, false);
+    check_parity(&k, 7, 0.05, 32.0, 4.0, 1.0, false);
+}
+
+#[test]
+fn parity_packed_path_through_wire_format() {
+    // the packed hot path -> nibble wire -> unpack equals the kernel codes
+    let k = kernel();
+    let (g, e) = random_case(8, 0.2);
+    let p = LocoParams { s: 16.0, s_e: 64.0, beta: 0.25, bits: 4 };
+    let (q_xla, e_xla) = k.step(&g, &e, p.s, p.s_e, p.beta, false).unwrap();
+    let mut e_rust = e.clone();
+    let mut packed = Vec::new();
+    quant::loco_step_packed(&g, &mut e_rust, &mut packed, p, false);
+    assert_eq!(quant::unpack_nibbles(&packed, BLOCK), q_xla);
+    assert_eq!(e_rust, e_xla);
+}

@@ -14,20 +14,53 @@
 //!   path, Sec. 3.3: gather low-bit shards, average locally in fp32);
 //! * [`NodeCtx::tree_all_reduce`] / `tree_all_reduce_scalar` — binary-tree
 //!   reduce + broadcast (metrics, PowerSGD factor averaging);
-//! * [`NodeCtx::broadcast`] and [`NodeCtx::barrier`].
+//! * [`NodeCtx::broadcast`] and [`NodeCtx::barrier`];
+//! * [`NodeCtx::send_wire_tagged`] / [`NodeCtx::recv_wire_tagged`] —
+//!   tag-addressed point-to-point messages so several bucket payloads to
+//!   the same peer can be in flight concurrently and be matched out of
+//!   order (the [`crate::comm`] overlapped sync engine).
 
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::compress::WireMsg;
+
+/// Simulated point-to-point interconnect for benchmarks
+/// ([`run_cluster_net`]). In-process channels deliver instantly, which
+/// would make any communication/compute-overlap measurement vacuous; the
+/// link model instead holds each message until
+/// `egress-serialization + bytes/bw + latency` has elapsed, mimicking a
+/// NIC: a sender's messages serialize on its own egress link, receivers
+/// sleep (yielding the core) until a message is "on the wire" long enough.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkSim {
+    /// per-node egress bandwidth, bytes/s
+    pub bw: f64,
+    /// per-message latency, seconds
+    pub latency_s: f64,
+}
+
+/// A payload plus the instant the simulated wire releases it (None when no
+/// link simulation is active).
+struct Envelope {
+    ready_at: Option<Instant>,
+    payload: Payload,
+}
 
 /// Anything that can travel between nodes.
 pub enum Payload {
     F32(Vec<f32>),
     F64(f64),
     Wire(WireMsg),
+    /// A wire message carrying an explicit delivery tag (8-byte header on
+    /// a real interconnect) so the receiver can match it independent of
+    /// arrival order. Used by the bucketed gradient-sync engine.
+    TaggedWire { tag: u64, msg: WireMsg },
     Unit,
 }
 
@@ -38,6 +71,7 @@ impl Payload {
             Payload::F32(v) => 4 * v.len() as u64,
             Payload::F64(_) => 8,
             Payload::Wire(w) => w.wire_bytes() as u64,
+            Payload::TaggedWire { msg, .. } => 8 + msg.wire_bytes() as u64,
             Payload::Unit => 0,
         }
     }
@@ -90,20 +124,71 @@ impl Counters {
 pub struct NodeCtx {
     pub rank: usize,
     pub n: usize,
-    tx: Vec<Sender<Payload>>,
-    rx: Vec<Receiver<Payload>>,
+    tx: Vec<Sender<Envelope>>,
+    rx: Vec<Receiver<Envelope>>,
+    /// per-source reorder buffer for tagged messages that arrived while a
+    /// different tag was awaited (single-threaded per node, hence RefCell)
+    pending: Vec<RefCell<HashMap<u64, WireMsg>>>,
+    /// simulated link, if any, plus when this node's egress is next free
+    net: Option<LinkSim>,
+    egress_free: Cell<Instant>,
     pub counters: Arc<Counters>,
 }
 
 impl NodeCtx {
     pub fn send(&self, dst: usize, p: Payload) {
-        self.counters.sent[self.rank].fetch_add(p.wire_bytes(), Ordering::Relaxed);
+        let bytes = p.wire_bytes();
+        self.counters.sent[self.rank].fetch_add(bytes, Ordering::Relaxed);
         self.counters.msgs[self.rank].fetch_add(1, Ordering::Relaxed);
-        self.tx[dst].send(p).expect("peer hung up");
+        let ready_at = self.net.map(|l| {
+            let start = self.egress_free.get().max(Instant::now());
+            let done = start + Duration::from_secs_f64(bytes as f64 / l.bw);
+            self.egress_free.set(done);
+            done + Duration::from_secs_f64(l.latency_s)
+        });
+        self.tx[dst].send(Envelope { ready_at, payload: p }).expect("peer hung up");
     }
 
     pub fn recv(&self, src: usize) -> Payload {
-        self.rx[src].recv().expect("peer hung up")
+        let env = self.rx[src].recv().expect("peer hung up");
+        if let Some(t) = env.ready_at {
+            let now = Instant::now();
+            if t > now {
+                std::thread::sleep(t - now);
+            }
+        }
+        env.payload
+    }
+
+    /// Send `msg` to `dst` addressed by `tag`. Multiple tagged messages to
+    /// the same peer may be in flight at once; the receiver matches them
+    /// with [`NodeCtx::recv_wire_tagged`] in any order. Tags must be unique
+    /// among the messages concurrently in flight between a (src, dst) pair.
+    pub fn send_wire_tagged(&self, dst: usize, tag: u64, msg: WireMsg) {
+        self.send(dst, Payload::TaggedWire { tag, msg });
+    }
+
+    /// Receive the tagged message `tag` from `src`, stashing any other
+    /// tagged messages that arrive first into the reorder buffer.
+    ///
+    /// Interleaving tagged and untagged traffic from the same source while
+    /// a tag is awaited is a protocol error (panics): the trainer's
+    /// collectives are strictly phased, so this cannot happen in practice.
+    pub fn recv_wire_tagged(&self, src: usize, tag: u64) -> WireMsg {
+        if let Some(m) = self.pending[src].borrow_mut().remove(&tag) {
+            return m;
+        }
+        loop {
+            match self.recv(src) {
+                Payload::TaggedWire { tag: t, msg } => {
+                    if t == tag {
+                        return msg;
+                    }
+                    self.pending[src].borrow_mut().insert(t, msg);
+                }
+                _ => panic!("untagged payload while awaiting tag {tag} from node {src}"),
+            }
+        }
     }
 
     /// Pairwise all-to-all: `msgs[j]` goes to node j; returns the messages
@@ -296,12 +381,23 @@ pub fn run_cluster<T: Send>(
     n: usize,
     f: impl Fn(NodeCtx) -> T + Send + Sync,
 ) -> (Vec<T>, Arc<Counters>) {
+    run_cluster_net(n, None, f)
+}
+
+/// [`run_cluster`] with an optional simulated interconnect ([`LinkSim`]);
+/// benchmarks use this to measure communication/compute overlap with
+/// realistic wire times.
+pub fn run_cluster_net<T: Send>(
+    n: usize,
+    net: Option<LinkSim>,
+    f: impl Fn(NodeCtx) -> T + Send + Sync,
+) -> (Vec<T>, Arc<Counters>) {
     assert!(n > 0);
     let counters = Counters::new(n);
     // mesh[src][dst]
-    let mut txs: Vec<Vec<Option<Sender<Payload>>>> =
+    let mut txs: Vec<Vec<Option<Sender<Envelope>>>> =
         (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
-    let mut rxs: Vec<Vec<Option<Receiver<Payload>>>> =
+    let mut rxs: Vec<Vec<Option<Receiver<Envelope>>>> =
         (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
     for src in 0..n {
         for dst in 0..n {
@@ -317,6 +413,9 @@ pub fn run_cluster<T: Send>(
             n,
             tx: tx_row.into_iter().map(Option::unwrap).collect(),
             rx: rx_row.into_iter().map(Option::unwrap).collect(),
+            pending: (0..n).map(|_| RefCell::new(HashMap::new())).collect(),
+            net,
+            egress_free: Cell::new(Instant::now()),
             counters: counters.clone(),
         });
     }
@@ -481,6 +580,95 @@ mod tests {
         for got in results {
             assert_eq!(got, (0..n).collect::<Vec<_>>());
         }
+    }
+
+    #[test]
+    fn tagged_messages_match_out_of_order() {
+        // node 0 sends tags 3,1,2 to node 1; node 1 asks for 1,2,3 —
+        // the reorder buffer must deliver each payload to its tag
+        let (results, _) = run_cluster(2, |ctx| {
+            if ctx.rank == 0 {
+                for tag in [3u64, 1, 2] {
+                    ctx.send_wire_tagged(1, tag, WireMsg::F32(vec![tag as f32 * 10.0]));
+                }
+                Vec::new()
+            } else {
+                (1u64..=3)
+                    .map(|tag| match ctx.recv_wire_tagged(0, tag) {
+                        WireMsg::F32(v) => v[0],
+                        _ => panic!(),
+                    })
+                    .collect::<Vec<_>>()
+            }
+        });
+        assert_eq!(results[1], vec![10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn tagged_wire_bytes_include_header() {
+        let (_, counters) = run_cluster(2, |ctx| {
+            if ctx.rank == 0 {
+                ctx.send_wire_tagged(1, 7, WireMsg::F32(vec![1.0, 2.0]));
+            } else {
+                ctx.recv_wire_tagged(0, 7);
+            }
+        });
+        // 8-byte tag header + two f32s
+        assert_eq!(counters.total_sent(), 8 + 8);
+    }
+
+    #[test]
+    fn many_tagged_in_flight_across_pairs() {
+        // every node sends 4 tagged buckets to every peer; receivers pull
+        // them in reverse order
+        let n = 4;
+        let (results, _) = run_cluster(n, |ctx| {
+            for dst in 0..n {
+                if dst == ctx.rank {
+                    continue;
+                }
+                for b in 0..4u64 {
+                    let val = (ctx.rank * 100 + dst * 10) as f32 + b as f32;
+                    ctx.send_wire_tagged(dst, b, WireMsg::F32(vec![val]));
+                }
+            }
+            let mut got = Vec::new();
+            for src in 0..n {
+                if src == ctx.rank {
+                    continue;
+                }
+                for b in (0..4u64).rev() {
+                    match ctx.recv_wire_tagged(src, b) {
+                        WireMsg::F32(v) => got.push((src, b, v[0])),
+                        _ => panic!(),
+                    }
+                }
+            }
+            got
+        });
+        for (rank, got) in results.iter().enumerate() {
+            for &(src, b, v) in got {
+                assert_eq!(v, (src * 100 + rank * 10) as f32 + b as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn link_sim_delays_delivery() {
+        // 1 MB at 100 MB/s => at least ~10 ms of simulated wire time
+        let net = LinkSim { bw: 100e6, latency_s: 0.0 };
+        let t0 = Instant::now();
+        run_cluster_net(2, Some(net), |ctx| {
+            if ctx.rank == 0 {
+                ctx.send(1, Payload::F32(vec![0.0; 250_000]));
+            } else {
+                ctx.recv(0);
+            }
+        });
+        assert!(
+            t0.elapsed().as_secs_f64() >= 0.009,
+            "link sim did not delay delivery"
+        );
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! Bucket planning for the overlapped gradient-sync engine.
+//!
+//! A [`BucketPlan`] cuts every destination shard of a
+//! [`Partition`](crate::sharding::Partition) into contiguous buckets of at
+//! most `bucket_elems` elements. The plan is a pure function of
+//! (partition, layout, bucket size, alignment), so every node computes the
+//! same schedule without any coordination traffic — bucket indices double
+//! as wire tags.
+//!
+//! Cut placement rules, in priority order:
+//! 1. buckets never straddle a shard (destination) boundary;
+//! 2. cuts keep `align`-element alignment *relative to the shard start*
+//!    (so nibble pairs and block-quantization scale groups inside a shard
+//!    land in the same groups as on the monolithic path);
+//! 3. when a tensor boundary from the [`ParamLayout`] falls inside the
+//!    tail of a bucket without violating rule 2, the cut snaps down onto
+//!    it, keeping whole tensors together where that is free.
+
+use std::ops::Range;
+
+use crate::sharding::{ParamLayout, Partition};
+
+/// One bucket: a contiguous sub-range of exactly one destination shard.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bucket {
+    /// flat element range in the full gradient
+    pub range: Range<usize>,
+    /// node that owns (receives and reduces) this bucket
+    pub dst: usize,
+}
+
+/// The cluster-global bucket schedule (identical on every node).
+#[derive(Debug, Clone)]
+pub struct BucketPlan {
+    /// all buckets, ordered by destination then flat offset
+    pub buckets: Vec<Bucket>,
+    /// cluster size
+    pub n: usize,
+    /// bucket indices per destination, in flat order
+    pub by_dst: Vec<Vec<usize>>,
+}
+
+impl BucketPlan {
+    /// Cut `part` into buckets of at most `bucket_elems` elements each
+    /// (`0` = one bucket per shard, the monolithic plan). `align` is the
+    /// element alignment kept on interior cuts (2 for nibble-packed wire
+    /// formats, the quantization block size for block methods).
+    pub fn new(
+        part: &Partition,
+        layout: &ParamLayout,
+        bucket_elems: usize,
+        align: usize,
+    ) -> Self {
+        let align = align.max(1);
+        let n = part.ranges.len();
+        let mut buckets = Vec::new();
+        let mut by_dst: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (dst, shard) in part.ranges.iter().enumerate() {
+            let mut start = shard.start;
+            while start < shard.end {
+                let end = if bucket_elems == 0 {
+                    shard.end
+                } else {
+                    Self::cut(shard, layout, start, bucket_elems, align)
+                };
+                by_dst[dst].push(buckets.len());
+                buckets.push(Bucket { range: start..end, dst });
+                start = end;
+            }
+        }
+        BucketPlan { buckets, n, by_dst }
+    }
+
+    /// Pick the end of the bucket starting at `start`.
+    fn cut(
+        shard: &Range<usize>,
+        layout: &ParamLayout,
+        start: usize,
+        bucket_elems: usize,
+        align: usize,
+    ) -> usize {
+        let hard_end = (start + bucket_elems).min(shard.end);
+        if hard_end == shard.end {
+            return hard_end;
+        }
+        // align the interior cut relative to the shard start
+        let rel = hard_end - shard.start;
+        let rel_aligned = rel / align * align;
+        let mut end = if shard.start + rel_aligned > start {
+            shard.start + rel_aligned
+        } else {
+            hard_end
+        };
+        // snap down onto the largest tensor boundary inside (start, end)
+        // that preserves alignment
+        let mut snap = None;
+        for t in &layout.tensors {
+            let b = t.offset + t.len;
+            if b > start && b < end && (b - shard.start) % align == 0 {
+                snap = Some(snap.map_or(b, |s: usize| s.max(b)));
+            }
+        }
+        if let Some(b) = snap {
+            end = b;
+        }
+        end
+    }
+
+    /// Total number of buckets across all destinations.
+    pub fn total(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Bucket indices owned (received) by `rank`, in flat order.
+    pub fn own(&self, rank: usize) -> &[usize] {
+        &self.by_dst[rank]
+    }
+
+    /// Largest bucket count any single destination has.
+    pub fn max_per_dst(&self) -> usize {
+        self.by_dst.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Send schedule for `rank`: bucket ids interleaved round-robin across
+    /// destinations starting at `rank + 1`, so the first bucket of every
+    /// peer enters the pipeline early and receivers can start decoding
+    /// while later buckets are still being encoded.
+    pub fn schedule(&self, rank: usize) -> Vec<usize> {
+        let mut sched = Vec::with_capacity(self.buckets.len());
+        for round in 0..self.max_per_dst() {
+            for off in 1..=self.n {
+                let dst = (rank + off) % self.n;
+                if let Some(&bi) = self.by_dst[dst].get(round) {
+                    sched.push(bi);
+                }
+            }
+        }
+        sched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sharding::{ParamLayout, Partition};
+
+    fn layout() -> ParamLayout {
+        ParamLayout::new(vec![
+            ("a".into(), vec![300]),
+            ("b".into(), vec![212]),
+            ("c".into(), vec![512]),
+        ])
+    }
+
+    #[test]
+    fn plan_covers_partition_exactly() {
+        let l = layout();
+        for n in [1usize, 2, 4] {
+            for elems in [0usize, 64, 100, 4096] {
+                let part = Partition::flat_even(l.total, n, 2);
+                let plan = BucketPlan::new(&part, &l, elems, 2);
+                // buckets tile each shard without gaps or overlap
+                for (dst, shard) in part.ranges.iter().enumerate() {
+                    let ids = plan.own(dst);
+                    let mut cursor = shard.start;
+                    for &bi in ids {
+                        let b = &plan.buckets[bi];
+                        assert_eq!(b.dst, dst);
+                        assert_eq!(b.range.start, cursor);
+                        assert!(!b.range.is_empty());
+                        if elems > 0 {
+                            assert!(b.range.len() <= elems.max(2));
+                        }
+                        cursor = b.range.end;
+                    }
+                    assert_eq!(cursor, shard.end);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_bucket_elems_is_monolithic() {
+        let l = layout();
+        let part = Partition::flat_even(l.total, 4, 2);
+        let plan = BucketPlan::new(&part, &l, 0, 2);
+        assert_eq!(plan.total(), 4);
+        for (dst, shard) in part.ranges.iter().enumerate() {
+            assert_eq!(plan.buckets[plan.own(dst)[0]].range, *shard);
+        }
+    }
+
+    #[test]
+    fn interior_cuts_keep_alignment() {
+        let l = layout();
+        let part = Partition::flat_even(l.total, 2, 2);
+        let plan = BucketPlan::new(&part, &l, 100, 4);
+        for b in &plan.buckets {
+            let shard = &part.ranges[b.dst];
+            if b.range.end != shard.end {
+                assert_eq!((b.range.end - shard.start) % 4, 0, "{:?}", b.range);
+            }
+        }
+    }
+
+    #[test]
+    fn cuts_snap_to_tensor_boundaries() {
+        let l = layout();
+        // one shard over everything; tensor "a" ends at 300, within the
+        // tail of the second 256-bucket (256..512) and 300 % 2 == 0
+        let part = Partition { ranges: vec![0..l.total] };
+        let plan = BucketPlan::new(&part, &l, 256, 2);
+        assert!(
+            plan.buckets.iter().any(|b| b.range.end == 300),
+            "expected a cut at tensor boundary 300: {:?}",
+            plan.buckets
+        );
+    }
+
+    #[test]
+    fn schedule_visits_every_bucket_once() {
+        let l = layout();
+        let part = Partition::flat_even(l.total, 4, 2);
+        let plan = BucketPlan::new(&part, &l, 64, 2);
+        for rank in 0..4 {
+            let mut sched = plan.schedule(rank);
+            assert_eq!(sched.len(), plan.total());
+            // first n entries hit n distinct destinations (pipelining)
+            let firsts: std::collections::HashSet<usize> =
+                sched[..4].iter().map(|&bi| plan.buckets[bi].dst).collect();
+            assert_eq!(firsts.len(), 4);
+            sched.sort_unstable();
+            sched.dedup();
+            assert_eq!(sched.len(), plan.total());
+        }
+    }
+}

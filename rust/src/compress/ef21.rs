@@ -14,20 +14,28 @@ use crate::quant;
 
 pub struct Ef21Encoder {
     cfg: CompressorConfig,
-    /// sender-side reconstruction w (full model, fp32)
+    /// sender-side reconstruction w (fp32, covering `base..base+w.len()`)
     w: Vec<f32>,
+    /// flat offset of the first element covered by the reconstruction
+    base: usize,
 }
 
 impl Ef21Encoder {
     pub fn new(cfg: &CompressorConfig, total: usize) -> Self {
-        Ef21Encoder { cfg: *cfg, w: vec![0.0; total] }
+        Self::for_range(cfg, 0..total)
+    }
+
+    /// Encoder whose reconstruction covers only `range` (one bucket of the
+    /// [`crate::comm`] engine).
+    pub fn for_range(cfg: &CompressorConfig, range: Range<usize>) -> Self {
+        Ef21Encoder { cfg: *cfg, w: vec![0.0; range.len()], base: range.start }
     }
 }
 
 impl Encoder for Ef21Encoder {
     fn encode(&mut self, grad: &[f32], range: Range<usize>, _step: u64) -> WireMsg {
         let g = &grad[range.clone()];
-        let w = &mut self.w[range];
+        let w = &mut self.w[range.start - self.base..range.end - self.base];
         let n = g.len();
         let mut codes = vec![0i8; n];
         for i in 0..n {

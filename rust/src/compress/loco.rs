@@ -29,20 +29,31 @@ enum ErrorStore {
 pub struct LocoEncoder {
     cfg: CompressorConfig,
     err: ErrorStore,
+    /// flat offset of the first element covered by the error store
+    /// (0 for whole-model encoders, the bucket start for bucket encoders)
+    base: usize,
     /// EMA of max|g| for auto_scale (0 until first observation)
     maxabs_ema: f32,
 }
 
 impl LocoEncoder {
     pub fn new(cfg: &CompressorConfig, total: usize) -> Self {
+        Self::for_range(cfg, 0..total)
+    }
+
+    /// Encoder whose error state covers only `range` of the flat gradient
+    /// (one bucket of the [`crate::comm`] engine). `encode` must then only
+    /// be called with sub-ranges of `range`.
+    pub fn for_range(cfg: &CompressorConfig, range: Range<usize>) -> Self {
+        let len = range.len();
         let err = if cfg.no_error_feedback {
             ErrorStore::None
         } else if cfg.error_bits >= 32 {
-            ErrorStore::F32(vec![0.0; total])
+            ErrorStore::F32(vec![0.0; len])
         } else {
-            ErrorStore::I8(vec![0i8; total])
+            ErrorStore::I8(vec![0i8; len])
         };
-        LocoEncoder { cfg: *cfg, err, maxabs_ema: 0.0 }
+        LocoEncoder { cfg: *cfg, err, base: range.start, maxabs_ema: 0.0 }
     }
 
     /// Wire scale for this call: fixed `s`, or adaptive so the EMA'd
@@ -95,6 +106,7 @@ impl Encoder for LocoEncoder {
         let reset = self.is_reset_step(step);
         let g = &grad[range.clone()];
         let n = g.len();
+        let range = range.start - self.base..range.end - self.base;
 
         match &mut self.err {
             ErrorStore::None => {
@@ -168,6 +180,8 @@ impl Encoder for LocoEncoder {
 pub struct LocoBlockEncoder {
     cfg: CompressorConfig,
     err: Vec<i8>,
+    /// flat offset of the first element covered by the error store
+    base: usize,
     /// per-block error scale is derived from the gradient block scale
     /// (s_e = s_e_mult * s_block); we store the compensated value against a
     /// *fixed* error scale to keep the state well-defined across steps.
@@ -176,9 +190,15 @@ pub struct LocoBlockEncoder {
 
 impl LocoBlockEncoder {
     pub fn new(cfg: &CompressorConfig, total: usize) -> Self {
+        Self::for_range(cfg, 0..total)
+    }
+
+    /// Encoder whose error state covers only `range` (one bucket).
+    pub fn for_range(cfg: &CompressorConfig, range: Range<usize>) -> Self {
         LocoBlockEncoder {
             cfg: *cfg,
-            err: vec![0i8; total],
+            err: vec![0i8; range.len()],
+            base: range.start,
             s_e: cfg.s_e_mult * cfg.s,
         }
     }
@@ -189,7 +209,7 @@ impl Encoder for LocoBlockEncoder {
         let reset = self.cfg.reset_interval > 0 && step % self.cfg.reset_interval == 0;
         let beta = self.cfg.effective_beta();
         let g = &grad[range.clone()];
-        let e = &mut self.err[range];
+        let e = &mut self.err[range.start - self.base..range.end - self.base];
         let n = g.len();
         let inv_se = 1.0 / self.s_e;
 

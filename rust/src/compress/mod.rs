@@ -118,6 +118,16 @@ pub struct CompressorConfig {
     /// element-wise clip applied to the local gradient before compression
     /// (Sec. 5.2 uses this for MoE pre-training); 0 disables
     pub elementwise_clip: f32,
+    /// EXTENSION (bucketed sync engine, [`crate::comm`]): fp32 bytes of
+    /// gradient per bucket on the overlapped all-to-all path. Each
+    /// destination shard is cut into `bucket_bytes / 4`-element buckets
+    /// that are encoded, shipped and decoded as a pipeline. 0 selects the
+    /// monolithic path (one message per destination shard), bit-identical
+    /// to the original trainer and kept for bitwise-comparison tests.
+    pub bucket_bytes: usize,
+    /// worker threads per node driving the bucketed engine's
+    /// encode/decode pool (ignored on the monolithic path)
+    pub sync_workers: usize,
 }
 
 impl Default for CompressorConfig {
@@ -136,6 +146,8 @@ impl Default for CompressorConfig {
             block: 256,
             rank: 4,
             elementwise_clip: 0.0,
+            bucket_bytes: 0,
+            sync_workers: 4,
         }
     }
 }
@@ -209,6 +221,26 @@ impl WireMsg {
 }
 
 /// Sender side: compress `grad[range]` for one destination.
+///
+/// `grad` is always the node's *full* flat gradient; `range` selects the
+/// destination shard (or bucket) to compress. Stateful encoders (LoCo,
+/// EF21, 1-bit) keep error/reconstruction state for the flat region they
+/// were built over — the whole model for [`build`], a single bucket for
+/// [`build_bucket_encoder`].
+///
+/// ```
+/// use loco::compress::{build, CompressorConfig, Encoder, Method};
+/// use loco::sharding::ParamLayout;
+///
+/// let cfg = CompressorConfig { s: 16.0, ..CompressorConfig::with_method(Method::Loco) };
+/// let layout = ParamLayout::single("w", &[8]);
+/// let (mut enc, _dec) = build(&cfg, &layout, 0..8, 1);
+/// let grad = vec![0.25f32; 8];
+/// // 0.25 * 16 = 4.0 is exactly representable in 4 bits
+/// let msg = enc.encode(&grad, 0..8, 1);
+/// assert_eq!(msg.element_count(), 8);
+/// assert!(msg.wire_bytes() < 8 * 4); // smaller than fp32
+/// ```
 pub trait Encoder: Send {
     fn encode(&mut self, grad: &[f32], range: Range<usize>, step: u64) -> WireMsg;
     /// Average wire bits per gradient element (for netsim cross-checks).
@@ -221,6 +253,21 @@ pub trait Encoder: Send {
 
 /// Receiver side: decode a shard from `src` and accumulate into `acc`
 /// (which covers this node's own `range`, offset to 0).
+///
+/// ```
+/// use loco::compress::{build, CompressorConfig, Decoder, Encoder, Method};
+/// use loco::sharding::ParamLayout;
+///
+/// let cfg = CompressorConfig { s: 16.0, ..CompressorConfig::with_method(Method::Loco) };
+/// let layout = ParamLayout::single("w", &[4]);
+/// let (mut enc, mut dec) = build(&cfg, &layout, 0..4, 1);
+/// let grad = vec![0.25f32; 4];
+/// let msg = enc.encode(&grad, 0..4, 1);
+/// let mut acc = vec![0.0f32; 4];
+/// dec.decode_accumulate(0, &msg, &mut acc);
+/// // 0.25 * 16 = 4.0 is exactly representable: the roundtrip is lossless
+/// assert_eq!(acc, vec![0.25f32; 4]);
+/// ```
 pub trait Decoder: Send {
     fn decode_accumulate(&mut self, src: usize, msg: &WireMsg, acc: &mut [f32]);
     fn state_bytes(&self) -> usize {
@@ -314,6 +361,49 @@ pub fn build(
     }
 }
 
+/// Build a *per-bucket* encoder: identical numerics to [`build`]'s encoder
+/// restricted to `bucket`, but with sender-side state (error stores, EF21
+/// reconstructions) allocated for the bucket only, so the bucketed engine
+/// ([`crate::comm`]) holds exactly one byte-per-param total across all its
+/// bucket encoders — the same footprint as one monolithic encoder.
+///
+/// Panics for [`Method::PowerSgd`], which needs whole tensors; the sync
+/// engine routes that method to the monolithic path instead.
+pub fn build_bucket_encoder(cfg: &CompressorConfig, bucket: Range<usize>) -> Box<dyn Encoder> {
+    match cfg.method {
+        Method::Fp32 => Box::new(fp::Fp32Encoder),
+        Method::Bf16 => Box::new(fp::Bf16Encoder),
+        Method::Loco | Method::Ef => {
+            let mut c = *cfg;
+            if cfg.method == Method::Ef {
+                c.beta = 1.0;
+                c.error_bits = 32;
+                c.reset_interval = 0;
+            }
+            Box::new(loco::LocoEncoder::for_range(&c, bucket))
+        }
+        Method::Ef21 => Box::new(ef21::Ef21Encoder::for_range(cfg, bucket)),
+        Method::OneBit => Box::new(onebit::OneBitEncoder::for_range(bucket)),
+        Method::Zeropp => Box::new(block::BlockQuantEncoder::new(cfg)),
+        Method::LocoZeropp => Box::new(loco::LocoBlockEncoder::for_range(cfg, bucket)),
+        Method::IntSgd => Box::new(block::StochasticQuantEncoder::new(cfg)),
+        Method::PowerSgd => panic!("PowerSGD cannot be bucketed (whole-tensor compressor)"),
+    }
+}
+
+/// Build a per-bucket decoder for a bucket of `bucket_len` elements of
+/// this node's own shard. Only EF21 keeps receiver-side state.
+pub fn build_bucket_decoder(
+    cfg: &CompressorConfig,
+    bucket_len: usize,
+    n_nodes: usize,
+) -> Box<dyn Decoder> {
+    match cfg.method {
+        Method::Ef21 => Box::new(ef21::Ef21Decoder::new(n_nodes, bucket_len)),
+        _ => Box::new(StatelessDecoder),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -404,6 +494,44 @@ mod tests {
             assert_eq!(Method::parse(m.name()), Some(m));
         }
         assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn bucket_encoders_match_monolithic_bitwise() {
+        // cutting a shard into per-bucket LoCo encoders produces exactly
+        // the codes (and error-state evolution) of one monolithic encoder:
+        // the fused compensate->quantize->error-update is elementwise
+        let n = 512;
+        let cfg = CompressorConfig { s: 32.0, ..Default::default() };
+        let layout = flat_layout(n);
+        let (mut mono, _) = build(&cfg, &layout, 0..n, 1);
+        let cuts = [0usize, 100, 256, 380, n];
+        let mut bucketed: Vec<Box<dyn Encoder>> = cuts
+            .windows(2)
+            .map(|w| build_bucket_encoder(&cfg, w[0]..w[1]))
+            .collect();
+        let mut rng = Rng::new(77);
+        let mut g = vec![0.0f32; n];
+        for step in 1..=20u64 {
+            rng.fill_normal(&mut g, 0.05);
+            let mono_codes = match mono.encode(&g, 0..n, step) {
+                WireMsg::I4 { packed, n, .. } => crate::quant::unpack_nibbles(&packed, n),
+                _ => panic!("expected I4"),
+            };
+            let mut got = Vec::with_capacity(n);
+            for (enc, w) in bucketed.iter_mut().zip(cuts.windows(2)) {
+                match enc.encode(&g, w[0]..w[1], step) {
+                    WireMsg::I4 { packed, n, .. } => {
+                        got.extend(crate::quant::unpack_nibbles(&packed, n))
+                    }
+                    _ => panic!("expected I4"),
+                }
+            }
+            assert_eq!(mono_codes, got, "codes diverged at step {step}");
+        }
+        // and the split state is exactly one byte per param in total
+        let state: usize = bucketed.iter().map(|e| e.state_bytes()).sum();
+        assert_eq!(state, mono.state_bytes());
     }
 
     #[test]

@@ -20,18 +20,28 @@ pub fn decode_sign_accumulate(bits: &[u8], n: usize, scale: f32, acc: &mut [f32]
 
 pub struct OneBitEncoder {
     err: Vec<f32>,
+    /// flat offset of the first element covered by the error store
+    base: usize,
 }
 
 impl OneBitEncoder {
     pub fn new(total: usize) -> Self {
-        OneBitEncoder { err: vec![0.0; total] }
+        Self::for_range(0..total)
+    }
+
+    /// Encoder whose error state covers only `range` (one bucket). Note
+    /// the magnitude scale is then computed per bucket rather than per
+    /// destination shard — a documented numerics difference of the
+    /// bucketed path for this method.
+    pub fn for_range(range: Range<usize>) -> Self {
+        OneBitEncoder { err: vec![0.0; range.len()], base: range.start }
     }
 }
 
 impl Encoder for OneBitEncoder {
     fn encode(&mut self, grad: &[f32], range: Range<usize>, _step: u64) -> WireMsg {
         let g = &grad[range.clone()];
-        let e = &mut self.err[range];
+        let e = &mut self.err[range.start - self.base..range.end - self.base];
         let n = g.len();
         // compensate
         let mut h = vec![0.0f32; n];

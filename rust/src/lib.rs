@@ -17,14 +17,22 @@
 //!   hot-spot (fused LoCo compensate→quantize→error-update, blocked causal
 //!   attention), interpret-lowered into the same HLO.
 //!
-//! Python never runs on the training path: the [`runtime`] module loads the
-//! HLO artifacts through the PJRT C API (`xla` crate) and executes them from
-//! the Rust event loop.
+//! Python never runs on the training path: the [`runtime`] module executes
+//! the model graph either through the PJRT C API (`pjrt` feature + AOT HLO
+//! artifacts) or through the always-available builtin reference engine
+//! that mirrors the L2 graph's math in pure Rust.
+//!
+//! Gradient synchronization runs through the bucketed, overlapped engine
+//! in [`comm`]: destination shards are cut into fixed-size buckets with
+//! per-bucket error-feedback state, and a per-node worker pool keeps
+//! bucket `k+1` encoding while bucket `k` is in flight on the
+//! tag-addressed all-to-all path.
 //!
 //! See DESIGN.md for the system inventory and the per-experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
 
 pub mod collective;
+pub mod comm;
 pub mod compress;
 pub mod config;
 pub mod data;

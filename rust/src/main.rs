@@ -106,6 +106,8 @@ pub fn train_config_from(cfg: &Config) -> Result<TrainConfig> {
     cc.block = cfg.usize("compress.block", 256)?;
     cc.rank = cfg.usize("compress.rank", 4)?;
     cc.elementwise_clip = cfg.f32("compress.elementwise_clip", 0.0)?;
+    cc.bucket_bytes = cfg.usize("compress.bucket_bytes", 0)?;
+    cc.sync_workers = cfg.usize("compress.sync_workers", 4)?;
     tc.compressor = cc;
     Ok(tc)
 }
@@ -208,6 +210,7 @@ fn cmd_throughput() -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_quant_selftest() -> Result<()> {
     let art = loco::runtime::artifacts_dir();
     let block = 65536;
@@ -232,6 +235,40 @@ fn cmd_quant_selftest() -> Result<()> {
         bail!("Rust hot path disagrees with the L1 Pallas kernel");
     }
     println!("selftest OK — Rust hot path is bit-identical to the Pallas kernel");
+    Ok(())
+}
+
+/// Without the PJRT backend the true L1 parity check cannot run; verify
+/// the two Rust hot paths (scalar fused step and packed wire emitter)
+/// against each other instead, which `tests/xla_parity.rs` pins to the
+/// kernel whenever the `pjrt` feature is enabled.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_quant_selftest() -> Result<()> {
+    let block = 65536;
+    let mut rng = Rng::new(7);
+    let mut g = vec![0.0f32; block];
+    rng.fill_normal(&mut g, 0.1);
+    let e: Vec<i8> = (0..block).map(|_| (rng.below(256) as i32 - 128) as i8).collect();
+    let p = loco::quant::LocoParams { s: 16.0, s_e: 64.0, beta: 0.125, bits: 4 };
+
+    let mut e_scalar = e.clone();
+    let mut q_scalar = vec![0i8; block];
+    loco::quant::loco_step(&g, &mut e_scalar, &mut q_scalar, p, false);
+    let mut e_packed = e.clone();
+    let mut packed = Vec::new();
+    loco::quant::loco_step_packed(&g, &mut e_packed, &mut packed, p, false);
+
+    let q_unpacked = loco::quant::unpack_nibbles(&packed, block);
+    let q_diff = q_scalar.iter().zip(&q_unpacked).filter(|(a, b)| a != b).count();
+    let e_diff = e_scalar.iter().zip(&e_packed).filter(|(a, b)| a != b).count();
+    println!("loco_step scalar vs packed over {block} elements: q mismatches={q_diff}, e mismatches={e_diff}");
+    if q_diff + e_diff > 0 {
+        bail!("packed wire path disagrees with the scalar reference");
+    }
+    println!(
+        "selftest OK — scalar and packed hot paths agree \
+         (enable the `pjrt` feature + `make artifacts` for true L1 kernel parity)"
+    );
     Ok(())
 }
 

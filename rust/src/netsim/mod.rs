@@ -38,9 +38,28 @@ pub struct Gpu {
     pub flops: f64,
     /// achieved MFU for transformer training
     pub mfu: f64,
+    /// HBM bandwidth in bytes/s — the quantize/error-update kernels are
+    /// streaming memory-bound, so encode time is bytes-touched / mem_bw
+    /// (overlap model in [`throughput`])
+    pub mem_bw: f64,
 }
 
-pub const A100: Gpu = Gpu { name: "a100", flops: 312e12, mfu: 0.45 };
+pub const A100: Gpu = Gpu { name: "a100", flops: 312e12, mfu: 0.45, mem_bw: 2.0e12 };
+
+/// Bytes of memory traffic per parameter for the compression kernels of
+/// each method (gradient read + error-store read/write + wire write).
+/// Feeds the encode stage of the overlap model; fp32/bf16 are pure copies.
+pub fn encode_bytes_per_param(method: &str) -> f64 {
+    match method {
+        "fp32" => 8.0,                  // read + write
+        "adam" | "sgd" | "bf16" => 6.0, // read f32 + write bf16
+        "loco" => 6.5,                  // g(4) + err rw(2) + nibble out(0.5)
+        "ef" | "ef21" => 12.5,          // fp32 state rw
+        "zeropp" | "loco-zeropp" => 6.5,
+        "onebit" => 12.125,             // fp32 err rw + bit out
+        _ => 6.0,
+    }
+}
 
 /// Wire bytes per parameter per optimizer step for gradient+parameter
 /// synchronization, following the paper's Table 1 accounting

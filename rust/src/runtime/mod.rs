@@ -1,19 +1,34 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them from the Rust training loop.
+//! Execution engines for the L2 model graph.
 //!
-//! Python never runs here — the interchange is HLO *text* (see
-//! DESIGN.md / aot recipe): `HloModuleProto::from_text_file` →
-//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! Two backends behind one [`Engine`] facade:
 //!
-//! `PjRtClient` is `Rc`-backed (not `Send`), so each node thread constructs
-//! its own [`Engine`] — mirroring one process per GPU in the real system.
+//! * **PJRT** (feature `pjrt`) — loads the AOT HLO-text artifacts
+//!   produced by `python/compile/aot.py` and executes them through the
+//!   PJRT C API. Requires the `xla` crate (not in the offline registry —
+//!   see `Cargo.toml`) plus `make artifacts`.
+//! * **Builtin** ([`RefModel`], always available) — a pure-Rust reference
+//!   LM with hand-derived gradients for the builtin configs (`tiny`,
+//!   `small`, `moe_tiny`). This keeps the entire distributed-training
+//!   stack testable with nothing but `cargo test`.
+//!
+//! [`Engine::load`] picks PJRT when the feature is on *and* the manifest
+//! artifact exists, the builtin model otherwise.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+use anyhow::{Context, Result};
 
 use crate::model::ModelMeta;
+
+mod refmodel;
+
+#[cfg(feature = "pjrt")]
+mod pjrt;
+
+pub use refmodel::{builtin_meta, RefModel};
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::{compile_hlo, LocoKernel, PjrtEngine};
 
 /// Locate the artifacts directory: $LOCO_ARTIFACTS, ./artifacts, or
 /// ../artifacts (tests run from target dirs).
@@ -32,181 +47,105 @@ pub fn artifacts_dir() -> PathBuf {
     PathBuf::from("artifacts")
 }
 
-/// Compile an HLO-text file on a fresh CPU PJRT client.
-pub fn compile_hlo(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
-    let proto = xla::HloModuleProto::from_text_file(path.to_str().context("path utf8")?)
-        .map_err(|e| anyhow::anyhow!("loading {}: {e}", path.display()))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    client
-        .compile(&comp)
-        .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))
+/// Load model metadata with the same precedence [`Engine::load`] uses for
+/// execution: the AOT manifest when the `pjrt` backend could actually run
+/// it, the builtin config otherwise. (Without the feature the manifest is
+/// deliberately ignored — the builtin engine has its own layout, and
+/// mixing the two would shard one architecture while training another.)
+pub fn load_meta(art_dir: &Path, config: &str) -> Result<ModelMeta> {
+    let path = art_dir.join(format!("model_{config}.manifest"));
+    #[cfg(feature = "pjrt")]
+    if path.exists() {
+        return ModelMeta::load(&path);
+    }
+    builtin_meta(config).with_context(|| {
+        format!("no builtin model {config:?} (and no usable artifact {})", path.display())
+    })
 }
 
-/// One loaded model (train + eval executables + manifest) on its own CPU
-/// PJRT client. Construct one per node thread.
+enum Backend {
+    Builtin(RefModel),
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtEngine),
+}
+
+/// One loaded model on one node thread (mirrors one process per GPU).
 pub struct Engine {
-    client: PjRtClient,
-    train_exe: PjRtLoadedExecutable,
-    eval_exe: Option<PjRtLoadedExecutable>,
     pub meta: ModelMeta,
+    backend: Backend,
 }
 
 impl Engine {
-    /// Load `model_<config>` from `art_dir`. `with_eval` additionally
-    /// compiles the loss-only graph.
+    /// Load `model_<config>`: PJRT artifacts when available (and the
+    /// `pjrt` feature is on), the builtin reference engine otherwise.
+    /// `with_eval` additionally prepares the loss-only graph (a no-op for
+    /// the builtin backend, which can always evaluate).
     pub fn load(art_dir: &Path, config: &str, with_eval: bool) -> Result<Engine> {
-        let meta = ModelMeta::load(&art_dir.join(format!("model_{config}.manifest")))?;
-        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
-        let train_exe =
-            compile_hlo(&client, &art_dir.join(format!("model_{config}_train.hlo.txt")))?;
-        let eval_exe = if with_eval {
-            Some(compile_hlo(&client, &art_dir.join(format!("model_{config}_eval.hlo.txt")))?)
-        } else {
-            None
-        };
-        Ok(Engine { client, train_exe, eval_exe, meta })
-    }
-
-    /// Build the (params..., tokens) literal argument vector.
-    fn args(&self, params: &[f32], tokens: &[i32]) -> Result<Vec<Literal>> {
-        let meta = &self.meta;
-        if params.len() != meta.layout.total {
-            bail!("params len {} != {}", params.len(), meta.layout.total);
+        #[cfg(feature = "pjrt")]
+        {
+            if art_dir.join(format!("model_{config}.manifest")).exists() {
+                let e = pjrt::PjrtEngine::load(art_dir, config, with_eval)?;
+                let meta = e.meta.clone();
+                return Ok(Engine { meta, backend: Backend::Pjrt(e) });
+            }
         }
-        if tokens.len() != meta.batch * meta.seq {
-            bail!("tokens len {} != {}", tokens.len(), meta.batch * meta.seq);
-        }
-        let mut args = Vec::with_capacity(meta.layout.tensors.len() + 1);
-        for t in &meta.layout.tensors {
-            let bytes: &[u8] = unsafe {
-                std::slice::from_raw_parts(
-                    params[t.offset..t.offset + t.len].as_ptr() as *const u8,
-                    4 * t.len,
-                )
-            };
-            args.push(
-                Literal::create_from_shape_and_untyped_data(ElementType::F32, &t.shape, bytes)
-                    .map_err(|e| anyhow::anyhow!("literal {}: {e}", t.name))?,
-            );
-        }
-        let tok_bytes: &[u8] = unsafe {
-            std::slice::from_raw_parts(tokens.as_ptr() as *const u8, 4 * tokens.len())
-        };
-        args.push(
-            Literal::create_from_shape_and_untyped_data(
-                ElementType::S32,
-                &[meta.batch, meta.seq],
-                tok_bytes,
-            )
-            .map_err(|e| anyhow::anyhow!("tokens literal: {e}"))?,
-        );
-        Ok(args)
+        #[cfg(not(feature = "pjrt"))]
+        let _ = (art_dir, with_eval);
+        let m = RefModel::new(config)?;
+        let meta = m.meta().clone();
+        Ok(Engine { meta, backend: Backend::Builtin(m) })
     }
 
     /// Run the fused forward+backward graph: returns the loss and writes
     /// the flat gradient into `grad_out`.
     pub fn train_step(&self, params: &[f32], tokens: &[i32], grad_out: &mut [f32]) -> Result<f32> {
-        let args = self.args(params, tokens)?;
-        let result = self
-            .train_exe
-            .execute::<Literal>(&args)
-            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
-        let parts = tuple.to_tuple().map_err(|e| anyhow::anyhow!("tuple: {e}"))?;
-        let meta = &self.meta;
-        if parts.len() != 1 + meta.layout.tensors.len() {
-            bail!("expected {} outputs, got {}", 1 + meta.layout.tensors.len(), parts.len());
+        match &self.backend {
+            Backend::Builtin(m) => m.loss_and_grad(params, tokens, Some(grad_out)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => e.train_step(params, tokens, grad_out),
         }
-        let loss = parts[0]
-            .get_first_element::<f32>()
-            .map_err(|e| anyhow::anyhow!("loss: {e}"))?;
-        for (t, lit) in meta.layout.tensors.iter().zip(&parts[1..]) {
-            lit.copy_raw_to(&mut grad_out[t.offset..t.offset + t.len])
-                .map_err(|e| anyhow::anyhow!("grad {}: {e}", t.name))?;
-        }
-        Ok(loss)
     }
 
     /// Run the loss-only graph.
     pub fn eval_loss(&self, params: &[f32], tokens: &[i32]) -> Result<f32> {
-        let exe = self.eval_exe.as_ref().context("engine loaded without eval graph")?;
-        let args = self.args(params, tokens)?;
-        let result = exe
-            .execute::<Literal>(&args)
-            .map_err(|e| anyhow::anyhow!("execute eval: {e}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
-        let loss = tuple
-            .to_tuple1()
-            .map_err(|e| anyhow::anyhow!("tuple1: {e}"))?
-            .get_first_element::<f32>()
-            .map_err(|e| anyhow::anyhow!("loss: {e}"))?;
-        Ok(loss)
-    }
-
-    pub fn client(&self) -> &PjRtClient {
-        &self.client
-    }
-}
-
-/// The standalone L1 LoCo kernel artifact (`loco_step_<block>.hlo.txt`),
-/// used to pin the Rust hot path to the Pallas kernel's numerics and as an
-/// optional XLA-executed quantization route.
-pub struct LocoKernel {
-    #[allow(dead_code)]
-    client: PjRtClient,
-    exe: PjRtLoadedExecutable,
-    pub block: usize,
-}
-
-impl LocoKernel {
-    pub fn load(art_dir: &Path, block: usize) -> Result<LocoKernel> {
-        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
-        let exe = compile_hlo(&client, &art_dir.join(format!("loco_step_{block}.hlo.txt")))?;
-        Ok(LocoKernel { client, exe, block })
-    }
-
-    /// Run one fused LoCo step on a `block`-sized shard.
-    pub fn step(
-        &self,
-        g: &[f32],
-        e: &[i8],
-        s: f32,
-        s_e: f32,
-        beta: f32,
-        reset: bool,
-    ) -> Result<(Vec<i8>, Vec<i8>)> {
-        if g.len() != self.block || e.len() != self.block {
-            bail!("kernel block is {}, got {}", self.block, g.len());
+        match &self.backend {
+            Backend::Builtin(m) => m.loss_and_grad(params, tokens, None),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => e.eval_loss(params, tokens),
         }
-        let g_bytes: &[u8] =
-            unsafe { std::slice::from_raw_parts(g.as_ptr() as *const u8, 4 * g.len()) };
-        let e_bytes: &[u8] =
-            unsafe { std::slice::from_raw_parts(e.as_ptr() as *const u8, e.len()) };
-        let args = vec![
-            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[g.len()], g_bytes)
-                .map_err(|e| anyhow::anyhow!("g: {e}"))?,
-            Literal::create_from_shape_and_untyped_data(ElementType::S8, &[e.len()], e_bytes)
-                .map_err(|e| anyhow::anyhow!("e: {e}"))?,
-            Literal::scalar(s),
-            Literal::scalar(s_e),
-            Literal::scalar(beta),
-            Literal::scalar(if reset { 1i32 } else { 0i32 }),
-        ];
-        let result = self
-            .exe
-            .execute::<Literal>(&args)
-            .map_err(|e| anyhow::anyhow!("execute kernel: {e}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
-        let (q, e_new) = tuple.to_tuple2().map_err(|e| anyhow::anyhow!("tuple2: {e}"))?;
-        Ok((
-            q.to_vec::<i8>().map_err(|e| anyhow::anyhow!("q: {e}"))?,
-            e_new.to_vec::<i8>().map_err(|e| anyhow::anyhow!("e': {e}"))?,
-        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_falls_back_to_builtin() {
+        // no artifacts dir in the test environment: the builtin engine
+        // must load and produce a finite loss + gradient
+        let dir = PathBuf::from("definitely/not/a/dir");
+        let engine = Engine::load(&dir, "tiny", true).unwrap();
+        let params = engine.meta.init_params(0);
+        let corpus = crate::data::Corpus::new(crate::data::CorpusConfig::for_vocab(
+            engine.meta.vocab,
+            1,
+        ));
+        let tokens =
+            corpus.batch(crate::data::Split::Train, 0, 0, engine.meta.batch, engine.meta.seq);
+        let mut grad = vec![0.0f32; engine.meta.layout.total];
+        let loss = engine.train_step(&params, &tokens, &mut grad).unwrap();
+        assert!(loss.is_finite() && loss > 1.0);
+        let eval = engine.eval_loss(&params, &tokens).unwrap();
+        assert!((loss - eval).abs() < 1e-5, "train/eval loss disagree on same batch");
+        assert!(grad.iter().any(|&g| g != 0.0));
+    }
+
+    #[test]
+    fn load_meta_prefers_manifest_else_builtin() {
+        let dir = PathBuf::from("definitely/not/a/dir");
+        let m = load_meta(&dir, "tiny").unwrap();
+        assert_eq!(m.vocab, 512);
+        assert!(load_meta(&dir, "nonexistent_model").is_err());
     }
 }

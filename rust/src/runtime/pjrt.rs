@@ -1,0 +1,200 @@
+//! PJRT backend (feature `pjrt`): loads the AOT HLO-text artifacts
+//! produced by `python/compile/aot.py` and executes them from the Rust
+//! training loop.
+//!
+//! Python never runs here — the interchange is HLO *text* (see
+//! DESIGN.md §AOT recipe): `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`), so each node thread constructs
+//! its own engine — mirroring one process per GPU in the real system.
+//!
+//! NOTE: the `xla` crate is not in the offline registry; enabling this
+//! feature requires adding the dependency in `Cargo.toml` (see the comment
+//! there). The default build uses the builtin reference engine instead.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use crate::model::ModelMeta;
+
+/// Compile an HLO-text file on a fresh CPU PJRT client.
+pub fn compile_hlo(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path.to_str().context("path utf8")?)
+        .map_err(|e| anyhow::anyhow!("loading {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))
+}
+
+/// One loaded model (train + eval executables + manifest) on its own CPU
+/// PJRT client. Construct one per node thread.
+pub struct PjrtEngine {
+    client: PjRtClient,
+    train_exe: PjRtLoadedExecutable,
+    eval_exe: Option<PjRtLoadedExecutable>,
+    pub meta: ModelMeta,
+}
+
+impl PjrtEngine {
+    /// Load `model_<config>` from `art_dir`. `with_eval` additionally
+    /// compiles the loss-only graph.
+    pub fn load(art_dir: &Path, config: &str, with_eval: bool) -> Result<PjrtEngine> {
+        let meta = ModelMeta::load(&art_dir.join(format!("model_{config}.manifest")))?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
+        let train_exe =
+            compile_hlo(&client, &art_dir.join(format!("model_{config}_train.hlo.txt")))?;
+        let eval_exe = if with_eval {
+            Some(compile_hlo(&client, &art_dir.join(format!("model_{config}_eval.hlo.txt")))?)
+        } else {
+            None
+        };
+        Ok(PjrtEngine { client, train_exe, eval_exe, meta })
+    }
+
+    /// Build the (params..., tokens) literal argument vector.
+    fn args(&self, params: &[f32], tokens: &[i32]) -> Result<Vec<Literal>> {
+        let meta = &self.meta;
+        if params.len() != meta.layout.total {
+            bail!("params len {} != {}", params.len(), meta.layout.total);
+        }
+        if tokens.len() != meta.batch * meta.seq {
+            bail!("tokens len {} != {}", tokens.len(), meta.batch * meta.seq);
+        }
+        let mut args = Vec::with_capacity(meta.layout.tensors.len() + 1);
+        for t in &meta.layout.tensors {
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(
+                    params[t.offset..t.offset + t.len].as_ptr() as *const u8,
+                    4 * t.len,
+                )
+            };
+            args.push(
+                Literal::create_from_shape_and_untyped_data(ElementType::F32, &t.shape, bytes)
+                    .map_err(|e| anyhow::anyhow!("literal {}: {e}", t.name))?,
+            );
+        }
+        let tok_bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(tokens.as_ptr() as *const u8, 4 * tokens.len())
+        };
+        args.push(
+            Literal::create_from_shape_and_untyped_data(
+                ElementType::S32,
+                &[meta.batch, meta.seq],
+                tok_bytes,
+            )
+            .map_err(|e| anyhow::anyhow!("tokens literal: {e}"))?,
+        );
+        Ok(args)
+    }
+
+    /// Run the fused forward+backward graph: returns the loss and writes
+    /// the flat gradient into `grad_out`.
+    pub fn train_step(&self, params: &[f32], tokens: &[i32], grad_out: &mut [f32]) -> Result<f32> {
+        let args = self.args(params, tokens)?;
+        let result = self
+            .train_exe
+            .execute::<Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow::anyhow!("tuple: {e}"))?;
+        let meta = &self.meta;
+        if parts.len() != 1 + meta.layout.tensors.len() {
+            bail!("expected {} outputs, got {}", 1 + meta.layout.tensors.len(), parts.len());
+        }
+        let loss = parts[0]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss: {e}"))?;
+        for (t, lit) in meta.layout.tensors.iter().zip(&parts[1..]) {
+            lit.copy_raw_to(&mut grad_out[t.offset..t.offset + t.len])
+                .map_err(|e| anyhow::anyhow!("grad {}: {e}", t.name))?;
+        }
+        Ok(loss)
+    }
+
+    /// Run the loss-only graph.
+    pub fn eval_loss(&self, params: &[f32], tokens: &[i32]) -> Result<f32> {
+        let exe = self.eval_exe.as_ref().context("engine loaded without eval graph")?;
+        let args = self.args(params, tokens)?;
+        let result = exe
+            .execute::<Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("execute eval: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+        let loss = tuple
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("tuple1: {e}"))?
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss: {e}"))?;
+        Ok(loss)
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+}
+
+/// The standalone L1 LoCo kernel artifact (`loco_step_<block>.hlo.txt`),
+/// used to pin the Rust hot path to the Pallas kernel's numerics and as an
+/// optional XLA-executed quantization route.
+pub struct LocoKernel {
+    #[allow(dead_code)]
+    client: PjRtClient,
+    exe: PjRtLoadedExecutable,
+    pub block: usize,
+}
+
+impl LocoKernel {
+    pub fn load(art_dir: &Path, block: usize) -> Result<LocoKernel> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
+        let exe = compile_hlo(&client, &art_dir.join(format!("loco_step_{block}.hlo.txt")))?;
+        Ok(LocoKernel { client, exe, block })
+    }
+
+    /// Run one fused LoCo step on a `block`-sized shard.
+    pub fn step(
+        &self,
+        g: &[f32],
+        e: &[i8],
+        s: f32,
+        s_e: f32,
+        beta: f32,
+        reset: bool,
+    ) -> Result<(Vec<i8>, Vec<i8>)> {
+        if g.len() != self.block || e.len() != self.block {
+            bail!("kernel block is {}, got {}", self.block, g.len());
+        }
+        let g_bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(g.as_ptr() as *const u8, 4 * g.len()) };
+        let e_bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(e.as_ptr() as *const u8, e.len()) };
+        let args = vec![
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[g.len()], g_bytes)
+                .map_err(|e| anyhow::anyhow!("g: {e}"))?,
+            Literal::create_from_shape_and_untyped_data(ElementType::S8, &[e.len()], e_bytes)
+                .map_err(|e| anyhow::anyhow!("e: {e}"))?,
+            Literal::scalar(s),
+            Literal::scalar(s_e),
+            Literal::scalar(beta),
+            Literal::scalar(if reset { 1i32 } else { 0i32 }),
+        ];
+        let result = self
+            .exe
+            .execute::<Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("execute kernel: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+        let (q, e_new) = tuple.to_tuple2().map_err(|e| anyhow::anyhow!("tuple2: {e}"))?;
+        Ok((
+            q.to_vec::<i8>().map_err(|e| anyhow::anyhow!("q: {e}"))?,
+            e_new.to_vec::<i8>().map_err(|e| anyhow::anyhow!("e': {e}"))?,
+        ))
+    }
+}

@@ -1,0 +1,564 @@
+//! Builtin reference engine: a pure-Rust next-token LM with hand-derived
+//! gradients, used whenever the AOT HLO artifacts (and the `pjrt` feature)
+//! are unavailable. It stands in for the L2 JAX graph so the full
+//! distributed trainer — sharding, compression, bucketed sync, optimizers —
+//! exercises real forward/backward math end-to-end in `cargo test`.
+//!
+//! Architecture (dense configs): a residual token-MLP LM
+//!
+//! ```text
+//! x      = tok_emb[t]                      ∈ R^d
+//! y      = x + relu(x·w1 + b1)·w2 + b2     ∈ R^d
+//! logits = y·head + b_head                 ∈ R^V
+//! loss   = mean_{positions} CE(logits, next-token)
+//! ```
+//!
+//! The MoE configs replace the MLP with `n_experts` expert MLPs mixed by a
+//! softmax gate: `y = x + Σ_e g_e(x) · expert_e(x)`. Gating is *dense*
+//! (soft) rather than top-k — a documented simplification: the builtin
+//! engine is a numerics/trainer substrate, not a systems-accurate MoE.
+//!
+//! The model factorizes a bigram table through rank-d embeddings, which is
+//! exactly what the synthetic corpus ([`crate::data`]) rewards: its
+//! per-topic affine successor rules make next-token prediction learnable
+//! far below the uniform loss `ln V`, so trainer convergence tests have
+//! signal.
+
+use std::ops::Range;
+
+use anyhow::{bail, Result};
+
+use crate::model::ModelMeta;
+use crate::sharding::ParamLayout;
+
+/// Which builtin architecture a config name maps to.
+#[derive(Clone, Copy)]
+enum Kind {
+    Dense,
+    Moe { experts: usize },
+}
+
+/// Metadata for a builtin config (`tiny`, `small`, `moe_tiny`), mirroring
+/// what `python/compile/aot.py` would emit in a manifest.
+pub fn builtin_meta(config: &str) -> Result<ModelMeta> {
+    // d is sized so that tens of Adam steps at ~3e-3 move the logits by
+    // O(0.3) nats (the movement scales with the number of coherently
+    // updated head/embedding coordinates) — the trainer convergence tests
+    // need visible progress in 40 steps.
+    let (vocab, batch, seq, d, f, experts) = match config {
+        "tiny" => (512usize, 8usize, 64usize, 32usize, 64usize, 0usize),
+        "small" => (512, 8, 64, 48, 96, 0),
+        "moe_tiny" => (512, 8, 64, 16, 32, 4),
+        other => bail!("no builtin model config {other:?} (have: tiny, small, moe_tiny)"),
+    };
+    let mut tensors: Vec<(String, Vec<usize>)> = vec![("tok_emb".into(), vec![vocab, d])];
+    if experts == 0 {
+        tensors.push(("w1".into(), vec![d, f]));
+        tensors.push(("b1".into(), vec![f]));
+        tensors.push(("w2".into(), vec![f, d]));
+        tensors.push(("b2".into(), vec![d]));
+    } else {
+        tensors.push(("gate".into(), vec![d, experts]));
+        for e in 0..experts {
+            tensors.push((format!("e{e}_w1"), vec![d, f]));
+            tensors.push((format!("e{e}_b1"), vec![f]));
+            tensors.push((format!("e{e}_w2"), vec![f, d]));
+            tensors.push((format!("e{e}_b2"), vec![d]));
+        }
+    }
+    tensors.push(("head".into(), vec![d, vocab]));
+    tensors.push(("b_head".into(), vec![vocab]));
+    let layout = ParamLayout::new(tensors);
+    Ok(ModelMeta {
+        config: config.to_string(),
+        vocab,
+        batch,
+        seq,
+        n_layers: 1,
+        d_model: d,
+        n_heads: 2,
+        d_ff: f,
+        n_experts: experts,
+        top_k: if experts > 0 { 2 } else { 0 },
+        param_count: layout.total,
+        layout,
+    })
+}
+
+/// The builtin engine for one model config. Stateless between calls; safe
+/// to construct per node thread (mirrors one PJRT client per node).
+pub struct RefModel {
+    meta: ModelMeta,
+    kind: Kind,
+}
+
+impl RefModel {
+    pub fn new(config: &str) -> Result<RefModel> {
+        let meta = builtin_meta(config)?;
+        let kind = if meta.n_experts > 0 {
+            Kind::Moe { experts: meta.n_experts }
+        } else {
+            Kind::Dense
+        };
+        Ok(RefModel { meta, kind })
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn t(&self, name: &str) -> Range<usize> {
+        let t = self
+            .meta
+            .layout
+            .find(name)
+            .unwrap_or_else(|| panic!("builtin layout missing tensor {name}"));
+        t.offset..t.offset + t.len
+    }
+
+    /// Mean next-token cross-entropy over `[batch, seq]` tokens; when
+    /// `grad` is given it is overwritten with the full flat gradient.
+    pub fn loss_and_grad(
+        &self,
+        params: &[f32],
+        tokens: &[i32],
+        grad: Option<&mut [f32]>,
+    ) -> Result<f32> {
+        let meta = &self.meta;
+        if params.len() != meta.layout.total {
+            bail!("params len {} != {}", params.len(), meta.layout.total);
+        }
+        if tokens.len() != meta.batch * meta.seq {
+            bail!("tokens len {} != {}", tokens.len(), meta.batch * meta.seq);
+        }
+        match self.kind {
+            Kind::Dense => self.run_dense(params, tokens, grad),
+            Kind::Moe { experts } => self.run_moe(params, tokens, grad, experts),
+        }
+    }
+
+    fn run_dense(
+        &self,
+        params: &[f32],
+        tokens: &[i32],
+        mut grad: Option<&mut [f32]>,
+    ) -> Result<f32> {
+        let (v, d, f) = (self.meta.vocab, self.meta.d_model, self.meta.d_ff);
+        let (batch, seq) = (self.meta.batch, self.meta.seq);
+        let emb_r = self.t("tok_emb");
+        let w1_r = self.t("w1");
+        let b1_r = self.t("b1");
+        let w2_r = self.t("w2");
+        let b2_r = self.t("b2");
+        let head_r = self.t("head");
+        let bh_r = self.t("b_head");
+        if let Some(g) = grad.as_deref_mut() {
+            if g.len() != params.len() {
+                bail!("grad len {} != {}", g.len(), params.len());
+            }
+            g.fill(0.0);
+        }
+
+        let positions = batch * (seq - 1);
+        let inv_p = 1.0 / positions as f32;
+        let mut loss_sum = 0.0f64;
+        let (mut x, mut y, mut dy, mut dx) =
+            (vec![0.0f32; d], vec![0.0f32; d], vec![0.0f32; d], vec![0.0f32; d]);
+        let (mut u, mut r, mut dr, mut du) =
+            (vec![0.0f32; f], vec![0.0f32; f], vec![0.0f32; f], vec![0.0f32; f]);
+        let (mut logits, mut dl) = (vec![0.0f32; v], vec![0.0f32; v]);
+
+        for bi in 0..batch {
+            for pos in 0..seq - 1 {
+                let tok = tokens[bi * seq + pos] as usize;
+                let tgt = tokens[bi * seq + pos + 1] as usize;
+                // ---- forward ----
+                x.copy_from_slice(&params[emb_r.start + tok * d..emb_r.start + (tok + 1) * d]);
+                for j in 0..f {
+                    let mut a = params[b1_r.start + j];
+                    for k in 0..d {
+                        a += x[k] * params[w1_r.start + k * f + j];
+                    }
+                    u[j] = a;
+                    r[j] = a.max(0.0);
+                }
+                for k in 0..d {
+                    let mut a = x[k] + params[b2_r.start + k];
+                    for j in 0..f {
+                        a += r[j] * params[w2_r.start + j * d + k];
+                    }
+                    y[k] = a;
+                }
+                logits.copy_from_slice(&params[bh_r.clone()]);
+                for k in 0..d {
+                    let yk = y[k];
+                    let row = &params[head_r.start + k * v..head_r.start + (k + 1) * v];
+                    for t in 0..v {
+                        logits[t] += yk * row[t];
+                    }
+                }
+                loss_sum += softmax_ce(&logits, tgt, &mut dl) as f64;
+
+                // ---- backward ----
+                let Some(gr) = grad.as_deref_mut() else { continue };
+                for t in 0..v {
+                    dl[t] *= inv_p;
+                }
+                for t in 0..v {
+                    gr[bh_r.start + t] += dl[t];
+                }
+                for k in 0..d {
+                    let yk = y[k];
+                    let off = head_r.start + k * v;
+                    let mut acc = 0.0f32;
+                    for t in 0..v {
+                        let dlt = dl[t];
+                        acc += params[off + t] * dlt;
+                        gr[off + t] += yk * dlt;
+                    }
+                    dy[k] = acc;
+                }
+                for k in 0..d {
+                    gr[b2_r.start + k] += dy[k];
+                    dx[k] = dy[k]; // residual path
+                }
+                for j in 0..f {
+                    let rj = r[j];
+                    let off = w2_r.start + j * d;
+                    let mut acc = 0.0f32;
+                    for k in 0..d {
+                        let dyk = dy[k];
+                        acc += params[off + k] * dyk;
+                        gr[off + k] += rj * dyk;
+                    }
+                    dr[j] = acc;
+                }
+                for j in 0..f {
+                    du[j] = if u[j] > 0.0 { dr[j] } else { 0.0 };
+                    gr[b1_r.start + j] += du[j];
+                }
+                for k in 0..d {
+                    let xk = x[k];
+                    let off = w1_r.start + k * f;
+                    let mut acc = 0.0f32;
+                    for j in 0..f {
+                        let duj = du[j];
+                        acc += params[off + j] * duj;
+                        gr[off + j] += xk * duj;
+                    }
+                    dx[k] += acc;
+                }
+                let e_off = emb_r.start + tok * d;
+                for k in 0..d {
+                    gr[e_off + k] += dx[k];
+                }
+            }
+        }
+        Ok((loss_sum / positions as f64) as f32)
+    }
+
+    fn run_moe(
+        &self,
+        params: &[f32],
+        tokens: &[i32],
+        mut grad: Option<&mut [f32]>,
+        n_e: usize,
+    ) -> Result<f32> {
+        let (v, d, f) = (self.meta.vocab, self.meta.d_model, self.meta.d_ff);
+        let (batch, seq) = (self.meta.batch, self.meta.seq);
+        let emb_r = self.t("tok_emb");
+        let gate_r = self.t("gate");
+        let head_r = self.t("head");
+        let bh_r = self.t("b_head");
+        let ew1: Vec<Range<usize>> = (0..n_e).map(|e| self.t(&format!("e{e}_w1"))).collect();
+        let eb1: Vec<Range<usize>> = (0..n_e).map(|e| self.t(&format!("e{e}_b1"))).collect();
+        let ew2: Vec<Range<usize>> = (0..n_e).map(|e| self.t(&format!("e{e}_w2"))).collect();
+        let eb2: Vec<Range<usize>> = (0..n_e).map(|e| self.t(&format!("e{e}_b2"))).collect();
+        if let Some(g) = grad.as_deref_mut() {
+            if g.len() != params.len() {
+                bail!("grad len {} != {}", g.len(), params.len());
+            }
+            g.fill(0.0);
+        }
+
+        let positions = batch * (seq - 1);
+        let inv_p = 1.0 / positions as f32;
+        let mut loss_sum = 0.0f64;
+        let (mut x, mut y, mut dy, mut dx) =
+            (vec![0.0f32; d], vec![0.0f32; d], vec![0.0f32; d], vec![0.0f32; d]);
+        // per-expert activations, flat [n_e * f] / [n_e * d]
+        let (mut ue, mut re) = (vec![0.0f32; n_e * f], vec![0.0f32; n_e * f]);
+        let mut oe = vec![0.0f32; n_e * d];
+        let (mut gl, mut gw, mut dg, mut dgl) =
+            (vec![0.0f32; n_e], vec![0.0f32; n_e], vec![0.0f32; n_e], vec![0.0f32; n_e]);
+        let (mut dr, mut du) = (vec![0.0f32; f], vec![0.0f32; f]);
+        let (mut logits, mut dl) = (vec![0.0f32; v], vec![0.0f32; v]);
+
+        for bi in 0..batch {
+            for pos in 0..seq - 1 {
+                let tok = tokens[bi * seq + pos] as usize;
+                let tgt = tokens[bi * seq + pos + 1] as usize;
+                // ---- forward ----
+                x.copy_from_slice(&params[emb_r.start + tok * d..emb_r.start + (tok + 1) * d]);
+                for e in 0..n_e {
+                    let mut a = 0.0f32;
+                    for k in 0..d {
+                        a += x[k] * params[gate_r.start + k * n_e + e];
+                    }
+                    gl[e] = a;
+                }
+                softmax(&gl, &mut gw);
+                for e in 0..n_e {
+                    for j in 0..f {
+                        let mut a = params[eb1[e].start + j];
+                        for k in 0..d {
+                            a += x[k] * params[ew1[e].start + k * f + j];
+                        }
+                        ue[e * f + j] = a;
+                        re[e * f + j] = a.max(0.0);
+                    }
+                    for k in 0..d {
+                        let mut a = params[eb2[e].start + k];
+                        for j in 0..f {
+                            a += re[e * f + j] * params[ew2[e].start + j * d + k];
+                        }
+                        oe[e * d + k] = a;
+                    }
+                }
+                for k in 0..d {
+                    let mut a = x[k];
+                    for e in 0..n_e {
+                        a += gw[e] * oe[e * d + k];
+                    }
+                    y[k] = a;
+                }
+                logits.copy_from_slice(&params[bh_r.clone()]);
+                for k in 0..d {
+                    let yk = y[k];
+                    let row = &params[head_r.start + k * v..head_r.start + (k + 1) * v];
+                    for t in 0..v {
+                        logits[t] += yk * row[t];
+                    }
+                }
+                loss_sum += softmax_ce(&logits, tgt, &mut dl) as f64;
+
+                // ---- backward ----
+                let Some(gr) = grad.as_deref_mut() else { continue };
+                for t in 0..v {
+                    dl[t] *= inv_p;
+                }
+                for t in 0..v {
+                    gr[bh_r.start + t] += dl[t];
+                }
+                for k in 0..d {
+                    let yk = y[k];
+                    let off = head_r.start + k * v;
+                    let mut acc = 0.0f32;
+                    for t in 0..v {
+                        let dlt = dl[t];
+                        acc += params[off + t] * dlt;
+                        gr[off + t] += yk * dlt;
+                    }
+                    dy[k] = acc;
+                }
+                // residual
+                dx.copy_from_slice(&dy);
+                // gate: dg_e = dy·o_e, softmax jacobian, then gate grads
+                let mut sbar = 0.0f32;
+                for e in 0..n_e {
+                    let mut a = 0.0f32;
+                    for k in 0..d {
+                        a += dy[k] * oe[e * d + k];
+                    }
+                    dg[e] = a;
+                    sbar += gw[e] * a;
+                }
+                for e in 0..n_e {
+                    dgl[e] = gw[e] * (dg[e] - sbar);
+                }
+                for k in 0..d {
+                    let xk = x[k];
+                    let off = gate_r.start + k * n_e;
+                    let mut acc = 0.0f32;
+                    for e in 0..n_e {
+                        acc += params[off + e] * dgl[e];
+                        gr[off + e] += xk * dgl[e];
+                    }
+                    dx[k] += acc;
+                }
+                // experts: upstream do_e = gw[e] * dy
+                for e in 0..n_e {
+                    let ge = gw[e];
+                    for k in 0..d {
+                        gr[eb2[e].start + k] += ge * dy[k];
+                    }
+                    for j in 0..f {
+                        let rj = re[e * f + j];
+                        let off = ew2[e].start + j * d;
+                        let mut acc = 0.0f32;
+                        for k in 0..d {
+                            let dok = ge * dy[k];
+                            acc += params[off + k] * dok;
+                            gr[off + k] += rj * dok;
+                        }
+                        dr[j] = acc;
+                    }
+                    for j in 0..f {
+                        du[j] = if ue[e * f + j] > 0.0 { dr[j] } else { 0.0 };
+                        gr[eb1[e].start + j] += du[j];
+                    }
+                    for k in 0..d {
+                        let xk = x[k];
+                        let off = ew1[e].start + k * f;
+                        let mut acc = 0.0f32;
+                        for j in 0..f {
+                            let duj = du[j];
+                            acc += params[off + j] * duj;
+                            gr[off + j] += xk * duj;
+                        }
+                        dx[k] += acc;
+                    }
+                }
+                let e_off = emb_r.start + tok * d;
+                for k in 0..d {
+                    gr[e_off + k] += dx[k];
+                }
+            }
+        }
+        Ok((loss_sum / positions as f64) as f32)
+    }
+}
+
+/// Stable softmax of `logits` into `out`.
+fn softmax(logits: &[f32], out: &mut [f32]) {
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+    let mut z = 0.0f32;
+    for (o, &l) in out.iter_mut().zip(logits) {
+        *o = (l - m).exp();
+        z += *o;
+    }
+    let inv = 1.0 / z;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+/// Cross-entropy of `logits` against `tgt`; writes the softmax-minus-onehot
+/// derivative (unscaled) into `dl` and returns the loss.
+fn softmax_ce(logits: &[f32], tgt: usize, dl: &mut [f32]) -> f32 {
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+    let mut z = 0.0f32;
+    for (o, &l) in dl.iter_mut().zip(logits) {
+        *o = (l - m).exp();
+        z += *o;
+    }
+    let inv = 1.0 / z;
+    for o in dl.iter_mut() {
+        *o *= inv;
+    }
+    dl[tgt] -= 1.0;
+    z.ln() + m - logits[tgt]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Corpus, CorpusConfig, Split};
+
+    fn batch_for(meta: &ModelMeta) -> Vec<i32> {
+        let corpus = Corpus::new(CorpusConfig::for_vocab(meta.vocab, 7));
+        corpus.batch(Split::Train, 0, 0, meta.batch, meta.seq)
+    }
+
+    #[test]
+    fn builtin_metas_are_consistent() {
+        for cfg in ["tiny", "small", "moe_tiny"] {
+            let m = builtin_meta(cfg).unwrap();
+            assert_eq!(m.param_count, m.layout.total, "{cfg}");
+            assert_eq!(m.vocab, 512);
+            assert!(m.layout.find("tok_emb").is_some());
+            assert!(m.layout.find("b_head").is_some());
+        }
+        assert!(builtin_meta("gpt99t").is_err());
+    }
+
+    #[test]
+    fn init_loss_is_near_uniform() {
+        for cfg in ["tiny", "moe_tiny"] {
+            let model = RefModel::new(cfg).unwrap();
+            let params = model.meta().init_params(3);
+            let tokens = batch_for(model.meta());
+            let loss = model.loss_and_grad(&params, &tokens, None).unwrap();
+            // ln(512) = 6.238; a fresh init is close to uniform
+            assert!((5.9..6.6).contains(&loss), "{cfg}: init loss {loss}");
+        }
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        for cfg in ["tiny", "moe_tiny"] {
+            let model = RefModel::new(cfg).unwrap();
+            let meta = model.meta().clone();
+            let mut params = meta.init_params(11);
+            let tokens = batch_for(&meta);
+            let mut grad = vec![0.0f32; meta.layout.total];
+            model.loss_and_grad(&params, &tokens, Some(&mut grad)).unwrap();
+            // probe one coordinate inside every tensor
+            let eps = 2e-2f32;
+            for t in &meta.layout.tensors {
+                let i = t.offset + t.len / 2;
+                let orig = params[i];
+                params[i] = orig + eps;
+                let lp = model.loss_and_grad(&params, &tokens, None).unwrap() as f64;
+                params[i] = orig - eps;
+                let lm = model.loss_and_grad(&params, &tokens, None).unwrap() as f64;
+                params[i] = orig;
+                let fd = (lp - lm) / (2.0 * eps as f64);
+                let g = grad[i] as f64;
+                assert!(
+                    (fd - g).abs() <= 0.1 * fd.abs().max(g.abs()) + 2e-3,
+                    "{cfg} {}[{}]: fd {fd} vs grad {g}",
+                    t.name,
+                    i - t.offset
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grad_is_deterministic_and_nonzero() {
+        let model = RefModel::new("tiny").unwrap();
+        let params = model.meta().init_params(5);
+        let tokens = batch_for(model.meta());
+        let mut g1 = vec![0.0f32; model.meta().layout.total];
+        let mut g2 = vec![0.0f32; model.meta().layout.total];
+        let l1 = model.loss_and_grad(&params, &tokens, Some(&mut g1)).unwrap();
+        let l2 = model.loss_and_grad(&params, &tokens, Some(&mut g2)).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+        let nonzero = g1.iter().filter(|&&x| x != 0.0).count();
+        assert!(nonzero > g1.len() / 4, "only {nonzero} nonzero grads");
+    }
+
+    #[test]
+    fn adam_overfits_one_batch() {
+        // direct descent sanity (the trainer integration tests cover the
+        // full distributed path): Adam on a single fixed batch must drive
+        // the loss well below the uniform baseline
+        use crate::optim::{self, OptimConfig, OptimizerKind};
+        let model = RefModel::new("tiny").unwrap();
+        let meta = model.meta().clone();
+        let mut params = meta.init_params(1);
+        let tokens = batch_for(&meta);
+        let mut grad = vec![0.0f32; meta.layout.total];
+        let l0 = model.loss_and_grad(&params, &tokens, Some(&mut grad)).unwrap();
+        let cfg = OptimConfig { kind: OptimizerKind::Adam, ..Default::default() };
+        let mut opt = optim::build(&cfg, meta.layout.total, &meta.layout.tensors);
+        for _ in 0..50 {
+            model.loss_and_grad(&params, &tokens, Some(&mut grad)).unwrap();
+            opt.step(&mut params, &grad, 2e-2);
+        }
+        let l1 = model.loss_and_grad(&params, &tokens, None).unwrap();
+        assert!(l1 < l0 - 0.5, "no progress overfitting one batch: {l0} -> {l1}");
+    }
+}

@@ -27,7 +27,10 @@ use std::sync::Mutex;
 use anyhow::{Context, Result};
 
 use crate::collective::{run_cluster, NodeCtx};
-use crate::compress::{self, powersgd::PowerSgd, CompressorConfig, Method, WireMsg};
+use crate::comm::SyncEngine;
+use crate::compress::{
+    self, powersgd::PowerSgd, CompressorConfig, Decoder, Encoder, Method, WireMsg,
+};
 use crate::data::{Corpus, CorpusConfig, Split};
 use crate::metrics::RunMetrics;
 use crate::model::ModelMeta;
@@ -128,7 +131,7 @@ impl Trainer {
     /// final parameters.
     pub fn run(&self) -> Result<RunResult> {
         let cfg = &self.cfg;
-        let meta = ModelMeta::load(&cfg.art_dir.join(format!("model_{}.manifest", cfg.model)))?;
+        let meta = crate::runtime::load_meta(&cfg.art_dir, &cfg.model)?;
         let n = cfg.nodes;
         let part = match cfg.mode {
             Mode::Ddp => Partition { ranges: vec![0..meta.layout.total] },
@@ -194,8 +197,19 @@ impl Trainer {
 
         let shard_tensors = meta.layout.tensors_in(&my_range);
         let mut opt = optim::build(&cfg.optim, my_range.len(), &shard_tensors);
-        let (mut enc, mut dec) =
-            compress::build(&cfg.compressor, &meta.layout, my_range.clone(), n);
+        // Zero-2 modes exchange gradients through the (possibly bucketed,
+        // overlapped) sync engine; DDP keeps the legacy encoder pair only
+        // for state accounting.
+        let (sync, ddp_pair) = match cfg.mode {
+            Mode::Ddp => (
+                None,
+                Some(compress::build(&cfg.compressor, &meta.layout, my_range.clone(), n)),
+            ),
+            _ => (
+                Some(SyncEngine::new(&cfg.compressor, &meta.layout, part, rank, n)),
+                None,
+            ),
+        };
         let mut powersgd = if cfg.compressor.method == Method::PowerSgd {
             Some(PowerSgd::new(&meta.layout, cfg.compressor.rank, cfg.seed ^ 0x505753))
         } else {
@@ -241,14 +255,9 @@ impl Trainer {
             // 3-5: synchronize gradients
             match cfg.mode {
                 Mode::Zero2 => {
-                    let msgs: Vec<WireMsg> = (0..n)
-                        .map(|dst| enc.encode(&grad, part.ranges[dst].clone(), step + 1))
-                        .collect();
-                    let recvd = ctx.all_to_all(msgs);
-                    shard_acc.fill(0.0);
-                    for (src, msg) in recvd.iter().enumerate() {
-                        dec.decode_accumulate(src, msg, &mut shard_acc);
-                    }
+                    sync.as_ref()
+                        .expect("Zero2 has a sync engine")
+                        .sync(ctx, &grad, &mut shard_acc, step + 1);
                     util::scale(&mut shard_acc, 1.0 / n as f32);
                 }
                 Mode::Zero2ReduceScatter => {
@@ -369,7 +378,11 @@ impl Trainer {
             m.elapsed = t0.elapsed().as_secs_f64();
             m.tokens_per_sec = (meta.tokens_per_step(n, cfg.accum) as f64 * cfg.steps as f64)
                 / m.elapsed.max(1e-9);
-            m.compressor_state_bytes = enc.state_bytes() + dec.state_bytes();
+            m.compressor_state_bytes = match (&sync, &ddp_pair) {
+                (Some(s), _) => s.state_bytes(),
+                (None, Some((e, d))) => e.state_bytes() + d.state_bytes(),
+                _ => 0,
+            };
             Ok(Some(RunResult { metrics: m, final_params: params }))
         } else {
             Ok(None)

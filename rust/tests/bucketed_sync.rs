@@ -1,0 +1,119 @@
+//! End-to-end checks for the bucketed, overlapped gradient-sync engine
+//! (`comm::SyncEngine`) through the full trainer: the pipelined path must
+//! train exactly like the monolithic path it replaces.
+
+use loco::compress::{CompressorConfig, Method};
+use loco::optim::{LrSchedule, OptimConfig, OptimizerKind};
+use loco::train::{TrainConfig, Trainer};
+
+/// The quickstart configuration (examples/quickstart.rs): tiny model,
+/// 4 nodes, Zero-2, LoCo 4-bit, Adam with warmup+cosine.
+fn quickstart_cfg(steps: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::new("tiny");
+    cfg.nodes = 4;
+    cfg.steps = steps;
+    cfg.optim = OptimConfig { kind: OptimizerKind::Adam, ..Default::default() };
+    cfg.lr = LrSchedule { base: 3e-3, warmup: 10, total: steps, min_ratio: 0.2 };
+    cfg.compressor = CompressorConfig {
+        s: (1u32 << 17) as f32,
+        ..CompressorConfig::with_method(Method::Loco)
+    };
+    cfg
+}
+
+#[test]
+fn bucketed_loco_matches_monolithic_loss_on_quickstart() {
+    // acceptance criterion: per-bucket error feedback must reproduce the
+    // monolithic end-of-run loss within 1e-4 on the quickstart config.
+    // (For LoCo the two paths are elementwise identical; the tolerance
+    // only absorbs fp addition-order differences in the decode reduce.)
+    let steps = 30;
+    let mono = Trainer::new(quickstart_cfg(steps)).run().expect("monolithic run");
+    let mut bcfg = quickstart_cfg(steps);
+    // tiny shards are ~4.5k params; 8 KiB buckets (2048 elems) => several
+    // buckets per shard
+    bcfg.compressor.bucket_bytes = 8192;
+    bcfg.compressor.sync_workers = 2;
+    let bucketed = Trainer::new(bcfg).run().expect("bucketed run");
+
+    let lm = mono.metrics.train_loss.points.last().unwrap().1;
+    let lb = bucketed.metrics.train_loss.points.last().unwrap().1;
+    assert!(
+        (lm - lb).abs() < 1e-4,
+        "end-of-run loss diverged: monolithic {lm} vs bucketed {lb}"
+    );
+    // the loss curves should agree pointwise, not just at the end
+    for (a, b) in mono
+        .metrics
+        .train_loss
+        .points
+        .iter()
+        .zip(&bucketed.metrics.train_loss.points)
+    {
+        assert_eq!(a.0, b.0);
+        assert!((a.1 - b.1).abs() < 1e-4, "step {}: {} vs {}", a.0, a.1, b.1);
+    }
+    // and the final parameters should be numerically indistinguishable
+    let max_diff = mono
+        .final_params
+        .iter()
+        .zip(&bucketed.final_params)
+        .map(|(&x, &y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "param divergence {max_diff}");
+}
+
+#[test]
+fn bucketed_run_is_deterministic() {
+    let mk = || {
+        let mut cfg = quickstart_cfg(8);
+        cfg.compressor.bucket_bytes = 4096;
+        cfg.compressor.sync_workers = 3;
+        Trainer::new(cfg).run().expect("run")
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.metrics.train_loss.points, b.metrics.train_loss.points);
+    assert_eq!(a.final_params, b.final_params, "worker timing leaked into results");
+}
+
+#[test]
+fn bucketed_wire_bytes_stay_4bit_scale() {
+    // tag headers + per-bucket scales must not blow up the wire volume:
+    // within a few percent of the monolithic byte count
+    let mono = Trainer::new(quickstart_cfg(6)).run().unwrap();
+    let mut bcfg = quickstart_cfg(6);
+    bcfg.compressor.bucket_bytes = 4096;
+    let bucketed = Trainer::new(bcfg).run().unwrap();
+    let ratio = bucketed.metrics.comm_bytes as f64 / mono.metrics.comm_bytes as f64;
+    assert!(
+        ratio < 1.05,
+        "bucketing overhead too large: {ratio}x the monolithic wire bytes"
+    );
+}
+
+#[test]
+fn bucketed_training_works_for_all_methods() {
+    // every compression method must at least train without diverging on
+    // the pipelined path (1-bit computes per-bucket scales — numerics
+    // differ from monolithic, but training must still work)
+    for method in [
+        Method::Fp32,
+        Method::Bf16,
+        Method::Loco,
+        Method::Ef,
+        Method::Ef21,
+        Method::OneBit,
+        Method::Zeropp,
+        Method::LocoZeropp,
+        Method::IntSgd,
+    ] {
+        let mut cfg = quickstart_cfg(10);
+        cfg.compressor.method = method;
+        cfg.compressor.bucket_bytes = 4096;
+        cfg.compressor.sync_workers = 2;
+        let r = Trainer::new(cfg).run().expect("run");
+        let last = r.metrics.train_loss.tail_mean(2);
+        assert!(last.is_finite() && last < 8.0, "{method:?} diverged: {last}");
+    }
+}

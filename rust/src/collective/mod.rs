@@ -18,7 +18,18 @@
 //! * [`NodeCtx::send_wire_tagged`] / [`NodeCtx::recv_wire_tagged`] —
 //!   tag-addressed point-to-point messages so several bucket payloads to
 //!   the same peer can be in flight concurrently and be matched out of
-//!   order (the [`crate::comm`] overlapped sync engine).
+//!   order (the [`crate::comm`] overlapped sync engine);
+//! * [`NodeCtx::group`] — sub-communicators over an arbitrary member set
+//!   (NVLink islands, cross-island peer groups) sharing the parent's
+//!   channels; the ring/all-to-all collectives are provided generically by
+//!   the [`Comm`] trait, so they run unchanged inside a group.
+//!
+//! Clusters may declare a two-level topology ([`ClusterSpec`],
+//! [`run_cluster_topo`]): nodes are grouped into fixed-size islands, every
+//! payload is counted per level (intra- vs inter-island, [`Counters`]),
+//! and each level can carry its own [`LinkSim`] — the NVLink-vs-NIC
+//! bandwidth asymmetry the hierarchical engine ([`crate::topology`])
+//! exploits.
 
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
@@ -43,6 +54,34 @@ pub struct LinkSim {
     pub bw: f64,
     /// per-message latency, seconds
     pub latency_s: f64,
+}
+
+/// Cluster topology + link model for [`run_cluster_topo`]. `island_size`
+/// groups consecutive ranks into islands (`0`/`1` = flat: every pair of
+/// nodes counts as inter-island); intra- and inter-island traffic is
+/// counted separately and may ride separate simulated links, each with its
+/// own egress engine (NVLink and the NIC serialize independently).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClusterSpec {
+    /// nodes per island (consecutive ranks); 0/1 = flat
+    pub island_size: usize,
+    /// simulated intra-island link (NVLink class), if any
+    pub intra: Option<LinkSim>,
+    /// simulated inter-island link (NIC class), if any
+    pub inter: Option<LinkSim>,
+}
+
+impl ClusterSpec {
+    /// Flat cluster, no link simulation (the [`run_cluster`] default).
+    pub fn flat() -> Self {
+        ClusterSpec::default()
+    }
+
+    /// Islands of `island_size` nodes, no link simulation (byte-accounting
+    /// tests).
+    pub fn islands(island_size: usize) -> Self {
+        ClusterSpec { island_size, intra: None, inter: None }
+    }
 }
 
 /// A payload plus the instant the simulated wire releases it (None when no
@@ -98,25 +137,41 @@ impl Payload {
     }
 }
 
-/// Shared per-cluster counters.
+/// Shared per-cluster counters. Bytes are recorded both in total (`sent`)
+/// and split by level (`intra` / `inter`, classified by the cluster's
+/// island map) so tests and benchmarks can assert on inter-island traffic
+/// — the slow hop the hierarchical engine compresses — specifically.
 #[derive(Default)]
 pub struct Counters {
-    /// bytes sent per node
+    /// bytes sent per node (all levels)
     pub sent: Vec<AtomicU64>,
+    /// bytes sent per node to same-island peers
+    pub intra: Vec<AtomicU64>,
+    /// bytes sent per node to other-island peers
+    pub inter: Vec<AtomicU64>,
     /// messages sent per node
     pub msgs: Vec<AtomicU64>,
 }
 
 impl Counters {
     fn new(n: usize) -> Arc<Self> {
-        Arc::new(Counters {
-            sent: (0..n).map(|_| AtomicU64::new(0)).collect(),
-            msgs: (0..n).map(|_| AtomicU64::new(0)).collect(),
-        })
+        let zeros = || (0..n).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
+        Arc::new(Counters { sent: zeros(), intra: zeros(), inter: zeros(), msgs: zeros() })
     }
 
     pub fn total_sent(&self) -> u64 {
         self.sent.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Bytes that stayed inside an island (fast links).
+    pub fn total_intra(&self) -> u64 {
+        self.intra.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Bytes that crossed an island boundary (slow links). On a flat
+    /// cluster (`island_size <= 1`) every byte counts here.
+    pub fn total_inter(&self) -> u64 {
+        self.inter.iter().map(|a| a.load(Ordering::Relaxed)).sum()
     }
 }
 
@@ -129,21 +184,38 @@ pub struct NodeCtx {
     /// per-source reorder buffer for tagged messages that arrived while a
     /// different tag was awaited (single-threaded per node, hence RefCell)
     pending: Vec<RefCell<HashMap<u64, WireMsg>>>,
-    /// simulated link, if any, plus when this node's egress is next free
-    net: Option<LinkSim>,
-    egress_free: Cell<Instant>,
+    /// nodes per island for level classification (1 = flat)
+    island_size: usize,
+    /// simulated links, if any, plus when each egress engine is next free
+    /// (NVLink and the NIC serialize independently)
+    net_intra: Option<LinkSim>,
+    net_inter: Option<LinkSim>,
+    egress_intra: Cell<Instant>,
+    egress_inter: Cell<Instant>,
     pub counters: Arc<Counters>,
 }
 
 impl NodeCtx {
+    /// True when `dst` sits in this node's island (flat clusters have
+    /// single-node islands, so every peer is inter-island there).
+    pub fn same_island(&self, dst: usize) -> bool {
+        self.island_size > 1 && self.rank / self.island_size == dst / self.island_size
+    }
+
     pub fn send(&self, dst: usize, p: Payload) {
         let bytes = p.wire_bytes();
         self.counters.sent[self.rank].fetch_add(bytes, Ordering::Relaxed);
         self.counters.msgs[self.rank].fetch_add(1, Ordering::Relaxed);
-        let ready_at = self.net.map(|l| {
-            let start = self.egress_free.get().max(Instant::now());
+        let (level, net, egress) = if self.same_island(dst) {
+            (&self.counters.intra, self.net_intra, &self.egress_intra)
+        } else {
+            (&self.counters.inter, self.net_inter, &self.egress_inter)
+        };
+        level[self.rank].fetch_add(bytes, Ordering::Relaxed);
+        let ready_at = net.map(|l| {
+            let start = egress.get().max(Instant::now());
             let done = start + Duration::from_secs_f64(bytes as f64 / l.bw);
-            self.egress_free.set(done);
+            egress.set(done);
             done + Duration::from_secs_f64(l.latency_s)
         });
         self.tx[dst].send(Envelope { ready_at, payload: p }).expect("peer hung up");
@@ -193,89 +265,40 @@ impl NodeCtx {
 
     /// Pairwise all-to-all: `msgs[j]` goes to node j; returns the messages
     /// received from every source (own message passes through untouched).
-    pub fn all_to_all(&self, mut msgs: Vec<WireMsg>) -> Vec<WireMsg> {
-        assert_eq!(msgs.len(), self.n);
-        // stagger sends to avoid head-of-line ordering artifacts
-        for off in 1..self.n {
-            let dst = (self.rank + off) % self.n;
-            let msg = std::mem::replace(&mut msgs[dst], WireMsg::F32(Vec::new()));
-            self.send(dst, Payload::Wire(msg));
-        }
-        let mut out: Vec<Option<WireMsg>> = (0..self.n).map(|_| None).collect();
-        out[self.rank] = Some(std::mem::replace(
-            &mut msgs[self.rank],
-            WireMsg::F32(Vec::new()),
-        ));
-        for off in 1..self.n {
-            let src = (self.rank + self.n - off) % self.n;
-            out[src] = Some(self.recv(src).into_wire());
-        }
-        out.into_iter().map(Option::unwrap).collect()
+    pub fn all_to_all(&self, msgs: Vec<WireMsg>) -> Vec<WireMsg> {
+        Comm::all_to_all(self, msgs)
     }
 
     /// Ring reduce-scatter over a full-length buffer cut by `ranges`.
     /// On return, `buf[ranges[rank]]` holds the sum over all nodes; other
     /// regions hold partial sums (callers treat them as scratch).
     pub fn ring_reduce_scatter(&self, buf: &mut [f32], ranges: &[Range<usize>]) {
-        let n = self.n;
-        if n == 1 {
-            return;
-        }
-        let right = (self.rank + 1) % n;
-        let left = (self.rank + n - 1) % n;
-        // at step s, send chunk (rank - s - 1), receive chunk (rank - s - 2);
-        // after n-1 steps node `rank` owns the fully-reduced chunk `rank`.
-        for s in 0..n - 1 {
-            let send_chunk = (self.rank + 2 * n - s - 1) % n;
-            let recv_chunk = (self.rank + 2 * n - s - 2) % n;
-            let seg = buf[ranges[send_chunk].clone()].to_vec();
-            self.send(right, Payload::F32(seg));
-            let incoming = self.recv(left).into_f32();
-            let dst = &mut buf[ranges[recv_chunk].clone()];
-            debug_assert_eq!(incoming.len(), dst.len());
-            for (d, x) in dst.iter_mut().zip(incoming) {
-                *d += x;
-            }
-        }
+        Comm::ring_reduce_scatter(self, buf, ranges)
     }
 
     /// Ring all-gather: each node contributes `buf[ranges[rank]]`; on
     /// return every region of `buf` holds its owner's contribution.
     pub fn all_gather(&self, buf: &mut [f32], ranges: &[Range<usize>]) {
-        let n = self.n;
-        if n == 1 {
-            return;
-        }
-        let right = (self.rank + 1) % n;
-        let left = (self.rank + n - 1) % n;
-        for s in 0..n - 1 {
-            let send_chunk = (self.rank + n - s) % n;
-            let recv_chunk = (self.rank + n - s - 1) % n;
-            let seg = buf[ranges[send_chunk].clone()].to_vec();
-            self.send(right, Payload::F32(seg));
-            let incoming = self.recv(left).into_f32();
-            let dst = &mut buf[ranges[recv_chunk].clone()];
-            dst.copy_from_slice(&incoming);
-        }
+        Comm::all_gather(self, buf, ranges)
     }
 
     /// All-gather of opaque wire messages (low-bit parameter sync): node i
     /// contributes `mine`; returns all contributions indexed by rank.
     pub fn all_gather_wire(&self, mine: WireMsg) -> Vec<WireMsg> {
-        let n = self.n;
-        let right = (self.rank + 1) % n;
-        let left = (self.rank + n - 1) % n;
-        let mut out: Vec<Option<WireMsg>> = (0..n).map(|_| None).collect();
-        let mut carry = mine.clone();
-        out[self.rank] = Some(mine);
-        for s in 0..n - 1 {
-            self.send(right, Payload::Wire(carry));
-            let incoming = self.recv(left).into_wire();
-            let src = (self.rank + n - s - 1) % n;
-            out[src] = Some(incoming.clone());
-            carry = incoming;
-        }
-        out.into_iter().map(Option::unwrap).collect()
+        Comm::all_gather_wire(self, mine)
+    }
+
+    /// Sub-communicator over `members` (global ranks; this node must be
+    /// one of them). The group shares the parent's channels and reorder
+    /// buffers, so group collectives must not interleave with cluster
+    /// collectives over the same (src, dst) pairs — the hierarchical
+    /// engine's phases are strictly ordered per pair.
+    pub fn group<'a>(&'a self, members: &'a [usize]) -> GroupCtx<'a> {
+        let gr = members
+            .iter()
+            .position(|&r| r == self.rank)
+            .expect("calling node must be a member of its group");
+        GroupCtx { ctx: self, members, gr }
     }
 
     /// Binary-tree all-reduce (sum) of an f32 vector: reduce to rank 0 up a
@@ -376,23 +399,227 @@ impl NodeCtx {
     }
 }
 
+/// The communication surface shared by the whole cluster ([`NodeCtx`]) and
+/// by sub-communicators ([`GroupCtx`]). Implementors provide the
+/// point-to-point primitives over communicator-local ranks; the ring and
+/// pairwise collectives are provided generically on top, so the bucketed
+/// sync engine ([`crate::comm`]) runs unchanged over either.
+pub trait Comm {
+    /// Number of members of this communicator.
+    fn peer_count(&self) -> usize;
+    /// This node's communicator-local rank.
+    fn peer_rank(&self) -> usize;
+    /// Send a payload to communicator-local rank `dst`.
+    fn peer_send(&self, dst: usize, p: Payload);
+    /// Receive the next payload from communicator-local rank `src`.
+    fn peer_recv(&self, src: usize) -> Payload;
+    /// Tag-addressed send to communicator-local rank `dst`.
+    fn peer_send_tagged(&self, dst: usize, tag: u64, msg: WireMsg);
+    /// Receive the message tagged `tag` from communicator-local rank `src`.
+    fn peer_recv_tagged(&self, src: usize, tag: u64) -> WireMsg;
+
+    /// Pairwise all-to-all: `msgs[j]` goes to member j; returns the
+    /// messages received from every source (own message passes through).
+    fn all_to_all(&self, mut msgs: Vec<WireMsg>) -> Vec<WireMsg> {
+        let n = self.peer_count();
+        let rank = self.peer_rank();
+        assert_eq!(msgs.len(), n);
+        // stagger sends to avoid head-of-line ordering artifacts
+        for off in 1..n {
+            let dst = (rank + off) % n;
+            let msg = std::mem::replace(&mut msgs[dst], WireMsg::F32(Vec::new()));
+            self.peer_send(dst, Payload::Wire(msg));
+        }
+        let mut out: Vec<Option<WireMsg>> = (0..n).map(|_| None).collect();
+        out[rank] = Some(std::mem::replace(&mut msgs[rank], WireMsg::F32(Vec::new())));
+        for off in 1..n {
+            let src = (rank + n - off) % n;
+            out[src] = Some(self.peer_recv(src).into_wire());
+        }
+        out.into_iter().map(Option::unwrap).collect()
+    }
+
+    /// Ring reduce-scatter over a full-length buffer cut by `ranges`
+    /// (indexed by communicator-local rank). On return,
+    /// `buf[ranges[peer_rank()]]` holds the sum over all members; other
+    /// regions hold partial sums (callers treat them as scratch).
+    fn ring_reduce_scatter(&self, buf: &mut [f32], ranges: &[Range<usize>]) {
+        let n = self.peer_count();
+        let rank = self.peer_rank();
+        if n == 1 {
+            return;
+        }
+        let right = (rank + 1) % n;
+        let left = (rank + n - 1) % n;
+        // at step s, send chunk (rank - s - 1), receive chunk (rank - s - 2);
+        // after n-1 steps member `rank` owns the fully-reduced chunk `rank`.
+        for s in 0..n - 1 {
+            let send_chunk = (rank + 2 * n - s - 1) % n;
+            let recv_chunk = (rank + 2 * n - s - 2) % n;
+            let seg = buf[ranges[send_chunk].clone()].to_vec();
+            self.peer_send(right, Payload::F32(seg));
+            let incoming = self.peer_recv(left).into_f32();
+            let dst = &mut buf[ranges[recv_chunk].clone()];
+            debug_assert_eq!(incoming.len(), dst.len());
+            for (d, x) in dst.iter_mut().zip(incoming) {
+                *d += x;
+            }
+        }
+    }
+
+    /// Ring all-gather: each member contributes `buf[ranges[peer_rank()]]`;
+    /// on return every region of `buf` holds its owner's contribution.
+    fn all_gather(&self, buf: &mut [f32], ranges: &[Range<usize>]) {
+        let n = self.peer_count();
+        let rank = self.peer_rank();
+        if n == 1 {
+            return;
+        }
+        let right = (rank + 1) % n;
+        let left = (rank + n - 1) % n;
+        for s in 0..n - 1 {
+            let send_chunk = (rank + n - s) % n;
+            let recv_chunk = (rank + n - s - 1) % n;
+            let seg = buf[ranges[send_chunk].clone()].to_vec();
+            self.peer_send(right, Payload::F32(seg));
+            let incoming = self.peer_recv(left).into_f32();
+            let dst = &mut buf[ranges[recv_chunk].clone()];
+            dst.copy_from_slice(&incoming);
+        }
+    }
+
+    /// All-gather of opaque wire messages: member i contributes `mine`;
+    /// returns all contributions indexed by communicator-local rank.
+    fn all_gather_wire(&self, mine: WireMsg) -> Vec<WireMsg> {
+        let n = self.peer_count();
+        let rank = self.peer_rank();
+        let right = (rank + 1) % n;
+        let left = (rank + n - 1) % n;
+        let mut out: Vec<Option<WireMsg>> = (0..n).map(|_| None).collect();
+        let mut carry = mine.clone();
+        out[rank] = Some(mine);
+        for s in 0..n - 1 {
+            self.peer_send(right, Payload::Wire(carry));
+            let incoming = self.peer_recv(left).into_wire();
+            let src = (rank + n - s - 1) % n;
+            out[src] = Some(incoming.clone());
+            carry = incoming;
+        }
+        out.into_iter().map(Option::unwrap).collect()
+    }
+}
+
+impl Comm for NodeCtx {
+    fn peer_count(&self) -> usize {
+        self.n
+    }
+
+    fn peer_rank(&self) -> usize {
+        self.rank
+    }
+
+    fn peer_send(&self, dst: usize, p: Payload) {
+        NodeCtx::send(self, dst, p);
+    }
+
+    fn peer_recv(&self, src: usize) -> Payload {
+        NodeCtx::recv(self, src)
+    }
+
+    fn peer_send_tagged(&self, dst: usize, tag: u64, msg: WireMsg) {
+        NodeCtx::send_wire_tagged(self, dst, tag, msg);
+    }
+
+    fn peer_recv_tagged(&self, src: usize, tag: u64) -> WireMsg {
+        NodeCtx::recv_wire_tagged(self, src, tag)
+    }
+}
+
+/// A sub-communicator: a subset of the cluster's nodes addressed by
+/// group-local ranks (the position in `members`). Created by
+/// [`NodeCtx::group`]; every [`Comm`] collective works inside it. Used by
+/// the hierarchical engine for NVLink islands (intra reduce/broadcast) and
+/// cross-island peer groups (the low-bit all-to-all).
+pub struct GroupCtx<'a> {
+    ctx: &'a NodeCtx,
+    members: &'a [usize],
+    gr: usize,
+}
+
+impl GroupCtx<'_> {
+    /// Group-local rank of this node.
+    pub fn rank(&self) -> usize {
+        self.gr
+    }
+
+    /// Group size.
+    pub fn n(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Global rank of group member `gr`.
+    pub fn global(&self, gr: usize) -> usize {
+        self.members[gr]
+    }
+}
+
+impl Comm for GroupCtx<'_> {
+    fn peer_count(&self) -> usize {
+        self.members.len()
+    }
+
+    fn peer_rank(&self) -> usize {
+        self.gr
+    }
+
+    fn peer_send(&self, dst: usize, p: Payload) {
+        self.ctx.send(self.members[dst], p);
+    }
+
+    fn peer_recv(&self, src: usize) -> Payload {
+        self.ctx.recv(self.members[src])
+    }
+
+    fn peer_send_tagged(&self, dst: usize, tag: u64, msg: WireMsg) {
+        self.ctx.send_wire_tagged(self.members[dst], tag, msg);
+    }
+
+    fn peer_recv_tagged(&self, src: usize, tag: u64) -> WireMsg {
+        self.ctx.recv_wire_tagged(self.members[src], tag)
+    }
+}
+
 /// Run `f(ctx)` on `n` node threads; returns the per-rank results in order.
 pub fn run_cluster<T: Send>(
     n: usize,
     f: impl Fn(NodeCtx) -> T + Send + Sync,
 ) -> (Vec<T>, Arc<Counters>) {
-    run_cluster_net(n, None, f)
+    run_cluster_topo(n, ClusterSpec::flat(), f)
 }
 
 /// [`run_cluster`] with an optional simulated interconnect ([`LinkSim`]);
 /// benchmarks use this to measure communication/compute overlap with
-/// realistic wire times.
+/// realistic wire times. The cluster is flat: every byte travels (and is
+/// counted) as inter-island traffic.
 pub fn run_cluster_net<T: Send>(
     n: usize,
     net: Option<LinkSim>,
     f: impl Fn(NodeCtx) -> T + Send + Sync,
 ) -> (Vec<T>, Arc<Counters>) {
+    run_cluster_topo(n, ClusterSpec { island_size: 1, intra: None, inter: net }, f)
+}
+
+/// [`run_cluster`] with a two-level topology ([`ClusterSpec`]):
+/// consecutive ranks are grouped into islands, traffic is counted per
+/// level, and each level can ride its own simulated link.
+pub fn run_cluster_topo<T: Send>(
+    n: usize,
+    spec: ClusterSpec,
+    f: impl Fn(NodeCtx) -> T + Send + Sync,
+) -> (Vec<T>, Arc<Counters>) {
     assert!(n > 0);
+    let island_size = spec.island_size.max(1);
+    assert!(n % island_size == 0, "cluster size {n} not divisible into islands of {island_size}");
     let counters = Counters::new(n);
     // mesh[src][dst]
     let mut txs: Vec<Vec<Option<Sender<Envelope>>>> =
@@ -414,8 +641,11 @@ pub fn run_cluster_net<T: Send>(
             tx: tx_row.into_iter().map(Option::unwrap).collect(),
             rx: rx_row.into_iter().map(Option::unwrap).collect(),
             pending: (0..n).map(|_| RefCell::new(HashMap::new())).collect(),
-            net,
-            egress_free: Cell::new(Instant::now()),
+            island_size,
+            net_intra: spec.intra,
+            net_inter: spec.inter,
+            egress_intra: Cell::new(Instant::now()),
+            egress_inter: Cell::new(Instant::now()),
             counters: counters.clone(),
         });
     }
@@ -684,6 +914,149 @@ mod tests {
         // each node sends (n-1) chunks of len/n f32s
         let expect = (n as u64) * (n as u64 - 1) * (len as u64 / n as u64) * 4;
         assert_eq!(counters.total_sent(), expect);
+    }
+
+    #[test]
+    fn counters_split_by_island() {
+        // 4 nodes, islands of 2: 0->1 is intra, 0->2 is inter
+        let (_, counters) = run_cluster_topo(4, ClusterSpec::islands(2), |ctx| {
+            if ctx.rank == 0 {
+                ctx.send(1, Payload::F32(vec![0.0; 4])); // 16 B intra
+                ctx.send(2, Payload::F32(vec![0.0; 8])); // 32 B inter
+            } else if ctx.rank == 1 {
+                ctx.recv(0);
+            } else if ctx.rank == 2 {
+                ctx.recv(0);
+            }
+        });
+        assert_eq!(counters.total_intra(), 16);
+        assert_eq!(counters.total_inter(), 32);
+        assert_eq!(counters.total_sent(), 48);
+    }
+
+    #[test]
+    fn flat_cluster_counts_everything_as_inter() {
+        let (_, counters) = run_cluster(2, |ctx| {
+            if ctx.rank == 0 {
+                ctx.send(1, Payload::F32(vec![0.0; 4]));
+            } else {
+                ctx.recv(0);
+            }
+        });
+        assert_eq!(counters.total_intra(), 0);
+        assert_eq!(counters.total_inter(), 16);
+    }
+
+    #[test]
+    fn group_reduce_scatter_sums_over_members_only() {
+        // islands {0,1} and {2,3}: each island reduce-scatters the full
+        // buffer over two ranges; members must see island-local sums
+        let n = 4;
+        let len = 40;
+        let part = Partition::flat_even(len, 2, 2);
+        let ranges = part.ranges.clone();
+        let (results, _) = run_cluster(n, |ctx| {
+            let island: Vec<usize> = if ctx.rank < 2 { vec![0, 1] } else { vec![2, 3] };
+            let g = ctx.group(&island);
+            let mut buf = node_data(ctx.rank, len);
+            g.ring_reduce_scatter(&mut buf, &ranges);
+            buf[ranges[g.rank()].clone()].to_vec()
+        });
+        for (rank, shard) in results.iter().enumerate() {
+            let (a, b) = if rank < 2 { (0, 1) } else { (2, 3) };
+            let mut want = node_data(a, len);
+            for (w, x) in want.iter_mut().zip(node_data(b, len)) {
+                *w += x;
+            }
+            let local = rank % 2;
+            let want_shard = &want[ranges[local].clone()];
+            for (x, y) in shard.iter().zip(want_shard) {
+                assert!((x - y).abs() < 1e-4, "rank {rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn group_all_to_all_and_gather_wire() {
+        // the cross-island peer groups {0,2} and {1,3} exchange pairwise
+        // and ring-gather; group-local indexing must map back correctly
+        let (results, _) = run_cluster(4, |ctx| {
+            let peers: Vec<usize> = vec![ctx.rank % 2, ctx.rank % 2 + 2];
+            let g = ctx.group(&peers);
+            let msgs: Vec<WireMsg> = (0..2)
+                .map(|dst| WireMsg::F32(vec![(ctx.rank * 10 + g.global(dst)) as f32]))
+                .collect();
+            let got = g.all_to_all(msgs);
+            let gathered = g.all_gather_wire(WireMsg::F32(vec![ctx.rank as f32]));
+            let pick = |m: &WireMsg| match m {
+                WireMsg::F32(v) => v[0],
+                _ => panic!(),
+            };
+            (got.iter().map(pick).collect::<Vec<_>>(), gathered.iter().map(pick).collect::<Vec<_>>())
+        });
+        for (rank, (a2a, gath)) in results.iter().enumerate() {
+            let peers = [rank % 2, rank % 2 + 2];
+            for (src_gr, &v) in a2a.iter().enumerate() {
+                assert_eq!(v, (peers[src_gr] * 10 + rank) as f32);
+            }
+            for (src_gr, &v) in gath.iter().enumerate() {
+                assert_eq!(v, peers[src_gr] as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn group_tagged_messages() {
+        let (results, _) = run_cluster(4, |ctx| {
+            let peers: Vec<usize> = vec![ctx.rank % 2, ctx.rank % 2 + 2];
+            let g = ctx.group(&peers);
+            let other = 1 - g.rank();
+            for tag in [2u64, 1] {
+                g.peer_send_tagged(other, tag, WireMsg::F32(vec![tag as f32 + ctx.rank as f32]));
+            }
+            (1u64..=2)
+                .map(|tag| match g.peer_recv_tagged(other, tag) {
+                    WireMsg::F32(v) => v[0],
+                    _ => panic!(),
+                })
+                .collect::<Vec<_>>()
+        });
+        for (rank, got) in results.iter().enumerate() {
+            let other = if rank < 2 { rank + 2 } else { rank - 2 };
+            assert_eq!(got, &vec![1.0 + other as f32, 2.0 + other as f32]);
+        }
+    }
+
+    #[test]
+    fn per_level_links_delay_independently() {
+        // intra fast, inter slow: an inter message of the same size takes
+        // visibly longer than an intra one
+        let spec = ClusterSpec {
+            island_size: 2,
+            intra: Some(LinkSim { bw: 10e9, latency_s: 0.0 }),
+            inter: Some(LinkSim { bw: 5e6, latency_s: 0.0 }),
+        };
+        let (results, _) = run_cluster_topo(4, spec, |ctx| {
+            if ctx.rank == 0 {
+                ctx.send(1, Payload::F32(vec![0.0; 125_000])); // 500 KB intra
+                ctx.send(2, Payload::F32(vec![0.0; 125_000])); // 500 KB inter
+                (0.0, 0.0)
+            } else if ctx.rank == 1 || ctx.rank == 2 {
+                let t0 = Instant::now();
+                ctx.recv(0);
+                (t0.elapsed().as_secs_f64(), 0.0)
+            } else {
+                (0.0, 0.0)
+            }
+        });
+        let intra_t = results[1].0;
+        let inter_t = results[2].0;
+        // 500 KB at 5 MB/s >= 100 ms; at 10 GB/s it is ~50 us. Both
+        // measurements include thread spawn/scheduling noise, so the
+        // margin is deliberately huge: the test only flakes if the intra
+        // recv is delayed by > 50 ms of pure scheduling.
+        assert!(inter_t >= 0.09, "inter link did not delay: {inter_t}");
+        assert!(inter_t > 2.0 * intra_t, "levels not independent: {intra_t} vs {inter_t}");
     }
 
     #[test]

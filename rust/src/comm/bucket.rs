@@ -121,6 +121,22 @@ impl BucketPlan {
         self.by_dst.iter().map(Vec::len).max().unwrap_or(0)
     }
 
+    /// Wire tag of gradient bucket `bi` at `step`. Tags must be unique
+    /// among messages concurrently in flight between a (src, dst) pair;
+    /// gradient and parameter buckets of the same step use disjoint
+    /// namespaces (stride `2 * total()`), so the parameter gather of step
+    /// k can overtake a peer still draining step k's gradient buckets.
+    pub fn grad_tag(&self, step: u64, bi: usize) -> u64 {
+        step.wrapping_mul(2 * self.total() as u64).wrapping_add(bi as u64)
+    }
+
+    /// Wire tag of parameter bucket `bi` at `step` (see [`Self::grad_tag`]).
+    pub fn param_tag(&self, step: u64, bi: usize) -> u64 {
+        step.wrapping_mul(2 * self.total() as u64)
+            .wrapping_add(self.total() as u64)
+            .wrapping_add(bi as u64)
+    }
+
     /// Send schedule for `rank`: bucket ids interleaved round-robin across
     /// destinations starting at `rank + 1`, so the first bucket of every
     /// peer enters the pipeline early and receivers can start decoding

@@ -47,8 +47,8 @@ use std::ops::Range;
 use std::sync::mpsc;
 use std::sync::Mutex;
 
-use crate::collective::NodeCtx;
-use crate::compress::{self, CompressorConfig, Decoder, Encoder, Method, WireMsg};
+use crate::collective::Comm;
+use crate::compress::{self, fp, CompressorConfig, Decoder, Encoder, Method, WireMsg};
 use crate::sharding::{ParamLayout, Partition};
 
 /// One unit of pool work: encode a bucket, or decode all sources of an
@@ -83,9 +83,13 @@ pub struct SyncEngine {
 }
 
 impl SyncEngine {
-    /// Build the engine for `rank` of an `n`-node cluster sharded by
-    /// `part`. The compressor config decides bucketing: `bucket_bytes / 4`
-    /// elements per bucket, monolithic when 0 (or for PowerSGD).
+    /// Build the engine for `rank` of an `n`-member communicator sharded
+    /// by `part` (the whole cluster for the flat engine, a cross-island
+    /// peer group for the hierarchical one — `part` then covers only that
+    /// group's gradient row, and all compressor state is sized to it).
+    /// The compressor config decides bucketing: `bucket_bytes / 4`
+    /// elements per bucket, monolithic when 0 (or for PowerSGD),
+    /// analytically derived when [`CompressorConfig::AUTO_BUCKET_BYTES`].
     pub fn new(
         cfg: &CompressorConfig,
         layout: &ParamLayout,
@@ -95,18 +99,32 @@ impl SyncEngine {
     ) -> Self {
         assert_eq!(part.ranges.len(), n, "partition must have one shard per node");
         let my_range = part.ranges[rank].clone();
-        let monolithic = cfg.bucket_bytes == 0 || cfg.method == Method::PowerSgd;
+        let bucket_bytes = if cfg.bucket_bytes == CompressorConfig::AUTO_BUCKET_BYTES {
+            crate::netsim::throughput::auto_bucket_bytes(
+                cfg.method.name(),
+                part.max_len(),
+                cfg.bits,
+            )
+        } else {
+            cfg.bucket_bytes
+        };
+        let monolithic = bucket_bytes == 0 || cfg.method == Method::PowerSgd;
         // alignment: keep block-scale groups intact for block methods,
         // nibble pairs otherwise
         let align = match cfg.method {
             Method::Zeropp | Method::LocoZeropp | Method::IntSgd => cfg.block.max(1),
             _ => 2,
         };
-        let bucket_elems = if monolithic { 0 } else { (cfg.bucket_bytes / 4).max(align) };
+        let bucket_elems = if monolithic { 0 } else { (bucket_bytes / 4).max(align) };
         let plan = BucketPlan::new(part, layout, bucket_elems, align);
+        // encoder state covers exactly the union of destination shards:
+        // the full model for the flat engine, one gradient row for a
+        // hierarchical peer-group engine
+        let domain = part.ranges.iter().map(|r| r.start).min().unwrap_or(0)
+            ..part.ranges.iter().map(|r| r.end).max().unwrap_or(0);
         let (enc, dec, own, sched, mono);
         if monolithic {
-            let pair = compress::build(cfg, layout, my_range.clone(), n);
+            let pair = compress::build_domain(cfg, layout, domain, my_range.len(), n);
             mono = Some(Mutex::new(pair));
             enc = Vec::new();
             dec = Vec::new();
@@ -175,10 +193,14 @@ impl SyncEngine {
     /// sources into `shard_acc` (this node's shard, *not* yet averaged —
     /// the caller divides by `n`, mirroring the monolithic path).
     ///
-    /// `step` feeds the encoders' reset schedule and must be strictly
-    /// increasing across calls (tags are derived from it).
-    pub fn sync(&self, ctx: &NodeCtx, grad: &[f32], shard_acc: &mut [f32], step: u64) {
+    /// `ctx` is any communicator with `n` members ([`crate::collective::NodeCtx`]
+    /// for the flat engine, a [`crate::collective::GroupCtx`] peer group for
+    /// the hierarchical one). `step` feeds the encoders' reset schedule and
+    /// must be strictly increasing across calls (tags are derived from it).
+    pub fn sync<C: Comm>(&self, ctx: &C, grad: &[f32], shard_acc: &mut [f32], step: u64) {
         debug_assert_eq!(shard_acc.len(), self.my_range.len());
+        debug_assert_eq!(ctx.peer_count(), self.n);
+        debug_assert_eq!(ctx.peer_rank(), self.rank);
         if let Some(m) = &self.mono {
             // original path, kept bit-identical for comparison tests
             let mut pair = m.lock().unwrap();
@@ -198,7 +220,7 @@ impl SyncEngine {
 
     /// The pipelined path: worker pool encodes (and later decodes) buckets
     /// while the main node thread moves them on the tagged wire.
-    fn sync_bucketed(&self, ctx: &NodeCtx, grad: &[f32], shard_acc: &mut [f32], step: u64) {
+    fn sync_bucketed<C: Comm>(&self, ctx: &C, grad: &[f32], shard_acc: &mut [f32], step: u64) {
         let n = self.n;
         let b_total = self.plan.total();
         shard_acc.fill(0.0);
@@ -217,7 +239,7 @@ impl SyncEngine {
             debug_assert!(rest.is_empty());
         }
 
-        let tag_of = |bi: usize| step.wrapping_mul(b_total as u64).wrapping_add(bi as u64);
+        let tag_of = |bi: usize| self.plan.grad_tag(step, bi);
 
         // channels live outside the scope so scoped workers may borrow the
         // shared job receiver
@@ -274,7 +296,7 @@ impl SyncEngine {
                 if dst == self.rank {
                     local_msgs[bi] = Some(msg);
                 } else {
-                    ctx.send_wire_tagged(dst, tag_of(bi), msg);
+                    ctx.peer_send_tagged(dst, tag_of(bi), msg);
                 }
             }
 
@@ -287,7 +309,7 @@ impl SyncEngine {
                     if src == self.rank {
                         msgs.push(local_msgs[bi].take().expect("own bucket not encoded"));
                     } else {
-                        msgs.push(ctx.recv_wire_tagged(src, tag_of(bi)));
+                        msgs.push(ctx.peer_recv_tagged(src, tag_of(bi)));
                     }
                 }
                 let acc = acc_cells[local].take().expect("bucket slice reused");
@@ -298,6 +320,61 @@ impl SyncEngine {
                 ack_rx.recv().expect("decoder pool died");
             }
         });
+    }
+
+    /// Parameter all-gather at `bf16` or f32 wire precision: `master` is
+    /// this node's updated fp32 shard; on return `params` holds every
+    /// member's shard at wire precision (own shard included, so all nodes
+    /// end bitwise identical).
+    ///
+    /// On the monolithic plan this is the original ring all-gather. On a
+    /// bucketed plan each own bucket is sent directly to every peer on the
+    /// tagged wire ([`BucketPlan::param_tag`]) — the same total byte volume
+    /// as the ring, but receivers can decode bucket k while bucket k+1 is
+    /// still in flight, and the messages pipeline behind the gradient
+    /// buckets of the same step.
+    pub fn param_gather<C: Comm>(
+        &self,
+        ctx: &C,
+        master: &[f32],
+        params: &mut [f32],
+        step: u64,
+        bf16: bool,
+    ) {
+        debug_assert_eq!(master.len(), self.my_range.len());
+        let encode = |xs: &[f32]| -> WireMsg {
+            if bf16 {
+                WireMsg::Bf16(xs.iter().map(|&x| fp::f32_to_bf16(x)).collect())
+            } else {
+                WireMsg::F32(xs.to_vec())
+            }
+        };
+        if self.mono.is_some() {
+            let all = ctx.all_gather_wire(encode(master));
+            for (src, msg) in all.iter().enumerate() {
+                compress::write_wire(msg, &mut params[self.ranges[src].clone()]);
+            }
+            return;
+        }
+        let n = self.n;
+        for &bi in &self.own {
+            let b = &self.plan.buckets[bi];
+            let rel = b.range.start - self.my_range.start..b.range.end - self.my_range.start;
+            let msg = encode(&master[rel]);
+            for off in 1..n {
+                let dst = (self.rank + off) % n;
+                ctx.peer_send_tagged(dst, self.plan.param_tag(step, bi), msg.clone());
+            }
+            // own shard goes through the same wire roundtrip as peers see
+            compress::write_wire(&msg, &mut params[b.range.clone()]);
+        }
+        for off in 1..n {
+            let src = (self.rank + n - off) % n;
+            for &bi in self.plan.own(src) {
+                let msg = ctx.peer_recv_tagged(src, self.plan.param_tag(step, bi));
+                compress::write_wire(&msg, &mut params[self.plan.buckets[bi].range.clone()]);
+            }
+        }
     }
 }
 
@@ -410,5 +487,92 @@ mod tests {
         let res = run_sync(&cfg, 512, 1, 2);
         assert_eq!(res.len(), 1);
         assert!(res[0].iter().any(|&x| x != 0.0));
+    }
+
+    /// Run one param gather on every node; returns each node's params.
+    fn run_param_gather(cfg: &CompressorConfig, total: usize, n: usize, bf16: bool) -> Vec<Vec<f32>> {
+        let layout = ParamLayout::single("flat", &[total]);
+        let part = Partition::flat_even(total, n, 2);
+        let (results, _) = run_cluster(n, |ctx| {
+            let engine = SyncEngine::new(cfg, &layout, &part, ctx.rank, n);
+            let my = part.ranges[ctx.rank].clone();
+            let master: Vec<f32> =
+                my.clone().map(|i| (ctx.rank * 10_000 + i) as f32 * 0.001).collect();
+            let mut params = vec![0.0f32; total];
+            engine.param_gather(&ctx, &master, &mut params, 1, bf16);
+            params
+        });
+        results
+    }
+
+    #[test]
+    fn bucketed_param_gather_matches_ring() {
+        // the tagged star must deliver bitwise the same parameters as the
+        // monolithic ring, at both wire precisions
+        let total = 2048;
+        let n = 4;
+        for bf16 in [false, true] {
+            let mono = CompressorConfig::default();
+            let buck = CompressorConfig { bucket_bytes: 512, ..mono };
+            let a = run_param_gather(&mono, total, n, bf16);
+            let b = run_param_gather(&buck, total, n, bf16);
+            for (ra, rb) in a.iter().zip(&b) {
+                assert_eq!(ra, rb, "bf16={bf16}");
+            }
+            // and every node ends with the same full vector
+            for r in &b {
+                assert_eq!(r, &b[0]);
+            }
+        }
+    }
+
+    #[test]
+    fn param_gather_volume_matches_ring_up_to_tags() {
+        let total = 4096;
+        let n = 4;
+        let layout = ParamLayout::single("flat", &[total]);
+        let part = Partition::flat_even(total, n, 2);
+        let volume = |bucket_bytes: usize| {
+            let cfg = CompressorConfig { bucket_bytes, ..Default::default() };
+            let (_, counters) = run_cluster(n, |ctx| {
+                let engine = SyncEngine::new(&cfg, &layout, &part, ctx.rank, n);
+                let my = part.ranges[ctx.rank].clone();
+                let master = vec![1.0f32; my.len()];
+                let mut params = vec![0.0f32; total];
+                engine.param_gather(&ctx, &master, &mut params, 1, true);
+            });
+            counters.total_sent()
+        };
+        let ring = volume(0);
+        let star = volume(512);
+        assert!(star >= ring, "star cannot beat the ring volume");
+        // 8-byte tag per 256-byte bf16 bucket payload => ~3% overhead
+        assert!(
+            (star as f64) < ring as f64 * 1.05,
+            "tag overhead too large: {star} vs {ring}"
+        );
+    }
+
+    #[test]
+    fn auto_bucket_bytes_resolves_to_a_real_plan() {
+        let total = 1 << 16;
+        let n = 4;
+        let cfg = CompressorConfig {
+            bucket_bytes: CompressorConfig::AUTO_BUCKET_BYTES,
+            ..Default::default()
+        };
+        let layout = ParamLayout::single("flat", &[total]);
+        let part = Partition::flat_even(total, n, 2);
+        let engine = SyncEngine::new(&cfg, &layout, &part, 0, n);
+        // auto never selects the monolithic sentinel; it lands on >= 1
+        // bucket per destination shard
+        assert!(!engine.is_monolithic());
+        assert!(engine.buckets() >= n);
+        // and the auto engine still syncs correctly
+        let a = run_sync(&cfg, 2048, n, 2);
+        let b = run_sync(&CompressorConfig::default(), 2048, n, 2);
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra, rb, "auto bucketing changed LoCo numerics");
+        }
     }
 }

@@ -153,6 +153,12 @@ impl Default for CompressorConfig {
 }
 
 impl CompressorConfig {
+    /// Sentinel for `bucket_bytes`: derive the bucket size from the
+    /// analytic pipeline model instead of a hand-tuned constant
+    /// (`compress.bucket_bytes = "auto"`; see
+    /// `netsim::throughput::auto_bucket_bytes`).
+    pub const AUTO_BUCKET_BYTES: usize = usize::MAX;
+
     pub fn with_method(method: Method) -> Self {
         CompressorConfig { method, ..Default::default() }
     }
@@ -322,7 +328,22 @@ pub fn build(
     my_range: Range<usize>,
     n_nodes: usize,
 ) -> (Box<dyn Encoder>, Box<dyn Decoder>) {
-    let total = layout.total;
+    build_domain(cfg, layout, 0..layout.total, my_range.len(), n_nodes)
+}
+
+/// [`build`] with sender-side state restricted to `domain`: the encoder
+/// may only be asked to encode sub-ranges of `domain`, and its error
+/// store covers exactly that region. The flat trainer uses the full model
+/// (`0..layout.total`); the hierarchical engine uses its island's
+/// gradient row, so per-island compressor state is sized to the island
+/// shard rather than the whole model.
+pub fn build_domain(
+    cfg: &CompressorConfig,
+    layout: &ParamLayout,
+    domain: Range<usize>,
+    my_len: usize,
+    n_nodes: usize,
+) -> (Box<dyn Encoder>, Box<dyn Decoder>) {
     match cfg.method {
         Method::Fp32 => (Box::new(fp::Fp32Encoder), Box::new(StatelessDecoder)),
         Method::Bf16 => (Box::new(fp::Bf16Encoder), Box::new(StatelessDecoder)),
@@ -334,20 +355,20 @@ pub fn build(
                 c.error_bits = 32;
                 c.reset_interval = 0;
             }
-            (Box::new(loco::LocoEncoder::new(&c, total)), Box::new(StatelessDecoder))
+            (Box::new(loco::LocoEncoder::for_range(&c, domain)), Box::new(StatelessDecoder))
         }
         Method::Ef21 => (
-            Box::new(ef21::Ef21Encoder::new(cfg, total)),
-            Box::new(ef21::Ef21Decoder::new(n_nodes, my_range.len())),
+            Box::new(ef21::Ef21Encoder::for_range(cfg, domain)),
+            Box::new(ef21::Ef21Decoder::new(n_nodes, my_len)),
         ),
         Method::OneBit => {
-            (Box::new(onebit::OneBitEncoder::new(total)), Box::new(StatelessDecoder))
+            (Box::new(onebit::OneBitEncoder::for_range(domain)), Box::new(StatelessDecoder))
         }
         Method::Zeropp => {
             (Box::new(block::BlockQuantEncoder::new(cfg)), Box::new(StatelessDecoder))
         }
         Method::LocoZeropp => {
-            (Box::new(loco::LocoBlockEncoder::new(cfg, total)), Box::new(StatelessDecoder))
+            (Box::new(loco::LocoBlockEncoder::for_range(cfg, domain)), Box::new(StatelessDecoder))
         }
         Method::IntSgd => {
             (Box::new(block::StochasticQuantEncoder::new(cfg)), Box::new(StatelessDecoder))
@@ -355,9 +376,30 @@ pub fn build(
         Method::PowerSgd => {
             // PowerSGD runs on the DDP all-reduce path (train::ddp); as an
             // Encoder it degrades to per-shard low-rank without the shared
-            // second all-reduce, which is only used in unit tests.
+            // second all-reduce, which is only used in unit tests. It needs
+            // whole tensors, so it cannot be domain-restricted.
+            assert_eq!(
+                domain,
+                0..layout.total,
+                "PowerSGD encoders cannot be restricted to a sub-domain"
+            );
             (Box::new(powersgd::PowerSgdEncoder::new(cfg, layout)), Box::new(StatelessDecoder))
         }
+    }
+}
+
+/// Overwrite `dst` with the decoded values of a full-precision wire
+/// message (the parameter-sync formats: f32 or bf16). Panics on low-bit
+/// gradient formats, which only support accumulate-decoding.
+pub fn write_wire(msg: &WireMsg, dst: &mut [f32]) {
+    match msg {
+        WireMsg::F32(v) => dst.copy_from_slice(v),
+        WireMsg::Bf16(v) => {
+            for (d, &u) in dst.iter_mut().zip(v) {
+                *d = fp::bf16_to_f32(u);
+            }
+        }
+        _ => panic!("parameter wire messages must be f32 or bf16"),
     }
 }
 

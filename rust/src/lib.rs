@@ -26,7 +26,11 @@
 //! in [`comm`]: destination shards are cut into fixed-size buckets with
 //! per-bucket error-feedback state, and a per-node worker pool keeps
 //! bucket `k+1` encoding while bucket `k` is in flight on the
-//! tag-addressed all-to-all path.
+//! tag-addressed all-to-all path. On clusters with NVLink islands the
+//! [`topology`] subsystem wraps that engine in the paper's two-level
+//! schedule — exact fp32 reduce inside each island, the low-bit bucketed
+//! all-to-all only across islands, island broadcast back down — so the
+//! compressed bytes ride exactly the slow hop.
 //!
 //! See DESIGN.md for the system inventory and the per-experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
@@ -44,6 +48,7 @@ pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod sharding;
+pub mod topology;
 pub mod train;
 pub mod util;
 

@@ -44,6 +44,11 @@ pub struct RunMetrics {
     pub elapsed: f64,
     /// bytes put on the wire by all nodes over the run
     pub comm_bytes: u64,
+    /// bytes that stayed inside an NVLink island (0 on flat clusters)
+    pub comm_bytes_intra: u64,
+    /// bytes that crossed an island boundary — the slow hop the
+    /// hierarchical engine compresses (equals `comm_bytes` on flat runs)
+    pub comm_bytes_inter: u64,
     /// bytes a 32-bit-gradient run would have sent (for ratio reporting)
     pub comm_bytes_fp32: u64,
     /// peak per-node state overhead of the compressor (error stores etc.)

@@ -30,6 +30,10 @@ pub struct Interconnect {
 pub const A100_ROCE: Interconnect = Interconnect { name: "a100-roce", bw: 40e9 };
 /// A800 cluster with Infiniband (bandwidth-capped A100 variant).
 pub const A800_IB: Interconnect = Interconnect { name: "a800-ib", bw: 20e9 };
+/// NVLink-class intra-island link (A100 NVLink3, effective per-GPU
+/// algorithm bandwidth) — the fast level of the two-tier topology model
+/// ([`throughput::analytic_throughput_hier`]).
+pub const NVLINK: Interconnect = Interconnect { name: "nvlink", bw: 300e9 };
 
 /// GPU compute preset (bf16).
 #[derive(Debug, Clone, Copy)]

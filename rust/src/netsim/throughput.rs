@@ -189,6 +189,34 @@ pub fn pipelined_time(t_encode: f64, t_wire: f64, buckets: usize, per_msg_overhe
     e + (b - 1.0) * e.max(w) + w
 }
 
+/// Invert [`pipelined_time`]: pick the bucket size (fp32 bytes) that
+/// minimizes the encode→transfer pipeline for one destination shard of
+/// `shard_elems` elements, instead of requiring a hand-tuned
+/// `bucket_bytes` constant. Encode time comes from the calibrated
+/// streaming rate of the method's kernel ([`encode_bytes_per_param`] at
+/// [`crate::netsim::A100`] HBM bandwidth); wire time from the method's
+/// `bits`-wide payload on an [`crate::netsim::A800_IB`]-class link;
+/// [`BUCKET_OVERHEAD_S`] is what keeps the optimum finite. Deterministic,
+/// and never returns the monolithic sentinel `0`.
+pub fn auto_bucket_bytes(method: &str, shard_elems: usize, bits: u32) -> usize {
+    let shard_elems = shard_elems.max(1);
+    let gpu = crate::netsim::A100;
+    let link = crate::netsim::A800_IB;
+    let t_wire = shard_elems as f64 * bits as f64 / 8.0 / link.bw;
+    let t_enc = encode_bytes_per_param(method) * shard_elems as f64 / gpu.mem_bw;
+    let mut best = (1usize, f64::INFINITY);
+    for b in 1..=256usize {
+        let t = pipelined_time(t_enc, t_wire, b, BUCKET_OVERHEAD_S);
+        if t < best.1 {
+            best = (b, t);
+        }
+    }
+    // fp32 bytes per bucket, kept 8-byte aligned (whole nibble pairs) and
+    // nonzero (0 selects the monolithic path)
+    let bytes = (4 * shard_elems).div_ceil(best.0);
+    (bytes.div_ceil(8) * 8).max(8)
+}
+
 /// Predicted speedup of `method` over the 16-bit Adam baseline for one
 /// paper row at a given accumulation number.
 pub fn predict_speedup(row: &PaperBaseline, accum: f64, method: &str) -> f64 {
@@ -274,11 +302,63 @@ pub fn analytic_throughput_overlapped(
     (tokens / step, comm / step)
 }
 
+/// Two-tier first-principles step time for the hierarchical engine
+/// (`topology::HierSyncEngine`): (1) fp32 ring reduce-scatter plus the
+/// parameter hop inside each `island_size`-GPU NVLink island at `intra`
+/// bandwidth, (2) the low-bit inter-island exchange — the method's wire
+/// bytes scaled from the flat (N−1)/N factor down to (K−1)/K over K
+/// islands — pipelined against encode time over `buckets` buckets at
+/// `inter` bandwidth. `island_size = 1` reproduces the flat
+/// [`analytic_throughput_overlapped`] exactly (no intra term, K = N).
+/// Returns (tokens/s for the whole cluster, comm fraction).
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_throughput_hier(
+    model: &AnalyticModel,
+    gpu: Gpu,
+    intra: Interconnect,
+    inter: Interconnect,
+    gpus: usize,
+    island_size: usize,
+    mbs_tokens: f64,
+    accum: f64,
+    method: &str,
+    buckets: usize,
+) -> (f64, f64) {
+    assert!(island_size >= 1 && gpus % island_size == 0, "gpus must divide into islands");
+    let islands = (gpus / island_size) as f64;
+    let m = island_size as f64;
+    let psi = model.params;
+    let flops_per_token = 6.0 * model.active_params;
+    let compute = accum * mbs_tokens * flops_per_token / (gpu.flops * gpu.mfu);
+    // intra level: fp32 gradient ring reduce-scatter (4 bytes/param) and
+    // the 16-bit parameter hop back down the island (2 bytes/param), each
+    // moving (m-1)/m of the model over NVLink
+    let t_intra = (4.0 + 2.0) * psi * (m - 1.0) / (m * intra.bw);
+    // inter level: after the intra reduce each node owns a 1/m gradient
+    // row and ships its (k-1)/k remote pieces; likewise the phase-3
+    // parameter gather ships the 1/(mk)-size own shard to each of the
+    // k-1 remote islands. Both components of wire_bytes_per_param (the
+    // low-bit gradient and the 16-bit parameter hop, Table 1 accounting)
+    // therefore scale by the same (k-1)/(m*k) factor vs the flat
+    // all-to-all's (n-1)/n — so the inter term stays like-for-like with
+    // [`analytic_throughput_overlapped`].
+    let n = gpus as f64;
+    let t_wire = wire_bytes_per_param(method) * psi * (islands - 1.0)
+        / (m * islands * inter.bw);
+    // each island member encodes only its 1/m gradient row
+    let t_enc = encode_bytes_per_param(method) * psi / (m * gpu.mem_bw);
+    let t_inter = pipelined_time(t_enc, t_wire, buckets, BUCKET_OVERHEAD_S);
+    let comm = t_intra + t_inter;
+    let step = compute + comm;
+    let tokens = accum * mbs_tokens * n;
+    (tokens / step, comm / step)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::analytic_model;
-    use crate::netsim::{A100, A100_ROCE, A800_IB};
+    use crate::netsim::{A100, A100_ROCE, A800_IB, NVLINK};
 
     #[test]
     fn fit_recovers_exact_model() {
@@ -393,6 +473,86 @@ mod tests {
         // model approaches but cannot beat (it still pays fill+drain)
         let (upper, _) = analytic_throughput(m, A100, A800_IB, 64, 4096.0, 1.0, "loco");
         assert!(piped < upper);
+    }
+
+    #[test]
+    fn hier_matches_flat_at_island_size_one() {
+        let m = analytic_model("llama2-7b").unwrap();
+        let (flat, ff) =
+            analytic_throughput_overlapped(m, A100, A800_IB, 64, 4096.0, 1.0, "loco", 8);
+        let (hier, hf) = analytic_throughput_hier(
+            m, A100, NVLINK, A800_IB, 64, 1, 4096.0, 1.0, "loco", 8,
+        );
+        assert!((flat - hier).abs() / flat < 1e-12, "{flat} vs {hier}");
+        assert!((ff - hf).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hier_beats_flat_on_asymmetric_links() {
+        // 8-GPU islands on NVLink with a slow inter link: the hierarchy
+        // moves 8x fewer bytes over the bottleneck and must win, more so
+        // as islands grow
+        let m = analytic_model("llama2-7b").unwrap();
+        let (flat, _) =
+            analytic_throughput_overlapped(m, A100, A800_IB, 64, 4096.0, 1.0, "loco", 8);
+        let mut last = flat;
+        for island in [2usize, 4, 8] {
+            let (hier, _) = analytic_throughput_hier(
+                m, A100, NVLINK, A800_IB, 64, island, 4096.0, 1.0, "loco", 8,
+            );
+            assert!(hier > last, "island={island}: {hier} <= {last}");
+            last = hier;
+        }
+        // and the comm fraction shrinks accordingly
+        let (_, frac_hier) = analytic_throughput_hier(
+            m, A100, NVLINK, A800_IB, 64, 8, 4096.0, 1.0, "loco", 8,
+        );
+        let (_, frac_flat) =
+            analytic_throughput_overlapped(m, A100, A800_IB, 64, 4096.0, 1.0, "loco", 8);
+        assert!(frac_hier < frac_flat);
+    }
+
+    #[test]
+    fn hier_needs_bandwidth_asymmetry_to_win() {
+        // with the intra level as slow as the NIC, the fp32 island
+        // reduce-scatter costs more than the inter savings: the hierarchy
+        // must LOSE to flat there, and the asymmetric configuration must
+        // beat the symmetric one — the paper's whole premise
+        let m = analytic_model("llama2-7b").unwrap();
+        let (flat, _) =
+            analytic_throughput_overlapped(m, A100, A800_IB, 64, 4096.0, 1.0, "loco", 8);
+        let (sym, _) = analytic_throughput_hier(
+            m, A100, A800_IB, A800_IB, 64, 8, 4096.0, 1.0, "loco", 8,
+        );
+        let (asym, _) = analytic_throughput_hier(
+            m, A100, NVLINK, A800_IB, 64, 8, 4096.0, 1.0, "loco", 8,
+        );
+        assert!(sym < flat, "fp32 intra traffic over a slow link must hurt: {sym} vs {flat}");
+        assert!(asym > sym);
+    }
+
+    #[test]
+    fn auto_bucket_bytes_inverts_pipeline() {
+        // small shards: per-bucket overhead dominates, one bucket per shard
+        let small = auto_bucket_bytes("loco", 1 << 14, 4);
+        assert!(small >= 4 * (1 << 14), "small shard must stay in one bucket");
+        // paper-scale shards: an interior optimum with several buckets
+        let shard = 100_000_000usize;
+        let big = auto_bucket_bytes("loco", shard, 4);
+        let buckets = (4 * shard).div_ceil(big);
+        assert!(
+            (2..=64).contains(&buckets),
+            "expected an interior bucket optimum, got {buckets}"
+        );
+        // never the monolithic sentinel, always aligned
+        assert!(big > 0 && big % 8 == 0);
+        assert!(auto_bucket_bytes("loco", 0, 4) > 0);
+        // the chosen bucket count actually minimizes the modeled time
+        let t_wire = shard as f64 * 0.5 / A800_IB.bw;
+        let t_enc = encode_bytes_per_param("loco") * shard as f64 / A100.mem_bw;
+        let t_star = pipelined_time(t_enc, t_wire, buckets, BUCKET_OVERHEAD_S);
+        assert!(t_star <= pipelined_time(t_enc, t_wire, 1, BUCKET_OVERHEAD_S) + 1e-12);
+        assert!(t_star <= pipelined_time(t_enc, t_wire, 256, BUCKET_OVERHEAD_S) + 1e-12);
     }
 
     #[test]

@@ -1,0 +1,538 @@
+//! Two-level cluster topology: NVLink islands bridged by a slow
+//! inter-island fabric — the deployment shape the paper assumes on
+//! A100/A800 clusters, where LoCo compresses only the slow hop and
+//! intra-node traffic stays high-precision (the same hierarchy 1-bit Adam
+//! and 0/1 Adam schedule around).
+//!
+//! [`Topology`] groups `n` consecutive ranks into `islands` fixed-size
+//! islands and cuts the model twice: first into `island_size` gradient
+//! *rows* (one per island-local rank), then each row into `islands`
+//! *pieces*. Node `(g, j)` — global rank `g * island_size + j` — owns
+//! piece `g` of row `j` as its Zero-2 shard.
+//!
+//! [`HierSyncEngine`] runs the three-phase schedule over that cut:
+//!
+//! ```text
+//!          island 0                      island 1
+//!   ┌──────────────────┐         ┌──────────────────┐
+//!   │ n00  n01  n02 n03│         │ n10  n11  n12 n13│
+//!   └──┬────┬────┬───┬─┘         └──┬────┬────┬───┬─┘
+//! (1)  ring reduce-scatter fp32     ring reduce-scatter fp32   intra, fast
+//!      row j -> n0j                 row j -> n1j
+//! (2)  n0j  <═══ low-bit bucketed all-to-all ═══>  n1j         inter, slow
+//!      (per-row peer groups; tags are (island, bucket) pairs:
+//!       bucket ids are ordered by destination island)
+//! (3)  optimizer on the decoded piece, then the updated island
+//!      shard flows back down: inter peer-group param gather fills
+//!      each row, island ring all-gather broadcasts rows            intra
+//! ```
+//!
+//! Phase 1 reduces the island's gradient exactly (fp32) and leaves member
+//! `j` holding the island *mean* of row `j` (the sum scaled by 1/m so the
+//! fixed quantization scale `s` keeps seeing per-node gradient
+//! magnitudes). Phase 2 reuses the bucketed engine
+//! ([`crate::comm::SyncEngine`]) verbatim over the row's peer group — one
+//! encoder per bucket, error-feedback state sized to the row, pipelined
+//! tagged wire — so each node ships `(k-1)/k` of a `1/m` row instead of
+//! `(n-1)/n` of the model: at 8 nodes in 2 islands the low-bit
+//! inter-island volume drops 4x. Phase 3 is the parameter path: the
+//! inter hop ships each node's own shard once *per remote island* (the
+//! minimum without inter-island multicast — every island needs its own
+//! copy), and the redistribution inside each island is intra-only.
+//!
+//! `islands = 1` *is* the flat engine: construction delegates to the
+//! unchanged [`SyncEngine`] over the cluster partition, bit-for-bit
+//! (`tests/hier_topology.rs` pins this). With more than one island the
+//! schedule is genuinely different arithmetic — island sums are exact
+//! where the flat engine quantizes every pairwise contribution — so
+//! losses track the flat engine closely but not bitwise (EXPERIMENTS.md
+//! quantifies the drift).
+
+use std::ops::Range;
+
+use anyhow::{ensure, Result};
+
+use crate::collective::{Comm, NodeCtx};
+use crate::comm::SyncEngine;
+use crate::compress::{self, CompressorConfig, Method, WireMsg};
+use crate::sharding::{ParamLayout, Partition};
+
+/// A cluster of `n` nodes grouped into `islands` equal islands of
+/// consecutive ranks (matching [`crate::collective::ClusterSpec`]'s
+/// island map).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    n: usize,
+    islands: usize,
+    island_size: usize,
+}
+
+impl Topology {
+    /// `islands = 0` or `1` selects the flat topology. `n` must divide
+    /// evenly into the islands.
+    pub fn new(n: usize, islands: usize) -> Result<Topology> {
+        ensure!(n > 0, "empty cluster");
+        let islands = islands.max(1);
+        ensure!(
+            n % islands == 0,
+            "cluster of {n} nodes does not divide into {islands} islands"
+        );
+        Ok(Topology { n, islands, island_size: n / islands })
+    }
+
+    /// The flat (single-level) topology.
+    pub fn flat(n: usize) -> Topology {
+        Topology { n, islands: 1, island_size: n }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn islands(&self) -> usize {
+        self.islands
+    }
+
+    pub fn island_size(&self) -> usize {
+        self.island_size
+    }
+
+    /// True when this topology actually has a second level.
+    pub fn is_hierarchical(&self) -> bool {
+        self.islands > 1
+    }
+
+    /// Island of `rank` (consecutive-rank islands).
+    pub fn island_of(&self, rank: usize) -> usize {
+        rank / self.island_size
+    }
+
+    /// Rank inside its island.
+    pub fn local_rank(&self, rank: usize) -> usize {
+        rank % self.island_size
+    }
+
+    /// Global ranks of one island, ascending.
+    pub fn island_members(&self, island: usize) -> Vec<usize> {
+        (island * self.island_size..(island + 1) * self.island_size).collect()
+    }
+
+    /// The cross-island peer group of `rank`: the node with the same
+    /// island-local rank in every island (phase-2 participants for that
+    /// row), ordered by island.
+    pub fn peer_group(&self, rank: usize) -> Vec<usize> {
+        let j = self.local_rank(rank);
+        (0..self.islands).map(|g| g * self.island_size + j).collect()
+    }
+
+    /// The phase-1 intra reduce-scatter cut: one gradient row per
+    /// island-local rank, 2-element aligned for the nibble-packed wire.
+    pub fn rows(&self, total: usize) -> Vec<Range<usize>> {
+        Partition::flat_even(total, self.island_size, 2).ranges
+    }
+
+    /// The two-level Zero-2 partition: row `j` cut into one piece per
+    /// island; `ranges[g * island_size + j]` is piece `g` of row `j`.
+    /// Pieces tile the model exactly and every boundary is 2-aligned.
+    pub fn partition(&self, total: usize) -> Partition {
+        let mut ranges = vec![0..0; self.n];
+        for (j, row) in self.rows(total).iter().enumerate() {
+            let pieces = Partition::flat_even(row.len(), self.islands, 2).ranges;
+            for (g, p) in pieces.iter().enumerate() {
+                ranges[g * self.island_size + j] = row.start + p.start..row.start + p.end;
+            }
+        }
+        Partition { ranges }
+    }
+}
+
+/// The hierarchical Zero-2 gradient/parameter synchronization engine.
+/// Wraps one [`SyncEngine`]: over the full cluster when the topology is
+/// flat (bit-identical to the pre-topology trainer), over this node's
+/// cross-island peer group otherwise, with all compressor state sized to
+/// the node's gradient row.
+pub struct HierSyncEngine {
+    topo: Topology,
+    rank: usize,
+    inner: SyncEngine,
+    /// phase-1 reduce-scatter cut (empty when flat)
+    rows: Vec<Range<usize>>,
+    /// my island's members (empty when flat)
+    island: Vec<usize>,
+    /// my cross-island peer group (empty when flat)
+    peers: Vec<usize>,
+    /// my gradient row (`0..0` when flat)
+    my_row: Range<usize>,
+}
+
+impl HierSyncEngine {
+    /// `part` must be the topology's partition ([`Topology::partition`])
+    /// when hierarchical, or any cluster partition when flat.
+    pub fn new(
+        cfg: &CompressorConfig,
+        layout: &ParamLayout,
+        part: &Partition,
+        topo: &Topology,
+        rank: usize,
+    ) -> Result<HierSyncEngine> {
+        ensure!(part.ranges.len() == topo.n(), "partition does not match the topology");
+        if !topo.is_hierarchical() {
+            let inner = SyncEngine::new(cfg, layout, part, rank, topo.n());
+            return Ok(HierSyncEngine {
+                topo: topo.clone(),
+                rank,
+                inner,
+                rows: Vec::new(),
+                island: Vec::new(),
+                peers: Vec::new(),
+                my_row: 0..0,
+            });
+        }
+        ensure!(
+            cfg.method != Method::PowerSgd,
+            "PowerSGD needs whole tensors and the DDP path; it cannot run hierarchically"
+        );
+        let rows = topo.rows(layout.total);
+        let my_row = rows[topo.local_rank(rank)].clone();
+        let peers = topo.peer_group(rank);
+        let jpart = Partition {
+            ranges: peers.iter().map(|&r| part.ranges[r].clone()).collect(),
+        };
+        ensure!(
+            jpart.ranges.iter().all(|r| my_row.start <= r.start && r.end <= my_row.end),
+            "partition is not the two-level topology cut"
+        );
+        let inner = SyncEngine::new(cfg, layout, &jpart, topo.island_of(rank), topo.islands());
+        Ok(HierSyncEngine {
+            topo: topo.clone(),
+            rank,
+            inner,
+            rows,
+            island: topo.island_members(topo.island_of(rank)),
+            peers,
+            my_row,
+        })
+    }
+
+    pub fn is_hierarchical(&self) -> bool {
+        self.topo.is_hierarchical()
+    }
+
+    /// Bytes of persistent compressor state (sized to the gradient row on
+    /// hierarchical topologies, to the model on flat ones).
+    pub fn state_bytes(&self) -> usize {
+        self.inner.state_bytes()
+    }
+
+    /// The wrapped per-communicator engine (tests, diagnostics).
+    pub fn engine(&self) -> &SyncEngine {
+        &self.inner
+    }
+
+    /// One gradient synchronization. `grad` is this node's full local
+    /// gradient and is clobbered (the intra reduce-scatter runs in place).
+    /// `shard_acc` receives the equivalent *unaveraged* sum over all `n`
+    /// nodes for this node's shard — the same contract as
+    /// [`SyncEngine::sync`], so the caller divides by `n` either way.
+    pub fn sync(&self, ctx: &NodeCtx, grad: &mut [f32], shard_acc: &mut [f32], step: u64) {
+        if !self.is_hierarchical() {
+            self.inner.sync(ctx, grad, shard_acc, step);
+            return;
+        }
+        // phase 1: exact fp32 reduce inside the island, one row per member
+        let intra = ctx.group(&self.island);
+        intra.ring_reduce_scatter(grad, &self.rows);
+        // encode the island *mean* so the fixed wire scale s keeps seeing
+        // per-node gradient magnitudes
+        let m = self.topo.island_size() as f32;
+        for x in grad[self.my_row.clone()].iter_mut() {
+            *x /= m;
+        }
+        // phase 2: low-bit bucketed all-to-all across islands, row-local
+        let inter = ctx.group(&self.peers);
+        self.inner.sync(&inter, grad, shard_acc, step);
+        // decoded = sum of k island means; rescale so the flat contract
+        // (sum over all n sources, caller divides by n) holds
+        for x in shard_acc.iter_mut() {
+            *x *= m;
+        }
+    }
+
+    /// Parameter synchronization (phase 3): `master` is the updated fp32
+    /// shard; on return `params` holds the full parameter vector at wire
+    /// precision, identical on every node. Flat topologies use the
+    /// engine's (possibly bucketed) gather directly; hierarchical ones
+    /// gather shards across the peer group (inter, once per byte) and
+    /// then ring-broadcast whole rows down each island (intra).
+    pub fn param_sync(
+        &self,
+        ctx: &NodeCtx,
+        master: &[f32],
+        params: &mut [f32],
+        step: u64,
+        bf16: bool,
+    ) {
+        if !self.is_hierarchical() {
+            self.inner.param_gather(ctx, master, params, step, bf16);
+            return;
+        }
+        let inter = ctx.group(&self.peers);
+        self.inner.param_gather(&inter, master, params, step, bf16);
+        // my row is now complete; broadcast rows inside the island
+        let mine = {
+            let row = &params[self.my_row.clone()];
+            if bf16 {
+                // the row already holds bf16-decoded values, so this
+                // re-encoding is lossless and every node stays bitwise
+                // identical
+                WireMsg::Bf16(row.iter().map(|&x| compress::fp::f32_to_bf16(x)).collect())
+            } else {
+                WireMsg::F32(row.to_vec())
+            }
+        };
+        let intra = ctx.group(&self.island);
+        let all = intra.all_gather_wire(mine);
+        let j = self.topo.local_rank(self.rank);
+        for (src, msg) in all.iter().enumerate() {
+            if src != j {
+                compress::write_wire(msg, &mut params[self.rows[src].clone()]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::{run_cluster, run_cluster_topo, ClusterSpec};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn topology_validates_divisibility() {
+        assert!(Topology::new(8, 2).is_ok());
+        assert!(Topology::new(8, 3).is_err());
+        assert!(Topology::new(0, 1).is_err());
+        let t = Topology::new(8, 1).unwrap();
+        assert!(!t.is_hierarchical());
+    }
+
+    #[test]
+    fn topology_maps_ranks() {
+        let t = Topology::new(8, 2).unwrap();
+        assert_eq!(t.island_size(), 4);
+        assert_eq!(t.island_of(5), 1);
+        assert_eq!(t.local_rank(5), 1);
+        assert_eq!(t.island_members(0), vec![0, 1, 2, 3]);
+        assert_eq!(t.peer_group(5), vec![1, 5]);
+        assert_eq!(t.peer_group(1), vec![1, 5]);
+    }
+
+    #[test]
+    fn partition_tiles_the_model() {
+        for (n, islands, total) in [(8, 2, 4096), (8, 4, 1000), (6, 3, 502), (4, 1, 64)] {
+            let t = Topology::new(n, islands).unwrap();
+            let part = t.partition(total);
+            assert_eq!(part.ranges.len(), n);
+            // disjoint cover: sort by start and walk
+            let mut ranges = part.ranges.clone();
+            ranges.sort_by_key(|r| r.start);
+            let mut cursor = 0;
+            for r in &ranges {
+                assert_eq!(r.start, cursor, "gap or overlap at {cursor}");
+                assert!(r.start % 2 == 0, "unaligned cut");
+                cursor = r.end;
+            }
+            assert_eq!(cursor, total);
+            // every piece sits inside its owner's row
+            let rows = t.rows(total);
+            for rank in 0..n {
+                let row = &rows[t.local_rank(rank)];
+                let piece = &part.ranges[rank];
+                assert!(row.start <= piece.start && piece.end <= row.end);
+            }
+        }
+    }
+
+    fn node_grad(rank: usize, total: usize) -> Vec<f32> {
+        let mut rng = Rng::new(300 + rank as u64);
+        let mut g = vec![0.0f32; total];
+        rng.fill_normal(&mut g, 0.05);
+        g
+    }
+
+    /// One engine-level sync on an islanded cluster; returns each node's
+    /// *averaged* shard plus the counters.
+    fn run_hier_sync(
+        cfg: &CompressorConfig,
+        total: usize,
+        n: usize,
+        islands: usize,
+    ) -> (Vec<Vec<f32>>, std::sync::Arc<crate::collective::Counters>) {
+        let topo = Topology::new(n, islands).unwrap();
+        let layout = ParamLayout::single("flat", &[total]);
+        let part = if topo.is_hierarchical() {
+            topo.partition(total)
+        } else {
+            Partition::flat_even(total, n, 2)
+        };
+        let spec = ClusterSpec::islands(topo.island_size());
+        let (results, counters) = run_cluster_topo(n, spec, |ctx| {
+            let engine = HierSyncEngine::new(cfg, &layout, &part, &topo, ctx.rank).unwrap();
+            let mut grad = node_grad(ctx.rank, total);
+            let mut acc = vec![0.0f32; part.ranges[ctx.rank].len()];
+            engine.sync(&ctx, &mut grad, &mut acc, 1);
+            for x in acc.iter_mut() {
+                *x /= n as f32;
+            }
+            acc
+        });
+        (results, counters)
+    }
+
+    #[test]
+    fn hier_fp32_sync_is_the_exact_mean() {
+        // with the fp32 "compressor" the three-phase schedule must produce
+        // exactly the mean gradient on every shard
+        let total = 1024;
+        let n = 8;
+        let cfg = CompressorConfig::with_method(Method::Fp32);
+        let topo = Topology::new(n, 2).unwrap();
+        let part = topo.partition(total);
+        let (results, _) = run_hier_sync(&cfg, total, n, 2);
+        let mut want = vec![0.0f64; total];
+        for r in 0..n {
+            for (w, x) in want.iter_mut().zip(node_grad(r, total)) {
+                *w += x as f64;
+            }
+        }
+        for w in want.iter_mut() {
+            *w /= n as f64;
+        }
+        for (rank, shard) in results.iter().enumerate() {
+            let range = part.ranges[rank].clone();
+            for (a, &b) in shard.iter().zip(&want[range]) {
+                assert!((*a as f64 - b).abs() < 1e-5, "rank {rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn hier_cuts_inter_island_low_bit_bytes() {
+        // acceptance: 8 nodes, 4 per island -> the hierarchical exchange
+        // puts >= 3x fewer low-bit bytes on the inter-island wire than the
+        // flat all-to-all (it is 4x by construction: 4 remote peers per
+        // node shrink to 1 remote piece of a quarter-size row)
+        let total = 4096;
+        let n = 8;
+        let cfg = CompressorConfig { s: 64.0, ..Default::default() };
+
+        // flat engine on the same islanded cluster (classification only)
+        let topo = Topology::new(n, 2).unwrap();
+        let layout = ParamLayout::single("flat", &[total]);
+        let flat_part = Partition::flat_even(total, n, 2);
+        let (_, flat_counters) =
+            run_cluster_topo(n, ClusterSpec::islands(topo.island_size()), |ctx| {
+                let engine = SyncEngine::new(&cfg, &layout, &flat_part, ctx.rank, n);
+                let grad = node_grad(ctx.rank, total);
+                let mut acc = vec![0.0f32; flat_part.ranges[ctx.rank].len()];
+                engine.sync(&ctx, &grad, &mut acc, 1);
+            });
+
+        let (_, hier_counters) = run_hier_sync(&cfg, total, n, 2);
+        let flat_inter = flat_counters.total_inter();
+        let hier_inter = hier_counters.total_inter();
+        assert!(hier_inter > 0 && flat_inter > 0);
+        assert!(
+            flat_inter as f64 >= 3.0 * hier_inter as f64,
+            "inter-island bytes: flat {flat_inter} vs hier {hier_inter} (< 3x reduction)"
+        );
+        // the hierarchy pays for it with (cheap) intra traffic
+        assert!(hier_counters.total_intra() > 0);
+        assert_eq!(flat_counters.total_intra() + flat_counters.total_inter(),
+                   flat_counters.total_sent());
+    }
+
+    #[test]
+    fn hier_bucketed_matches_hier_monolithic() {
+        // inside the hierarchy the bucketed inner engine must stay bitwise
+        // equal to its monolithic variant, exactly like the flat engine
+        let total = 4096;
+        let n = 8;
+        let mono = CompressorConfig { s: 64.0, ..Default::default() };
+        let buck = CompressorConfig { bucket_bytes: 256, sync_workers: 3, ..mono };
+        let (a, _) = run_hier_sync(&mono, total, n, 4);
+        let (b, _) = run_hier_sync(&buck, total, n, 4);
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra, rb);
+        }
+    }
+
+    #[test]
+    fn hier_state_is_sized_to_the_row() {
+        // per-island encoder state: one byte per *row* element, not per
+        // model element
+        let total = 4096;
+        let n = 8;
+        let topo = Topology::new(n, 2).unwrap();
+        let layout = ParamLayout::single("flat", &[total]);
+        let part = topo.partition(total);
+        let cfg = CompressorConfig::default();
+        let engine = HierSyncEngine::new(&cfg, &layout, &part, &topo, 0).unwrap();
+        // row = total / island_size elements; int8 LoCo error store is one
+        // byte per element
+        assert_eq!(engine.state_bytes(), total / topo.island_size());
+        let flat = Topology::flat(n);
+        let flat_engine =
+            HierSyncEngine::new(&cfg, &layout, &Partition::flat_even(total, n, 2), &flat, 0)
+                .unwrap();
+        assert_eq!(flat_engine.state_bytes(), total);
+    }
+
+    #[test]
+    fn hier_param_sync_agrees_across_nodes() {
+        // all nodes must end with the identical full parameter vector,
+        // equal to the bf16 roundtrip of each owner's master shard
+        let total = 2048;
+        let n = 8;
+        for islands in [1usize, 2, 4] {
+            let topo = Topology::new(n, islands).unwrap();
+            let layout = ParamLayout::single("flat", &[total]);
+            let part = if topo.is_hierarchical() {
+                topo.partition(total)
+            } else {
+                Partition::flat_even(total, n, 2)
+            };
+            let cfg = CompressorConfig::default();
+            let (results, _) = run_cluster(n, |ctx| {
+                let engine = HierSyncEngine::new(&cfg, &layout, &part, &topo, ctx.rank).unwrap();
+                let my = part.ranges[ctx.rank].clone();
+                let master: Vec<f32> =
+                    my.clone().map(|i| (i as f32 * 0.37).sin() * 0.1).collect();
+                let mut params = vec![0.0f32; total];
+                engine.param_sync(&ctx, &master, &mut params, 1, true);
+                params
+            });
+            for r in &results {
+                assert_eq!(r, &results[0], "islands={islands}: nodes diverged");
+            }
+            // every position equals the bf16 roundtrip of its owner's value
+            for rank in 0..n {
+                for i in part.ranges[rank].clone() {
+                    let want = compress::fp::bf16_to_f32(compress::fp::f32_to_bf16(
+                        (i as f32 * 0.37).sin() * 0.1,
+                    ));
+                    assert_eq!(results[0][i], want, "islands={islands} flat index {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn powersgd_rejected_on_hierarchy() {
+        let topo = Topology::new(4, 2).unwrap();
+        let layout = ParamLayout::single("w", &[64, 64]);
+        let part = topo.partition(layout.total);
+        let cfg = CompressorConfig::with_method(Method::PowerSgd);
+        assert!(HierSyncEngine::new(&cfg, &layout, &part, &topo, 0).is_err());
+    }
+}

@@ -26,10 +26,9 @@ use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
-use crate::collective::{run_cluster, NodeCtx};
-use crate::comm::SyncEngine;
+use crate::collective::{run_cluster_topo, ClusterSpec, NodeCtx};
 use crate::compress::{
-    self, powersgd::PowerSgd, CompressorConfig, Decoder, Encoder, Method, WireMsg,
+    self, powersgd::PowerSgd, CompressorConfig, Decoder, Encoder, Method,
 };
 use crate::data::{Corpus, CorpusConfig, Split};
 use crate::metrics::RunMetrics;
@@ -37,6 +36,7 @@ use crate::model::ModelMeta;
 use crate::optim::{self, LrSchedule, OptimConfig};
 use crate::runtime::Engine;
 use crate::sharding::Partition;
+use crate::topology::{HierSyncEngine, Topology};
 use crate::util;
 
 /// Gradient synchronization topology.
@@ -74,6 +74,9 @@ pub struct TrainConfig {
     pub optim: OptimConfig,
     pub lr: LrSchedule,
     pub compressor: CompressorConfig,
+    /// number of NVLink islands for the two-level topology (Zero-2 only);
+    /// 0/1 = flat cluster, the pre-topology engine bit-for-bit
+    pub islands: usize,
     /// global-norm clip on the averaged gradient (0 = off)
     pub global_clip: f32,
     pub eval_every: u64,
@@ -100,6 +103,7 @@ impl TrainConfig {
             optim: OptimConfig::default(),
             lr: LrSchedule::constant(1e-3),
             compressor: CompressorConfig::default(),
+            islands: 1,
             global_clip: 1.0,
             eval_every: 0,
             eval_batches: 4,
@@ -133,15 +137,28 @@ impl Trainer {
         let cfg = &self.cfg;
         let meta = crate::runtime::load_meta(&cfg.art_dir, &cfg.model)?;
         let n = cfg.nodes;
+        let topo = Topology::new(n, cfg.islands.max(1))?;
+        anyhow::ensure!(
+            !topo.is_hierarchical() || cfg.mode == Mode::Zero2,
+            "topology.islands > 1 requires train.mode = zero2"
+        );
         let part = match cfg.mode {
             Mode::Ddp => Partition { ranges: vec![0..meta.layout.total] },
+            Mode::Zero2 if topo.is_hierarchical() => topo.partition(meta.layout.total),
             _ => Partition::tensor_aligned(&meta.layout, n),
         };
         let result0: Mutex<Option<RunResult>> = Mutex::new(None);
         let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
 
-        let (_, counters) = run_cluster(n, |ctx| {
-            match self.node_main(&ctx, &meta, &part) {
+        // flat clusters keep the run_cluster convention (every byte is
+        // "inter-island": there is no fast level to hide traffic on)
+        let spec = if topo.is_hierarchical() {
+            ClusterSpec::islands(topo.island_size())
+        } else {
+            ClusterSpec::flat()
+        };
+        let (_, counters) = run_cluster_topo(n, spec, |ctx| {
+            match self.node_main(&ctx, &meta, &part, &topo) {
                 Ok(Some(r)) => {
                     *result0.lock().unwrap() = Some(r);
                 }
@@ -160,6 +177,8 @@ impl Trainer {
             .unwrap()
             .context("rank 0 produced no result")?;
         result.metrics.comm_bytes = counters.total_sent();
+        result.metrics.comm_bytes_intra = counters.total_intra();
+        result.metrics.comm_bytes_inter = counters.total_inter();
         Ok(result)
     }
 
@@ -168,6 +187,7 @@ impl Trainer {
         ctx: &NodeCtx,
         meta: &ModelMeta,
         part: &Partition,
+        topo: &Topology,
     ) -> Result<Option<RunResult>> {
         let cfg = &self.cfg;
         let rank = ctx.rank;
@@ -197,16 +217,16 @@ impl Trainer {
 
         let shard_tensors = meta.layout.tensors_in(&my_range);
         let mut opt = optim::build(&cfg.optim, my_range.len(), &shard_tensors);
-        // Zero-2 modes exchange gradients through the (possibly bucketed,
-        // overlapped) sync engine; DDP keeps the legacy encoder pair only
-        // for state accounting.
+        // Zero-2 modes exchange gradients through the (possibly
+        // hierarchical, possibly bucketed) sync engine; DDP keeps the
+        // legacy encoder pair only for state accounting.
         let (sync, ddp_pair) = match cfg.mode {
             Mode::Ddp => (
                 None,
                 Some(compress::build(&cfg.compressor, &meta.layout, my_range.clone(), n)),
             ),
             _ => (
-                Some(SyncEngine::new(&cfg.compressor, &meta.layout, part, rank, n)),
+                Some(HierSyncEngine::new(&cfg.compressor, &meta.layout, part, topo, rank)?),
                 None,
             ),
         };
@@ -257,7 +277,7 @@ impl Trainer {
                 Mode::Zero2 => {
                     sync.as_ref()
                         .expect("Zero2 has a sync engine")
-                        .sync(ctx, &grad, &mut shard_acc, step + 1);
+                        .sync(ctx, &mut grad, &mut shard_acc, step + 1);
                     util::scale(&mut shard_acc, 1.0 / n as f32);
                 }
                 Mode::Zero2ReduceScatter => {
@@ -304,35 +324,21 @@ impl Trainer {
             let lr = cfg.lr.at(step);
             opt.step(&mut master, &shard_acc, lr);
 
-            // 7: parameter synchronization
+            // 7: parameter synchronization — through the engine, so the
+            // gather is bucketed/tagged whenever the gradient path is, and
+            // two-level (inter peer gather + island broadcast) on
+            // hierarchical topologies
             match cfg.mode {
                 Mode::Ddp => {
                     // all nodes applied the same update; params == master
                     params.copy_from_slice(&master);
                 }
-                _ => match cfg.param_sync {
-                    ParamSync::F32 => {
-                        params[my_range.clone()].copy_from_slice(&master);
-                        ctx.all_gather(&mut params, &part.ranges);
-                    }
-                    ParamSync::Bf16 => {
-                        let wire = WireMsg::Bf16(
-                            master.iter().map(|&x| compress::fp::f32_to_bf16(x)).collect(),
-                        );
-                        let all = ctx.all_gather_wire(wire);
-                        for (src, msg) in all.into_iter().enumerate() {
-                            let dst = &mut params[part.ranges[src].clone()];
-                            match msg {
-                                WireMsg::Bf16(v) => {
-                                    for (d, u) in dst.iter_mut().zip(v) {
-                                        *d = compress::fp::bf16_to_f32(u);
-                                    }
-                                }
-                                _ => unreachable!(),
-                            }
-                        }
-                    }
-                },
+                _ => {
+                    let bf16 = cfg.param_sync == ParamSync::Bf16;
+                    sync.as_ref()
+                        .expect("Zero-2 has a sync engine")
+                        .param_sync(ctx, &master, &mut params, step + 1, bf16);
+                }
             }
 
             // --- metrics / eval --------------------------------------------

@@ -258,7 +258,70 @@ fn main() {
         );
     }
 
-    // 10. L2 train step (tiny model) — end-to-end gradient latency through
+    // 10. §Tentpole PR3: async one-step-stale parameter sync — the bf16
+    //    parameter gather of step k rides the wire while step k+1's
+    //    forward runs. 4 nodes over a LinkSim egress sized so one gather
+    //    costs ~2/3 of a simulated forward window: the synchronous
+    //    schedule pays that wire time on the critical path every step,
+    //    the async schedule (param_gather_launch / param_gather_drain)
+    //    drains an already-delivered gather after the forward for ~free.
+    {
+        let nodes = 4usize;
+        let total: usize = if fast { 1 << 16 } else { 1 << 19 };
+        let layout = ParamLayout::single("flat", &[total]);
+        let part = Partition::flat_even(total, nodes, 2);
+        let cfg = CompressorConfig {
+            s: 64.0,
+            bucket_bytes: 4 * (total / nodes) / 8,
+            sync_workers: 2,
+            ..Default::default()
+        };
+        let steps = 6u64;
+        // the simulated forward/backward window of the next step
+        let forward = std::time::Duration::from_millis(if fast { 8 } else { 20 });
+        // bf16 gather wire volume per node: (n-1)/n of the model at 2 B
+        let gather_bytes = 2.0 * (total - total / nodes) as f64;
+        let net = LinkSim {
+            bw: gather_bytes / (0.66 * forward.as_secs_f64()),
+            latency_s: 20e-6,
+        };
+        let run_once = |asynchronous: bool| {
+            let t0 = std::time::Instant::now();
+            run_cluster_net(nodes, Some(net), |ctx| {
+                let engine = SyncEngine::new(&cfg, &layout, &part, ctx.rank, nodes);
+                let my = part.ranges[ctx.rank].clone();
+                let master = vec![0.5f32; my.len()];
+                let mut params = vec![0.0f32; total];
+                let mut pending = None;
+                for step in 1..=steps {
+                    std::thread::sleep(forward); // the next step's compute
+                    if let Some(p) = pending.take() {
+                        engine.param_gather_drain(&ctx, p, &mut params);
+                    }
+                    if asynchronous {
+                        pending = Some(engine.param_gather_launch(&ctx, &master, step, true));
+                    } else {
+                        engine.param_gather(&ctx, &master, &mut params, step, true);
+                    }
+                }
+                if let Some(p) = pending.take() {
+                    engine.param_gather_drain(&ctx, p, &mut params);
+                }
+            });
+            t0.elapsed().as_secs_f64()
+        };
+        let t_sync = (0..2).map(|_| run_once(false)).fold(f64::INFINITY, f64::min);
+        let t_async = (0..2).map(|_| run_once(true)).fold(f64::INFINITY, f64::min);
+        println!(
+            "async param sync: sync {:.1} ms/step, async {:.1} ms/step -> {:.2}x \
+             (gather sized to ~66% of a forward; target >= 1.3x at 4 nodes)\n",
+            1e3 * t_sync / steps as f64,
+            1e3 * t_async / steps as f64,
+            t_sync / t_async
+        );
+    }
+
+    // 11. L2 train step (tiny model) — end-to-end gradient latency through
     //    the PJRT artifacts when present, the builtin engine otherwise
     let art = loco::runtime::artifacts_dir();
     {

@@ -18,7 +18,11 @@
 //! * [`NodeCtx::send_wire_tagged`] / [`NodeCtx::recv_wire_tagged`] —
 //!   tag-addressed point-to-point messages so several bucket payloads to
 //!   the same peer can be in flight concurrently and be matched out of
-//!   order (the [`crate::comm`] overlapped sync engine);
+//!   order (the [`crate::comm`] overlapped sync engine). Untagged
+//!   receives skip over in-flight tagged messages (stashing them in the
+//!   per-source reorder buffer), which lets an asynchronous parameter
+//!   gather (`train.sync_params = "async"`) stay on the wire across the
+//!   untagged collectives of the following step;
 //! * [`NodeCtx::group`] — sub-communicators over an arbitrary member set
 //!   (NVLink islands, cross-island peer groups) sharing the parent's
 //!   channels; the ring/all-to-all collectives are provided generically by
@@ -221,7 +225,10 @@ impl NodeCtx {
         self.tx[dst].send(Envelope { ready_at, payload: p }).expect("peer hung up");
     }
 
-    pub fn recv(&self, src: usize) -> Payload {
+    /// Pull the next envelope from `src`, honoring the simulated wire
+    /// release time. Returns tagged and untagged payloads alike — the
+    /// public receive surfaces sort them.
+    fn recv_raw(&self, src: usize) -> Payload {
         let env = self.rx[src].recv().expect("peer hung up");
         if let Some(t) = env.ready_at {
             let now = Instant::now();
@@ -230,6 +237,22 @@ impl NodeCtx {
             }
         }
         env.payload
+    }
+
+    /// Receive the next *untagged* payload from `src`. Tagged messages
+    /// that arrive first are stashed into the per-source reorder buffer
+    /// for a later [`NodeCtx::recv_wire_tagged`] — this is what lets an
+    /// asynchronous parameter gather stay in flight across the untagged
+    /// collectives (loss all-reduce, ring phases) of the next step.
+    pub fn recv(&self, src: usize) -> Payload {
+        loop {
+            match self.recv_raw(src) {
+                Payload::TaggedWire { tag, msg } => {
+                    self.pending[src].borrow_mut().insert(tag, msg);
+                }
+                p => return p,
+            }
+        }
     }
 
     /// Send `msg` to `dst` addressed by `tag`. Multiple tagged messages to
@@ -243,15 +266,15 @@ impl NodeCtx {
     /// Receive the tagged message `tag` from `src`, stashing any other
     /// tagged messages that arrive first into the reorder buffer.
     ///
-    /// Interleaving tagged and untagged traffic from the same source while
-    /// a tag is awaited is a protocol error (panics): the trainer's
-    /// collectives are strictly phased, so this cannot happen in practice.
+    /// Receiving an *untagged* payload while a tag is awaited is a
+    /// protocol error (panics): untagged collectives are strictly phased,
+    /// so a tagged receive can never legally overtake one.
     pub fn recv_wire_tagged(&self, src: usize, tag: u64) -> WireMsg {
         if let Some(m) = self.pending[src].borrow_mut().remove(&tag) {
             return m;
         }
         loop {
-            match self.recv(src) {
+            match self.recv_raw(src) {
                 Payload::TaggedWire { tag: t, msg } => {
                     if t == tag {
                         return msg;
@@ -832,6 +855,26 @@ mod tests {
             }
         });
         assert_eq!(results[1], vec![10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn untagged_recv_skips_in_flight_tagged_messages() {
+        // a tagged message launched before an untagged collective must
+        // not corrupt it: plain recv stashes tagged payloads for a later
+        // recv_wire_tagged (the async parameter-gather lifecycle)
+        let (results, _) = run_cluster(2, |ctx| {
+            let other = 1 - ctx.rank;
+            ctx.send_wire_tagged(other, 42, WireMsg::F32(vec![ctx.rank as f32]));
+            // untagged scalar all-reduce with the tagged message in flight
+            let sum = ctx.tree_all_reduce_scalar((ctx.rank + 1) as f64);
+            let v = match ctx.recv_wire_tagged(other, 42) {
+                WireMsg::F32(v) => v[0],
+                _ => panic!(),
+            };
+            (sum, v)
+        });
+        assert_eq!(results[0], (3.0, 1.0));
+        assert_eq!(results[1], (3.0, 0.0));
     }
 
     #[test]

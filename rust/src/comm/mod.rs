@@ -30,6 +30,13 @@
 //! the original single-encoder code — which bitwise-comparison tests and
 //! PowerSGD (a whole-tensor compressor) rely on.
 //!
+//! The parameter path has an asynchronous variant on top of the same
+//! tagged wire: [`SyncEngine::param_gather_launch`] pushes the updated
+//! shard out without receiving anything and returns a [`PendingParams`]
+//! handle; [`SyncEngine::param_gather_drain`] completes it later — after
+//! the next step's forward/backward has run on a one-step-stale view
+//! (`train.sync_params = "async"`, DESIGN.md §"Async parameter sync").
+//!
 //! Determinism: bucket boundaries, encoder state and decode order (sources
 //! in rank order within each bucket) are all schedule-independent, so a
 //! run produces identical results regardless of worker timing — the
@@ -60,7 +67,34 @@ enum Job<'a> {
 
 /// Per-node gradient-synchronization engine for the Zero-2 all-to-all
 /// path. Owns the bucket schedule, one encoder per bucket, and one decoder
-/// per owned bucket; [`SyncEngine::sync`] runs one exchange.
+/// per owned bucket; [`SyncEngine::sync`] runs one exchange, and
+/// [`SyncEngine::param_gather`] (or its asynchronous
+/// launch/drain split) moves the updated parameters back out.
+///
+/// ```
+/// use loco::collective::run_cluster;
+/// use loco::comm::SyncEngine;
+/// use loco::compress::CompressorConfig;
+/// use loco::sharding::{ParamLayout, Partition};
+///
+/// let total = 64;
+/// let n = 2;
+/// let layout = ParamLayout::single("w", &[total]);
+/// let part = Partition::flat_even(total, n, 2);
+/// let cfg = CompressorConfig { s: 16.0, ..Default::default() };
+/// let (results, _) = run_cluster(n, |ctx| {
+///     let engine = SyncEngine::new(&cfg, &layout, &part, ctx.rank, n);
+///     let grad = vec![0.25f32; total];
+///     let mut acc = vec![0.0f32; part.ranges[ctx.rank].len()];
+///     engine.sync(&ctx, &grad, &mut acc, 1);
+///     acc
+/// });
+/// // 0.25 * 16 = 4.0 is exactly representable in 4 bits, so the decoded
+/// // sum of both nodes' contributions is exact
+/// for acc in &results {
+///     assert!(acc.iter().all(|&x| (x - 0.5).abs() < 1e-6));
+/// }
+/// ```
 pub struct SyncEngine {
     plan: BucketPlan,
     ranges: Vec<Range<usize>>,
@@ -72,7 +106,10 @@ pub struct SyncEngine {
     enc: Vec<Mutex<Box<dyn Encoder>>>,
     /// one decoder per *owned* bucket, aligned with `own`
     dec: Vec<Mutex<Box<dyn Decoder>>>,
-    /// bucket ids this node owns (receives), in flat order
+    /// bucket ids this node owns (receives), in flat order — populated
+    /// only on bucketed plans (empty on the monolithic path, which keeps
+    /// the original code shape); the parameter launch/drain pair must
+    /// therefore use `plan.own(rank)`, which is valid on both
     own: Vec<usize>,
     /// encode schedule (round-robin across destinations)
     sched: Vec<usize>,
@@ -328,11 +365,13 @@ impl SyncEngine {
     /// end bitwise identical).
     ///
     /// On the monolithic plan this is the original ring all-gather. On a
-    /// bucketed plan each own bucket is sent directly to every peer on the
-    /// tagged wire ([`BucketPlan::param_tag`]) — the same total byte volume
-    /// as the ring, but receivers can decode bucket k while bucket k+1 is
-    /// still in flight, and the messages pipeline behind the gradient
-    /// buckets of the same step.
+    /// bucketed plan this is exactly [`SyncEngine::param_gather_launch`]
+    /// followed by an immediate [`SyncEngine::param_gather_drain`]: each
+    /// own bucket is sent directly to every peer on the tagged wire
+    /// ([`BucketPlan::param_tag`]) — the same total byte volume as the
+    /// ring, but receivers can decode bucket k while bucket k+1 is still
+    /// in flight, and the messages pipeline behind the gradient buckets
+    /// of the same step.
     pub fn param_gather<C: Comm>(
         &self,
         ctx: &C,
@@ -342,39 +381,122 @@ impl SyncEngine {
         bf16: bool,
     ) {
         debug_assert_eq!(master.len(), self.my_range.len());
-        let encode = |xs: &[f32]| -> WireMsg {
-            if bf16 {
-                WireMsg::Bf16(xs.iter().map(|&x| fp::f32_to_bf16(x)).collect())
-            } else {
-                WireMsg::F32(xs.to_vec())
-            }
-        };
         if self.mono.is_some() {
-            let all = ctx.all_gather_wire(encode(master));
+            let all = ctx.all_gather_wire(encode_params(master, bf16));
             for (src, msg) in all.iter().enumerate() {
                 compress::write_wire(msg, &mut params[self.ranges[src].clone()]);
             }
             return;
         }
+        let pending = self.param_gather_launch(ctx, master, step, bf16);
+        self.param_gather_drain(ctx, pending, params);
+    }
+
+    /// Launch a *non-blocking* parameter gather: encode every own bucket
+    /// at wire precision, push it to all peers on the tagged wire
+    /// ([`BucketPlan::param_tag`] — monolithic plans still have one
+    /// bucket per shard, so this works for them too, trading the ring
+    /// for a tagged star of the same byte volume), and return a
+    /// [`PendingParams`] handle *without receiving anything*. The caller
+    /// may run arbitrary compute and even the next step's gradient
+    /// exchange before draining — tag namespaces keep the in-flight
+    /// messages separate, and untagged collectives skip over them
+    /// ([`crate::collective::NodeCtx::recv`]).
+    ///
+    /// This is the mechanism behind `train.sync_params = "async"`: the
+    /// gather of step k rides the wire while the forward pass of step
+    /// k+1 runs against the previous (one-step-stale) parameter view.
+    pub fn param_gather_launch<C: Comm>(
+        &self,
+        ctx: &C,
+        master: &[f32],
+        step: u64,
+        bf16: bool,
+    ) -> PendingParams {
+        debug_assert_eq!(master.len(), self.my_range.len());
         let n = self.n;
-        for &bi in &self.own {
+        let mut own = Vec::with_capacity(self.plan.own(self.rank).len());
+        for &bi in self.plan.own(self.rank) {
             let b = &self.plan.buckets[bi];
             let rel = b.range.start - self.my_range.start..b.range.end - self.my_range.start;
-            let msg = encode(&master[rel]);
+            let msg = encode_params(&master[rel], bf16);
             for off in 1..n {
                 let dst = (self.rank + off) % n;
                 ctx.peer_send_tagged(dst, self.plan.param_tag(step, bi), msg.clone());
             }
-            // own shard goes through the same wire roundtrip as peers see
-            compress::write_wire(&msg, &mut params[b.range.clone()]);
+            own.push((bi, msg));
         }
+        let mut recvs = Vec::new();
         for off in 1..n {
             let src = (self.rank + n - off) % n;
             for &bi in self.plan.own(src) {
-                let msg = ctx.peer_recv_tagged(src, self.plan.param_tag(step, bi));
-                compress::write_wire(&msg, &mut params[self.plan.buckets[bi].range.clone()]);
+                recvs.push((src, bi));
             }
         }
+        PendingParams { step, own, recvs }
+    }
+
+    /// Complete a gather started by [`SyncEngine::param_gather_launch`]:
+    /// apply the stashed own-bucket wire images and receive every peer
+    /// bucket, overwriting all of `params` covered by the partition. The
+    /// view flips to the gathered parameters here and nowhere else — the
+    /// own shard goes through the same wire roundtrip peers see, so all
+    /// members end bitwise identical, exactly as after
+    /// [`SyncEngine::param_gather`].
+    pub fn param_gather_drain<C: Comm>(
+        &self,
+        ctx: &C,
+        pending: PendingParams,
+        params: &mut [f32],
+    ) {
+        let PendingParams { step, own, recvs } = pending;
+        for (bi, msg) in &own {
+            compress::write_wire(msg, &mut params[self.plan.buckets[*bi].range.clone()]);
+        }
+        for &(src, bi) in &recvs {
+            let msg = ctx.peer_recv_tagged(src, self.plan.param_tag(step, bi));
+            compress::write_wire(&msg, &mut params[self.plan.buckets[bi].range.clone()]);
+        }
+    }
+}
+
+/// Encode an fp32 slice at parameter-wire precision (the paper's
+/// b_w = 16 bf16 default, or f32 for the uncompressed reference).
+/// Shared with the hierarchical engine's island broadcast so the two
+/// encode sites stay bitwise in lockstep.
+pub(crate) fn encode_params(xs: &[f32], bf16: bool) -> WireMsg {
+    if bf16 {
+        WireMsg::Bf16(xs.iter().map(|&x| fp::f32_to_bf16(x)).collect())
+    } else {
+        WireMsg::F32(xs.to_vec())
+    }
+}
+
+/// Completion handle for an asynchronous parameter gather
+/// ([`SyncEngine::param_gather_launch`]): the own-bucket wire images to
+/// apply locally plus the (source, bucket) receives still outstanding.
+/// Dropping a handle without draining it strands its messages in the
+/// peers' reorder buffers, so the trainer always drains before the next
+/// optimizer step (and skips the launch entirely on the final step).
+pub struct PendingParams {
+    /// the step this gather was launched at (tag namespace)
+    step: u64,
+    /// own buckets already encoded and sent, applied at drain so the
+    /// parameter view flips in one place
+    own: Vec<(usize, WireMsg)>,
+    /// (communicator-local source rank, bucket id), in receive order
+    recvs: Vec<(usize, usize)>,
+}
+
+impl PendingParams {
+    /// Number of wire messages the drain still has to receive.
+    pub fn outstanding(&self) -> usize {
+        self.recvs.len()
+    }
+
+    /// The step this gather was launched at.
+    pub fn step(&self) -> u64 {
+        self.step
     }
 }
 
@@ -523,6 +645,76 @@ mod tests {
             for r in &b {
                 assert_eq!(r, &b[0]);
             }
+        }
+    }
+
+    #[test]
+    fn launch_drain_matches_param_gather() {
+        // the asynchronous split must deliver bitwise the parameters of
+        // the synchronous gather, on monolithic and bucketed plans alike
+        let total = 2048;
+        let n = 4;
+        let layout = ParamLayout::single("flat", &[total]);
+        let part = Partition::flat_even(total, n, 2);
+        for bucket_bytes in [0usize, 512] {
+            for bf16 in [false, true] {
+                let cfg = CompressorConfig { bucket_bytes, ..Default::default() };
+                let sync_r = run_param_gather(&cfg, total, n, bf16);
+                let (async_r, _) = run_cluster(n, |ctx| {
+                    let engine = SyncEngine::new(&cfg, &layout, &part, ctx.rank, n);
+                    let my = part.ranges[ctx.rank].clone();
+                    let master: Vec<f32> =
+                        my.clone().map(|i| (ctx.rank * 10_000 + i) as f32 * 0.001).collect();
+                    let mut params = vec![0.0f32; total];
+                    let pending = engine.param_gather_launch(&ctx, &master, 1, bf16);
+                    assert!(pending.outstanding() > 0);
+                    assert_eq!(pending.step(), 1);
+                    engine.param_gather_drain(&ctx, pending, &mut params);
+                    params
+                });
+                for (a, b) in sync_r.iter().zip(&async_r) {
+                    assert_eq!(a, b, "bucket_bytes={bucket_bytes} bf16={bf16}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_sync_interleaves_with_pending_param_gather() {
+        // launch step-1 params, run the step-2 gradient exchange BEFORE
+        // draining: disjoint tag namespaces keep the two apart, the
+        // drained parameters match the synchronous gather, and the
+        // accumulators match a pure-sync double exchange
+        let total = 2048;
+        let n = 4;
+        let cfg = CompressorConfig {
+            s: 64.0,
+            bucket_bytes: 512,
+            sync_workers: 2,
+            ..Default::default()
+        };
+        let layout = ParamLayout::single("flat", &[total]);
+        let part = Partition::flat_even(total, n, 2);
+        let (results, _) = run_cluster(n, |ctx| {
+            let engine = SyncEngine::new(&cfg, &layout, &part, ctx.rank, n);
+            let my = part.ranges[ctx.rank].clone();
+            let g = node_grad(ctx.rank, total);
+            let mut acc = vec![0.0f32; my.len()];
+            engine.sync(&ctx, &g, &mut acc, 1);
+            let master: Vec<f32> = my.clone().map(|i| i as f32 * 0.001).collect();
+            let pending = engine.param_gather_launch(&ctx, &master, 1, true);
+            // the next step's gradient exchange overlaps the gather
+            engine.sync(&ctx, &g, &mut acc, 2);
+            let mut params = vec![0.0f32; total];
+            engine.param_gather_drain(&ctx, pending, &mut params);
+            (params, acc)
+        });
+        for (params, _) in &results {
+            assert_eq!(params, &results[0].0, "nodes diverged on drained params");
+        }
+        let pure = run_sync(&cfg, total, n, 2);
+        for ((_, acc), want) in results.iter().zip(&pure) {
+            assert_eq!(acc, want, "in-flight gather changed gradient numerics");
         }
     }
 

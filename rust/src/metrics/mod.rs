@@ -53,6 +53,19 @@ pub struct RunMetrics {
     pub comm_bytes_fp32: u64,
     /// peak per-node state overhead of the compressor (error stores etc.)
     pub compressor_state_bytes: usize,
+    /// seconds rank 0 spent blocked completing the parameter gather —
+    /// the whole gather in sync mode, only the drain in async mode
+    pub param_sync_wait_s: f64,
+    /// seconds rank 0 spent launching asynchronous parameter gathers
+    /// (encode + non-blocking sends; 0 in sync mode)
+    pub param_sync_launch_s: f64,
+    /// seconds between each async launch completing and its drain
+    /// starting — the window the in-flight gather had to itself while
+    /// rank 0 computed (0 in sync mode)
+    pub param_sync_window_s: f64,
+    /// forward passes that ran against a one-step-stale parameter view
+    /// (`sync_params = "async"`: steps − 1; sync mode: 0)
+    pub param_stale_steps: u64,
     pub steps: u64,
 }
 
@@ -71,6 +84,24 @@ impl RunMetrics {
             return 1.0;
         }
         self.comm_bytes_fp32 as f64 / self.comm_bytes as f64
+    }
+
+    /// Fraction of the gather's wire occupancy hidden behind the
+    /// launch→drain window: `1 − wait / (wait + window)`
+    /// ([`RunMetrics::param_sync_window_s`]). When the gather finished
+    /// inside the window (wait ≈ 0) this approaches 1.0; a fully
+    /// synchronous gather (window = 0) scores 0.0. Note this is an
+    /// *upper bound* on the truly-private overlap: the window also
+    /// spans the next step's gradient exchange, whose wire time the
+    /// gather shares rather than owns (the analytic model in
+    /// `netsim::throughput::analytic_throughput_async` accounts the
+    /// two separately for exactly that reason).
+    pub fn param_overlap_efficiency(&self) -> f64 {
+        let total = self.param_sync_wait_s + self.param_sync_window_s;
+        if total <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.param_sync_wait_s / total
     }
 
     /// Write loss curves as CSV: step,train_loss,val_loss (val sparse).
@@ -108,6 +139,25 @@ mod tests {
         assert_eq!(s.tail_mean(2), 8.5);
         assert_eq!(s.last(), Some(9.0));
         assert!(Series::new("e").tail_mean(3).is_nan());
+    }
+
+    #[test]
+    fn overlap_efficiency_bounds() {
+        let mut m = RunMetrics::new();
+        // no gather at all / fully synchronous gather
+        assert_eq!(m.param_overlap_efficiency(), 0.0);
+        m.param_sync_wait_s = 1.0;
+        assert_eq!(m.param_overlap_efficiency(), 0.0);
+        // 90 ms hidden behind compute, 10 ms exposed at the drain
+        m.param_sync_wait_s = 0.010;
+        m.param_sync_window_s = 0.090;
+        assert!((m.param_overlap_efficiency() - 0.9).abs() < 1e-12);
+        // launch cost must not inflate the efficiency
+        m.param_sync_launch_s = 0.004;
+        assert!((m.param_overlap_efficiency() - 0.9).abs() < 1e-12);
+        // gather finished inside the window
+        m.param_sync_wait_s = 0.0;
+        assert_eq!(m.param_overlap_efficiency(), 1.0);
     }
 
     #[test]

@@ -16,13 +16,19 @@
 /// Paper-measured peak memory rows (Table 8), GB on 32 GPUs.
 #[derive(Debug, Clone, Copy)]
 pub struct PaperMemoryRow {
+    /// model name as printed in Table 8
     pub model: &'static str,
+    /// training framework ("megatron" or "fsdp")
     pub framework: &'static str,
+    /// model parameter count
     pub params: f64,
+    /// printed peak memory of the 16-bit Adam baseline, GB
     pub adam_gb: f64,
+    /// printed peak memory of Adam + LoCo, GB
     pub loco_gb: f64,
 }
 
+/// All printed rows of Table 8 (peak memory, Adam vs Adam+LoCo).
 pub const PAPER_MEMORY: &[PaperMemoryRow] = &[
     PaperMemoryRow { model: "mixtral-8x7b", framework: "fsdp", params: 46.7e9, adam_gb: 58.8, loco_gb: 64.3 },
     PaperMemoryRow { model: "llama2-7b", framework: "fsdp", params: 6.74e9, adam_gb: 20.5, loco_gb: 22.7 },

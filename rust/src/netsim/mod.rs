@@ -13,8 +13,11 @@
 //!   communication from bytes/bandwidth; used for sanity and for
 //!   configurations the paper does not report.
 
+/// Peak-memory model (Table 8).
 pub mod memory;
+/// Table 1 cost accounting (wire bytes + extra state per method).
 pub mod table1;
+/// Fit/analytic/overlap/async throughput models (Tables 7/10/11/12).
 pub mod throughput;
 
 /// A node interconnect preset. `bw` is the effective per-GPU algorithm
@@ -22,7 +25,9 @@ pub mod throughput;
 /// DESIGN.md §Hardware-Adaptation; the fit mode does not use it).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Interconnect {
+    /// preset name (table and CLI labels)
     pub name: &'static str,
+    /// effective per-GPU algorithm bandwidth, bytes/s
     pub bw: f64,
 }
 
@@ -38,7 +43,9 @@ pub const NVLINK: Interconnect = Interconnect { name: "nvlink", bw: 300e9 };
 /// GPU compute preset (bf16).
 #[derive(Debug, Clone, Copy)]
 pub struct Gpu {
+    /// preset name (table and CLI labels)
     pub name: &'static str,
+    /// peak bf16 FLOP/s
     pub flops: f64,
     /// achieved MFU for transformer training
     pub mfu: f64,
@@ -48,6 +55,7 @@ pub struct Gpu {
     pub mem_bw: f64,
 }
 
+/// A100 bf16 compute preset (dense-transformer MFU, HBM2e bandwidth).
 pub const A100: Gpu = Gpu { name: "a100", flops: 312e12, mfu: 0.45, mem_bw: 2.0e12 };
 
 /// Bytes of memory traffic per parameter for the compression kernels of
@@ -82,6 +90,24 @@ pub fn wire_bytes_per_param(method: &str) -> f64 {
     }
 }
 
+/// The parameter-synchronization component of [`wire_bytes_per_param`]:
+/// bytes per parameter per step spent on the gather that redistributes
+/// updated weights (16-bit for most methods — the paper's b_w = 16 —
+/// int8 for the Zero++ family's quantized all-gather, fp32 for the
+/// uncompressed reference, the 1-bit residual hop for 1-bit Adam). The
+/// gradient-exchange component is the remainder. This is the part of the
+/// wire budget the asynchronous schedule
+/// ([`throughput::analytic_throughput_async`],
+/// `train.sync_params = "async"`) hides behind the next step's forward.
+pub fn param_wire_bytes_per_param(method: &str) -> f64 {
+    match method {
+        "fp32" => 4.0,
+        "zeropp" | "loco-zeropp" => 1.0,
+        "onebit" => 0.2,
+        _ => 2.0,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,5 +122,13 @@ mod tests {
     fn loco_wire_ratio_matches_table1() {
         let k = wire_bytes_per_param("loco") / wire_bytes_per_param("adam");
         assert!((k - 0.5625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn param_component_never_exceeds_total() {
+        for m in ["adam", "bf16", "loco", "ef21", "zeropp", "loco-zeropp", "onebit", "fp32"] {
+            let p = param_wire_bytes_per_param(m);
+            assert!(p > 0.0 && p <= wire_bytes_per_param(m), "{m}: {p}");
+        }
     }
 }

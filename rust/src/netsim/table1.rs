@@ -7,15 +7,21 @@ use crate::report::Table;
 /// One method row of Table 1.
 #[derive(Debug, Clone, Copy)]
 pub struct MethodRow {
+    /// method name as printed in Table 1
     pub name: &'static str,
+    /// extra computational complexity column
     pub complexity: &'static str,
     /// comm time as a function of (psi, n, b, r) in seconds
     pub comm_time: fn(f64, f64, f64, f64) -> f64,
+    /// human-readable form of `comm_time`
     pub comm_formula: &'static str,
     /// memory in bytes as a function of (psi, n, r)
     pub memory: fn(f64, f64, f64) -> f64,
+    /// human-readable form of `memory`
     pub mem_formula: &'static str,
+    /// supports collective (all-to-all/reduce-scatter) communication
     pub collective: bool,
+    /// compatible with Zero-style parameter sharding
     pub sharding: bool,
 }
 

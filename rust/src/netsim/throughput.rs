@@ -17,17 +17,24 @@
 //! configurations the paper does not report.
 
 use crate::model::AnalyticModel;
-use crate::netsim::{encode_bytes_per_param, wire_bytes_per_param, Gpu, Interconnect};
+use crate::netsim::{
+    encode_bytes_per_param, param_wire_bytes_per_param, wire_bytes_per_param, Gpu, Interconnect,
+};
 
 /// Paper-reported Adam throughput (tokens/s) at accum = 4, 2, 1
 /// (Table 11 / Table 12). `loco` holds the printed LoCo rows so benches
 /// can report paper-vs-model residuals.
 #[derive(Debug, Clone, Copy)]
 pub struct PaperBaseline {
+    /// model name as printed in Table 11/12
     pub model: &'static str,
+    /// cluster preset name ([`Interconnect`])
     pub cluster: &'static str,
+    /// data-parallel GPU count of the row
     pub gpus: usize,
+    /// printed Adam tokens/s at accum = [`ACCUMS`]
     pub adam: [f64; 3],
+    /// printed LoCo tokens/s at accum = [`ACCUMS`]
     pub loco: [f64; 3],
 }
 
@@ -129,6 +136,7 @@ impl FitModel {
         FitModel { alpha, beta }
     }
 
+    /// Modeled tokens/s at accumulation number `accum`.
     pub fn throughput(&self, accum: f64) -> f64 {
         1.0 / (self.alpha + self.beta / accum)
     }
@@ -202,7 +210,15 @@ pub fn auto_bucket_bytes(method: &str, shard_elems: usize, bits: u32) -> usize {
     let shard_elems = shard_elems.max(1);
     let gpu = crate::netsim::A100;
     let link = crate::netsim::A800_IB;
-    let t_wire = shard_elems as f64 * bits as f64 / 8.0 / link.bw;
+    // `bits` is the quantizer width knob — only the quantizing methods
+    // actually put it on the wire; fixed-width formats override it
+    let wire_bits = match method {
+        "fp32" => 32.0,
+        "bf16" | "adam" | "sgd" => 16.0,
+        "onebit" => 1.0,
+        _ => bits as f64,
+    };
+    let t_wire = shard_elems as f64 * wire_bits / 8.0 / link.bw;
     let t_enc = encode_bytes_per_param(method) * shard_elems as f64 / gpu.mem_bw;
     let mut best = (1usize, f64::INFINITY);
     for b in 1..=256usize {
@@ -302,6 +318,47 @@ pub fn analytic_throughput_overlapped(
     (tokens / step, comm / step)
 }
 
+/// First-principles step time with the asynchronous one-step-stale
+/// parameter sync (`train.sync_params = "async"`): the gradient exchange
+/// stays on the critical path exactly as in
+/// [`analytic_throughput_overlapped`] (encode pipelined against the
+/// gradient wire over `buckets` buckets), but the parameter gather —
+/// [`param_wire_bytes_per_param`] of the method's wire budget — is
+/// launched after the optimizer step and drained only after the next
+/// step's forward/backward, so the wire is otherwise idle for the whole
+/// fwd+bwd window and only the gather's excess over it is exposed at the
+/// drain point. The gather is *not* hidden behind the gradient exchange:
+/// both ride the same link, so their wire times serialize. Returns
+/// (tokens/s for the whole cluster, comm fraction of step time).
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_throughput_async(
+    model: &AnalyticModel,
+    gpu: Gpu,
+    net: Interconnect,
+    gpus: usize,
+    mbs_tokens: f64,
+    accum: f64,
+    method: &str,
+    buckets: usize,
+) -> (f64, f64) {
+    let flops_per_token = 6.0 * model.active_params;
+    let compute = accum * mbs_tokens * flops_per_token / (gpu.flops * gpu.mfu);
+    let n = gpus as f64;
+    let total = wire_bytes_per_param(method);
+    let param = param_wire_bytes_per_param(method).min(total);
+    let t_grad_wire = (total - param) * model.params * (n - 1.0) / (n * net.bw);
+    let t_enc = encode_bytes_per_param(method) * model.params / gpu.mem_bw;
+    let t_grad = pipelined_time(t_enc, t_grad_wire, buckets, BUCKET_OVERHEAD_S);
+    let t_param = param * model.params * (n - 1.0) / (n * net.bw);
+    // the gather rides the wire from launch (after the optimizer step)
+    // to drain (after the next fwd+bwd); the drain exposes only what
+    // that compute window does not cover
+    let comm = t_grad + (t_param - compute).max(0.0);
+    let step = compute + comm;
+    let tokens = accum * mbs_tokens * n;
+    (tokens / step, comm / step)
+}
+
 /// Two-tier first-principles step time for the hierarchical engine
 /// (`topology::HierSyncEngine`): (1) fp32 ring reduce-scatter plus the
 /// parameter hop inside each `island_size`-GPU NVLink island at `intra`
@@ -351,6 +408,48 @@ pub fn analytic_throughput_hier(
     let comm = t_intra + t_inter;
     let step = compute + comm;
     let tokens = accum * mbs_tokens * n;
+    (tokens / step, comm / step)
+}
+
+/// [`analytic_throughput_hier`] with the asynchronous parameter sync:
+/// the inter-island share of the parameter gather
+/// ([`param_wire_bytes_per_param`], scaled by the same (K−1)/(mK)
+/// two-level factor) hides behind the next fwd+bwd window as in
+/// [`analytic_throughput_async`]; the fp32 intra reduce and the island
+/// parameter broadcast stay on the critical path (the broadcast runs at
+/// the drain point but rides NVLink — the async schedule hides only the
+/// slow hop). `island_size = 1` reproduces [`analytic_throughput_async`]
+/// exactly. Returns (tokens/s for the whole cluster, comm fraction).
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_throughput_hier_async(
+    model: &AnalyticModel,
+    gpu: Gpu,
+    intra: Interconnect,
+    inter: Interconnect,
+    gpus: usize,
+    island_size: usize,
+    mbs_tokens: f64,
+    accum: f64,
+    method: &str,
+    buckets: usize,
+) -> (f64, f64) {
+    assert!(island_size >= 1 && gpus % island_size == 0, "gpus must divide into islands");
+    let islands = (gpus / island_size) as f64;
+    let m = island_size as f64;
+    let psi = model.params;
+    let flops_per_token = 6.0 * model.active_params;
+    let compute = accum * mbs_tokens * flops_per_token / (gpu.flops * gpu.mfu);
+    let t_intra = (4.0 + 2.0) * psi * (m - 1.0) / (m * intra.bw);
+    let total = wire_bytes_per_param(method);
+    let param = param_wire_bytes_per_param(method).min(total);
+    let scale = (islands - 1.0) / (m * islands * inter.bw);
+    let t_grad_wire = (total - param) * psi * scale;
+    let t_enc = encode_bytes_per_param(method) * psi / (m * gpu.mem_bw);
+    let t_grad = pipelined_time(t_enc, t_grad_wire, buckets, BUCKET_OVERHEAD_S);
+    let t_param_inter = param * psi * scale;
+    let comm = t_intra + t_grad + (t_param_inter - compute).max(0.0);
+    let step = compute + comm;
+    let tokens = accum * mbs_tokens * gpus as f64;
     (tokens / step, comm / step)
 }
 
@@ -473,6 +572,58 @@ mod tests {
         // model approaches but cannot beat (it still pays fill+drain)
         let (upper, _) = analytic_throughput(m, A100, A800_IB, 64, 4096.0, 1.0, "loco");
         assert!(piped < upper);
+    }
+
+    #[test]
+    fn async_beats_sync_and_hides_the_gather() {
+        // hiding the parameter gather behind the next forward must be a
+        // strict win over the synchronous overlapped engine, for the
+        // compressed and the uncompressed method alike
+        let m = analytic_model("llama2-7b").unwrap();
+        for method in ["loco", "adam"] {
+            let (sync, _) =
+                analytic_throughput_overlapped(m, A100, A800_IB, 64, 4096.0, 1.0, method, 8);
+            let (asyn, frac) =
+                analytic_throughput_async(m, A100, A800_IB, 64, 4096.0, 1.0, method, 8);
+            assert!(asyn > sync, "{method}: {asyn} <= {sync}");
+            assert!(frac > 0.0 && frac < 1.0);
+        }
+        // with more accumulation the forward window grows and swallows
+        // the gather entirely: the comm fraction keeps shrinking
+        let (_, f1) = analytic_throughput_async(m, A100, A800_IB, 64, 4096.0, 1.0, "loco", 8);
+        let (_, f4) = analytic_throughput_async(m, A100, A800_IB, 64, 4096.0, 4.0, "loco", 8);
+        assert!(f4 < f1, "{f4} >= {f1}");
+    }
+
+    #[test]
+    fn hier_async_matches_flat_async_at_island_size_one() {
+        let m = analytic_model("llama2-7b").unwrap();
+        let (flat, ff) = analytic_throughput_async(m, A100, A800_IB, 64, 4096.0, 1.0, "loco", 8);
+        let (hier, hf) = analytic_throughput_hier_async(
+            m, A100, NVLINK, A800_IB, 64, 1, 4096.0, 1.0, "loco", 8,
+        );
+        assert!((flat - hier).abs() / flat < 1e-12, "{flat} vs {hier}");
+        assert!((ff - hf).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hier_async_beats_hier_sync() {
+        // the async schedule hides the inter-island share of the gather;
+        // on every island size it must be at least as fast as the
+        // synchronous hierarchy, and strictly faster while the gather is
+        // not yet fully amortized by island scaling
+        let m = analytic_model("llama2-7b").unwrap();
+        for island in [1usize, 2, 4, 8] {
+            let (sync, _) = analytic_throughput_hier(
+                m, A100, NVLINK, A800_IB, 64, island, 4096.0, 1.0, "loco", 8,
+            );
+            let (asyn, _) = analytic_throughput_hier_async(
+                m, A100, NVLINK, A800_IB, 64, island, 4096.0, 1.0, "loco", 8,
+            );
+            // the inter-island gather always has something to hide on
+            // this fabric: the win is strict at every island size
+            assert!(asyn > sync, "island={island}: {asyn} <= {sync}");
+        }
     }
 
     #[test]

@@ -40,6 +40,14 @@
 //! minimum without inter-island multicast — every island needs its own
 //! copy), and the redistribution inside each island is intra-only.
 //!
+//! Phase 3 also exists in an asynchronous split
+//! ([`HierSyncEngine::param_sync_launch`] /
+//! [`HierSyncEngine::param_sync_drain`]): the inter-hop gather is pushed
+//! onto the tagged wire right after the optimizer step and drained only
+//! after the next step's forward/backward — the island broadcast then
+//! runs at the drain point on the fast intra links
+//! (`train.sync_params = "async"`, DESIGN.md §"Async parameter sync").
+//!
 //! `islands = 1` *is* the flat engine: construction delegates to the
 //! unchanged [`SyncEngine`] over the cluster partition, bit-for-bit
 //! (`tests/hier_topology.rs` pins this). With more than one island the
@@ -54,12 +62,27 @@ use anyhow::{ensure, Result};
 
 use crate::collective::{Comm, NodeCtx};
 use crate::comm::SyncEngine;
-use crate::compress::{self, CompressorConfig, Method, WireMsg};
+use crate::compress::{self, CompressorConfig, Method};
 use crate::sharding::{ParamLayout, Partition};
 
 /// A cluster of `n` nodes grouped into `islands` equal islands of
 /// consecutive ranks (matching [`crate::collective::ClusterSpec`]'s
 /// island map).
+///
+/// ```
+/// use loco::topology::Topology;
+///
+/// let t = Topology::new(8, 2).unwrap();
+/// assert_eq!(t.island_size(), 4);
+/// assert_eq!(t.island_of(5), 1);
+/// // rank 5's cross-island peer group: local rank 1 of every island
+/// assert_eq!(t.peer_group(5), vec![1, 5]);
+/// // the two-level Zero-2 cut tiles the model exactly
+/// let part = t.partition(1024);
+/// assert_eq!(part.ranges.len(), 8);
+/// let covered: usize = part.ranges.iter().map(|r| r.len()).sum();
+/// assert_eq!(covered, 1024);
+/// ```
 #[derive(Debug, Clone)]
 pub struct Topology {
     n: usize,
@@ -85,14 +108,17 @@ impl Topology {
         Topology { n, islands: 1, island_size: n }
     }
 
+    /// Total number of nodes in the cluster.
     pub fn n(&self) -> usize {
         self.n
     }
 
+    /// Number of islands (1 on the flat topology).
     pub fn islands(&self) -> usize {
         self.islands
     }
 
+    /// Nodes per island (`n` on the flat topology).
     pub fn island_size(&self) -> usize {
         self.island_size
     }
@@ -214,6 +240,7 @@ impl HierSyncEngine {
         })
     }
 
+    /// True when this engine runs the three-phase island schedule.
     pub fn is_hierarchical(&self) -> bool {
         self.topo.is_hierarchical()
     }
@@ -278,18 +305,72 @@ impl HierSyncEngine {
         }
         let inter = ctx.group(&self.peers);
         self.inner.param_gather(&inter, master, params, step, bf16);
-        // my row is now complete; broadcast rows inside the island
-        let mine = {
-            let row = &params[self.my_row.clone()];
-            if bf16 {
-                // the row already holds bf16-decoded values, so this
-                // re-encoding is lossless and every node stays bitwise
-                // identical
-                WireMsg::Bf16(row.iter().map(|&x| compress::fp::f32_to_bf16(x)).collect())
-            } else {
-                WireMsg::F32(row.to_vec())
-            }
+        self.broadcast_rows(ctx, params, bf16);
+    }
+
+    /// Launch phase 3 without blocking: the own shard is encoded and
+    /// pushed to the cross-island peer group on the tagged wire (the slow
+    /// hop — flat topologies launch over the whole cluster), and a
+    /// [`PendingHierParams`] handle is returned. The caller runs the next
+    /// step's forward/backward (and gradient sync) on the previous
+    /// parameter view, then completes the gather with
+    /// [`HierSyncEngine::param_sync_drain`] — the one-step-stale schedule
+    /// of `train.sync_params = "async"`.
+    pub fn param_sync_launch(
+        &self,
+        ctx: &NodeCtx,
+        master: &[f32],
+        step: u64,
+        bf16: bool,
+    ) -> PendingHierParams {
+        let inner = if self.is_hierarchical() {
+            let inter = ctx.group(&self.peers);
+            self.inner.param_gather_launch(&inter, master, step, bf16)
+        } else {
+            self.inner.param_gather_launch(ctx, master, step, bf16)
         };
+        PendingHierParams { inner, bf16 }
+    }
+
+    /// Complete a gather started by [`HierSyncEngine::param_sync_launch`]:
+    /// drain the inter-island (or flat) tagged receives into `params`,
+    /// then — on hierarchical topologies — run the island row broadcast,
+    /// which rides the fast intra links and is therefore cheap at the
+    /// drain point. On return `params` is the full parameter vector at
+    /// wire precision, bitwise identical on every node and to the
+    /// synchronous [`HierSyncEngine::param_sync`].
+    ///
+    /// Returns the time spent receiving the gather itself (the drain
+    /// *wait*, [`crate::metrics::RunMetrics::param_sync_wait_s`]); the
+    /// island broadcast is excluded — it is ordinary critical-path work,
+    /// not exposure of the hidden gather.
+    pub fn param_sync_drain(
+        &self,
+        ctx: &NodeCtx,
+        pending: PendingHierParams,
+        params: &mut [f32],
+    ) -> std::time::Duration {
+        let PendingHierParams { inner, bf16 } = pending;
+        let t0 = std::time::Instant::now();
+        if !self.is_hierarchical() {
+            self.inner.param_gather_drain(ctx, inner, params);
+            return t0.elapsed();
+        }
+        let inter = ctx.group(&self.peers);
+        self.inner.param_gather_drain(&inter, inner, params);
+        let wait = t0.elapsed();
+        self.broadcast_rows(ctx, params, bf16);
+        wait
+    }
+
+    /// Phase-3 tail: my row is complete in `params`; ring-broadcast whole
+    /// rows inside the island (intra traffic only) so every member ends
+    /// with the full vector.
+    fn broadcast_rows(&self, ctx: &NodeCtx, params: &mut [f32], bf16: bool) {
+        // the row already holds wire-decoded values, so this re-encoding
+        // (same encoder as the gather) is lossless and every node stays
+        // bitwise identical
+        let mine = crate::comm::encode_params(&params[self.my_row.clone()], bf16);
         let intra = ctx.group(&self.island);
         let all = intra.all_gather_wire(mine);
         let j = self.topo.local_rank(self.rank);
@@ -298,6 +379,22 @@ impl HierSyncEngine {
                 compress::write_wire(msg, &mut params[self.rows[src].clone()]);
             }
         }
+    }
+}
+
+/// Completion handle for an asynchronous hierarchical parameter sync
+/// ([`HierSyncEngine::param_sync_launch`]): wraps the inter-hop
+/// [`crate::comm::PendingParams`] plus the wire precision the island
+/// broadcast must reuse at drain time.
+pub struct PendingHierParams {
+    inner: crate::comm::PendingParams,
+    bf16: bool,
+}
+
+impl PendingHierParams {
+    /// Number of inter-hop wire messages the drain still has to receive.
+    pub fn outstanding(&self) -> usize {
+        self.inner.outstanding()
     }
 }
 
@@ -523,6 +620,50 @@ mod tests {
                     ));
                     assert_eq!(results[0][i], want, "islands={islands} flat index {i}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn hier_launch_drain_matches_param_sync() {
+        // the asynchronous split must deliver bitwise the parameters of
+        // the synchronous three-phase path, flat and hierarchical alike
+        let total = 2048;
+        let n = 8;
+        for islands in [1usize, 2, 4] {
+            let topo = Topology::new(n, islands).unwrap();
+            let layout = ParamLayout::single("flat", &[total]);
+            let part = if topo.is_hierarchical() {
+                topo.partition(total)
+            } else {
+                Partition::flat_even(total, n, 2)
+            };
+            let cfg = CompressorConfig::default();
+            let run = |asynchronous: bool| {
+                let (results, _) = run_cluster(n, |ctx| {
+                    let engine =
+                        HierSyncEngine::new(&cfg, &layout, &part, &topo, ctx.rank).unwrap();
+                    let my = part.ranges[ctx.rank].clone();
+                    let master: Vec<f32> =
+                        my.clone().map(|i| (i as f32 * 0.37).sin() * 0.1).collect();
+                    let mut params = vec![0.0f32; total];
+                    if asynchronous {
+                        let pending = engine.param_sync_launch(&ctx, &master, 1, true);
+                        let _ = engine.param_sync_drain(&ctx, pending, &mut params);
+                    } else {
+                        engine.param_sync(&ctx, &master, &mut params, 1, true);
+                    }
+                    params
+                });
+                results
+            };
+            let a = run(false);
+            let b = run(true);
+            for (ra, rb) in a.iter().zip(&b) {
+                assert_eq!(ra, rb, "islands={islands}");
+            }
+            for r in &b {
+                assert_eq!(r, &b[0], "islands={islands}: nodes diverged");
             }
         }
     }

@@ -17,6 +17,13 @@
 //! 7. parameter all-gather at `param_sync` precision (bf16 by default,
 //!    matching the paper's b_w = 16).
 //!
+//! With `sync_params = "async"` step 7 is split: the gather is *launched*
+//! after the optimizer step (non-blocking tagged sends), the next step's
+//! forward/backward runs against a double-buffered one-step-stale
+//! parameter view, and the handle is drained only before the next
+//! optimizer step — hiding the gather behind compute (0/1 Adam-style
+//! bounded staleness; DESIGN.md §"Async parameter sync").
+//!
 //! DDP mode (Table 6 / PowerSGD) replaces 3–5 with a full-gradient
 //! all-reduce (tree, or the PowerSGD two-phase protocol) and keeps full
 //! optimizer state on every node.
@@ -36,7 +43,7 @@ use crate::model::ModelMeta;
 use crate::optim::{self, LrSchedule, OptimConfig};
 use crate::runtime::Engine;
 use crate::sharding::Partition;
-use crate::topology::{HierSyncEngine, Topology};
+use crate::topology::{HierSyncEngine, PendingHierParams, Topology};
 use crate::util;
 
 /// Gradient synchronization topology.
@@ -55,8 +62,25 @@ pub enum Mode {
 /// Parameter all-gather precision (paper: 16-bit weights on the wire).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ParamSync {
+    /// Full-precision parameters on the wire (reference).
     F32,
+    /// bf16 parameters on the wire (the paper's b_w = 16 default).
     Bf16,
+}
+
+/// When the gathered parameters become visible to the forward pass
+/// (`train.sync_params`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncParams {
+    /// Gather before the next forward — the paper's schedule, bitwise
+    /// identical to the pre-async trainer (default).
+    Sync,
+    /// One-step-stale: launch the gather right after the optimizer step,
+    /// run the next forward/backward against the previous parameter
+    /// view, and drain the gather only before the next optimizer step —
+    /// the wire carries the parameters while compute runs
+    /// (DESIGN.md §"Async parameter sync").
+    Async,
 }
 
 /// Everything one training run needs.
@@ -71,6 +95,9 @@ pub struct TrainConfig {
     pub seed: u64,
     pub mode: Mode,
     pub param_sync: ParamSync,
+    /// synchronous vs one-step-stale asynchronous parameter gather
+    /// (Zero-2 modes only; `Sync` is bitwise the pre-async trainer)
+    pub sync_params: SyncParams,
     pub optim: OptimConfig,
     pub lr: LrSchedule,
     pub compressor: CompressorConfig,
@@ -100,6 +127,7 @@ impl TrainConfig {
             seed: 0,
             mode: Mode::Zero2,
             param_sync: ParamSync::Bf16,
+            sync_params: SyncParams::Sync,
             optim: OptimConfig::default(),
             lr: LrSchedule::constant(1e-3),
             compressor: CompressorConfig::default(),
@@ -141,6 +169,10 @@ impl Trainer {
         anyhow::ensure!(
             !topo.is_hierarchical() || cfg.mode == Mode::Zero2,
             "topology.islands > 1 requires train.mode = zero2"
+        );
+        anyhow::ensure!(
+            cfg.sync_params == SyncParams::Sync || cfg.mode != Mode::Ddp,
+            "train.sync_params = async requires a Zero-2 mode (DDP has no parameter gather)"
         );
         let part = match cfg.mode {
             Mode::Ddp => Partition { ranges: vec![0..meta.layout.total] },
@@ -241,6 +273,24 @@ impl Trainer {
         let mut shard_acc = vec![0.0f32; my_range.len()];
         let mut metrics = if rank == 0 { Some(RunMetrics::new()) } else { None };
 
+        // --- async parameter sync state (sync_params = "async") ---------
+        // `params` is the compute view the forward pass reads; the drain
+        // writes the gathered (one-step-fresher) parameters into the back
+        // buffer and the two are swapped — every element is overwritten
+        // at each drain, so staleness is always exactly one step and
+        // never compounds.
+        let async_params = cfg.sync_params == SyncParams::Async && cfg.mode != Mode::Ddp;
+        let mut params_back = if async_params { params.clone() } else { Vec::new() };
+        let mut pending: Option<PendingHierParams> = None;
+        // wall-clock instant the last launch completed: the launch→drain
+        // interval is the window the in-flight gather has to itself
+        // (RunMetrics::param_sync_window_s)
+        let mut launched_at: Option<std::time::Instant> = None;
+        let mut param_wait_s = 0.0f64;
+        let mut param_launch_s = 0.0f64;
+        let mut param_window_s = 0.0f64;
+        let mut stale_steps = 0u64;
+
         // fp32 byte volume an uncompressed run would send, for the ratio
         let fp32_step_bytes: u64 = match cfg.mode {
             Mode::Ddp => 2 * 4 * total as u64, // tree up+down, order of magnitude
@@ -302,6 +352,24 @@ impl Trainer {
                 }
             }
 
+            // drain the parameter gather launched after the previous
+            // optimizer step: its messages rode the wire while this
+            // step's forward/backward ran. The compute view flips to the
+            // post-step-(k-1) parameters here — one step stale relative
+            // to the synchronous schedule, applied as full owner shards
+            // (never deltas), so the lag cannot accumulate.
+            if let Some(p) = pending.take() {
+                if let Some(t0) = launched_at.take() {
+                    param_window_s += t0.elapsed().as_secs_f64();
+                }
+                let wait = sync
+                    .as_ref()
+                    .expect("async param sync runs on the Zero-2 engine")
+                    .param_sync_drain(ctx, p, &mut params_back);
+                std::mem::swap(&mut params, &mut params_back);
+                param_wait_s += wait.as_secs_f64();
+            }
+
             // global-norm clip (exact: scalar all-reduce of shard norms)
             if cfg.global_clip > 0.0 {
                 let local_sq: f64 = match cfg.mode {
@@ -327,7 +395,9 @@ impl Trainer {
             // 7: parameter synchronization — through the engine, so the
             // gather is bucketed/tagged whenever the gradient path is, and
             // two-level (inter peer gather + island broadcast) on
-            // hierarchical topologies
+            // hierarchical topologies. In async mode the gather is only
+            // *launched* here; the next step's forward runs on the stale
+            // view and the drain above completes it.
             match cfg.mode {
                 Mode::Ddp => {
                     // all nodes applied the same update; params == master
@@ -335,9 +405,23 @@ impl Trainer {
                 }
                 _ => {
                     let bf16 = cfg.param_sync == ParamSync::Bf16;
-                    sync.as_ref()
-                        .expect("Zero-2 has a sync engine")
-                        .param_sync(ctx, &master, &mut params, step + 1, bf16);
+                    let se = sync.as_ref().expect("Zero-2 has a sync engine");
+                    if async_params {
+                        // final step: nothing would drain the handle — the
+                        // post-loop fp32 master all-gather produces the
+                        // final parameters on a clean wire
+                        if step + 1 < cfg.steps {
+                            let t_launch = std::time::Instant::now();
+                            pending = Some(se.param_sync_launch(ctx, &master, step + 1, bf16));
+                            param_launch_s += t_launch.elapsed().as_secs_f64();
+                            launched_at = Some(std::time::Instant::now());
+                            stale_steps += 1;
+                        }
+                    } else {
+                        let t_gather = std::time::Instant::now();
+                        se.param_sync(ctx, &master, &mut params, step + 1, bf16);
+                        param_wait_s += t_gather.elapsed().as_secs_f64();
+                    }
                 }
             }
 
@@ -389,6 +473,10 @@ impl Trainer {
                 (None, Some((e, d))) => e.state_bytes() + d.state_bytes(),
                 _ => 0,
             };
+            m.param_sync_wait_s = param_wait_s;
+            m.param_sync_launch_s = param_launch_s;
+            m.param_sync_window_s = param_window_s;
+            m.param_stale_steps = stale_steps;
             Ok(Some(RunResult { metrics: m, final_params: params }))
         } else {
             Ok(None)

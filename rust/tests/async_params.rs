@@ -1,0 +1,143 @@
+//! Async one-step-stale parameter sync (`train.sync_params = "async"`)
+//! through the full trainer: sync-mode parity, bounded loss drift vs the
+//! synchronous schedule, hierarchical operation, and the
+//! drain-before-checkpoint edge case at the final step.
+
+use loco::compress::{CompressorConfig, Method};
+use loco::optim::{LrSchedule, OptimConfig, OptimizerKind};
+use loco::train::{Mode, SyncParams, TrainConfig, Trainer};
+
+/// The quickstart configuration (examples/quickstart.rs): tiny model,
+/// 4 nodes, Zero-2, LoCo 4-bit, Adam with warmup+cosine.
+fn quickstart_cfg(steps: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::new("tiny");
+    cfg.nodes = 4;
+    cfg.steps = steps;
+    cfg.optim = OptimConfig { kind: OptimizerKind::Adam, ..Default::default() };
+    cfg.lr = LrSchedule { base: 3e-3, warmup: 10, total: steps, min_ratio: 0.2 };
+    cfg.compressor = CompressorConfig {
+        s: (1u32 << 17) as f32,
+        ..CompressorConfig::with_method(Method::Loco)
+    };
+    cfg
+}
+
+#[test]
+fn sync_is_the_default_and_deterministic() {
+    // `sync_params = "sync"` is the default and must reproduce itself
+    // exactly — the pre-async trainer's behavior is pinned by the whole
+    // existing suite running through this same default path
+    let cfg = quickstart_cfg(10);
+    assert_eq!(cfg.sync_params, SyncParams::Sync);
+    let a = Trainer::new(cfg.clone()).run().expect("sync run");
+    let b = Trainer::new(cfg).run().expect("sync run");
+    assert_eq!(a.final_params, b.final_params);
+    assert_eq!(a.metrics.train_loss.points, b.metrics.train_loss.points);
+    assert_eq!(a.metrics.param_stale_steps, 0);
+    assert_eq!(a.metrics.param_sync_launch_s, 0.0);
+}
+
+#[test]
+fn async_single_step_is_bitwise_sync() {
+    // with one step there is nothing to be stale against: both modes
+    // compute the only gradient at the shared init, and the final
+    // parameters come from the same fp32 master all-gather — the async
+    // schedule must be bitwise invisible on every builtin model
+    for model in ["tiny", "small", "moe_tiny"] {
+        let mut s = quickstart_cfg(1);
+        s.model = model.to_string();
+        s.sync_params = SyncParams::Sync;
+        let mut a = s.clone();
+        a.sync_params = SyncParams::Async;
+        let rs = Trainer::new(s).run().expect("sync run");
+        let ra = Trainer::new(a).run().expect("async run");
+        assert_eq!(rs.final_params, ra.final_params, "{model}");
+        assert_eq!(
+            rs.metrics.train_loss.points, ra.metrics.train_loss.points,
+            "{model}: losses must agree bitwise at a single step"
+        );
+    }
+}
+
+#[test]
+fn async_drift_is_bounded_on_quickstart() {
+    // one-step staleness may cost a little progress but must stay within
+    // a tight band of the synchronous trajectory, and async training must
+    // still make real progress from the init loss
+    for model in ["tiny", "small", "moe_tiny"] {
+        let steps = 30;
+        let mut s = quickstart_cfg(steps);
+        s.model = model.to_string();
+        let mut a = s.clone();
+        a.sync_params = SyncParams::Async;
+        let rs = Trainer::new(s).run().expect("sync run");
+        let ra = Trainer::new(a).run().expect("async run");
+        let ls = rs.metrics.train_loss.points.last().unwrap().1;
+        let la = ra.metrics.train_loss.points.last().unwrap().1;
+        assert!(la.is_finite(), "{model}: async diverged");
+        assert!((la - ls).abs() < 0.35, "{model}: sync {ls} vs async {la}");
+        let first = ra.metrics.train_loss.points.first().unwrap().1;
+        assert!(la < first - 0.05, "{model}: no progress: {first} -> {la}");
+        assert_eq!(ra.metrics.param_stale_steps, steps - 1);
+    }
+}
+
+#[test]
+fn async_hierarchical_trains_and_accounts_bytes() {
+    // async on the two-level topology: the inter-island gather rides the
+    // tagged wire across the next step's three-phase gradient sync
+    let mut cfg = quickstart_cfg(20);
+    cfg.islands = 2;
+    cfg.sync_params = SyncParams::Async;
+    let r = Trainer::new(cfg).run().expect("async hier run");
+    let first = r.metrics.train_loss.points.first().unwrap().1;
+    let last = r.metrics.train_loss.points.last().unwrap().1;
+    assert!(last.is_finite() && last < first, "{first} -> {last}");
+    let m = &r.metrics;
+    assert!(m.comm_bytes_intra > 0 && m.comm_bytes_inter > 0);
+    assert_eq!(m.comm_bytes, m.comm_bytes_intra + m.comm_bytes_inter);
+    assert_eq!(m.param_stale_steps, 19);
+}
+
+#[test]
+fn drain_before_checkpoint_at_final_step() {
+    // the final-step launch is skipped, so the post-loop fp32 master
+    // all-gather (the checkpoint path) runs on a clean wire; the run
+    // must complete, produce finite parameters, and be deterministic
+    // (message timing cannot leak into results: tags + full-shard
+    // overwrites at every drain)
+    for steps in [1u64, 2, 3] {
+        let mut cfg = quickstart_cfg(steps);
+        cfg.sync_params = SyncParams::Async;
+        let r = Trainer::new(cfg.clone()).run().expect("async run");
+        assert!(r.final_params.iter().all(|x| x.is_finite()), "steps={steps}");
+        let r2 = Trainer::new(cfg).run().expect("async run");
+        assert_eq!(r.final_params, r2.final_params, "steps={steps}");
+    }
+}
+
+#[test]
+fn async_rejected_on_ddp() {
+    let mut cfg = quickstart_cfg(2);
+    cfg.mode = Mode::Ddp;
+    cfg.compressor.method = Method::Fp32;
+    cfg.sync_params = SyncParams::Async;
+    assert!(Trainer::new(cfg).run().is_err());
+}
+
+#[test]
+fn async_works_with_bucketed_wire_and_reduce_scatter_mode() {
+    // the async gather rides the same tagged wire as the bucketed
+    // gradient path, and works in the fp32 reduce-scatter reference mode
+    let mut bucketed = quickstart_cfg(8);
+    bucketed.compressor.bucket_bytes = 512;
+    bucketed.sync_params = SyncParams::Async;
+    let rb = Trainer::new(bucketed).run().expect("bucketed async");
+    assert!(rb.metrics.train_loss.tail_mean(2).is_finite());
+
+    let mut rs_mode = quickstart_cfg(8);
+    rs_mode.mode = Mode::Zero2ReduceScatter;
+    rs_mode.sync_params = SyncParams::Async;
+    let rr = Trainer::new(rs_mode).run().expect("reduce-scatter async");
+    assert!(rr.metrics.train_loss.tail_mean(2).is_finite());
+}

@@ -123,17 +123,30 @@ impl BucketPlan {
 
     /// Wire tag of gradient bucket `bi` at `step`. Tags must be unique
     /// among messages concurrently in flight between a (src, dst) pair;
-    /// gradient and parameter buckets of the same step use disjoint
-    /// namespaces (stride `2 * total()`), so the parameter gather of step
-    /// k can overtake a peer still draining step k's gradient buckets.
+    /// gradient, parameter and *stale*-gradient buckets of the same step
+    /// use disjoint namespaces (stride `3 * total()`), so the parameter
+    /// gather of step k can overtake a peer still draining step k's
+    /// gradient buckets, and a stale gradient exchange can stay in flight
+    /// across the following step's collectives.
     pub fn grad_tag(&self, step: u64, bi: usize) -> u64 {
-        step.wrapping_mul(2 * self.total() as u64).wrapping_add(bi as u64)
+        step.wrapping_mul(3 * self.total() as u64).wrapping_add(bi as u64)
     }
 
     /// Wire tag of parameter bucket `bi` at `step` (see [`Self::grad_tag`]).
     pub fn param_tag(&self, step: u64, bi: usize) -> u64 {
-        step.wrapping_mul(2 * self.total() as u64)
+        step.wrapping_mul(3 * self.total() as u64)
             .wrapping_add(self.total() as u64)
+            .wrapping_add(bi as u64)
+    }
+
+    /// Wire tag of a *stale* (launched, drained one step later) gradient
+    /// bucket `bi` at `step` (see [`Self::grad_tag`]). A separate
+    /// namespace from the synchronous gradient tags: the stale exchange
+    /// of step k is still in flight while step k+1's collectives (and a
+    /// possible in-flight parameter gather) run on the same pairs.
+    pub fn stale_grad_tag(&self, step: u64, bi: usize) -> u64 {
+        step.wrapping_mul(3 * self.total() as u64)
+            .wrapping_add(2 * self.total() as u64)
             .wrapping_add(bi as u64)
     }
 
@@ -231,6 +244,22 @@ mod tests {
             "expected a cut at tensor boundary 300: {:?}",
             plan.buckets
         );
+    }
+
+    #[test]
+    fn tag_namespaces_are_disjoint() {
+        let l = layout();
+        let part = Partition::flat_even(l.total, 4, 2);
+        let plan = BucketPlan::new(&part, &l, 64, 2);
+        let mut seen = std::collections::HashSet::new();
+        // all three namespaces over two adjacent steps must never collide
+        for step in [1u64, 2] {
+            for bi in 0..plan.total() {
+                assert!(seen.insert(plan.grad_tag(step, bi)));
+                assert!(seen.insert(plan.param_tag(step, bi)));
+                assert!(seen.insert(plan.stale_grad_tag(step, bi)));
+            }
+        }
     }
 
     #[test]

@@ -37,6 +37,16 @@
 //! the next step's forward/backward has run on a one-step-stale view
 //! (`train.sync_params = "async"`, DESIGN.md §"Async parameter sync").
 //!
+//! The *gradient* path generalizes the same lifecycle
+//! ([`SyncEngine::grad_sync_launch`] → [`PendingGrads`] →
+//! [`SyncEngine::grad_sync_drain`]): the compressed all-to-all of step k
+//! is launched after step k's backward, rides the wire (on its own tag
+//! namespace, [`BucketPlan::stale_grad_tag`]) through step k+1's
+//! forward/backward, and the drained one-step-stale average feeds step
+//! k+1's optimizer update (`train.grad_sync = "stale"`, DESIGN.md
+//! §"Gradient staleness"). A launch immediately followed by its drain is
+//! bitwise identical to [`SyncEngine::sync`].
+//!
 //! Determinism: bucket boundaries, encoder state and decode order (sources
 //! in rank order within each bucket) are all schedule-independent, so a
 //! run produces identical results regardless of worker timing — the
@@ -359,6 +369,115 @@ impl SyncEngine {
         });
     }
 
+    /// Launch a *non-blocking* gradient exchange: compress every
+    /// destination bucket of `grad` exactly as [`SyncEngine::sync`] would
+    /// (same encoders, same error-feedback evolution), push the remote
+    /// buckets onto the tagged wire ([`BucketPlan::stale_grad_tag`] — a
+    /// namespace disjoint from both the synchronous gradient tags and the
+    /// parameter tags), stash the own-destination buckets, and return a
+    /// [`PendingGrads`] handle *without receiving anything*.
+    ///
+    /// This is the mechanism behind `train.grad_sync = "stale"`: the
+    /// exchange of step k rides the wire while step k+1's
+    /// forward/backward runs, and [`SyncEngine::grad_sync_drain`] applies
+    /// the one-step-stale averaged gradient before step k+1's optimizer
+    /// update. A launch immediately followed by its drain is bitwise
+    /// [`SyncEngine::sync`] (pinned by `launch_drain_matches_sync`).
+    ///
+    /// Encoding runs serially on the caller thread (the launch is the
+    /// only encode site left on the critical path in stale mode — the
+    /// analytic model charges it as `t_enc`); routing it through the
+    /// `sync_workers` pool like [`SyncEngine::sync`] does would shrink
+    /// that cost without changing numerics and is a known follow-up.
+    pub fn grad_sync_launch<C: Comm>(&self, ctx: &C, grad: &[f32], step: u64) -> PendingGrads {
+        let mut own = Vec::new();
+        if let Some(m) = &self.mono {
+            // encode in destination order, exactly like the monolithic
+            // sync path, so the single encoder's error state evolves
+            // identically
+            let mut pair = m.lock().unwrap();
+            let enc = &mut pair.0;
+            for dst in 0..self.n {
+                let bi = self.plan.own(dst)[0];
+                let msg = enc.encode(grad, self.ranges[dst].clone(), step);
+                if dst == self.rank {
+                    own.push((bi, msg));
+                } else {
+                    ctx.peer_send_tagged(dst, self.plan.stale_grad_tag(step, bi), msg);
+                }
+            }
+        } else {
+            // per-bucket encoders are independent, so the send schedule's
+            // round-robin order produces the same messages as the pooled
+            // sync path
+            for &bi in &self.sched {
+                let b = &self.plan.buckets[bi];
+                let msg = self.enc[bi].lock().unwrap().encode(grad, b.range.clone(), step);
+                if b.dst == self.rank {
+                    own.push((bi, msg));
+                } else {
+                    ctx.peer_send_tagged(b.dst, self.plan.stale_grad_tag(step, bi), msg);
+                }
+            }
+        }
+        PendingGrads { step, own }
+    }
+
+    /// Complete an exchange started by [`SyncEngine::grad_sync_launch`]:
+    /// receive every outstanding bucket, decode all `n` contributions in
+    /// rank order and accumulate them into `shard_acc` (this node's
+    /// shard, *not* yet averaged — the caller divides by `n`, the same
+    /// contract as [`SyncEngine::sync`]).
+    pub fn grad_sync_drain<C: Comm>(
+        &self,
+        ctx: &C,
+        pending: PendingGrads,
+        shard_acc: &mut [f32],
+    ) {
+        debug_assert_eq!(shard_acc.len(), self.my_range.len());
+        let PendingGrads { step, mut own } = pending;
+        let mut take_own = |bi: usize| -> WireMsg {
+            let at = own
+                .iter()
+                .position(|(b, _)| *b == bi)
+                .expect("own bucket stashed at launch");
+            own.swap_remove(at).1
+        };
+        shard_acc.fill(0.0);
+        if let Some(m) = &self.mono {
+            let mut pair = m.lock().unwrap();
+            let dec = &mut pair.1;
+            let my_bi = self.plan.own(self.rank)[0];
+            for src in 0..self.n {
+                let msg = if src == self.rank {
+                    take_own(my_bi)
+                } else {
+                    ctx.peer_recv_tagged(src, self.plan.stale_grad_tag(step, my_bi))
+                };
+                dec.decode_accumulate(src, &msg, shard_acc);
+            }
+            return;
+        }
+        let mut offset = 0;
+        for (local, &bi) in self.plan.own(self.rank).iter().enumerate() {
+            let b = &self.plan.buckets[bi];
+            let slice = &mut shard_acc[offset..offset + b.range.len()];
+            let mut dec = self.dec[local].lock().unwrap();
+            // sources in rank order: deterministic fp sums, exactly the
+            // pooled decode-job order of the synchronous path
+            for src in 0..self.n {
+                let msg = if src == self.rank {
+                    take_own(bi)
+                } else {
+                    ctx.peer_recv_tagged(src, self.plan.stale_grad_tag(step, bi))
+                };
+                dec.decode_accumulate(src, &msg, slice);
+            }
+            offset += b.range.len();
+        }
+        debug_assert_eq!(offset, shard_acc.len());
+    }
+
     /// Parameter all-gather at `bf16` or f32 wire precision: `master` is
     /// this node's updated fp32 shard; on return `params` holds every
     /// member's shard at wire precision (own shard included, so all nodes
@@ -469,6 +588,28 @@ pub(crate) fn encode_params(xs: &[f32], bf16: bool) -> WireMsg {
         WireMsg::Bf16(xs.iter().map(|&x| fp::f32_to_bf16(x)).collect())
     } else {
         WireMsg::F32(xs.to_vec())
+    }
+}
+
+/// Completion handle for an asynchronous (one-step-stale) gradient
+/// exchange ([`SyncEngine::grad_sync_launch`]): the own-destination wire
+/// images to decode locally; every remote receive is outstanding until
+/// [`SyncEngine::grad_sync_drain`]. Dropping a handle without draining it
+/// strands its messages in the peers' reorder buffers, so the trainer
+/// always drains — the final step's handle after the loop, before the
+/// last optimizer update.
+pub struct PendingGrads {
+    /// the step this exchange was launched at (tag namespace)
+    step: u64,
+    /// own-destination buckets, encoded at launch, decoded at drain so
+    /// the error-feedback and decode orders match the synchronous path
+    own: Vec<(usize, WireMsg)>,
+}
+
+impl PendingGrads {
+    /// The step this exchange was launched at.
+    pub fn step(&self) -> u64 {
+        self.step
     }
 }
 
@@ -608,6 +749,95 @@ mod tests {
         let cfg = CompressorConfig { bucket_bytes: 128, ..Default::default() };
         let res = run_sync(&cfg, 512, 1, 2);
         assert_eq!(res.len(), 1);
+        assert!(res[0].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn grad_launch_drain_matches_sync() {
+        // a launch immediately followed by its drain must reproduce the
+        // synchronous exchange bitwise — including error-state evolution
+        // over multiple steps — on monolithic and bucketed plans alike
+        let total = 2048;
+        let n = 4;
+        for bucket_bytes in [0usize, 512] {
+            let cfg = CompressorConfig {
+                s: 64.0,
+                bucket_bytes,
+                sync_workers: 2,
+                ..Default::default()
+            };
+            let layout = ParamLayout::single("flat", &[total]);
+            let part = Partition::flat_even(total, n, 2);
+            let want = run_sync(&cfg, total, n, 3);
+            let (got, _) = run_cluster(n, |ctx| {
+                let engine = SyncEngine::new(&cfg, &layout, &part, ctx.rank, n);
+                let g = node_grad(ctx.rank, total);
+                let mut acc = vec![0.0f32; part.ranges[ctx.rank].len()];
+                for step in 1..=3u64 {
+                    let pending = engine.grad_sync_launch(&ctx, &g, step);
+                    assert_eq!(pending.step(), step);
+                    engine.grad_sync_drain(&ctx, pending, &mut acc);
+                }
+                acc
+            });
+            for (ra, rb) in want.iter().zip(&got) {
+                assert_eq!(ra, rb, "bucket_bytes={bucket_bytes}");
+            }
+        }
+    }
+
+    #[test]
+    fn stale_grads_interleave_with_collectives_and_param_gather() {
+        // the stale-gradient namespace must survive a full step of other
+        // traffic in flight: launch grads(k), run an untagged scalar
+        // all-reduce, launch params(k), then drain both — every payload
+        // lands where it should and the numerics match the serial path
+        let total = 2048;
+        let n = 4;
+        let cfg = CompressorConfig {
+            s: 64.0,
+            bucket_bytes: 512,
+            sync_workers: 2,
+            ..Default::default()
+        };
+        let layout = ParamLayout::single("flat", &[total]);
+        let part = Partition::flat_even(total, n, 2);
+        let want = run_sync(&cfg, total, n, 1);
+        let (results, _) = run_cluster(n, |ctx| {
+            let engine = SyncEngine::new(&cfg, &layout, &part, ctx.rank, n);
+            let my = part.ranges[ctx.rank].clone();
+            let g = node_grad(ctx.rank, total);
+            let pending_g = engine.grad_sync_launch(&ctx, &g, 1);
+            // untagged collective with the gradient exchange in flight
+            let sum = ctx.tree_all_reduce_scalar(1.0);
+            let master: Vec<f32> = my.clone().map(|i| i as f32 * 0.001).collect();
+            let pending_p = engine.param_gather_launch(&ctx, &master, 1, true);
+            let mut acc = vec![0.0f32; my.len()];
+            engine.grad_sync_drain(&ctx, pending_g, &mut acc);
+            let mut params = vec![0.0f32; total];
+            engine.param_gather_drain(&ctx, pending_p, &mut params);
+            (sum, acc, params)
+        });
+        for (rank, (sum, acc, params)) in results.iter().enumerate() {
+            assert_eq!(*sum, n as f64);
+            assert_eq!(acc, &want[rank], "rank {rank}: stale grads diverged");
+            assert_eq!(params, &results[0].2, "rank {rank}: params diverged");
+        }
+    }
+
+    #[test]
+    fn grad_launch_drain_single_node() {
+        let cfg = CompressorConfig::default();
+        let layout = ParamLayout::single("flat", &[512]);
+        let part = Partition::flat_even(512, 1, 2);
+        let (res, _) = run_cluster(1, |ctx| {
+            let engine = SyncEngine::new(&cfg, &layout, &part, ctx.rank, 1);
+            let g = node_grad(0, 512);
+            let mut acc = vec![0.0f32; 512];
+            let pending = engine.grad_sync_launch(&ctx, &g, 1);
+            engine.grad_sync_drain(&ctx, pending, &mut acc);
+            acc
+        });
         assert!(res[0].iter().any(|&x| x != 0.0));
     }
 

@@ -14,7 +14,7 @@ use std::ops::Range;
 
 use super::block::{dequantize_block, quantize_block};
 use super::{CompressorConfig, Encoder, WireMsg};
-use crate::quant::{self, pack::pack_pair, LocoParams};
+use crate::quant::{self, LocoParams};
 
 /// Error storage: int8 (paper default, 1 byte/param) or f32 (ablation).
 enum ErrorStore {
@@ -34,6 +34,24 @@ pub struct LocoEncoder {
     base: usize,
     /// EMA of max|g| for auto_scale (0 until first observation)
     maxabs_ema: f32,
+    /// last step a wire_scale call was seen at (`u64::MAX` = never): the
+    /// EMA advances at most once per (encoder, step), so its time
+    /// constant is a function of *steps* — not of how many destination
+    /// shards this encoder happens to serve, which scales with cluster
+    /// size on the monolithic path
+    last_scale_step: u64,
+    /// running Σg² / element count over the current step's encode calls:
+    /// the EMA observation is the RMS of the encoder's *whole domain*
+    /// (all shards of the step), folded in at the next step boundary —
+    /// not the first shard's slice, whose statistics may be biased by
+    /// whatever tensors land there
+    scale_obs_sq: f64,
+    scale_obs_n: f64,
+    /// the EMA currently holds only the first call's partial-domain seed
+    /// (first step, before any full aggregate completed): the first fold
+    /// *replaces* it instead of mixing, so the shard-0 bias lasts exactly
+    /// one step rather than decaying over ~1/(1−0.9) steps
+    ema_is_partial_seed: bool,
 }
 
 impl LocoEncoder {
@@ -53,28 +71,73 @@ impl LocoEncoder {
         } else {
             ErrorStore::I8(vec![0i8; len])
         };
-        LocoEncoder { cfg: *cfg, err, base: range.start, maxabs_ema: 0.0 }
+        LocoEncoder {
+            cfg: *cfg,
+            err,
+            base: range.start,
+            maxabs_ema: 0.0,
+            last_scale_step: u64::MAX,
+            scale_obs_sq: 0.0,
+            scale_obs_n: 0.0,
+            ema_is_partial_seed: false,
+        }
     }
 
     /// Wire scale for this call: fixed `s`, or adaptive so the EMA'd
     /// max-magnitude value lands on the largest code.
-    fn wire_scale(&mut self, g: &[f32]) -> f32 {
+    ///
+    /// The EMA advances **at most once per (encoder, step)**: on the
+    /// monolithic path one shared encoder serves every destination shard,
+    /// so a per-call update would decay the EMA `n` times per step — its
+    /// time constant would shrink with cluster size, and the wire scale
+    /// would diverge from the bucketed path (one encode per bucket per
+    /// step). Every call of a step accumulates its slice's Σg² into the
+    /// step observation; at the next step boundary the *completed*
+    /// aggregate — the RMS of the encoder's whole domain, not of
+    /// whichever shard happened to be encoded first — is folded into the
+    /// EMA once. The frozen EMA serves every message of a step, so they
+    /// all carry the same scale. (The very first step has no completed
+    /// aggregate: its first slice seeds the EMA directly so even the
+    /// first message is scaled to the data.)
+    fn wire_scale(&mut self, g: &[f32], step: u64) -> f32 {
         if !self.cfg.auto_scale {
             return self.cfg.s;
         }
         // largest representable magnitude: 2^{p-1}-1, except 1-bit whose
         // range is [-1, 0] (paper's round_p-bit definition) — use 1 there
         let qmax = (((1i32 << (self.cfg.bits - 1)) - 1).max(1)) as f32;
-        // RMS-based: map ~6 sigma onto the largest code. A max-based rule
-        // is dominated by outliers and leaves the bulk of the mass on one
-        // or two codes; 6*rms clamps only the extreme tail, which the
-        // error feedback then carries over.
-        let rms = (crate::util::l2_norm(g) / (g.len().max(1) as f64).sqrt()) as f32;
-        self.maxabs_ema = if self.maxabs_ema == 0.0 {
-            rms
-        } else {
-            0.9 * self.maxabs_ema + 0.1 * rms
-        };
+        if step != self.last_scale_step {
+            self.last_scale_step = step;
+            if self.scale_obs_n > 0.0 {
+                // RMS-based: map ~6 sigma onto the largest code. A
+                // max-based rule is dominated by outliers and leaves the
+                // bulk of the mass on one or two codes; 6*rms clamps
+                // only the extreme tail, which the error feedback then
+                // carries over.
+                let rms = (self.scale_obs_sq / self.scale_obs_n).sqrt() as f32;
+                self.maxabs_ema = if self.maxabs_ema == 0.0 || self.ema_is_partial_seed {
+                    // the first *completed* full-domain aggregate
+                    // replaces the partial first-call seed outright —
+                    // mixing it at 0.9 would let a biased shard-0 seed
+                    // linger for ~10 steps
+                    rms
+                } else {
+                    0.9 * self.maxabs_ema + 0.1 * rms
+                };
+                self.ema_is_partial_seed = false;
+            }
+            self.scale_obs_sq = 0.0;
+            self.scale_obs_n = 0.0;
+        }
+        self.scale_obs_sq += g.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+        self.scale_obs_n += g.len() as f64;
+        if self.maxabs_ema == 0.0 && self.scale_obs_n > 0.0 {
+            // first-ever observation: seed from what has been seen so far
+            // so even the very first message is scaled to the data; only
+            // the first step's messages carry this partial-domain scale
+            self.maxabs_ema = (self.scale_obs_sq / self.scale_obs_n).sqrt() as f32;
+            self.ema_is_partial_seed = true;
+        }
         if self.maxabs_ema > 0.0 {
             qmax / (6.0 * self.maxabs_ema)
         } else {
@@ -101,7 +164,7 @@ impl LocoEncoder {
 impl Encoder for LocoEncoder {
     fn encode(&mut self, grad: &[f32], range: Range<usize>, step: u64) -> WireMsg {
         let g_pre = &grad[range.clone()];
-        let wire_s = self.wire_scale(g_pre);
+        let wire_s = self.wire_scale(g_pre, step);
         let p = self.params(wire_s);
         let reset = self.is_reset_step(step);
         let g = &grad[range.clone()];
@@ -231,7 +294,6 @@ impl Encoder for LocoBlockEncoder {
                 e[i] = quant::quantize(e_tilde, self.s_e, 8);
             }
         }
-        let _ = pack_pair; // (4-bit packing happens at wire accounting time)
         WireMsg::Block { codes, scales, block: self.cfg.block, bits: self.cfg.bits }
     }
 
@@ -374,6 +436,69 @@ mod tests {
             }
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn auto_scale_ema_cadence_is_cluster_size_independent() {
+        // REGRESSION (monolithic auto_scale): one shared encoder encodes
+        // every destination shard, so a per-call EMA update would decay
+        // the EMA n times per step — n=8 would converge to a new gradient
+        // magnitude 4x faster than n=2. The fix updates once per
+        // (encoder, step). The gradient here has exactly uniform RMS on
+        // every aligned sub-range (|g[i]| = c_k), so after the fix the
+        // wire scale at step k is identical for any shard count — and
+        // identical between the monolithic and the bucketed (per-bucket
+        // encoder) paths.
+        let total = 1024usize;
+        let c = CompressorConfig { auto_scale: true, ..cfg(16.0) };
+        // step-varying magnitude: c_k jumps so the EMA is still moving
+        let mag = |k: u64| if k == 1 { 0.01f32 } else { 0.04f32 };
+        let grad = |k: u64| -> Vec<f32> {
+            (0..total)
+                .map(|i| if i % 2 == 0 { mag(k) } else { -mag(k) })
+                .collect()
+        };
+        let scale_of = |msg: WireMsg| match msg {
+            WireMsg::I4 { scale, .. } => scale,
+            _ => panic!("expected I4"),
+        };
+        // monolithic path: one encoder over the full domain, n shard
+        // encodes per step; record the scale of the first shard's message
+        let mono_scales = |n: usize| -> Vec<f32> {
+            let mut enc = LocoEncoder::new(&c, total);
+            let shard = total / n;
+            (1..=4u64)
+                .map(|k| {
+                    let g = grad(k);
+                    let mut first = 0.0;
+                    for dst in 0..n {
+                        let s = scale_of(enc.encode(&g, dst * shard..(dst + 1) * shard, k));
+                        if dst == 0 {
+                            first = s;
+                        }
+                    }
+                    first
+                })
+                .collect()
+        };
+        // 1e-4 relative: f64 summation order differs across slice sizes
+        // (ulp-level); the pre-fix cadence bug diverges by ~50%
+        let close = |a: &[f32], b: &[f32]| {
+            a.iter().zip(b).all(|(&x, &y)| (x - y).abs() <= 1e-4 * x.abs().max(y.abs()))
+        };
+        let n2 = mono_scales(2);
+        let n8 = mono_scales(8);
+        assert!(close(&n2, &n8), "wire scale depends on cluster size: {n2:?} vs {n8:?}");
+        // bucketed path: a per-bucket encoder sees one encode per step;
+        // its scales must follow the same per-step cadence
+        let mut bucket = LocoEncoder::for_range(&c, 0..128);
+        let bucket_scales: Vec<f32> = (1..=4u64)
+            .map(|k| scale_of(bucket.encode(&grad(k), 0..128, k)))
+            .collect();
+        assert!(
+            close(&n2, &bucket_scales),
+            "monolithic vs bucketed auto_scale diverged: {n2:?} vs {bucket_scales:?}"
+        );
     }
 
     #[test]

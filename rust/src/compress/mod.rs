@@ -109,7 +109,11 @@ pub struct CompressorConfig {
     /// an EMA of max|h| instead of the fixed global `s`. Addresses the
     /// fixed-scale sensitivity the paper works around with element-wise
     /// clipping (Sec. 5.2); wire-compatible because every message already
-    /// carries its scale. The error store keeps the fixed `s_e`.
+    /// carries its scale. The error store keeps the fixed `s_e`. The EMA
+    /// advances once per (encoder, step) regardless of how many shards
+    /// the encoder serves — observing the RMS aggregated over the whole
+    /// step's encodes — so its time constant and its statistics are both
+    /// cluster-size independent.
     pub auto_scale: bool,
     /// block size for block quantization (Zero++ paths)
     pub block: usize,

@@ -35,14 +35,18 @@
 //! (`train.sync_params = "async"`): the [`train`] loop launches it after
 //! the optimizer step, runs the next forward/backward against a
 //! one-step-stale view, and drains the completion handle only before the
-//! next optimizer step.
+//! next optimizer step. The *gradient* exchange has the same split
+//! (`train.grad_sync = "stale"`): launched after the backward, drained
+//! one step later, applying one-step-stale averaged gradients — or it
+//! runs only every H steps (`"local:H"`), shipping the round's
+//! pseudo-gradient through the same compressors.
 //!
 //! # Module map
 //!
 //! | module | role | DESIGN.md |
 //! |---|---|---|
 //! | [`collective`] | in-process cluster, tagged wire, sub-communicators, `LinkSim` | §2 |
-//! | [`comm`] | bucketed/overlapped sync engine + async param gather | §3, §"Async parameter sync" |
+//! | [`comm`] | bucketed/overlapped sync engine + async param/grad launch-drain | §3, §3.7, §3.8 |
 //! | [`topology`] | two-level NVLink-island schedule | §3.6 |
 //! | [`compress`], [`quant`] | LoCo + every baseline; the scalar kernel twin | §2 |
 //! | [`sharding`], [`optim`], [`train`] | Zero-2 cut, sharded optimizers, the trainer | §4 |

@@ -15,10 +15,10 @@ use anyhow::{bail, Context, Result};
 
 use loco::compress::{CompressorConfig, Method};
 use loco::config::Config;
-use loco::netsim::{self, throughput::{analytic_throughput_hier, analytic_throughput_hier_async, analytic_throughput_overlapped, paper_speedup, predict_speedup, ACCUMS, PAPER_BASELINES}};
+use loco::netsim::{self, throughput::{analytic_throughput_hier, analytic_throughput_hier_async, analytic_throughput_local, analytic_throughput_overlapped, analytic_throughput_stale_hier, local_step_wire_bytes_per_param, paper_speedup, predict_speedup, ACCUMS, PAPER_BASELINES}};
 use loco::optim::{LrSchedule, OptimConfig, OptimizerKind};
 use loco::report::Table;
-use loco::train::{Mode, ParamSync, SyncParams, TrainConfig, Trainer};
+use loco::train::{GradSync, Mode, ParamSync, SyncParams, TrainConfig, Trainer};
 use loco::util::rng::Rng;
 
 fn main() {
@@ -81,6 +81,13 @@ pub fn train_config_from(cfg: &Config) -> Result<TrainConfig> {
         "async" => SyncParams::Async,
         m => bail!("unknown train.sync_params {m:?} (sync | async)"),
     };
+    // "sync" exchanges gradients every step (bitwise the pre-stale
+    // trainer); "stale" applies one-step-stale averaged gradients with
+    // the exchange hidden behind the next forward/backward; "local:H"
+    // runs H local steps per exchange and ships the pseudo-gradient
+    let gs = cfg.str("train.grad_sync", "sync");
+    tc.grad_sync = GradSync::parse(&gs)
+        .with_context(|| format!("unknown train.grad_sync {gs:?} (sync | stale | local:H)"))?;
     // two-level topology: number of NVLink islands (1 = flat)
     tc.islands = cfg.usize("topology.islands", 1)?;
 
@@ -160,6 +167,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         tc.optim.kind.name()
     );
     let async_params = tc.sync_params == SyncParams::Async;
+    let grad_sync = tc.grad_sync;
     let result = Trainer::new(tc).run()?;
     let m = &result.metrics;
     println!(
@@ -183,6 +191,20 @@ fn cmd_train(args: &[String]) -> Result<()> {
             1e3 * m.param_sync_launch_s,
             m.param_stale_steps,
         );
+    }
+    match grad_sync {
+        GradSync::Stale => println!(
+            "stale grad sync: drain wait {:.1} ms, launch {:.1} ms, {} stale updates over {} exchanges",
+            1e3 * m.grad_sync_wait_s,
+            1e3 * m.grad_sync_launch_s,
+            m.grad_stale_steps,
+            m.grad_sync_rounds,
+        ),
+        GradSync::Local(h) => println!(
+            "local grad sync: H={h} local steps per exchange, {} exchanges over {} steps",
+            m.grad_sync_rounds, m.steps,
+        ),
+        GradSync::Sync => {}
     }
     if let Some(path) = out_csv {
         m.write_csv(&path)?;
@@ -244,8 +266,10 @@ fn cmd_throughput() -> Result<()> {
 /// Two-tier analytic model: for each island size, intra traffic (fp32
 /// reduce + param broadcast) rides NVLink while the low-bit exchange is
 /// pipelined over the inter link — the hierarchical row of the
-/// Table-7-style speedup prediction, printed synchronous and
-/// asynchronous (`train.sync_params = "async"`) side by side.
+/// Table-7-style speedup prediction, printed synchronous, asynchronous
+/// (`train.sync_params = "async"`) and stale (`train.grad_sync =
+/// "stale"`) side by side, plus the local-step wire-volume table
+/// (`train.grad_sync = "local:H"`).
 fn cmd_topology() -> Result<()> {
     let model = loco::model::analytic_model("llama2-7b").context("analytic model")?;
     let gpus = 64;
@@ -254,7 +278,10 @@ fn cmd_topology() -> Result<()> {
     let mut t = Table::new(
         "Two-level topology — LoCo over NVLink islands + A800 IB inter-fabric \
          (llama2-7b, 64 GPUs, accum 1, analytic)",
-        &["island", "tok/s sync", "tok/s async", "comm frac", "async gain", "vs flat adam"],
+        &[
+            "island", "tok/s sync", "tok/s async", "tok/s stale", "comm frac", "async gain",
+            "stale gain", "vs flat adam",
+        ],
     );
     let (flat_adam, _) = analytic_throughput_overlapped(
         model, netsim::A100, netsim::A800_IB, gpus, mbs, 1.0, "adam", 1,
@@ -268,21 +295,48 @@ fn cmd_topology() -> Result<()> {
             model, netsim::A100, netsim::NVLINK, netsim::A800_IB,
             gpus, island, mbs, 1.0, "loco", buckets,
         );
+        let (thr_stale, _) = analytic_throughput_stale_hier(
+            model, netsim::A100, netsim::NVLINK, netsim::A800_IB,
+            gpus, island, mbs, 1.0, "loco",
+        );
         t.row(vec![
             format!("{island}x GPUs"),
             format!("{thr:.0}"),
             format!("{thr_async:.0}"),
+            format!("{thr_stale:.0}"),
             format!("{:.1}%", 100.0 * frac),
             format!("{:.2}x", thr_async / thr),
+            format!("{:.2}x", thr_stale / thr),
             format!("{:.2}x", thr_async / flat_adam),
         ]);
     }
     println!("{}", t.render());
+    let mut lt = Table::new(
+        "Local-step schedule — H local optimizer steps per exchange \
+         (train.grad_sync = \"local:H\"; llama2-7b, 64 GPUs, flat, accum 1, analytic)",
+        &["H", "tok/s", "comm frac", "wire B/param/step"],
+    );
+    for h in [1u64, 2, 4, 8] {
+        let (thr, frac) = analytic_throughput_local(
+            model, netsim::A100, netsim::A800_IB, gpus, mbs, 1.0, "loco", h, buckets,
+        );
+        lt.row(vec![
+            format!("{h}"),
+            format!("{thr:.0}"),
+            format!("{:.1}%", 100.0 * frac),
+            format!("{:.3}", local_step_wire_bytes_per_param("loco", h)),
+        ]);
+    }
+    println!("{}", lt.render());
     println!(
         "units: tok/s = whole-cluster training tokens per second; comm frac =\n\
-         fraction of synchronous step wall time spent communicating; async gain =\n\
-         step-time win from hiding the inter-island bf16 parameter gather behind\n\
-         the next forward pass (train.sync_params = \"async\", one-step-stale view).\n\
+         fraction of step wall time spent communicating; async gain = step-time\n\
+         win from hiding the inter-island bf16 parameter gather behind the next\n\
+         forward pass (train.sync_params = \"async\"); stale gain = win from\n\
+         hiding the low-bit gradient exchange instead (train.grad_sync =\n\
+         \"stale\", one-step-stale updates) — the two compose in the trainer.\n\
+         wire B/param/step = bytes per parameter per optimizer step; local:H\n\
+         pays the full 2.25 B/param exchange once per H steps.\n\
          island = 1 is the flat bucketed engine; the hierarchy compresses only the\n\
          inter-island hop, so its win grows with the NVLink/NIC bandwidth gap."
     );

@@ -66,6 +66,22 @@ pub struct RunMetrics {
     /// forward passes that ran against a one-step-stale parameter view
     /// (`sync_params = "async"`: steps − 1; sync mode: 0)
     pub param_stale_steps: u64,
+    /// seconds rank 0 spent blocked draining stale gradient exchanges
+    /// (`grad_sync = "stale"`; 0 otherwise)
+    pub grad_sync_wait_s: f64,
+    /// seconds rank 0 spent launching stale gradient exchanges (encode +
+    /// non-blocking sends — plus the intra island reduce on hierarchical
+    /// topologies; 0 outside stale mode)
+    pub grad_sync_launch_s: f64,
+    /// optimizer steps that applied a one-step-stale averaged gradient
+    /// (`grad_sync = "stale"`: every step; otherwise 0)
+    pub grad_stale_steps: u64,
+    /// gradient (or pseudo-gradient) exchanges actually performed: one
+    /// per step in `sync`/`stale` mode, one per H-step round in
+    /// `local:H` mode — the wire-volume knob the compression ratio
+    /// reflects, since `comm_bytes_fp32` keeps pricing the synchronous
+    /// fp32 schedule
+    pub grad_sync_rounds: u64,
     pub steps: u64,
 }
 

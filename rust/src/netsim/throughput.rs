@@ -359,6 +359,123 @@ pub fn analytic_throughput_async(
     (tokens / step, comm / step)
 }
 
+/// First-principles step time with the one-step-stale gradient exchange
+/// (`train.grad_sync = "stale"`): the compressed all-to-all of step k is
+/// launched right after step k's backward and drained only after step
+/// k+1's forward/backward, so the *gradient* share of the wire budget
+/// ([`crate::netsim::wire_bytes_per_param`] minus
+/// [`param_wire_bytes_per_param`]) rides an otherwise-idle wire for the
+/// whole compute window and only its excess is exposed at the drain.
+/// The encode runs at launch (critical path) and the parameter gather
+/// stays synchronous — the dual of [`analytic_throughput_async`], which
+/// hides the parameter bytes instead; the trainer composes the two
+/// (`grad_sync = stale` × `sync_params = async`), but each is modeled
+/// separately so neither double-books the wire. Returns (tokens/s for
+/// the whole cluster, comm fraction of step time).
+pub fn analytic_throughput_stale(
+    model: &AnalyticModel,
+    gpu: Gpu,
+    net: Interconnect,
+    gpus: usize,
+    mbs_tokens: f64,
+    accum: f64,
+    method: &str,
+) -> (f64, f64) {
+    let flops_per_token = 6.0 * model.active_params;
+    let compute = accum * mbs_tokens * flops_per_token / (gpu.flops * gpu.mfu);
+    let n = gpus as f64;
+    let total = wire_bytes_per_param(method);
+    let param = param_wire_bytes_per_param(method).min(total);
+    let t_grad_wire = (total - param) * model.params * (n - 1.0) / (n * net.bw);
+    let t_enc = encode_bytes_per_param(method) * model.params / gpu.mem_bw;
+    let t_param = param * model.params * (n - 1.0) / (n * net.bw);
+    let comm = t_enc + (t_grad_wire - compute).max(0.0) + t_param;
+    let step = compute + comm;
+    let tokens = accum * mbs_tokens * n;
+    (tokens / step, comm / step)
+}
+
+/// [`analytic_throughput_stale`] on the two-level topology
+/// (`grad_sync = "stale"` with `topology.islands > 1`): the launch runs
+/// the fp32 island reduce-scatter on the fast intra links (critical
+/// path, like the parameter broadcast), encodes the island-mean row and
+/// pushes only the low-bit inter-island hop onto the wire — scaled by
+/// the two-level (K−1)/(mK) factor of [`analytic_throughput_hier`] —
+/// which then hides behind the next step's compute window.
+/// `island_size = 1` reproduces [`analytic_throughput_stale`] exactly.
+/// Returns (tokens/s for the whole cluster, comm fraction).
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_throughput_stale_hier(
+    model: &AnalyticModel,
+    gpu: Gpu,
+    intra: Interconnect,
+    inter: Interconnect,
+    gpus: usize,
+    island_size: usize,
+    mbs_tokens: f64,
+    accum: f64,
+    method: &str,
+) -> (f64, f64) {
+    assert!(island_size >= 1 && gpus % island_size == 0, "gpus must divide into islands");
+    let islands = (gpus / island_size) as f64;
+    let m = island_size as f64;
+    let psi = model.params;
+    let flops_per_token = 6.0 * model.active_params;
+    let compute = accum * mbs_tokens * flops_per_token / (gpu.flops * gpu.mfu);
+    let t_intra = (4.0 + 2.0) * psi * (m - 1.0) / (m * intra.bw);
+    let total = wire_bytes_per_param(method);
+    let param = param_wire_bytes_per_param(method).min(total);
+    let scale = (islands - 1.0) / (m * islands * inter.bw);
+    let t_grad_wire = (total - param) * psi * scale;
+    let t_enc = encode_bytes_per_param(method) * psi / (m * gpu.mem_bw);
+    let t_param_inter = param * psi * scale;
+    let comm = t_intra + t_enc + (t_grad_wire - compute).max(0.0) + t_param_inter;
+    let step = compute + comm;
+    let tokens = accum * mbs_tokens * gpus as f64;
+    (tokens / step, comm / step)
+}
+
+/// Wire bytes per parameter per *optimizer step* under
+/// `train.grad_sync = "local:H"`: one full exchange (compressed
+/// pseudo-gradient + parameter gather, the method's whole
+/// [`crate::netsim::wire_bytes_per_param`] budget) every H steps, so the
+/// per-step volume shrinks by H.
+pub fn local_step_wire_bytes_per_param(method: &str, h: u64) -> f64 {
+    wire_bytes_per_param(method) / h.max(1) as f64
+}
+
+/// First-principles *average* step time with H local optimizer steps
+/// per exchange (`train.grad_sync = "local:H"`): every step pays
+/// compute; the full synchronous exchange — encode pipelined against
+/// the wire over `buckets` buckets, exactly
+/// [`analytic_throughput_overlapped`]'s comm term — is paid once per H
+/// steps, i.e. amortized 1/H per step. `h = 1` reproduces
+/// [`analytic_throughput_overlapped`]. Returns (tokens/s for the whole
+/// cluster, comm fraction of average step time).
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_throughput_local(
+    model: &AnalyticModel,
+    gpu: Gpu,
+    net: Interconnect,
+    gpus: usize,
+    mbs_tokens: f64,
+    accum: f64,
+    method: &str,
+    h: u64,
+    buckets: usize,
+) -> (f64, f64) {
+    let flops_per_token = 6.0 * model.active_params;
+    let compute = accum * mbs_tokens * flops_per_token / (gpu.flops * gpu.mfu);
+    let n = gpus as f64;
+    let wire_bytes = wire_bytes_per_param(method) * model.params;
+    let t_wire = wire_bytes * (n - 1.0) / (n * net.bw);
+    let t_enc = encode_bytes_per_param(method) * model.params / gpu.mem_bw;
+    let comm = pipelined_time(t_enc, t_wire, buckets, BUCKET_OVERHEAD_S) / h.max(1) as f64;
+    let step = compute + comm;
+    let tokens = accum * mbs_tokens * n;
+    (tokens / step, comm / step)
+}
+
 /// Two-tier first-principles step time for the hierarchical engine
 /// (`topology::HierSyncEngine`): (1) fp32 ring reduce-scatter plus the
 /// parameter hop inside each `island_size`-GPU NVLink island at `intra`
@@ -593,6 +710,79 @@ mod tests {
         let (_, f1) = analytic_throughput_async(m, A100, A800_IB, 64, 4096.0, 1.0, "loco", 8);
         let (_, f4) = analytic_throughput_async(m, A100, A800_IB, 64, 4096.0, 4.0, "loco", 8);
         assert!(f4 < f1, "{f4} >= {f1}");
+    }
+
+    #[test]
+    fn stale_beats_sync_and_hides_the_gradient_exchange() {
+        // hiding the gradient wire behind the next step's compute must
+        // beat the synchronous overlapped engine whenever the gradient
+        // share of the wire budget is nonzero
+        let m = analytic_model("llama2-7b").unwrap();
+        for method in ["loco", "adam"] {
+            let (sync, _) =
+                analytic_throughput_overlapped(m, A100, A800_IB, 64, 4096.0, 1.0, method, 8);
+            let (stale, frac) =
+                analytic_throughput_stale(m, A100, A800_IB, 64, 4096.0, 1.0, method);
+            assert!(stale > sync, "{method}: {stale} <= {sync}");
+            assert!(frac > 0.0 && frac < 1.0);
+        }
+        // for LoCo the parameter bytes dominate the budget (2 of 2.25Ψ),
+        // so hiding them (async params) buys more than hiding gradients
+        // (stale) — the two knobs are complementary, not redundant
+        let (stale, _) = analytic_throughput_stale(m, A100, A800_IB, 64, 4096.0, 1.0, "loco");
+        let (asyn, _) =
+            analytic_throughput_async(m, A100, A800_IB, 64, 4096.0, 1.0, "loco", 8);
+        assert!(asyn > stale, "{asyn} <= {stale}");
+    }
+
+    #[test]
+    fn stale_hier_matches_flat_stale_at_island_size_one() {
+        let m = analytic_model("llama2-7b").unwrap();
+        let (flat, ff) = analytic_throughput_stale(m, A100, A800_IB, 64, 4096.0, 1.0, "loco");
+        let (hier, hf) = analytic_throughput_stale_hier(
+            m, A100, NVLINK, A800_IB, 64, 1, 4096.0, 1.0, "loco",
+        );
+        assert!((flat - hier).abs() / flat < 1e-12, "{flat} vs {hier}");
+        assert!((ff - hf).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stale_hier_beats_hier_sync_on_asymmetric_links() {
+        let m = analytic_model("llama2-7b").unwrap();
+        for island in [2usize, 4, 8] {
+            let (sync, _) = analytic_throughput_hier(
+                m, A100, NVLINK, A800_IB, 64, island, 4096.0, 1.0, "loco", 8,
+            );
+            let (stale, _) = analytic_throughput_stale_hier(
+                m, A100, NVLINK, A800_IB, 64, island, 4096.0, 1.0, "loco",
+            );
+            assert!(stale > sync, "island={island}: {stale} <= {sync}");
+        }
+    }
+
+    #[test]
+    fn local_steps_amortize_the_exchange() {
+        let m = analytic_model("llama2-7b").unwrap();
+        // H = 1 is exactly the overlapped sync engine
+        let (sync, sf) =
+            analytic_throughput_overlapped(m, A100, A800_IB, 64, 4096.0, 1.0, "loco", 8);
+        let (l1, lf) =
+            analytic_throughput_local(m, A100, A800_IB, 64, 4096.0, 1.0, "loco", 1, 8);
+        assert!((sync - l1).abs() / sync < 1e-12, "{sync} vs {l1}");
+        assert!((sf - lf).abs() < 1e-12);
+        // throughput grows monotonically with H toward the compute bound
+        let mut last = l1;
+        for h in [2u64, 4, 8] {
+            let (lh, _) =
+                analytic_throughput_local(m, A100, A800_IB, 64, 4096.0, 1.0, "loco", h, 8);
+            assert!(lh > last, "H={h}: {lh} <= {last}");
+            last = lh;
+        }
+        // and the per-step wire volume shrinks by exactly H
+        for h in [1u64, 2, 4] {
+            let want = crate::netsim::wire_bytes_per_param("loco") / h as f64;
+            assert!((local_step_wire_bytes_per_param("loco", h) - want).abs() < 1e-12);
+        }
     }
 
     #[test]

@@ -48,6 +48,14 @@
 //! runs at the drain point on the fast intra links
 //! (`train.sync_params = "async"`, DESIGN.md §"Async parameter sync").
 //!
+//! Phases 1–2 have the matching split for the *gradient* exchange
+//! ([`HierSyncEngine::grad_sync_launch`] /
+//! [`HierSyncEngine::grad_sync_drain`], `train.grad_sync = "stale"`):
+//! the launch runs the fast intra reduce-scatter and pushes only the
+//! low-bit inter-island hop onto the tagged wire; the drain one step
+//! later receives, decodes and rescales — so the slow hop is the only
+//! part that rides across the next step's compute.
+//!
 //! `islands = 1` *is* the flat engine: construction delegates to the
 //! unchanged [`SyncEngine`] over the cluster partition, bit-for-bit
 //! (`tests/hier_topology.rs` pins this). With more than one island the
@@ -285,6 +293,66 @@ impl HierSyncEngine {
         }
     }
 
+    /// Launch one gradient synchronization without blocking on the slow
+    /// hop: on hierarchical topologies the (fast, intra) phase-1 island
+    /// reduce-scatter runs here — the inter-island encode needs the
+    /// island-mean row — and only the low-bit inter-island buckets are
+    /// pushed onto the tagged wire; flat topologies launch over the whole
+    /// cluster. `grad` is clobbered (the intra reduce runs in place).
+    /// The caller runs the next step's forward/backward with the exchange
+    /// in flight, then completes it with
+    /// [`HierSyncEngine::grad_sync_drain`] — the one-step-stale schedule
+    /// of `train.grad_sync = "stale"`.
+    pub fn grad_sync_launch(
+        &self,
+        ctx: &NodeCtx,
+        grad: &mut [f32],
+        step: u64,
+    ) -> PendingHierGrads {
+        if !self.is_hierarchical() {
+            return PendingHierGrads { inner: self.inner.grad_sync_launch(ctx, grad, step) };
+        }
+        let intra = ctx.group(&self.island);
+        intra.ring_reduce_scatter(grad, &self.rows);
+        let m = self.topo.island_size() as f32;
+        for x in grad[self.my_row.clone()].iter_mut() {
+            *x /= m;
+        }
+        let inter = ctx.group(&self.peers);
+        PendingHierGrads { inner: self.inner.grad_sync_launch(&inter, grad, step) }
+    }
+
+    /// Complete an exchange started by
+    /// [`HierSyncEngine::grad_sync_launch`]: receive and decode the
+    /// outstanding inter-island (or flat) buckets into `shard_acc` and —
+    /// on hierarchical topologies — rescale the decoded island means so
+    /// the flat contract (unaveraged sum over all `n` sources, caller
+    /// divides by `n`) holds, exactly as after [`HierSyncEngine::sync`].
+    /// A launch immediately followed by its drain is bitwise
+    /// [`HierSyncEngine::sync`].
+    ///
+    /// Returns the time spent blocked receiving
+    /// ([`crate::metrics::RunMetrics::grad_sync_wait_s`]).
+    pub fn grad_sync_drain(
+        &self,
+        ctx: &NodeCtx,
+        pending: PendingHierGrads,
+        shard_acc: &mut [f32],
+    ) -> std::time::Duration {
+        let t0 = std::time::Instant::now();
+        if !self.is_hierarchical() {
+            self.inner.grad_sync_drain(ctx, pending.inner, shard_acc);
+            return t0.elapsed();
+        }
+        let inter = ctx.group(&self.peers);
+        self.inner.grad_sync_drain(&inter, pending.inner, shard_acc);
+        let m = self.topo.island_size() as f32;
+        for x in shard_acc.iter_mut() {
+            *x *= m;
+        }
+        t0.elapsed()
+    }
+
     /// Parameter synchronization (phase 3): `master` is the updated fp32
     /// shard; on return `params` holds the full parameter vector at wire
     /// precision, identical on every node. Flat topologies use the
@@ -379,6 +447,21 @@ impl HierSyncEngine {
                 compress::write_wire(msg, &mut params[self.rows[src].clone()]);
             }
         }
+    }
+}
+
+/// Completion handle for an asynchronous (one-step-stale) hierarchical
+/// gradient exchange ([`HierSyncEngine::grad_sync_launch`]): wraps the
+/// inter-hop [`crate::comm::PendingGrads`]. The phase-1 island reduce
+/// already ran at launch; only the slow-hop receives are outstanding.
+pub struct PendingHierGrads {
+    inner: crate::comm::PendingGrads,
+}
+
+impl PendingHierGrads {
+    /// The step this exchange was launched at.
+    pub fn step(&self) -> u64 {
+        self.inner.step()
     }
 }
 
@@ -664,6 +747,49 @@ mod tests {
             }
             for r in &b {
                 assert_eq!(r, &b[0], "islands={islands}: nodes diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn hier_grad_launch_drain_matches_sync() {
+        // the split gradient exchange must reproduce the synchronous
+        // three-phase schedule bitwise, flat and hierarchical alike,
+        // including error-state evolution over multiple steps
+        let total = 4096;
+        let n = 8;
+        let cfg = CompressorConfig { s: 64.0, bucket_bytes: 256, ..Default::default() };
+        for islands in [1usize, 2, 4] {
+            let topo = Topology::new(n, islands).unwrap();
+            let layout = ParamLayout::single("flat", &[total]);
+            let part = if topo.is_hierarchical() {
+                topo.partition(total)
+            } else {
+                Partition::flat_even(total, n, 2)
+            };
+            let run = |split: bool| {
+                let (results, _) = run_cluster(n, |ctx| {
+                    let engine =
+                        HierSyncEngine::new(&cfg, &layout, &part, &topo, ctx.rank).unwrap();
+                    let mut acc = vec![0.0f32; part.ranges[ctx.rank].len()];
+                    for step in 1..=3u64 {
+                        let mut grad = node_grad(ctx.rank, total);
+                        if split {
+                            let pending = engine.grad_sync_launch(&ctx, &mut grad, step);
+                            assert_eq!(pending.step(), step);
+                            let _ = engine.grad_sync_drain(&ctx, pending, &mut acc);
+                        } else {
+                            engine.sync(&ctx, &mut grad, &mut acc, step);
+                        }
+                    }
+                    acc
+                });
+                results
+            };
+            let a = run(false);
+            let b = run(true);
+            for (ra, rb) in a.iter().zip(&b) {
+                assert_eq!(ra, rb, "islands={islands}");
             }
         }
     }

@@ -24,6 +24,20 @@
 //! optimizer step — hiding the gather behind compute (0/1 Adam-style
 //! bounded staleness; DESIGN.md §"Async parameter sync").
 //!
+//! `grad_sync` generalizes the same launch → compute → drain lifecycle
+//! to steps 3–5 (DESIGN.md §"Gradient staleness"):
+//! * `"stale"` launches the compressed all-to-all right after step k's
+//!   backward and drains it at step k+1, applying the one-step-stale
+//!   averaged gradient (error feedback intact) — the 0/1 Adam schedule.
+//!   The final step's exchange drains after the loop, so every gradient
+//!   is applied exactly once.
+//! * `"local:H"` runs H local SGD steps between exchanges and ships the
+//!   round's accumulated *pseudo-gradient* (the parameter delta,
+//!   normalized by the summed inner learning rates) through the same
+//!   LoCo compressors — H× fewer exchanges on the wire (DiLoCo /
+//!   SparseLoCo lineage).
+//! `"sync"` (the default) is bitwise identical to the pre-stale trainer.
+//!
 //! DDP mode (Table 6 / PowerSGD) replaces 3–5 with a full-gradient
 //! all-reduce (tree, or the PowerSGD two-phase protocol) and keeps full
 //! optimizer state on every node.
@@ -43,7 +57,7 @@ use crate::model::ModelMeta;
 use crate::optim::{self, LrSchedule, OptimConfig};
 use crate::runtime::Engine;
 use crate::sharding::Partition;
-use crate::topology::{HierSyncEngine, PendingHierParams, Topology};
+use crate::topology::{HierSyncEngine, PendingHierGrads, PendingHierParams, Topology};
 use crate::util;
 
 /// Gradient synchronization topology.
@@ -83,6 +97,40 @@ pub enum SyncParams {
     Async,
 }
 
+/// When the gradient exchange runs relative to the optimizer update
+/// (`train.grad_sync`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradSync {
+    /// Exchange and apply in the same step — the paper's schedule,
+    /// bitwise identical to the pre-stale trainer (default).
+    Sync,
+    /// Launch the compressed all-to-all after step k's backward, drain it
+    /// during step k+1 and apply the one-step-stale averaged gradient —
+    /// the exchange rides the wire while the next forward/backward runs
+    /// (0/1 Adam lineage; DESIGN.md §"Gradient staleness").
+    Stale,
+    /// Run H local SGD steps between exchanges and synchronize the
+    /// round's accumulated pseudo-gradient (parameter delta, normalized
+    /// by the summed inner learning rates) through the configured
+    /// compressors — H× fewer exchanges (DiLoCo / SparseLoCo lineage).
+    Local(u64),
+}
+
+impl GradSync {
+    /// Parse `"sync" | "stale" | "local:H"` (H ≥ 1).
+    pub fn parse(s: &str) -> Option<GradSync> {
+        match s {
+            "sync" => Some(GradSync::Sync),
+            "stale" => Some(GradSync::Stale),
+            _ => s
+                .strip_prefix("local:")
+                .and_then(|h| h.parse().ok())
+                .filter(|&h| h >= 1)
+                .map(GradSync::Local),
+        }
+    }
+}
+
 /// Everything one training run needs.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -98,6 +146,10 @@ pub struct TrainConfig {
     /// synchronous vs one-step-stale asynchronous parameter gather
     /// (Zero-2 modes only; `Sync` is bitwise the pre-async trainer)
     pub sync_params: SyncParams,
+    /// when the gradient exchange runs: per-step (`Sync`, bitwise the
+    /// pre-stale trainer), one step stale (`Stale`), or every H local
+    /// steps (`Local(H)`) — Zero-2 mode only for the non-default values
+    pub grad_sync: GradSync,
     pub optim: OptimConfig,
     pub lr: LrSchedule,
     pub compressor: CompressorConfig,
@@ -128,6 +180,7 @@ impl TrainConfig {
             mode: Mode::Zero2,
             param_sync: ParamSync::Bf16,
             sync_params: SyncParams::Sync,
+            grad_sync: GradSync::Sync,
             optim: OptimConfig::default(),
             lr: LrSchedule::constant(1e-3),
             compressor: CompressorConfig::default(),
@@ -174,6 +227,19 @@ impl Trainer {
             cfg.sync_params == SyncParams::Sync || cfg.mode != Mode::Ddp,
             "train.sync_params = async requires a Zero-2 mode (DDP has no parameter gather)"
         );
+        anyhow::ensure!(
+            cfg.grad_sync == GradSync::Sync || cfg.mode == Mode::Zero2,
+            "train.grad_sync = stale | local:H requires train.mode = zero2 \
+             (the exchange goes through the compressed sync engine)"
+        );
+        if let GradSync::Local(h) = cfg.grad_sync {
+            anyhow::ensure!(h >= 1, "train.grad_sync = local:H needs H >= 1");
+            anyhow::ensure!(
+                cfg.sync_params == SyncParams::Sync,
+                "train.grad_sync = local:H requires train.sync_params = sync \
+                 (the round-end gather must complete before the next round's local steps)"
+            );
+        }
         let part = match cfg.mode {
             Mode::Ddp => Partition { ranges: vec![0..meta.layout.total] },
             Mode::Zero2 if topo.is_hierarchical() => topo.partition(meta.layout.total),
@@ -273,6 +339,18 @@ impl Trainer {
         let mut shard_acc = vec![0.0f32; my_range.len()];
         let mut metrics = if rank == 0 { Some(RunMetrics::new()) } else { None };
 
+        // validation loss of a parameter view (rank 0 only) — shared by
+        // the periodic in-loop evals and the post-loop final eval so the
+        // two can never drift apart
+        let eval_val = |ps: &[f32]| -> Result<f64> {
+            let mut acc = 0.0f64;
+            for b in 0..cfg.eval_batches {
+                let tokens = corpus.batch(Split::Val, 0, b as u64, meta.batch, meta.seq);
+                acc += engine.eval_loss(ps, &tokens)? as f64;
+            }
+            Ok(acc / cfg.eval_batches.max(1) as f64)
+        };
+
         // --- async parameter sync state (sync_params = "async") ---------
         // `params` is the compute view the forward pass reads; the drain
         // writes the gathered (one-step-fresher) parameters into the back
@@ -291,13 +369,43 @@ impl Trainer {
         let mut param_window_s = 0.0f64;
         let mut stale_steps = 0u64;
 
-        // fp32 byte volume an uncompressed run would send, for the ratio
+        // --- stale gradient state (grad_sync = "stale") -----------------
+        // the exchange launched after step k's backward is drained at
+        // step k+1 (or after the loop, for the final step) and its
+        // one-step-stale average feeds that step's optimizer update
+        let mut pending_grads: Option<PendingHierGrads> = None;
+        let mut grad_wait_s = 0.0f64;
+        let mut grad_launch_s = 0.0f64;
+        let mut grad_stale_steps = 0u64;
+        let mut grad_sync_rounds = 0u64;
+
+        // --- local-step state (grad_sync = "local:H") -------------------
+        // inner SGD runs on the full local `params` view; the round's
+        // pseudo-gradient (round_base − params, normalized by the summed
+        // inner lrs) goes through the compressors at round end
+        let local_h = match cfg.grad_sync {
+            GradSync::Local(h) => h.max(1),
+            _ => 0,
+        };
+        let mut round_base = if local_h > 0 { params.clone() } else { Vec::new() };
+        let mut round_lr_sum = 0.0f64;
+
+        // fp32 byte volume an uncompressed *synchronous* run would send
+        // per step across all ranks, for the compression ratio. Summed
+        // over the actual partition: under the hierarchical two-level cut
+        // shards are uneven, so extrapolating rank 0's shard to everyone
+        // would skew the denominator. (Stale mode moves the same bytes;
+        // local:H sends 1/H of them — the ratio reflects that.)
         let fp32_step_bytes: u64 = match cfg.mode {
-            Mode::Ddp => 2 * 4 * total as u64, // tree up+down, order of magnitude
-            _ => {
-                let others = (total - my_range.len()) as u64;
-                4 * others /*grad a2a*/ + 4 * others /*param ag*/
-            }
+            Mode::Ddp => 2 * 4 * total as u64 * n as u64, // tree up+down, order of magnitude
+            _ => part
+                .ranges
+                .iter()
+                .map(|r| {
+                    let others = (total - r.len()) as u64;
+                    4 * others /*grad a2a*/ + 4 * others /*param ag*/
+                })
+                .sum(),
         };
 
         // --- training loop --------------------------------------------------
@@ -322,18 +430,87 @@ impl Trainer {
                 }
             }
 
-            // 3-5: synchronize gradients
+            // 3-5: synchronize gradients — or, in stale/local modes,
+            // schedule the exchange around the compute (DESIGN.md
+            // §"Gradient staleness"). `have_update` is false on steps
+            // with no averaged gradient to apply: the stale pipeline
+            // fill (step 0) and mid-round local steps.
+            let mut have_update = true;
+            let mut update_lr = cfg.lr.at(step);
             match cfg.mode {
-                Mode::Zero2 => {
-                    sync.as_ref()
-                        .expect("Zero2 has a sync engine")
-                        .sync(ctx, &mut grad, &mut shard_acc, step + 1);
-                    util::scale(&mut shard_acc, 1.0 / n as f32);
-                }
+                Mode::Zero2 => match cfg.grad_sync {
+                    GradSync::Sync => {
+                        sync.as_ref()
+                            .expect("Zero2 has a sync engine")
+                            .sync(ctx, &mut grad, &mut shard_acc, step + 1);
+                        util::scale(&mut shard_acc, 1.0 / n as f32);
+                        grad_sync_rounds += 1;
+                    }
+                    GradSync::Stale => {
+                        let se = sync.as_ref().expect("Zero2 has a sync engine");
+                        // launch step k's exchange before draining step
+                        // k-1's: its wire window then spans the drain,
+                        // the optimizer step and the whole next
+                        // forward/backward; disjoint per-step tags keep
+                        // the two exchanges apart
+                        let t_launch = std::time::Instant::now();
+                        let next = se.grad_sync_launch(ctx, &mut grad, step + 1);
+                        grad_launch_s += t_launch.elapsed().as_secs_f64();
+                        match pending_grads.replace(next) {
+                            Some(p) => {
+                                // apply the stale gradient with the lr of
+                                // the step it was computed at, so the
+                                // trajectory is the synchronous one with
+                                // a one-step lag rather than an lr shift
+                                update_lr = cfg.lr.at(p.step().saturating_sub(1));
+                                let wait = se.grad_sync_drain(ctx, p, &mut shard_acc);
+                                grad_wait_s += wait.as_secs_f64();
+                                util::scale(&mut shard_acc, 1.0 / n as f32);
+                                grad_stale_steps += 1;
+                                grad_sync_rounds += 1;
+                            }
+                            None => have_update = false, // pipeline fill (step 0)
+                        }
+                    }
+                    GradSync::Local(h) => {
+                        // inner step: plain SGD on the full local view;
+                        // across a round the nodes' views diverge and the
+                        // round-end exchange re-converges them
+                        let lr = cfg.lr.at(step);
+                        for (p, g) in params.iter_mut().zip(grad.iter()) {
+                            *p -= lr * g;
+                        }
+                        round_lr_sum += lr as f64;
+                        if (step + 1) % h == 0 || step + 1 == cfg.steps {
+                            // pseudo-gradient: the round's parameter
+                            // delta, normalized by the summed inner lrs
+                            // so its magnitude (and the wire scale s)
+                            // matches an ordinary averaged gradient;
+                            // H = 1 reduces to the synchronous schedule
+                            // (lr = 0 degenerates to a zero delta — keep
+                            // the pseudo-gradient zero rather than NaN)
+                            let inv =
+                                if round_lr_sum > 0.0 { 1.0 / round_lr_sum as f32 } else { 0.0 };
+                            for (g, (&b, &p)) in
+                                grad.iter_mut().zip(round_base.iter().zip(params.iter()))
+                            {
+                                *g = (b - p) * inv;
+                            }
+                            sync.as_ref()
+                                .expect("Zero2 has a sync engine")
+                                .sync(ctx, &mut grad, &mut shard_acc, step + 1);
+                            util::scale(&mut shard_acc, 1.0 / n as f32);
+                            grad_sync_rounds += 1;
+                        } else {
+                            have_update = false;
+                        }
+                    }
+                },
                 Mode::Zero2ReduceScatter => {
                     ctx.ring_reduce_scatter(&mut grad, &part.ranges);
                     shard_acc.copy_from_slice(&grad[my_range.clone()]);
                     util::scale(&mut shard_acc, 1.0 / n as f32);
+                    grad_sync_rounds += 1;
                 }
                 Mode::Ddp => {
                     if let Some(ps) = powersgd.as_mut() {
@@ -349,98 +526,111 @@ impl Trainer {
                         shard_acc.copy_from_slice(&grad);
                         util::scale(&mut shard_acc, 1.0 / n as f32);
                     }
+                    grad_sync_rounds += 1;
                 }
             }
 
-            // drain the parameter gather launched after the previous
-            // optimizer step: its messages rode the wire while this
-            // step's forward/backward ran. The compute view flips to the
-            // post-step-(k-1) parameters here — one step stale relative
-            // to the synchronous schedule, applied as full owner shards
-            // (never deltas), so the lag cannot accumulate.
-            if let Some(p) = pending.take() {
-                if let Some(t0) = launched_at.take() {
-                    param_window_s += t0.elapsed().as_secs_f64();
+            if have_update {
+                // drain the parameter gather launched after the previous
+                // optimizer step: its messages rode the wire while this
+                // step's forward/backward ran. The compute view flips to
+                // the post-step-(k-1) parameters here — one step stale
+                // relative to the synchronous schedule, applied as full
+                // owner shards (never deltas), so the lag cannot
+                // accumulate. Skipped steps (no optimizer update) never
+                // have a handle outstanding: launches only follow
+                // updates.
+                if let Some(p) = pending.take() {
+                    if let Some(t0) = launched_at.take() {
+                        param_window_s += t0.elapsed().as_secs_f64();
+                    }
+                    let wait = sync
+                        .as_ref()
+                        .expect("async param sync runs on the Zero-2 engine")
+                        .param_sync_drain(ctx, p, &mut params_back);
+                    std::mem::swap(&mut params, &mut params_back);
+                    param_wait_s += wait.as_secs_f64();
                 }
-                let wait = sync
-                    .as_ref()
-                    .expect("async param sync runs on the Zero-2 engine")
-                    .param_sync_drain(ctx, p, &mut params_back);
-                std::mem::swap(&mut params, &mut params_back);
-                param_wait_s += wait.as_secs_f64();
-            }
 
-            // global-norm clip (exact: scalar all-reduce of shard norms)
-            if cfg.global_clip > 0.0 {
-                let local_sq: f64 = match cfg.mode {
+                // global-norm clip (exact: scalar all-reduce of shard norms)
+                if cfg.global_clip > 0.0 {
+                    let local_sq: f64 = match cfg.mode {
+                        Mode::Ddp => {
+                            if rank == 0 {
+                                shard_acc.iter().map(|&x| (x as f64) * (x as f64)).sum()
+                            } else {
+                                0.0
+                            }
+                        }
+                        _ => shard_acc.iter().map(|&x| (x as f64) * (x as f64)).sum(),
+                    };
+                    let norm = ctx.tree_all_reduce_scalar(local_sq).sqrt();
+                    if norm > cfg.global_clip as f64 {
+                        util::scale(&mut shard_acc, (cfg.global_clip as f64 / norm) as f32);
+                    }
+                }
+
+                // 6: optimizer on the fp32 master shard
+                opt.step(&mut master, &shard_acc, update_lr);
+
+                // 7: parameter synchronization — through the engine, so
+                // the gather is bucketed/tagged whenever the gradient
+                // path is, and two-level (inter peer gather + island
+                // broadcast) on hierarchical topologies. In async mode
+                // the gather is only *launched* here; the next step's
+                // forward runs on the stale view and the drain above
+                // completes it.
+                match cfg.mode {
                     Mode::Ddp => {
-                        if rank == 0 {
-                            shard_acc.iter().map(|&x| (x as f64) * (x as f64)).sum()
+                        // all nodes applied the same update; params == master
+                        params.copy_from_slice(&master);
+                    }
+                    _ => {
+                        let bf16 = cfg.param_sync == ParamSync::Bf16;
+                        let se = sync.as_ref().expect("Zero-2 has a sync engine");
+                        if async_params {
+                            // final step: nothing would drain the handle —
+                            // the post-loop fp32 master all-gather produces
+                            // the final parameters on a clean wire
+                            if step + 1 < cfg.steps {
+                                let t_launch = std::time::Instant::now();
+                                pending =
+                                    Some(se.param_sync_launch(ctx, &master, step + 1, bf16));
+                                param_launch_s += t_launch.elapsed().as_secs_f64();
+                                launched_at = Some(std::time::Instant::now());
+                                stale_steps += 1;
+                            }
                         } else {
-                            0.0
+                            let t_gather = std::time::Instant::now();
+                            se.param_sync(ctx, &master, &mut params, step + 1, bf16);
+                            param_wait_s += t_gather.elapsed().as_secs_f64();
                         }
                     }
-                    _ => shard_acc.iter().map(|&x| (x as f64) * (x as f64)).sum(),
-                };
-                let norm = ctx.tree_all_reduce_scalar(local_sq).sqrt();
-                if norm > cfg.global_clip as f64 {
-                    util::scale(&mut shard_acc, (cfg.global_clip as f64 / norm) as f32);
                 }
-            }
 
-            // 6: optimizer on the fp32 master shard
-            let lr = cfg.lr.at(step);
-            opt.step(&mut master, &shard_acc, lr);
-
-            // 7: parameter synchronization — through the engine, so the
-            // gather is bucketed/tagged whenever the gradient path is, and
-            // two-level (inter peer gather + island broadcast) on
-            // hierarchical topologies. In async mode the gather is only
-            // *launched* here; the next step's forward runs on the stale
-            // view and the drain above completes it.
-            match cfg.mode {
-                Mode::Ddp => {
-                    // all nodes applied the same update; params == master
-                    params.copy_from_slice(&master);
-                }
-                _ => {
-                    let bf16 = cfg.param_sync == ParamSync::Bf16;
-                    let se = sync.as_ref().expect("Zero-2 has a sync engine");
-                    if async_params {
-                        // final step: nothing would drain the handle — the
-                        // post-loop fp32 master all-gather produces the
-                        // final parameters on a clean wire
-                        if step + 1 < cfg.steps {
-                            let t_launch = std::time::Instant::now();
-                            pending = Some(se.param_sync_launch(ctx, &master, step + 1, bf16));
-                            param_launch_s += t_launch.elapsed().as_secs_f64();
-                            launched_at = Some(std::time::Instant::now());
-                            stale_steps += 1;
-                        }
-                    } else {
-                        let t_gather = std::time::Instant::now();
-                        se.param_sync(ctx, &master, &mut params, step + 1, bf16);
-                        param_wait_s += t_gather.elapsed().as_secs_f64();
-                    }
+                // local:H: the gathered view is the next round's baseline
+                if local_h > 0 {
+                    round_base.copy_from_slice(&params);
+                    round_lr_sum = 0.0;
                 }
             }
 
             // --- metrics / eval --------------------------------------------
             let mean_loss =
                 ctx.tree_all_reduce_scalar(loss_acc / cfg.accum as f64) / n as f64;
+            // periodic evals score the current compute view (possibly
+            // one step stale in async mode, mid-round in local:H); the
+            // *final* eval runs after the loop on the gathered fp32
+            // masters so the reported val loss always corresponds to
+            // `final_params` — with `sync_params = "async"` the in-loop
+            // view is one step stale at the last step (the final launch
+            // is skipped), and in stale/local grad modes the last
+            // optimizer update lands only after the loop.
             let do_eval = cfg.eval_every > 0
-                && (step % cfg.eval_every == cfg.eval_every - 1 || step + 1 == cfg.steps);
+                && step % cfg.eval_every == cfg.eval_every - 1
+                && step + 1 != cfg.steps;
             let val = if do_eval {
-                let v = if rank == 0 {
-                    let mut acc = 0.0f64;
-                    for b in 0..cfg.eval_batches {
-                        let tokens = corpus.batch(Split::Val, 0, b as u64, meta.batch, meta.seq);
-                        acc += engine.eval_loss(&params, &tokens)? as f64;
-                    }
-                    acc / cfg.eval_batches as f64
-                } else {
-                    0.0
-                };
+                let v = if rank == 0 { eval_val(&params)? } else { 0.0 };
                 Some(ctx.tree_all_reduce_scalar(v))
             } else {
                 None
@@ -453,14 +643,49 @@ impl Trainer {
                 if let Some(v) = val {
                     m.val_loss.push(step, v);
                 }
-                m.comm_bytes_fp32 += fp32_step_bytes * n as u64;
+                m.comm_bytes_fp32 += fp32_step_bytes;
             }
+        }
+
+        // grad_sync = "stale": the final step's exchange is still in
+        // flight — drain it and apply the last one-step-stale update, so
+        // every launched gradient is applied exactly once and a 1-step
+        // stale run is bitwise the synchronous run. This mirrors the
+        // in-loop drain → scale(1/n) → global-clip → opt.step sequence
+        // (stale arm above) and must stay in lockstep with it; the
+        // DDP/rank-0 clip special case does not apply here because stale
+        // mode is Zero-2 only.
+        if let Some(p) = pending_grads.take() {
+            let se = sync.as_ref().expect("stale grads run on the Zero-2 engine");
+            let grad_step = p.step().saturating_sub(1);
+            let wait = se.grad_sync_drain(ctx, p, &mut shard_acc);
+            grad_wait_s += wait.as_secs_f64();
+            util::scale(&mut shard_acc, 1.0 / n as f32);
+            grad_stale_steps += 1;
+            grad_sync_rounds += 1;
+            if cfg.global_clip > 0.0 {
+                let local_sq: f64 = shard_acc.iter().map(|&x| (x as f64) * (x as f64)).sum();
+                let norm = ctx.tree_all_reduce_scalar(local_sq).sqrt();
+                if norm > cfg.global_clip as f64 {
+                    util::scale(&mut shard_acc, (cfg.global_clip as f64 / norm) as f32);
+                }
+            }
+            opt.step(&mut master, &shard_acc, cfg.lr.at(grad_step));
         }
 
         // gather final fp32 master params to rank 0
         if cfg.mode != Mode::Ddp {
             params[my_range.clone()].copy_from_slice(&master);
             ctx.all_gather(&mut params, &part.ranges);
+        }
+
+        // final eval on the final parameters (see `do_eval` above): the
+        // last val entry is exactly `eval_loss(final_params)`
+        if with_eval && cfg.steps > 0 {
+            let v = eval_val(&params)?;
+            if let Some(m) = metrics.as_mut() {
+                m.val_loss.push(cfg.steps - 1, v);
+            }
         }
 
         if let Some(mut m) = metrics {
@@ -477,6 +702,10 @@ impl Trainer {
             m.param_sync_launch_s = param_launch_s;
             m.param_sync_window_s = param_window_s;
             m.param_stale_steps = stale_steps;
+            m.grad_sync_wait_s = grad_wait_s;
+            m.grad_sync_launch_s = grad_launch_s;
+            m.grad_stale_steps = grad_stale_steps;
+            m.grad_sync_rounds = grad_sync_rounds;
             Ok(Some(RunResult { metrics: m, final_params: params }))
         } else {
             Ok(None)

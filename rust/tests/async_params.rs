@@ -117,6 +117,48 @@ fn drain_before_checkpoint_at_final_step() {
 }
 
 #[test]
+fn final_eval_matches_final_params() {
+    // REGRESSION: with sync_params = "async" the final-step eval used to
+    // run on the one-step-stale `params` view (the last launch is
+    // skipped; the fp32 master gather happens only after the loop), so
+    // the reported val_loss did not correspond to `final_params`. The
+    // final eval now runs after the loop on the gathered masters: the
+    // last val entry must equal eval_loss(final_params) exactly — in
+    // async and sync mode alike.
+    for sync_params in [SyncParams::Async, SyncParams::Sync] {
+        let mut cfg = quickstart_cfg(7);
+        cfg.eval_every = 3;
+        cfg.sync_params = sync_params;
+        let r = Trainer::new(cfg.clone()).run().expect("run");
+        let &(step, got) = r.metrics.val_loss.points.last().unwrap();
+        assert_eq!(step, 6, "{sync_params:?}");
+        // recompute on the returned final parameters via the same engine
+        let engine =
+            loco::runtime::Engine::load(&cfg.art_dir, &cfg.model, true).expect("engine");
+        let corpus = loco::data::Corpus::new(loco::data::CorpusConfig::for_vocab(
+            engine.meta.vocab,
+            cfg.corpus_seed,
+        ));
+        let mut acc = 0.0f64;
+        for b in 0..cfg.eval_batches {
+            let tokens = corpus.batch(
+                loco::data::Split::Val,
+                0,
+                b as u64,
+                engine.meta.batch,
+                engine.meta.seq,
+            );
+            acc += engine.eval_loss(&r.final_params, &tokens).expect("eval") as f64;
+        }
+        let want = acc / cfg.eval_batches as f64;
+        assert!(
+            (got - want).abs() < 1e-12,
+            "{sync_params:?}: last val {got} != eval_loss(final_params) {want}"
+        );
+    }
+}
+
+#[test]
 fn async_rejected_on_ddp() {
     let mut cfg = quickstart_cfg(2);
     cfg.mode = Mode::Ddp;

@@ -238,11 +238,16 @@ fn main() {
             inter.bw / 1e6,
             intra.bw / 1e6
         );
-        let spec = ClusterSpec { island_size, intra: Some(intra), inter: Some(inter) };
+        let spec = ClusterSpec {
+            island_size,
+            intra: Some(intra),
+            inter: Some(inter),
+            ..Default::default()
+        };
         let mut means = Vec::new();
         for (label, hier) in [("flat engine", false), ("hierarchical 2x4", true)] {
             let st = bench_seconds(|| {
-                run_once(hier, spec);
+                run_once(hier, spec.clone());
             }, min_t.min(0.3));
             println!(
                 "topo sync+params {label:18} n={nodes} ({total} elems)  {:>16}  {:6.3} ns/elem",

@@ -28,12 +28,14 @@
 //!   channels; the ring/all-to-all collectives are provided generically by
 //!   the [`Comm`] trait, so they run unchanged inside a group.
 //!
-//! Clusters may declare a two-level topology ([`ClusterSpec`],
-//! [`run_cluster_topo`]): nodes are grouped into fixed-size islands, every
-//! payload is counted per level (intra- vs inter-island, [`Counters`]),
-//! and each level can carry its own [`LinkSim`] — the NVLink-vs-NIC
-//! bandwidth asymmetry the hierarchical engine ([`crate::topology`])
-//! exploits.
+//! Clusters may declare a hierarchical topology ([`ClusterSpec`],
+//! [`run_cluster_topo`]): nodes are grouped into leaf islands — a
+//! recursive even tier tree (`tiers`, e.g. `[4, 2, 2]` = 2 racks of 2
+//! islands of 4) or explicit uneven groups — every payload is counted
+//! per level (the two-level intra/inter split plus the full per-tier
+//! breakdown, [`Counters::by_level`]), and each level can carry its own
+//! [`LinkSim`] — the NVLink-vs-rack-vs-spine bandwidth asymmetry the
+//! hierarchical engine ([`crate::topology`]) exploits.
 
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
@@ -60,19 +62,43 @@ pub struct LinkSim {
     pub latency_s: f64,
 }
 
-/// Cluster topology + link model for [`run_cluster_topo`]. `island_size`
-/// groups consecutive ranks into islands (`0`/`1` = flat: every pair of
-/// nodes counts as inter-island); intra- and inter-island traffic is
-/// counted separately and may ride separate simulated links, each with its
-/// own egress engine (NVLink and the NIC serialize independently).
-#[derive(Debug, Clone, Copy, Default)]
+/// Cluster topology + link model for [`run_cluster_topo`].
+///
+/// Three ways to declare the hierarchy, in priority order:
+/// * `groups` — explicit *uneven* leaf islands (consecutive ranks, two
+///   levels: inside a group vs across groups);
+/// * `tiers` — a recursive even tier tree, innermost (leaf island size)
+///   first: `[4, 2, 2]` = 16 nodes as 2 racks of 2 islands of 4. A pair
+///   of nodes is classified by the innermost tier that still contains
+///   both (level 0 = same leaf island … level `tiers.len()-1` = only the
+///   root, i.e. the outermost cut);
+/// * `island_size` — the legacy two-level spelling (`0`/`1` = flat:
+///   every pair of nodes counts as inter-island).
+///
+/// Traffic is counted per level ([`Counters::by_level`], with the
+/// two-level `intra`/`inter` split preserved: level 0 is intra, every
+/// higher level inter) and each level can ride its own simulated link
+/// (`links`, falling back to `intra` for level 0 and `inter` above),
+/// each with its own egress engine — NVLink, the rack switch and the
+/// spine all serialize independently.
+#[derive(Debug, Clone, Default)]
 pub struct ClusterSpec {
-    /// nodes per island (consecutive ranks); 0/1 = flat
+    /// nodes per island (consecutive ranks); 0/1 = flat. Ignored when
+    /// `tiers` or `groups` is set.
     pub island_size: usize,
     /// simulated intra-island link (NVLink class), if any
     pub intra: Option<LinkSim>,
     /// simulated inter-island link (NIC class), if any
     pub inter: Option<LinkSim>,
+    /// recursive tier sizes, innermost first; the product must equal the
+    /// cluster size. Empty = derive from `island_size`.
+    pub tiers: Vec<usize>,
+    /// explicit uneven leaf islands (consecutive ranks, must tile
+    /// `0..n`); overrides `tiers` and `island_size`
+    pub groups: Vec<Vec<usize>>,
+    /// per-level simulated links (index = level; must cover every level
+    /// when non-empty). Empty = `[intra, inter, inter, ...]`.
+    pub links: Vec<Option<LinkSim>>,
 }
 
 impl ClusterSpec {
@@ -84,7 +110,86 @@ impl ClusterSpec {
     /// Islands of `island_size` nodes, no link simulation (byte-accounting
     /// tests).
     pub fn islands(island_size: usize) -> Self {
-        ClusterSpec { island_size, intra: None, inter: None }
+        ClusterSpec { island_size, ..Default::default() }
+    }
+
+    /// Recursive even tier tree, innermost first, no link simulation.
+    pub fn tiered(tiers: Vec<usize>) -> Self {
+        ClusterSpec { tiers, ..Default::default() }
+    }
+
+    /// Explicit (possibly uneven) leaf islands, no link simulation.
+    pub fn uneven(groups: Vec<Vec<usize>>) -> Self {
+        ClusterSpec { groups, ..Default::default() }
+    }
+
+    /// Resolve the spec for an `n`-node cluster into (number of link
+    /// levels, hierarchical flag, per-pair level matrix `n*n`). Panics on
+    /// inconsistent specs — the trainer validates via
+    /// [`crate::topology::Topology`] before getting here.
+    fn resolve(&self, n: usize) -> (usize, bool, Vec<u8>) {
+        if !self.groups.is_empty() {
+            let mut leaf = vec![usize::MAX; n];
+            let mut cursor = 0usize;
+            for (g, members) in self.groups.iter().enumerate() {
+                for &r in members {
+                    assert!(
+                        r == cursor,
+                        "groups must tile 0..{n} with consecutive ranks (rank {r} out of place)"
+                    );
+                    leaf[r] = g;
+                    cursor += 1;
+                }
+            }
+            assert!(cursor == n, "groups cover {cursor} of {n} ranks");
+            let hier = self.groups.len() > 1;
+            let levels = if hier { 2 } else { 1 };
+            let mut matrix = vec![0u8; n * n];
+            for a in 0..n {
+                for b in 0..n {
+                    matrix[a * n + b] = u8::from(hier && leaf[a] != leaf[b]);
+                }
+            }
+            return (levels, hier, matrix);
+        }
+        let tiers: Vec<usize> = if self.tiers.is_empty() {
+            let m = self.island_size.max(1);
+            assert!(n % m == 0, "cluster size {n} not divisible into islands of {m}");
+            if m > 1 {
+                vec![m, n / m]
+            } else {
+                vec![n]
+            }
+        } else {
+            let p: usize = self.tiers.iter().product();
+            assert!(
+                p == n && self.tiers.iter().all(|&t| t >= 1),
+                "cluster of {n} nodes does not factor into tiers {:?} (product {p})",
+                self.tiers
+            );
+            self.tiers.clone()
+        };
+        let levels = tiers.len();
+        let hier = levels > 1;
+        // level of (a, b) = innermost tier whose group still contains
+        // both: smallest l with a/stride(l) == b/stride(l), where
+        // stride(l) = product of tiers[0..=l]
+        let mut matrix = vec![0u8; n * n];
+        for a in 0..n {
+            for b in 0..n {
+                let mut stride = 1usize;
+                let mut level = 0u8;
+                for (l, &m) in tiers.iter().enumerate() {
+                    stride *= m;
+                    if a / stride == b / stride {
+                        level = l as u8;
+                        break;
+                    }
+                }
+                matrix[a * n + b] = level;
+            }
+        }
+        (levels, hier, matrix)
     }
 }
 
@@ -153,14 +258,24 @@ pub struct Counters {
     pub intra: Vec<AtomicU64>,
     /// bytes sent per node to other-island peers
     pub inter: Vec<AtomicU64>,
+    /// bytes sent per node, split by link level (`by_level[l][rank]`):
+    /// level 0 = inside a leaf island, level `len()-1` = across the
+    /// outermost cut. Flat clusters have a single level.
+    pub by_level: Vec<Vec<AtomicU64>>,
     /// messages sent per node
     pub msgs: Vec<AtomicU64>,
 }
 
 impl Counters {
-    fn new(n: usize) -> Arc<Self> {
+    fn new(n: usize, levels: usize) -> Arc<Self> {
         let zeros = || (0..n).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
-        Arc::new(Counters { sent: zeros(), intra: zeros(), inter: zeros(), msgs: zeros() })
+        Arc::new(Counters {
+            sent: zeros(),
+            intra: zeros(),
+            inter: zeros(),
+            by_level: (0..levels.max(1)).map(|_| zeros()).collect(),
+            msgs: zeros(),
+        })
     }
 
     pub fn total_sent(&self) -> u64 {
@@ -177,6 +292,17 @@ impl Counters {
     pub fn total_inter(&self) -> u64 {
         self.inter.iter().map(|a| a.load(Ordering::Relaxed)).sum()
     }
+
+    /// Number of link levels the cluster was declared with (1 on flat).
+    pub fn levels(&self) -> usize {
+        self.by_level.len()
+    }
+
+    /// Bytes that travelled at link level `level`: 0 = inside a leaf
+    /// island, `levels() - 1` = across the outermost cut.
+    pub fn total_at_level(&self, level: usize) -> u64 {
+        self.by_level[level].iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
 }
 
 /// Per-node handle: rank, channels to every peer, byte counters.
@@ -188,34 +314,42 @@ pub struct NodeCtx {
     /// per-source reorder buffer for tagged messages that arrived while a
     /// different tag was awaited (single-threaded per node, hence RefCell)
     pending: Vec<RefCell<HashMap<u64, WireMsg>>>,
-    /// nodes per island for level classification (1 = flat)
-    island_size: usize,
-    /// simulated links, if any, plus when each egress engine is next free
-    /// (NVLink and the NIC serialize independently)
-    net_intra: Option<LinkSim>,
-    net_inter: Option<LinkSim>,
-    egress_intra: Cell<Instant>,
-    egress_inter: Cell<Instant>,
+    /// link level per destination (`levels[dst]`, this node's row of the
+    /// cluster's pair-level matrix); level 0 = same leaf island
+    levels: Vec<u8>,
+    /// whether the cluster declared any hierarchy at all (flat clusters
+    /// count every byte as inter-island)
+    hierarchical: bool,
+    /// simulated link per level, if any, plus when each level's egress
+    /// engine is next free (NVLink, rack switch and spine serialize
+    /// independently)
+    nets: Arc<Vec<Option<LinkSim>>>,
+    egress: Vec<Cell<Instant>>,
     pub counters: Arc<Counters>,
 }
 
 impl NodeCtx {
-    /// True when `dst` sits in this node's island (flat clusters have
-    /// single-node islands, so every peer is inter-island there).
+    /// True when `dst` sits in this node's leaf island (flat clusters
+    /// have single-node islands, so every peer is inter-island there).
     pub fn same_island(&self, dst: usize) -> bool {
-        self.island_size > 1 && self.rank / self.island_size == dst / self.island_size
+        self.hierarchical && self.levels[dst] == 0
+    }
+
+    /// Link level of the path to `dst`: 0 = same leaf island, rising to
+    /// the outermost cut (flat clusters report 0 for every peer).
+    pub fn level_of(&self, dst: usize) -> usize {
+        self.levels[dst] as usize
     }
 
     pub fn send(&self, dst: usize, p: Payload) {
         let bytes = p.wire_bytes();
         self.counters.sent[self.rank].fetch_add(bytes, Ordering::Relaxed);
         self.counters.msgs[self.rank].fetch_add(1, Ordering::Relaxed);
-        let (level, net, egress) = if self.same_island(dst) {
-            (&self.counters.intra, self.net_intra, &self.egress_intra)
-        } else {
-            (&self.counters.inter, self.net_inter, &self.egress_inter)
-        };
-        level[self.rank].fetch_add(bytes, Ordering::Relaxed);
+        let lvl = self.levels[dst] as usize;
+        let split = if self.same_island(dst) { &self.counters.intra } else { &self.counters.inter };
+        split[self.rank].fetch_add(bytes, Ordering::Relaxed);
+        self.counters.by_level[lvl][self.rank].fetch_add(bytes, Ordering::Relaxed);
+        let (net, egress) = (self.nets[lvl], &self.egress[lvl]);
         let ready_at = net.map(|l| {
             let start = egress.get().max(Instant::now());
             let done = start + Duration::from_secs_f64(bytes as f64 / l.bw);
@@ -629,21 +763,41 @@ pub fn run_cluster_net<T: Send>(
     net: Option<LinkSim>,
     f: impl Fn(NodeCtx) -> T + Send + Sync,
 ) -> (Vec<T>, Arc<Counters>) {
-    run_cluster_topo(n, ClusterSpec { island_size: 1, intra: None, inter: net }, f)
+    run_cluster_topo(n, ClusterSpec { island_size: 1, inter: net, ..Default::default() }, f)
 }
 
-/// [`run_cluster`] with a two-level topology ([`ClusterSpec`]):
-/// consecutive ranks are grouped into islands, traffic is counted per
-/// level, and each level can ride its own simulated link.
+/// [`run_cluster`] with a hierarchical topology ([`ClusterSpec`]): ranks
+/// are grouped into (possibly recursive, possibly uneven) islands,
+/// traffic is counted per level, and each level can ride its own
+/// simulated link.
 pub fn run_cluster_topo<T: Send>(
     n: usize,
     spec: ClusterSpec,
     f: impl Fn(NodeCtx) -> T + Send + Sync,
 ) -> (Vec<T>, Arc<Counters>) {
     assert!(n > 0);
-    let island_size = spec.island_size.max(1);
-    assert!(n % island_size == 0, "cluster size {n} not divisible into islands of {island_size}");
-    let counters = Counters::new(n);
+    let (n_levels, hierarchical, level_matrix) = spec.resolve(n);
+    if !spec.links.is_empty() {
+        assert!(
+            spec.links.len() >= n_levels,
+            "links cover {} of {n_levels} levels",
+            spec.links.len()
+        );
+    }
+    let nets: Arc<Vec<Option<LinkSim>>> = Arc::new(
+        (0..n_levels)
+            .map(|l| {
+                if !spec.links.is_empty() {
+                    spec.links[l]
+                } else if l == 0 && hierarchical {
+                    spec.intra
+                } else {
+                    spec.inter
+                }
+            })
+            .collect(),
+    );
+    let counters = Counters::new(n, n_levels);
     // mesh[src][dst]
     let mut txs: Vec<Vec<Option<Sender<Envelope>>>> =
         (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
@@ -664,11 +818,10 @@ pub fn run_cluster_topo<T: Send>(
             tx: tx_row.into_iter().map(Option::unwrap).collect(),
             rx: rx_row.into_iter().map(Option::unwrap).collect(),
             pending: (0..n).map(|_| RefCell::new(HashMap::new())).collect(),
-            island_size,
-            net_intra: spec.intra,
-            net_inter: spec.inter,
-            egress_intra: Cell::new(Instant::now()),
-            egress_inter: Cell::new(Instant::now()),
+            levels: level_matrix[rank * n..(rank + 1) * n].to_vec(),
+            hierarchical,
+            nets: nets.clone(),
+            egress: (0..n_levels).map(|_| Cell::new(Instant::now())).collect(),
             counters: counters.clone(),
         });
     }
@@ -978,6 +1131,68 @@ mod tests {
     }
 
     #[test]
+    fn counters_split_by_tier_level() {
+        // 8 nodes as tiers [2, 2, 2]: 0->1 same leaf (level 0), 0->2 same
+        // rack (level 1), 0->4 across the outermost cut (level 2)
+        let (_, counters) = run_cluster_topo(8, ClusterSpec::tiered(vec![2, 2, 2]), |ctx| {
+            if ctx.rank == 0 {
+                assert_eq!(ctx.level_of(1), 0);
+                assert_eq!(ctx.level_of(2), 1);
+                assert_eq!(ctx.level_of(4), 2);
+                assert!(ctx.same_island(1) && !ctx.same_island(2));
+                ctx.send(1, Payload::F32(vec![0.0; 1])); // 4 B level 0
+                ctx.send(2, Payload::F32(vec![0.0; 2])); // 8 B level 1
+                ctx.send(4, Payload::F32(vec![0.0; 4])); // 16 B level 2
+            } else if ctx.rank == 1 || ctx.rank == 2 || ctx.rank == 4 {
+                ctx.recv(0);
+            }
+        });
+        assert_eq!(counters.levels(), 3);
+        assert_eq!(counters.total_at_level(0), 4);
+        assert_eq!(counters.total_at_level(1), 8);
+        assert_eq!(counters.total_at_level(2), 16);
+        // the legacy split: level 0 is intra, everything above is inter
+        assert_eq!(counters.total_intra(), 4);
+        assert_eq!(counters.total_inter(), 24);
+    }
+
+    #[test]
+    fn counters_split_by_uneven_group() {
+        // uneven islands {0,1,2} and {3,4}: 0->2 intra, 0->3 inter
+        let spec = ClusterSpec::uneven(vec![vec![0, 1, 2], vec![3, 4]]);
+        let (_, counters) = run_cluster_topo(5, spec, |ctx| {
+            if ctx.rank == 0 {
+                ctx.send(2, Payload::F32(vec![0.0; 1]));
+                ctx.send(3, Payload::F32(vec![0.0; 2]));
+            } else if ctx.rank == 2 || ctx.rank == 3 {
+                ctx.recv(0);
+            }
+        });
+        assert_eq!(counters.levels(), 2);
+        assert_eq!(counters.total_intra(), 4);
+        assert_eq!(counters.total_inter(), 8);
+        assert_eq!(counters.total_at_level(0), 4);
+        assert_eq!(counters.total_at_level(1), 8);
+    }
+
+    #[test]
+    fn two_level_tiers_match_legacy_island_spec() {
+        // ClusterSpec::tiered([m, k]) classifies exactly like islands(m)
+        let run = |spec: ClusterSpec| {
+            let (_, c) = run_cluster_topo(4, spec, |ctx| {
+                if ctx.rank == 0 {
+                    ctx.send(1, Payload::F32(vec![0.0; 4]));
+                    ctx.send(2, Payload::F32(vec![0.0; 8]));
+                } else if ctx.rank == 1 || ctx.rank == 2 {
+                    ctx.recv(0);
+                }
+            });
+            (c.total_intra(), c.total_inter())
+        };
+        assert_eq!(run(ClusterSpec::islands(2)), run(ClusterSpec::tiered(vec![2, 2])));
+    }
+
+    #[test]
     fn flat_cluster_counts_everything_as_inter() {
         let (_, counters) = run_cluster(2, |ctx| {
             if ctx.rank == 0 {
@@ -1078,6 +1293,7 @@ mod tests {
             island_size: 2,
             intra: Some(LinkSim { bw: 10e9, latency_s: 0.0 }),
             inter: Some(LinkSim { bw: 5e6, latency_s: 0.0 }),
+            ..Default::default()
         };
         let (results, _) = run_cluster_topo(4, spec, |ctx| {
             if ctx.rank == 0 {

@@ -56,6 +56,17 @@ impl BucketPlan {
         let mut buckets = Vec::new();
         let mut by_dst: Vec<Vec<usize>> = vec![Vec::new(); n];
         for (dst, shard) in part.ranges.iter().enumerate() {
+            // an *empty* shard (extreme fan-outs: `total < n * align`, or
+            // a deep tier tree over a short row) still gets one empty
+            // bucket, so every destination owns at least one bucket id —
+            // the monolithic launch/drain paths index `own(dst)[0]`
+            // unconditionally, and a zero-length wire message is cheaper
+            // than special-casing every consumer
+            if shard.is_empty() {
+                by_dst[dst].push(buckets.len());
+                buckets.push(Bucket { range: shard.clone(), dst });
+                continue;
+            }
             let mut start = shard.start;
             while start < shard.end {
                 let end = if bucket_elems == 0 {
@@ -196,7 +207,7 @@ mod tests {
                         let b = &plan.buckets[bi];
                         assert_eq!(b.dst, dst);
                         assert_eq!(b.range.start, cursor);
-                        assert!(!b.range.is_empty());
+                        assert!(!b.range.is_empty() || shard.is_empty());
                         if elems > 0 {
                             assert!(b.range.len() <= elems.max(2));
                         }
@@ -204,6 +215,33 @@ mod tests {
                     }
                     assert_eq!(cursor, shard.end);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_shards_get_one_empty_bucket() {
+        // `total < n * align` collapses some shards to zero length; the
+        // plan must still give every destination a bucket id (the
+        // monolithic launch/drain paths index own(dst)[0]) and keep the
+        // non-empty shards tiled
+        let l = ParamLayout::single("flat", &[4]);
+        for elems in [0usize, 64] {
+            let part = Partition::flat_even(4, 4, 2);
+            assert!(part.ranges.iter().any(|r| r.is_empty()), "fixture not degenerate");
+            let plan = BucketPlan::new(&part, &l, elems, 2);
+            for dst in 0..4 {
+                assert!(!plan.own(dst).is_empty(), "dst {dst} owns no bucket");
+                let covered: usize =
+                    plan.own(dst).iter().map(|&bi| plan.buckets[bi].range.len()).sum();
+                assert_eq!(covered, part.ranges[dst].len());
+            }
+            // tags stay unique across namespaces even with empty buckets
+            let mut seen = std::collections::HashSet::new();
+            for bi in 0..plan.total() {
+                assert!(seen.insert(plan.grad_tag(1, bi)));
+                assert!(seen.insert(plan.param_tag(1, bi)));
+                assert!(seen.insert(plan.stale_grad_tag(1, bi)));
             }
         }
     }

@@ -826,6 +826,41 @@ mod tests {
     }
 
     #[test]
+    fn empty_shards_survive_all_lifecycles() {
+        // total < n * align collapses half the shards to zero length
+        // (Partition::flat_even's documented degenerate case); the sync,
+        // stale-gradient and parameter lifecycles must all tolerate the
+        // empty ranges — the old monolithic launch indexed own(dst)[0]
+        // and panicked deep in encode
+        let total = 4;
+        let n = 4;
+        let layout = ParamLayout::single("flat", &[total]);
+        let part = Partition::flat_even(total, n, 2);
+        assert!(part.ranges.iter().any(|r| r.is_empty()), "fixture not degenerate");
+        for bucket_bytes in [0usize, 64] {
+            let cfg = CompressorConfig { s: 64.0, bucket_bytes, ..Default::default() };
+            let (results, _) = run_cluster(n, |ctx| {
+                let engine = SyncEngine::new(&cfg, &layout, &part, ctx.rank, n);
+                let my = part.ranges[ctx.rank].clone();
+                let g = node_grad(ctx.rank, total);
+                let mut acc = vec![0.0f32; my.len()];
+                engine.sync(&ctx, &g, &mut acc, 1);
+                let pending = engine.grad_sync_launch(&ctx, &g, 2);
+                engine.grad_sync_drain(&ctx, pending, &mut acc);
+                let master: Vec<f32> = my.clone().map(|i| i as f32 * 0.01).collect();
+                let mut params = vec![0.0f32; total];
+                engine.param_gather(&ctx, &master, &mut params, 2, true);
+                let pending = engine.param_gather_launch(&ctx, &master, 3, true);
+                engine.param_gather_drain(&ctx, pending, &mut params);
+                params
+            });
+            for r in &results {
+                assert_eq!(r, &results[0], "bucket_bytes={bucket_bytes}: nodes diverged");
+            }
+        }
+    }
+
+    #[test]
     fn grad_launch_drain_single_node() {
         let cfg = CompressorConfig::default();
         let layout = ParamLayout::single("flat", &[512]);

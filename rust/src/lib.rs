@@ -27,10 +27,12 @@
 //! per-bucket error-feedback state, and a per-node worker pool keeps
 //! bucket `k+1` encoding while bucket `k` is in flight on the
 //! tag-addressed all-to-all path. On clusters with NVLink islands the
-//! [`topology`] subsystem wraps that engine in the paper's two-level
-//! schedule — exact fp32 reduce inside each island, the low-bit bucketed
-//! all-to-all only across islands, island broadcast back down — so the
-//! compressed bytes ride exactly the slow hop. The bf16 parameter
+//! [`topology`] subsystem wraps that engine in a recursive tier tree
+//! (`topology.tiers = [4, 2, 2]` — islands, racks, pods; uneven leaf
+//! islands via `topology.groups`) — exact fp32 reduce at every intra
+//! tier, the low-bit bucketed all-to-all only across the outermost cut,
+//! broadcast back down — so the compressed bytes ride exactly the
+//! slowest hop. The bf16 parameter
 //! all-gather can additionally come off the critical path entirely
 //! (`train.sync_params = "async"`): the [`train`] loop launches it after
 //! the optimizer step, runs the next forward/backward against a
@@ -47,7 +49,7 @@
 //! |---|---|---|
 //! | [`collective`] | in-process cluster, tagged wire, sub-communicators, `LinkSim` | §2 |
 //! | [`comm`] | bucketed/overlapped sync engine + async param/grad launch-drain | §3, §3.7, §3.8 |
-//! | [`topology`] | two-level NVLink-island schedule | §3.6 |
+//! | [`topology`] | recursive tier-tree / uneven-island schedule | §3.6, §3.9 |
 //! | [`compress`], [`quant`] | LoCo + every baseline; the scalar kernel twin | §2 |
 //! | [`sharding`], [`optim`], [`train`] | Zero-2 cut, sharded optimizers, the trainer | §4 |
 //! | [`runtime`], [`model`], [`data`] | PJRT/builtin backends, model zoo, corpus | §1, §5 |

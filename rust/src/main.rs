@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   train [--config FILE] [sec.key=val ...]   run a training job
 //!   table1 | table8 | throughput              print analytic tables
-//!   topology                                  two-tier (NVLink island) model
+//!   topology [--gpus N] [--tiers m0,m1,...]   tiered (island/rack/spine) model
 //!   quant-selftest                            Rust hot path vs L1 kernel
 //!   info                                      artifact + config summary
 //!
@@ -15,7 +15,7 @@ use anyhow::{bail, Context, Result};
 
 use loco::compress::{CompressorConfig, Method};
 use loco::config::Config;
-use loco::netsim::{self, throughput::{analytic_throughput_hier, analytic_throughput_hier_async, analytic_throughput_local, analytic_throughput_overlapped, analytic_throughput_stale_hier, local_step_wire_bytes_per_param, paper_speedup, predict_speedup, ACCUMS, PAPER_BASELINES}};
+use loco::netsim::{self, throughput::{analytic_throughput_hier, analytic_throughput_hier_async, analytic_throughput_local, analytic_throughput_overlapped, analytic_throughput_stale_hier, analytic_throughput_tiered, analytic_throughput_tiered_async, analytic_throughput_tiered_stale, local_step_wire_bytes_per_param, outer_tier_grad_bytes_per_param, paper_speedup, predict_speedup, ACCUMS, PAPER_BASELINES}};
 use loco::optim::{LrSchedule, OptimConfig, OptimizerKind};
 use loco::report::Table;
 use loco::train::{GradSync, Mode, ParamSync, SyncParams, TrainConfig, Trainer};
@@ -39,7 +39,7 @@ fn run(args: &[String]) -> Result<()> {
         Some("table1") => cmd_table1(),
         Some("table8") => cmd_table8(),
         Some("throughput") => cmd_throughput(),
-        Some("topology") => cmd_topology(),
+        Some("topology") => cmd_topology(&args[1..]),
         Some("quant-selftest") => cmd_quant_selftest(),
         Some("info") | None => cmd_info(),
         Some(other) => bail!("unknown subcommand {other:?} (try: train, table1, table8, throughput, topology, quant-selftest, info)"),
@@ -88,8 +88,17 @@ pub fn train_config_from(cfg: &Config) -> Result<TrainConfig> {
     let gs = cfg.str("train.grad_sync", "sync");
     tc.grad_sync = GradSync::parse(&gs)
         .with_context(|| format!("unknown train.grad_sync {gs:?} (sync | stale | local:H)"))?;
-    // two-level topology: number of NVLink islands (1 = flat)
+    // topology: the legacy two-level island count, a recursive tier
+    // list ("4,2,2", innermost first), or explicit uneven islands
+    // ("0-2;3-7" — islands separated by ';', members as ranks or a-b
+    // ranges). The trainer validates exclusivity and divisibility.
     tc.islands = cfg.usize("topology.islands", 1)?;
+    if let Some(t) = cfg.get("topology.tiers") {
+        tc.tiers = parse_tier_list(t)?;
+    }
+    if let Some(g) = cfg.get("topology.groups") {
+        tc.topo_groups = parse_group_list(g)?;
+    }
 
     let kind = cfg.str("optim.kind", "adam");
     let mut oc = OptimConfig {
@@ -134,6 +143,56 @@ pub fn train_config_from(cfg: &Config) -> Result<TrainConfig> {
     cc.sync_workers = cfg.usize("compress.sync_workers", 4)?;
     tc.compressor = cc;
     Ok(tc)
+}
+
+/// Parse a comma-separated tier list (`"4,2,2"`, innermost first).
+fn parse_tier_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<usize>()
+                .with_context(|| format!("bad tier {t:?} (expected e.g. \"4,2,2\")"))
+        })
+        .collect()
+}
+
+/// Parse an uneven-island list: islands separated by `;`, members as
+/// single ranks or `a-b` ranges (`"0-2;3-7"` or `"0,1,2;3,4,5,6,7"`).
+fn parse_group_list(s: &str) -> Result<Vec<Vec<usize>>> {
+    let mut out = Vec::new();
+    for island in s.split(';') {
+        let mut members = Vec::new();
+        for item in island.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            if let Some((a, b)) = item.split_once('-') {
+                let a: usize = a
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("topology.groups: bad range start {a:?}"))?;
+                let b: usize = b
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("topology.groups: bad range end {b:?}"))?;
+                if a > b {
+                    bail!("topology.groups: empty range {a}-{b}");
+                }
+                members.extend(a..=b);
+            } else {
+                members.push(
+                    item.parse()
+                        .with_context(|| format!("topology.groups: bad rank {item:?}"))?,
+                );
+            }
+        }
+        if members.is_empty() {
+            bail!("topology.groups: empty island in {s:?}");
+        }
+        out.push(members);
+    }
+    Ok(out)
 }
 
 fn cmd_train(args: &[String]) -> Result<()> {
@@ -201,8 +260,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
             m.grad_sync_rounds,
         ),
         GradSync::Local(h) => println!(
-            "local grad sync: H={h} local steps per exchange, {} exchanges over {} steps",
-            m.grad_sync_rounds, m.steps,
+            "local grad sync: H={h} local steps per exchange, {} exchanges over {} steps \
+             ({} degenerate zero-lr rounds skipped)",
+            m.grad_sync_rounds, m.steps, m.local_degenerate_rounds,
         ),
         GradSync::Sync => {}
     }
@@ -263,16 +323,44 @@ fn cmd_throughput() -> Result<()> {
     Ok(())
 }
 
-/// Two-tier analytic model: for each island size, intra traffic (fp32
-/// reduce + param broadcast) rides NVLink while the low-bit exchange is
-/// pipelined over the inter link — the hierarchical row of the
-/// Table-7-style speedup prediction, printed synchronous, asynchronous
-/// (`train.sync_params = "async"`) and stale (`train.grad_sync =
-/// "stale"`) side by side, plus the local-step wire-volume table
-/// (`train.grad_sync = "local:H"`).
-fn cmd_topology() -> Result<()> {
+/// Tiered analytic model. Without flags: the classic two-level island
+/// sweep plus the local-step table. With `--tiers m0,m1[,m2...]`
+/// (innermost first) and optionally `--gpus N`: one row per tier of the
+/// recursive tree — group size, fan-out, link class and the per-tier
+/// wire bytes/param — plus the sync / async (`train.sync_params`) /
+/// stale (`train.grad_sync`) throughput rows. A tier list whose product
+/// does not equal the GPU count is an error (exit 1), never a silently
+/// truncated model.
+fn cmd_topology(args: &[String]) -> Result<()> {
+    let mut gpus = 64usize;
+    let mut tiers: Option<Vec<usize>> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--gpus" => {
+                i += 1;
+                gpus = args
+                    .get(i)
+                    .context("--gpus needs a count")?
+                    .parse()
+                    .context("--gpus: bad count")?;
+            }
+            "--tiers" => {
+                i += 1;
+                tiers = Some(parse_tier_list(
+                    args.get(i).context("--tiers needs a list like 4,2,2")?,
+                )?);
+            }
+            other => bail!(
+                "unexpected arg {other:?} (usage: loco topology [--gpus N] [--tiers m0,m1,...])"
+            ),
+        }
+        i += 1;
+    }
+    if let Some(tiers) = tiers {
+        return cmd_topology_tiers(gpus, &tiers);
+    }
     let model = loco::model::analytic_model("llama2-7b").context("analytic model")?;
-    let gpus = 64;
     let mbs = 4096.0;
     let buckets = 8;
     let mut t = Table::new(
@@ -286,19 +374,22 @@ fn cmd_topology() -> Result<()> {
     let (flat_adam, _) = analytic_throughput_overlapped(
         model, netsim::A100, netsim::A800_IB, gpus, mbs, 1.0, "adam", 1,
     );
-    for island in [1usize, 2, 4, 8] {
+    // only the island sizes that actually divide the cluster: the sweep
+    // must keep working for e.g. --gpus 12 (islands 8 would now error
+    // instead of silently truncating, so it is skipped, not attempted)
+    for island in [1usize, 2, 4, 8].into_iter().filter(|i| gpus % i == 0) {
         let (thr, frac) = analytic_throughput_hier(
             model, netsim::A100, netsim::NVLINK, netsim::A800_IB,
             gpus, island, mbs, 1.0, "loco", buckets,
-        );
+        )?;
         let (thr_async, _) = analytic_throughput_hier_async(
             model, netsim::A100, netsim::NVLINK, netsim::A800_IB,
             gpus, island, mbs, 1.0, "loco", buckets,
-        );
+        )?;
         let (thr_stale, _) = analytic_throughput_stale_hier(
             model, netsim::A100, netsim::NVLINK, netsim::A800_IB,
             gpus, island, mbs, 1.0, "loco",
-        );
+        )?;
         t.row(vec![
             format!("{island}x GPUs"),
             format!("{thr:.0}"),
@@ -339,6 +430,75 @@ fn cmd_topology() -> Result<()> {
          pays the full 2.25 B/param exchange once per H steps.\n\
          island = 1 is the flat bucketed engine; the hierarchy compresses only the\n\
          inter-island hop, so its win grows with the NVLink/NIC bandwidth gap."
+    );
+    Ok(())
+}
+
+/// One row per tier of a recursive tree, plus the sync/async/stale
+/// throughput of the whole schedule. Intra tiers are modeled on
+/// NVLink/NVSwitch-class fabric, the outermost cut on the A800 IB
+/// spine — the deployment the recursive engine is built for.
+fn cmd_topology_tiers(gpus: usize, tiers: &[usize]) -> Result<()> {
+    let model = loco::model::analytic_model("llama2-7b").context("analytic model")?;
+    let mbs = 4096.0;
+    let buckets = 8;
+    let depth = tiers.len();
+    let links: Vec<netsim::Interconnect> = (0..depth)
+        .map(|l| if l + 1 == depth { netsim::A800_IB } else { netsim::NVLINK })
+        .collect();
+    // validate first (product must equal the GPU count) so a non-dividing
+    // query errors out before any table is printed
+    let (thr, frac) = analytic_throughput_tiered(
+        model, netsim::A100, &links, gpus, tiers, mbs, 1.0, "loco", buckets,
+    )?;
+    let (thr_async, _) = analytic_throughput_tiered_async(
+        model, netsim::A100, &links, gpus, tiers, mbs, 1.0, "loco", buckets,
+    )?;
+    let (thr_stale, _) = analytic_throughput_tiered_stale(
+        model, netsim::A100, &links, gpus, tiers, mbs, 1.0, "loco",
+    )?;
+    let mut t = Table::new(
+        &format!(
+            "Recursive tier tree {tiers:?} over {gpus} GPUs \
+             (llama2-7b, accum 1, analytic) — one row per tier"
+        ),
+        &["tier", "fan-out", "group size", "link", "schedule", "wire B/param"],
+    );
+    let mut stride = 1usize;
+    for (l, &m) in tiers.iter().enumerate() {
+        let outermost = l + 1 == depth;
+        let per_param = if outermost {
+            let mf = m as f64;
+            gpus as f64 * netsim::wire_bytes_per_param("loco") * (mf - 1.0)
+                / (mf * stride as f64)
+        } else {
+            let mf = m as f64;
+            gpus as f64 * 6.0 * (mf - 1.0) / (mf * stride as f64)
+        };
+        t.row(vec![
+            format!("{l}"),
+            format!("{m}"),
+            format!("{} GPUs", stride * m),
+            links[l].name.to_string(),
+            if outermost { "low-bit all-to-all + bf16 gather" } else { "fp32 reduce-scatter + bf16 broadcast" }
+                .to_string(),
+            format!("{per_param:.3}"),
+        ]);
+        stride *= m;
+    }
+    println!("{}", t.render());
+    println!(
+        "outer-tier low-bit gradient bytes: {:.3} B/param across the cluster per exchange",
+        outer_tier_grad_bytes_per_param(gpus, tiers, 4)?
+    );
+    println!(
+        "tok/s sync {thr:.0} | async {thr_async:.0} | stale {thr_stale:.0} | comm frac {:.1}%",
+        100.0 * frac
+    );
+    println!(
+        "units: wire B/param = bytes per parameter per optimizer step summed over\n\
+         the whole cluster at that tier; intra tiers pay fp32+bf16 (6 B) on the\n\
+         shrinking 1/M row, only the outermost cut carries the low-bit exchange."
     );
     Ok(())
 }

@@ -82,6 +82,12 @@ pub struct RunMetrics {
     /// reflects, since `comm_bytes_fp32` keeps pricing the synchronous
     /// fp32 schedule
     pub grad_sync_rounds: u64,
+    /// `local:H` rounds whose inner lr sum was zero: the parameters
+    /// never moved, so the pseudo-gradient is identically zero and the
+    /// exchange — along with the error-feedback evolution (and reset)
+    /// it would have driven — is skipped instead of shipping a zero
+    /// update at full wire cost (0 outside local mode)
+    pub local_degenerate_rounds: u64,
     pub steps: u64,
 }
 

@@ -16,6 +16,8 @@
 //! Analytic mode predicts absolute step time from FLOPs and bandwidth for
 //! configurations the paper does not report.
 
+use anyhow::{ensure, Result};
+
 use crate::model::AnalyticModel;
 use crate::netsim::{
     encode_bytes_per_param, param_wire_bytes_per_param, wire_bytes_per_param, Gpu, Interconnect,
@@ -395,15 +397,214 @@ pub fn analytic_throughput_stale(
     (tokens / step, comm / step)
 }
 
+/// Validate a tier list (innermost first) against the cluster size: the
+/// product must equal `gpus` *exactly* and the per-tier link table must
+/// cover every tier — non-dividing queries are an error, never a silent
+/// truncation of the modeled cluster (a 10-GPU / 4-per-island query used
+/// to quietly model 8 GPUs).
+fn validate_tiers(gpus: usize, tiers: &[usize], links: &[Interconnect]) -> Result<()> {
+    ensure!(!tiers.is_empty(), "tier list is empty");
+    ensure!(
+        tiers.iter().all(|&m| m >= 1),
+        "tier sizes must be >= 1 (got {tiers:?})"
+    );
+    let p: usize = tiers.iter().product();
+    ensure!(
+        p == gpus,
+        "cluster of {gpus} GPUs does not factor into tiers {tiers:?} (product {p})"
+    );
+    ensure!(
+        links.len() == tiers.len(),
+        "{} links for {} tiers (one per tier, innermost first)",
+        links.len(),
+        tiers.len()
+    );
+    Ok(())
+}
+
+/// Per-tier cost skeleton shared by the tiered analytic rows: summed
+/// fp32-reduce + bf16-broadcast time over the intra tiers, the
+/// outermost-cut wire scale, and the compute window.
+struct TierCosts {
+    compute: f64,
+    /// Σ over intra tiers of (4+2)·ψ_l·(m_l−1)/(m_l·bw_l), where ψ_l is
+    /// the row size entering tier l (ψ / Π of the tiers below)
+    t_intra: f64,
+    /// product of the intra tier sizes: the row entering the outer cut
+    /// is ψ/M and every outer byte count scales by (k−1)/(M·k)
+    outer_scale: f64,
+    /// encode time of the 1/M row at HBM bandwidth per encoded byte
+    t_enc_per_byte: f64,
+}
+
+fn tier_costs(
+    model: &AnalyticModel,
+    gpu: Gpu,
+    links: &[Interconnect],
+    tiers: &[usize],
+    mbs_tokens: f64,
+    accum: f64,
+) -> TierCosts {
+    let psi = model.params;
+    let flops_per_token = 6.0 * model.active_params;
+    let compute = accum * mbs_tokens * flops_per_token / (gpu.flops * gpu.mfu);
+    let depth = tiers.len();
+    let mut t_intra = 0.0;
+    let mut stride = 1.0f64;
+    for (l, &m) in tiers[..depth - 1].iter().enumerate() {
+        let mf = m as f64;
+        t_intra += (4.0 + 2.0) * (psi / stride) * (mf - 1.0) / (mf * links[l].bw);
+        stride *= mf;
+    }
+    let k = tiers[depth - 1] as f64;
+    let outer_scale = (k - 1.0) / (stride * k * links[depth - 1].bw);
+    TierCosts {
+        compute,
+        t_intra,
+        outer_scale,
+        t_enc_per_byte: psi / (stride * gpu.mem_bw),
+    }
+}
+
+/// First-principles step time on a recursive tier tree (innermost
+/// first, one [`Interconnect`] per tier): fp32 ring reduce-scatter plus
+/// the bf16 parameter broadcast at every intra tier, then the method's
+/// wire bytes — scaled from the flat (N−1)/N factor down to (K−1)/(MK)
+/// over the K outermost groups, M = product of the intra tiers —
+/// pipelined against encode time over `buckets` buckets on the
+/// outermost link. `tiers = [m, k]` is exactly the two-level
+/// [`analytic_throughput_hier`]; a single tier degrades to the flat
+/// [`analytic_throughput_overlapped`]. Errors on non-dividing tier
+/// lists instead of truncating. Returns (tokens/s for the whole
+/// cluster, comm fraction).
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_throughput_tiered(
+    model: &AnalyticModel,
+    gpu: Gpu,
+    links: &[Interconnect],
+    gpus: usize,
+    tiers: &[usize],
+    mbs_tokens: f64,
+    accum: f64,
+    method: &str,
+    buckets: usize,
+) -> Result<(f64, f64)> {
+    validate_tiers(gpus, tiers, links)?;
+    if tiers.len() == 1 {
+        return Ok(analytic_throughput_overlapped(
+            model, gpu, links[0], gpus, mbs_tokens, accum, method, buckets,
+        ));
+    }
+    let c = tier_costs(model, gpu, links, tiers, mbs_tokens, accum);
+    let psi = model.params;
+    let t_wire = wire_bytes_per_param(method) * psi * c.outer_scale;
+    let t_enc = encode_bytes_per_param(method) * c.t_enc_per_byte;
+    let t_inter = pipelined_time(t_enc, t_wire, buckets, BUCKET_OVERHEAD_S);
+    let comm = c.t_intra + t_inter;
+    let step = c.compute + comm;
+    let tokens = accum * mbs_tokens * gpus as f64;
+    Ok((tokens / step, comm / step))
+}
+
+/// [`analytic_throughput_tiered`] with the asynchronous parameter sync:
+/// the outermost-cut share of the parameter gather
+/// ([`param_wire_bytes_per_param`], scaled by the same (K−1)/(MK)
+/// factor) hides behind the next fwd+bwd window as in
+/// [`analytic_throughput_async`]; the intra reduces and the downward
+/// broadcast stay on the critical path. Returns (tokens/s, comm
+/// fraction).
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_throughput_tiered_async(
+    model: &AnalyticModel,
+    gpu: Gpu,
+    links: &[Interconnect],
+    gpus: usize,
+    tiers: &[usize],
+    mbs_tokens: f64,
+    accum: f64,
+    method: &str,
+    buckets: usize,
+) -> Result<(f64, f64)> {
+    validate_tiers(gpus, tiers, links)?;
+    if tiers.len() == 1 {
+        return Ok(analytic_throughput_async(
+            model, gpu, links[0], gpus, mbs_tokens, accum, method, buckets,
+        ));
+    }
+    let c = tier_costs(model, gpu, links, tiers, mbs_tokens, accum);
+    let psi = model.params;
+    let total = wire_bytes_per_param(method);
+    let param = param_wire_bytes_per_param(method).min(total);
+    let t_grad_wire = (total - param) * psi * c.outer_scale;
+    let t_enc = encode_bytes_per_param(method) * c.t_enc_per_byte;
+    let t_grad = pipelined_time(t_enc, t_grad_wire, buckets, BUCKET_OVERHEAD_S);
+    let t_param_outer = param * psi * c.outer_scale;
+    let comm = c.t_intra + t_grad + (t_param_outer - c.compute).max(0.0);
+    let step = c.compute + comm;
+    let tokens = accum * mbs_tokens * gpus as f64;
+    Ok((tokens / step, comm / step))
+}
+
+/// [`analytic_throughput_tiered`] with the one-step-stale gradient
+/// exchange (`grad_sync = "stale"`): the launch runs the intra reduces
+/// on the fast links (critical path, like the parameter broadcast),
+/// encodes the 1/M row and pushes only the low-bit outermost hop onto
+/// the wire, which then hides behind the next step's compute window.
+/// Returns (tokens/s, comm fraction).
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_throughput_tiered_stale(
+    model: &AnalyticModel,
+    gpu: Gpu,
+    links: &[Interconnect],
+    gpus: usize,
+    tiers: &[usize],
+    mbs_tokens: f64,
+    accum: f64,
+    method: &str,
+) -> Result<(f64, f64)> {
+    validate_tiers(gpus, tiers, links)?;
+    if tiers.len() == 1 {
+        return Ok(analytic_throughput_stale(
+            model, gpu, links[0], gpus, mbs_tokens, accum, method,
+        ));
+    }
+    let c = tier_costs(model, gpu, links, tiers, mbs_tokens, accum);
+    let psi = model.params;
+    let total = wire_bytes_per_param(method);
+    let param = param_wire_bytes_per_param(method).min(total);
+    let t_grad_wire = (total - param) * psi * c.outer_scale;
+    let t_enc = encode_bytes_per_param(method) * c.t_enc_per_byte;
+    let t_param_outer = param * psi * c.outer_scale;
+    let comm = c.t_intra + t_enc + (t_grad_wire - c.compute).max(0.0) + t_param_outer;
+    let step = c.compute + comm;
+    let tokens = accum * mbs_tokens * gpus as f64;
+    Ok((tokens / step, comm / step))
+}
+
+/// Low-bit gradient *bytes per parameter* (whole cluster, one exchange)
+/// crossing the outermost cut of a tier tree: every node ships the
+/// (K−1)/K remote pieces of its 1/M row at `bits` width. The byte
+/// counters of a real tiered sync ([`crate::collective::Counters::total_at_level`]
+/// at the outermost level) must land on this within per-message
+/// overhead — `tests/tier_topology.rs` pins it.
+pub fn outer_tier_grad_bytes_per_param(gpus: usize, tiers: &[usize], bits: u32) -> Result<f64> {
+    ensure!(!tiers.is_empty() && tiers.iter().all(|&m| m >= 1), "bad tier list {tiers:?}");
+    let p: usize = tiers.iter().product();
+    ensure!(
+        p == gpus,
+        "cluster of {gpus} GPUs does not factor into tiers {tiers:?} (product {p})"
+    );
+    let m_big: f64 = tiers[..tiers.len() - 1].iter().map(|&m| m as f64).product();
+    let k = tiers[tiers.len() - 1] as f64;
+    Ok(gpus as f64 * (bits as f64 / 8.0) * (k - 1.0) / (k * m_big))
+}
+
 /// [`analytic_throughput_stale`] on the two-level topology
-/// (`grad_sync = "stale"` with `topology.islands > 1`): the launch runs
-/// the fp32 island reduce-scatter on the fast intra links (critical
-/// path, like the parameter broadcast), encodes the island-mean row and
-/// pushes only the low-bit inter-island hop onto the wire — scaled by
-/// the two-level (K−1)/(mK) factor of [`analytic_throughput_hier`] —
-/// which then hides behind the next step's compute window.
-/// `island_size = 1` reproduces [`analytic_throughput_stale`] exactly.
-/// Returns (tokens/s for the whole cluster, comm fraction).
+/// (`grad_sync = "stale"` with `topology.islands > 1`): the thin
+/// two-level wrapper over [`analytic_throughput_tiered_stale`].
+/// `island_size = 1` reproduces [`analytic_throughput_stale`] exactly;
+/// a non-dividing `gpus / island_size` is an error. Returns (tokens/s
+/// for the whole cluster, comm fraction).
 #[allow(clippy::too_many_arguments)]
 pub fn analytic_throughput_stale_hier(
     model: &AnalyticModel,
@@ -415,24 +616,21 @@ pub fn analytic_throughput_stale_hier(
     mbs_tokens: f64,
     accum: f64,
     method: &str,
-) -> (f64, f64) {
-    assert!(island_size >= 1 && gpus % island_size == 0, "gpus must divide into islands");
-    let islands = (gpus / island_size) as f64;
-    let m = island_size as f64;
-    let psi = model.params;
-    let flops_per_token = 6.0 * model.active_params;
-    let compute = accum * mbs_tokens * flops_per_token / (gpu.flops * gpu.mfu);
-    let t_intra = (4.0 + 2.0) * psi * (m - 1.0) / (m * intra.bw);
-    let total = wire_bytes_per_param(method);
-    let param = param_wire_bytes_per_param(method).min(total);
-    let scale = (islands - 1.0) / (m * islands * inter.bw);
-    let t_grad_wire = (total - param) * psi * scale;
-    let t_enc = encode_bytes_per_param(method) * psi / (m * gpu.mem_bw);
-    let t_param_inter = param * psi * scale;
-    let comm = t_intra + t_enc + (t_grad_wire - compute).max(0.0) + t_param_inter;
-    let step = compute + comm;
-    let tokens = accum * mbs_tokens * gpus as f64;
-    (tokens / step, comm / step)
+) -> Result<(f64, f64)> {
+    ensure!(
+        island_size >= 1 && gpus % island_size == 0,
+        "cluster of {gpus} GPUs does not divide into islands of {island_size}"
+    );
+    analytic_throughput_tiered_stale(
+        model,
+        gpu,
+        &[intra, inter],
+        gpus,
+        &[island_size, gpus / island_size],
+        mbs_tokens,
+        accum,
+        method,
+    )
 }
 
 /// Wire bytes per parameter per *optimizer step* under
@@ -480,11 +678,13 @@ pub fn analytic_throughput_local(
 /// (`topology::HierSyncEngine`): (1) fp32 ring reduce-scatter plus the
 /// parameter hop inside each `island_size`-GPU NVLink island at `intra`
 /// bandwidth, (2) the low-bit inter-island exchange — the method's wire
-/// bytes scaled from the flat (N−1)/N factor down to (K−1)/K over K
+/// bytes scaled from the flat (N−1)/N factor down to (K−1)/(mK) over K
 /// islands — pipelined against encode time over `buckets` buckets at
-/// `inter` bandwidth. `island_size = 1` reproduces the flat
-/// [`analytic_throughput_overlapped`] exactly (no intra term, K = N).
-/// Returns (tokens/s for the whole cluster, comm fraction).
+/// `inter` bandwidth. The thin two-level wrapper over
+/// [`analytic_throughput_tiered`]; `island_size = 1` reproduces the
+/// flat [`analytic_throughput_overlapped`] exactly (no intra term,
+/// K = N), and a non-dividing `gpus / island_size` is an error, never a
+/// truncation. Returns (tokens/s for the whole cluster, comm fraction).
 #[allow(clippy::too_many_arguments)]
 pub fn analytic_throughput_hier(
     model: &AnalyticModel,
@@ -497,35 +697,22 @@ pub fn analytic_throughput_hier(
     accum: f64,
     method: &str,
     buckets: usize,
-) -> (f64, f64) {
-    assert!(island_size >= 1 && gpus % island_size == 0, "gpus must divide into islands");
-    let islands = (gpus / island_size) as f64;
-    let m = island_size as f64;
-    let psi = model.params;
-    let flops_per_token = 6.0 * model.active_params;
-    let compute = accum * mbs_tokens * flops_per_token / (gpu.flops * gpu.mfu);
-    // intra level: fp32 gradient ring reduce-scatter (4 bytes/param) and
-    // the 16-bit parameter hop back down the island (2 bytes/param), each
-    // moving (m-1)/m of the model over NVLink
-    let t_intra = (4.0 + 2.0) * psi * (m - 1.0) / (m * intra.bw);
-    // inter level: after the intra reduce each node owns a 1/m gradient
-    // row and ships its (k-1)/k remote pieces; likewise the phase-3
-    // parameter gather ships the 1/(mk)-size own shard to each of the
-    // k-1 remote islands. Both components of wire_bytes_per_param (the
-    // low-bit gradient and the 16-bit parameter hop, Table 1 accounting)
-    // therefore scale by the same (k-1)/(m*k) factor vs the flat
-    // all-to-all's (n-1)/n — so the inter term stays like-for-like with
-    // [`analytic_throughput_overlapped`].
-    let n = gpus as f64;
-    let t_wire = wire_bytes_per_param(method) * psi * (islands - 1.0)
-        / (m * islands * inter.bw);
-    // each island member encodes only its 1/m gradient row
-    let t_enc = encode_bytes_per_param(method) * psi / (m * gpu.mem_bw);
-    let t_inter = pipelined_time(t_enc, t_wire, buckets, BUCKET_OVERHEAD_S);
-    let comm = t_intra + t_inter;
-    let step = compute + comm;
-    let tokens = accum * mbs_tokens * n;
-    (tokens / step, comm / step)
+) -> Result<(f64, f64)> {
+    ensure!(
+        island_size >= 1 && gpus % island_size == 0,
+        "cluster of {gpus} GPUs does not divide into islands of {island_size}"
+    );
+    analytic_throughput_tiered(
+        model,
+        gpu,
+        &[intra, inter],
+        gpus,
+        &[island_size, gpus / island_size],
+        mbs_tokens,
+        accum,
+        method,
+        buckets,
+    )
 }
 
 /// [`analytic_throughput_hier`] with the asynchronous parameter sync:
@@ -535,8 +722,11 @@ pub fn analytic_throughput_hier(
 /// [`analytic_throughput_async`]; the fp32 intra reduce and the island
 /// parameter broadcast stay on the critical path (the broadcast runs at
 /// the drain point but rides NVLink — the async schedule hides only the
-/// slow hop). `island_size = 1` reproduces [`analytic_throughput_async`]
-/// exactly. Returns (tokens/s for the whole cluster, comm fraction).
+/// slow hop). The thin two-level wrapper over
+/// [`analytic_throughput_tiered_async`]; `island_size = 1` reproduces
+/// [`analytic_throughput_async`] exactly, and a non-dividing
+/// `gpus / island_size` is an error. Returns (tokens/s for the whole
+/// cluster, comm fraction).
 #[allow(clippy::too_many_arguments)]
 pub fn analytic_throughput_hier_async(
     model: &AnalyticModel,
@@ -549,25 +739,22 @@ pub fn analytic_throughput_hier_async(
     accum: f64,
     method: &str,
     buckets: usize,
-) -> (f64, f64) {
-    assert!(island_size >= 1 && gpus % island_size == 0, "gpus must divide into islands");
-    let islands = (gpus / island_size) as f64;
-    let m = island_size as f64;
-    let psi = model.params;
-    let flops_per_token = 6.0 * model.active_params;
-    let compute = accum * mbs_tokens * flops_per_token / (gpu.flops * gpu.mfu);
-    let t_intra = (4.0 + 2.0) * psi * (m - 1.0) / (m * intra.bw);
-    let total = wire_bytes_per_param(method);
-    let param = param_wire_bytes_per_param(method).min(total);
-    let scale = (islands - 1.0) / (m * islands * inter.bw);
-    let t_grad_wire = (total - param) * psi * scale;
-    let t_enc = encode_bytes_per_param(method) * psi / (m * gpu.mem_bw);
-    let t_grad = pipelined_time(t_enc, t_grad_wire, buckets, BUCKET_OVERHEAD_S);
-    let t_param_inter = param * psi * scale;
-    let comm = t_intra + t_grad + (t_param_inter - compute).max(0.0);
-    let step = compute + comm;
-    let tokens = accum * mbs_tokens * gpus as f64;
-    (tokens / step, comm / step)
+) -> Result<(f64, f64)> {
+    ensure!(
+        island_size >= 1 && gpus % island_size == 0,
+        "cluster of {gpus} GPUs does not divide into islands of {island_size}"
+    );
+    analytic_throughput_tiered_async(
+        model,
+        gpu,
+        &[intra, inter],
+        gpus,
+        &[island_size, gpus / island_size],
+        mbs_tokens,
+        accum,
+        method,
+        buckets,
+    )
 }
 
 #[cfg(test)]
@@ -741,7 +928,7 @@ mod tests {
         let (flat, ff) = analytic_throughput_stale(m, A100, A800_IB, 64, 4096.0, 1.0, "loco");
         let (hier, hf) = analytic_throughput_stale_hier(
             m, A100, NVLINK, A800_IB, 64, 1, 4096.0, 1.0, "loco",
-        );
+        ).unwrap();
         assert!((flat - hier).abs() / flat < 1e-12, "{flat} vs {hier}");
         assert!((ff - hf).abs() < 1e-12);
     }
@@ -752,10 +939,10 @@ mod tests {
         for island in [2usize, 4, 8] {
             let (sync, _) = analytic_throughput_hier(
                 m, A100, NVLINK, A800_IB, 64, island, 4096.0, 1.0, "loco", 8,
-            );
+            ).unwrap();
             let (stale, _) = analytic_throughput_stale_hier(
                 m, A100, NVLINK, A800_IB, 64, island, 4096.0, 1.0, "loco",
-            );
+            ).unwrap();
             assert!(stale > sync, "island={island}: {stale} <= {sync}");
         }
     }
@@ -791,7 +978,7 @@ mod tests {
         let (flat, ff) = analytic_throughput_async(m, A100, A800_IB, 64, 4096.0, 1.0, "loco", 8);
         let (hier, hf) = analytic_throughput_hier_async(
             m, A100, NVLINK, A800_IB, 64, 1, 4096.0, 1.0, "loco", 8,
-        );
+        ).unwrap();
         assert!((flat - hier).abs() / flat < 1e-12, "{flat} vs {hier}");
         assert!((ff - hf).abs() < 1e-12);
     }
@@ -806,10 +993,10 @@ mod tests {
         for island in [1usize, 2, 4, 8] {
             let (sync, _) = analytic_throughput_hier(
                 m, A100, NVLINK, A800_IB, 64, island, 4096.0, 1.0, "loco", 8,
-            );
+            ).unwrap();
             let (asyn, _) = analytic_throughput_hier_async(
                 m, A100, NVLINK, A800_IB, 64, island, 4096.0, 1.0, "loco", 8,
-            );
+            ).unwrap();
             // the inter-island gather always has something to hide on
             // this fabric: the win is strict at every island size
             assert!(asyn > sync, "island={island}: {asyn} <= {sync}");
@@ -823,7 +1010,7 @@ mod tests {
             analytic_throughput_overlapped(m, A100, A800_IB, 64, 4096.0, 1.0, "loco", 8);
         let (hier, hf) = analytic_throughput_hier(
             m, A100, NVLINK, A800_IB, 64, 1, 4096.0, 1.0, "loco", 8,
-        );
+        ).unwrap();
         assert!((flat - hier).abs() / flat < 1e-12, "{flat} vs {hier}");
         assert!((ff - hf).abs() < 1e-12);
     }
@@ -840,14 +1027,14 @@ mod tests {
         for island in [2usize, 4, 8] {
             let (hier, _) = analytic_throughput_hier(
                 m, A100, NVLINK, A800_IB, 64, island, 4096.0, 1.0, "loco", 8,
-            );
+            ).unwrap();
             assert!(hier > last, "island={island}: {hier} <= {last}");
             last = hier;
         }
         // and the comm fraction shrinks accordingly
         let (_, frac_hier) = analytic_throughput_hier(
             m, A100, NVLINK, A800_IB, 64, 8, 4096.0, 1.0, "loco", 8,
-        );
+        ).unwrap();
         let (_, frac_flat) =
             analytic_throughput_overlapped(m, A100, A800_IB, 64, 4096.0, 1.0, "loco", 8);
         assert!(frac_hier < frac_flat);
@@ -864,10 +1051,10 @@ mod tests {
             analytic_throughput_overlapped(m, A100, A800_IB, 64, 4096.0, 1.0, "loco", 8);
         let (sym, _) = analytic_throughput_hier(
             m, A100, A800_IB, A800_IB, 64, 8, 4096.0, 1.0, "loco", 8,
-        );
+        ).unwrap();
         let (asym, _) = analytic_throughput_hier(
             m, A100, NVLINK, A800_IB, 64, 8, 4096.0, 1.0, "loco", 8,
-        );
+        ).unwrap();
         assert!(sym < flat, "fp32 intra traffic over a slow link must hurt: {sym} vs {flat}");
         assert!(asym > sym);
     }
@@ -894,6 +1081,103 @@ mod tests {
         let t_star = pipelined_time(t_enc, t_wire, buckets, BUCKET_OVERHEAD_S);
         assert!(t_star <= pipelined_time(t_enc, t_wire, 1, BUCKET_OVERHEAD_S) + 1e-12);
         assert!(t_star <= pipelined_time(t_enc, t_wire, 256, BUCKET_OVERHEAD_S) + 1e-12);
+    }
+
+    #[test]
+    fn non_dividing_sizes_error_instead_of_truncating() {
+        // regression: a 10-GPU / 4-per-island query used to silently model
+        // 8 GPUs via truncating integer division — it must now refuse
+        let m = analytic_model("llama2-7b").unwrap();
+        let err = analytic_throughput_hier(
+            m, A100, NVLINK, A800_IB, 10, 4, 4096.0, 1.0, "loco", 8,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("does not divide"), "{err}");
+        assert!(analytic_throughput_hier_async(
+            m, A100, NVLINK, A800_IB, 10, 4, 4096.0, 1.0, "loco", 8,
+        )
+        .is_err());
+        assert!(analytic_throughput_stale_hier(
+            m, A100, NVLINK, A800_IB, 10, 4, 4096.0, 1.0, "loco",
+        )
+        .is_err());
+        let err = analytic_throughput_tiered(
+            m, A100, &[NVLINK, A800_IB], 10, &[4, 2], 4096.0, 1.0, "loco", 8,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("does not factor"), "{err}");
+        // a mismatched link table is also an error
+        assert!(analytic_throughput_tiered(
+            m, A100, &[A800_IB], 8, &[4, 2], 4096.0, 1.0, "loco", 8,
+        )
+        .is_err());
+        assert!(outer_tier_grad_bytes_per_param(10, &[4, 2], 4).is_err());
+    }
+
+    #[test]
+    fn tiered_two_levels_match_hier_wrapper() {
+        let m = analytic_model("llama2-7b").unwrap();
+        let (a, af) = analytic_throughput_hier(
+            m, A100, NVLINK, A800_IB, 64, 8, 4096.0, 1.0, "loco", 8,
+        )
+        .unwrap();
+        let (b, bf) = analytic_throughput_tiered(
+            m, A100, &[NVLINK, A800_IB], 64, &[8, 8], 4096.0, 1.0, "loco", 8,
+        )
+        .unwrap();
+        assert_eq!(a, b);
+        assert_eq!(af, bf);
+        // single-tier lists degrade to the flat models exactly
+        let (flat, _) =
+            analytic_throughput_overlapped(m, A100, A800_IB, 64, 4096.0, 1.0, "loco", 8);
+        let (t1, _) = analytic_throughput_tiered(
+            m, A100, &[A800_IB], 64, &[64], 4096.0, 1.0, "loco", 8,
+        )
+        .unwrap();
+        assert_eq!(flat, t1);
+    }
+
+    #[test]
+    fn deeper_trees_shrink_the_outer_tier() {
+        // [4, 2, 2] vs the two-level [4, 4] at the same leaf size: the
+        // extra intra tier shrinks the row crossing the outermost cut,
+        // so outer bytes drop 3x; the modeled step speeds up when that
+        // middle tier rides an NVLink-class fabric (NVSwitch rack) — the
+        // fp32 middle reduce must be cheaper than the outer savings
+        let b3 = outer_tier_grad_bytes_per_param(16, &[4, 2, 2], 4).unwrap();
+        let b2 = outer_tier_grad_bytes_per_param(16, &[4, 4], 4).unwrap();
+        assert!(b3 < b2, "{b3} >= {b2}");
+        assert!((b2 / b3 - 3.0).abs() < 1e-12, "expected exactly 3x: {b2} vs {b3}");
+        let m = analytic_model("llama2-7b").unwrap();
+        let fast = [NVLINK, NVLINK, A800_IB];
+        let (two, _) = analytic_throughput_tiered(
+            m, A100, &[NVLINK, A800_IB], 64, &[8, 8], 4096.0, 1.0, "loco", 8,
+        )
+        .unwrap();
+        let (three, _) = analytic_throughput_tiered(
+            m, A100, &fast, 64, &[8, 4, 2], 4096.0, 1.0, "loco", 8,
+        )
+        .unwrap();
+        assert!(three > two, "{three} <= {two}");
+        // with the middle tier as slow as the spine the fp32 middle
+        // reduce eats the outer savings — the paper's asymmetry premise,
+        // one level deeper
+        let (three_slow, _) = analytic_throughput_tiered(
+            m, A100, &[NVLINK, A800_IB, A800_IB], 64, &[8, 4, 2], 4096.0, 1.0, "loco", 8,
+        )
+        .unwrap();
+        assert!(three_slow < two, "{three_slow} >= {two}");
+        // stale and async tiered variants stay ordered like the two-level
+        let (stale3, _) = analytic_throughput_tiered_stale(
+            m, A100, &fast, 64, &[8, 4, 2], 4096.0, 1.0, "loco",
+        )
+        .unwrap();
+        let (async3, _) = analytic_throughput_tiered_async(
+            m, A100, &fast, 64, &[8, 4, 2], 4096.0, 1.0, "loco", 8,
+        )
+        .unwrap();
+        assert!(stale3 > three);
+        assert!(async3 > three);
     }
 
     #[test]

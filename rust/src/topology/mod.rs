@@ -1,106 +1,169 @@
-//! Two-level cluster topology: NVLink islands bridged by a slow
-//! inter-island fabric — the deployment shape the paper assumes on
-//! A100/A800 clusters, where LoCo compresses only the slow hop and
-//! intra-node traffic stays high-precision (the same hierarchy 1-bit Adam
-//! and 0/1 Adam schedule around).
+//! Recursive multi-tier cluster topology: NVLink islands, racks of
+//! islands, pods of racks — the deployment shapes the paper assumes on
+//! A100/A800 clusters, where LoCo compresses only the slowest hop and
+//! everything below it stays high-precision (the same hierarchy 1-bit
+//! Adam and 0/1 Adam schedule around, extended from one level of
+//! fixed-size islands to an arbitrary tier tree with uneven leaves).
 //!
-//! [`Topology`] groups `n` consecutive ranks into `islands` fixed-size
-//! islands and cuts the model twice: first into `island_size` gradient
-//! *rows* (one per island-local rank), then each row into `islands`
-//! *pieces*. Node `(g, j)` — global rank `g * island_size + j` — owns
-//! piece `g` of row `j` as its Zero-2 shard.
+//! [`Topology`] comes in three shapes:
 //!
-//! [`HierSyncEngine`] runs the three-phase schedule over that cut:
+//! * **flat** (`tiers = [n]`): no hierarchy — [`HierSyncEngine`]
+//!   delegates to the unchanged [`SyncEngine`] bit-for-bit;
+//! * **even tiers** (`tiers = [m_0, …, m_{L-1}]`, innermost first,
+//!   `Π m_l = n`): consecutive ranks are grouped recursively —
+//!   `[4, 2, 2]` is 2 racks of 2 islands of 4 GPUs. The model is cut the
+//!   same way: tier 0 cuts it into `m_0` gradient *rows* (one per leaf
+//!   member), tier 1 cuts each row into `m_1` sub-rows, …, and the
+//!   outermost tier cuts the final row into `m_{L-1}` Zero-2 *pieces*.
+//!   `tiers = [island_size, islands]` is bitwise the two-level engine;
+//! * **uneven groups** (`groups = [[0,1,2],[3,…,7]]`): explicit leaf
+//!   islands of different sizes bridged by one outer cut. Each island
+//!   cuts the model into one row per member; gradients and parameters
+//!   are routed as *slices* — intersections of a holder's row with an
+//!   owner's shard — so no peer symmetry is required.
+//!
+//! [`HierSyncEngine`] runs the tier-recursive schedule over that cut:
 //!
 //! ```text
-//!          island 0                      island 1
-//!   ┌──────────────────┐         ┌──────────────────┐
-//!   │ n00  n01  n02 n03│         │ n10  n11  n12 n13│
-//!   └──┬────┬────┬───┬─┘         └──┬────┬────┬───┬─┘
-//! (1)  ring reduce-scatter fp32     ring reduce-scatter fp32   intra, fast
-//!      row j -> n0j                 row j -> n1j
-//! (2)  n0j  <═══ low-bit bucketed all-to-all ═══>  n1j         inter, slow
-//!      (per-row peer groups; tags are (island, bucket) pairs:
-//!       bucket ids are ordered by destination island)
-//! (3)  optimizer on the decoded piece, then the updated island
-//!      shard flows back down: inter peer-group param gather fills
-//!      each row, island ring all-gather broadcasts rows            intra
+//!            rack 0                          rack 1
+//!   ┌────────┐  ┌────────┐         ┌────────┐  ┌────────┐
+//!   │ island │  │ island │         │ island │  │ island │
+//!   └───┬────┘  └───┬────┘         └───┬────┘  └───┬────┘
+//! (1) ring reduce-scatter fp32 inside every island          tier 0, fast
+//! (2) ring reduce-scatter fp32 of the rows across the
+//!     rack's islands (peer groups of matching members)      tier 1
+//! (3) low-bit bucketed all-to-all across racks, row-local   outer, slow
+//! (4) optimizer on the decoded piece; the updated shard
+//!     flows back down: outer peer-group param gather,
+//!     then all-gather broadcasts at tier 1, then tier 0
 //! ```
 //!
-//! Phase 1 reduces the island's gradient exactly (fp32) and leaves member
-//! `j` holding the island *mean* of row `j` (the sum scaled by 1/m so the
-//! fixed quantization scale `s` keeps seeing per-node gradient
-//! magnitudes). Phase 2 reuses the bucketed engine
-//! ([`crate::comm::SyncEngine`]) verbatim over the row's peer group — one
-//! encoder per bucket, error-feedback state sized to the row, pipelined
-//! tagged wire — so each node ships `(k-1)/k` of a `1/m` row instead of
-//! `(n-1)/n` of the model: at 8 nodes in 2 islands the low-bit
-//! inter-island volume drops 4x. Phase 3 is the parameter path: the
-//! inter hop ships each node's own shard once *per remote island* (the
-//! minimum without inter-island multicast — every island needs its own
-//! copy), and the redistribution inside each island is intra-only.
+//! Every *intra* tier reduces exactly (fp32); only the outermost cut is
+//! compressed — the deeper the tree, the smaller the row each node ships
+//! across the slow fabric. Before the low-bit encode the row is scaled
+//! by `1/M` (`M` = product of the intra tiers) so the fixed quantization
+//! scale `s` keeps seeing per-node gradient magnitudes; the decoded sum
+//! of the outer groups' means is rescaled by `M`, preserving the flat
+//! contract (unaveraged sum over all `n` sources, caller divides by
+//! `n`). Phase 3 reuses the bucketed engine ([`crate::comm::SyncEngine`])
+//! verbatim over the outermost peer group — one encoder per bucket,
+//! error-feedback state sized to the row, pipelined tagged wire.
 //!
-//! Phase 3 also exists in an asynchronous split
+//! The parameter path (4) and the gradient path (1–3) both exist in the
+//! asynchronous launch/drain splits
 //! ([`HierSyncEngine::param_sync_launch`] /
-//! [`HierSyncEngine::param_sync_drain`]): the inter-hop gather is pushed
-//! onto the tagged wire right after the optimizer step and drained only
-//! after the next step's forward/backward — the island broadcast then
-//! runs at the drain point on the fast intra links
-//! (`train.sync_params = "async"`, DESIGN.md §"Async parameter sync").
+//! [`HierSyncEngine::param_sync_drain`],
+//! [`HierSyncEngine::grad_sync_launch`] /
+//! [`HierSyncEngine::grad_sync_drain`]): the fast intra phases run at
+//! launch (gradients) or drain (parameter broadcast) and only the slow
+//! outermost hop rides the tagged wire across the next step's compute —
+//! `train.sync_params = "async"` and `train.grad_sync = "stale"` work
+//! unchanged on every topology shape.
 //!
-//! Phases 1–2 have the matching split for the *gradient* exchange
-//! ([`HierSyncEngine::grad_sync_launch`] /
-//! [`HierSyncEngine::grad_sync_drain`], `train.grad_sync = "stale"`):
-//! the launch runs the fast intra reduce-scatter and pushes only the
-//! low-bit inter-island hop onto the tagged wire; the drain one step
-//! later receives, decodes and rescales — so the slow hop is the only
-//! part that rides across the next step's compute.
+//! Uneven groups replace the peer-group all-to-all with deterministic
+//! slice routing: after the intra reduce, member `(g, j)` holds the
+//! island mean of its row; for every rank `r` whose Zero-2 shard
+//! overlaps that row it encodes the overlap through its (row-sized,
+//! error-feedback-carrying) encoder and ships it tagged; `r` decodes
+//! each island's slices, rescales by that island's size, and
+//! accumulates — islands of different sizes therefore contribute their
+//! exact sums. The parameter path runs the same slices in reverse
+//! (owner → row holders) before the ordinary island broadcast.
 //!
-//! `islands = 1` *is* the flat engine: construction delegates to the
-//! unchanged [`SyncEngine`] over the cluster partition, bit-for-bit
-//! (`tests/hier_topology.rs` pins this). With more than one island the
-//! schedule is genuinely different arithmetic — island sums are exact
-//! where the flat engine quantizes every pairwise contribution — so
-//! losses track the flat engine closely but not bitwise (EXPERIMENTS.md
-//! quantifies the drift).
+//! `tiers = [n]` *is* the flat engine and `tiers = [m, k]` *is* the
+//! two-level engine, bit-for-bit (`tests/tier_topology.rs` pins both).
+//! With more levels or uneven groups the schedule is genuinely different
+//! arithmetic — intra sums are exact where the flat engine quantizes
+//! every pairwise contribution — so losses track the flat engine closely
+//! but not bitwise (EXPERIMENTS.md quantifies the drift).
 
 use std::ops::Range;
+use std::sync::Mutex;
 
 use anyhow::{ensure, Result};
 
-use crate::collective::{Comm, NodeCtx};
+use crate::collective::{ClusterSpec, Comm, NodeCtx};
 use crate::comm::SyncEngine;
-use crate::compress::{self, CompressorConfig, Method};
+use crate::compress::{self, CompressorConfig, Decoder, Encoder, Method, WireMsg};
 use crate::sharding::{ParamLayout, Partition};
 
-/// A cluster of `n` nodes grouped into `islands` equal islands of
-/// consecutive ranks (matching [`crate::collective::ClusterSpec`]'s
-/// island map).
+/// Cut `span` into `parts` contiguous pieces with 2-element alignment on
+/// the interior cuts (the same arithmetic as [`Partition::flat_even`],
+/// rebased onto the span) — the single primitive every tier reuses, so
+/// nested cuts stay bitwise identical to the historical two-level ones.
+fn cut_range(span: &Range<usize>, parts: usize) -> Vec<Range<usize>> {
+    Partition::flat_even(span.len(), parts, 2)
+        .ranges
+        .into_iter()
+        .map(|r| span.start + r.start..span.start + r.end)
+        .collect()
+}
+
+/// Broadcast whole rows inside one group: every member contributes its
+/// own row at wire precision, the ring all-gather distributes them, and
+/// each member writes the others' rows into `params`. The rows already
+/// hold wire-decoded values, so the re-encoding (the same encoder as the
+/// gather) is lossless and every node stays bitwise identical — the one
+/// downward-broadcast primitive shared by the tiered and uneven engines.
+fn broadcast_group_rows(
+    ctx: &NodeCtx,
+    members: &[usize],
+    rows: &[Range<usize>],
+    my_idx: usize,
+    params: &mut [f32],
+    bf16: bool,
+) {
+    let mine = crate::comm::encode_params(&params[rows[my_idx].clone()], bf16);
+    let g = ctx.group(members);
+    let all = g.all_gather_wire(mine);
+    for (j, msg) in all.iter().enumerate() {
+        if j != my_idx {
+            compress::write_wire(msg, &mut params[rows[j].clone()]);
+        }
+    }
+}
+
+/// A cluster of `n` nodes arranged as a recursive tier tree (even
+/// `tiers`, innermost first) or as explicit uneven leaf `groups`.
 ///
 /// ```
 /// use loco::topology::Topology;
 ///
-/// let t = Topology::new(8, 2).unwrap();
+/// let t = Topology::new(8, 2).unwrap(); // legacy two-level spelling
 /// assert_eq!(t.island_size(), 4);
 /// assert_eq!(t.island_of(5), 1);
-/// // rank 5's cross-island peer group: local rank 1 of every island
+/// // rank 5's outer peer group: the matching member of every island
 /// assert_eq!(t.peer_group(5), vec![1, 5]);
-/// // the two-level Zero-2 cut tiles the model exactly
+/// // the recursive Zero-2 cut tiles the model exactly
 /// let part = t.partition(1024);
 /// assert_eq!(part.ranges.len(), 8);
 /// let covered: usize = part.ranges.iter().map(|r| r.len()).sum();
 /// assert_eq!(covered, 1024);
+///
+/// // three tiers: 2 racks of 2 islands of 2 GPUs
+/// let t3 = Topology::from_tiers(8, &[2, 2, 2]).unwrap();
+/// assert_eq!(t3.tiers(), &[2, 2, 2]);
+/// assert_eq!(t3.island_of(3), 1);
+///
+/// // uneven leaf islands
+/// let tu = Topology::from_groups(5, vec![vec![0, 1, 2], vec![3, 4]]).unwrap();
+/// assert_eq!(tu.island_of(4), 1);
+/// assert_eq!(tu.island_members(0), vec![0, 1, 2]);
 /// ```
 #[derive(Debug, Clone)]
 pub struct Topology {
     n: usize,
-    islands: usize,
-    island_size: usize,
+    /// tier sizes, innermost (leaf island size) first; `[n]` = flat.
+    /// For uneven topologies this stays `[n]` and the structure lives in
+    /// `groups`.
+    tiers: Vec<usize>,
+    /// explicit uneven leaf islands (consecutive ranks tiling `0..n`)
+    groups: Option<Vec<Vec<usize>>>,
 }
 
 impl Topology {
-    /// `islands = 0` or `1` selects the flat topology. `n` must divide
-    /// evenly into the islands.
+    /// Legacy two-level constructor: `islands = 0` or `1` selects the
+    /// flat topology; otherwise `n` must divide evenly into the islands.
     pub fn new(n: usize, islands: usize) -> Result<Topology> {
         ensure!(n > 0, "empty cluster");
         let islands = islands.max(1);
@@ -108,12 +171,67 @@ impl Topology {
             n % islands == 0,
             "cluster of {n} nodes does not divide into {islands} islands"
         );
-        Ok(Topology { n, islands, island_size: n / islands })
+        if islands == 1 {
+            return Ok(Topology::flat(n));
+        }
+        Ok(Topology { n, tiers: vec![n / islands, islands], groups: None })
     }
 
     /// The flat (single-level) topology.
     pub fn flat(n: usize) -> Topology {
-        Topology { n, islands: 1, island_size: n }
+        Topology { n, tiers: vec![n], groups: None }
+    }
+
+    /// Recursive even tier tree, innermost (leaf island size) first:
+    /// `[4, 2, 2]` is 2 racks of 2 islands of 4 GPUs. The product must
+    /// equal `n` — non-dividing tier lists are an error, never a silent
+    /// truncation. Degenerate 1-wide tiers are dropped (`[4, 1, 2]` ≡
+    /// `[4, 2]`); a list that collapses to one tier is the flat topology.
+    pub fn from_tiers(n: usize, tiers: &[usize]) -> Result<Topology> {
+        ensure!(n > 0, "empty cluster");
+        ensure!(!tiers.is_empty(), "topology.tiers needs at least one tier");
+        ensure!(
+            tiers.iter().all(|&m| m >= 1),
+            "topology.tiers entries must be >= 1 (got {tiers:?})"
+        );
+        let p: usize = tiers.iter().product();
+        ensure!(
+            p == n,
+            "cluster of {n} nodes does not factor into tiers {tiers:?} (product {p})"
+        );
+        let mut t: Vec<usize> = tiers.iter().copied().filter(|&m| m > 1).collect();
+        if t.is_empty() {
+            t.push(n);
+        }
+        Ok(Topology { n, tiers: t, groups: None })
+    }
+
+    /// Explicit uneven leaf islands: `groups` must tile `0..n` with
+    /// consecutive ranks in order (e.g. `[[0,1,2],[3,4,5,6,7]]`). The
+    /// hierarchy is two-level — inside a group vs across groups — with
+    /// slice-routed collectives that tolerate the missing peer symmetry.
+    /// A single group has no outer cut at all and degrades to the flat
+    /// topology (there is no slow hop to compress).
+    pub fn from_groups(n: usize, groups: Vec<Vec<usize>>) -> Result<Topology> {
+        ensure!(n > 0, "empty cluster");
+        ensure!(!groups.is_empty(), "topology.groups needs at least one island");
+        let mut cursor = 0usize;
+        for (i, g) in groups.iter().enumerate() {
+            ensure!(!g.is_empty(), "topology.groups: island {i} is empty");
+            for &r in g {
+                ensure!(
+                    r == cursor,
+                    "topology.groups must tile 0..{n} with consecutive ranks in order \
+                     (found rank {r} where {cursor} was expected)"
+                );
+                cursor += 1;
+            }
+        }
+        ensure!(cursor == n, "topology.groups cover {cursor} of {n} ranks");
+        if groups.len() == 1 {
+            return Ok(Topology::flat(n));
+        }
+        Ok(Topology { n, tiers: vec![n], groups: Some(groups) })
     }
 
     /// Total number of nodes in the cluster.
@@ -121,82 +239,373 @@ impl Topology {
         self.n
     }
 
-    /// Number of islands (1 on the flat topology).
+    /// Tier sizes, innermost first (`[n]` on flat and uneven topologies
+    /// — uneven structure lives in [`Topology::groups`]).
+    pub fn tiers(&self) -> &[usize] {
+        &self.tiers
+    }
+
+    /// The explicit uneven leaf islands, if this topology has them.
+    pub fn groups(&self) -> Option<&[Vec<usize>]> {
+        self.groups.as_deref()
+    }
+
+    /// Number of leaf islands (1 on the flat topology).
     pub fn islands(&self) -> usize {
-        self.islands
+        match &self.groups {
+            Some(gs) => gs.len(),
+            None => self.n / self.tiers[0],
+        }
     }
 
-    /// Nodes per island (`n` on the flat topology).
+    /// Nodes per leaf island (`n` on the flat topology, the largest
+    /// island on uneven topologies).
     pub fn island_size(&self) -> usize {
-        self.island_size
+        match &self.groups {
+            Some(gs) => gs.iter().map(Vec::len).max().unwrap_or(0),
+            None => self.tiers[0],
+        }
     }
 
-    /// True when this topology actually has a second level.
+    /// True when this topology actually has more than one level.
     pub fn is_hierarchical(&self) -> bool {
-        self.islands > 1
+        self.groups.is_some() || self.tiers.len() > 1
     }
 
-    /// Island of `rank` (consecutive-rank islands).
+    /// Leaf island of `rank`.
     pub fn island_of(&self, rank: usize) -> usize {
-        rank / self.island_size
+        match &self.groups {
+            Some(gs) => gs
+                .iter()
+                .position(|g| g.contains(&rank))
+                .expect("rank outside the group map"),
+            None => rank / self.tiers[0],
+        }
     }
 
-    /// Rank inside its island.
+    /// Rank inside its leaf island.
     pub fn local_rank(&self, rank: usize) -> usize {
-        rank % self.island_size
+        match &self.groups {
+            Some(gs) => gs[self.island_of(rank)]
+                .iter()
+                .position(|&r| r == rank)
+                .expect("rank outside its island"),
+            None => rank % self.tiers[0],
+        }
     }
 
-    /// Global ranks of one island, ascending.
+    /// Global ranks of one leaf island, ascending.
     pub fn island_members(&self, island: usize) -> Vec<usize> {
-        (island * self.island_size..(island + 1) * self.island_size).collect()
-    }
-
-    /// The cross-island peer group of `rank`: the node with the same
-    /// island-local rank in every island (phase-2 participants for that
-    /// row), ordered by island.
-    pub fn peer_group(&self, rank: usize) -> Vec<usize> {
-        let j = self.local_rank(rank);
-        (0..self.islands).map(|g| g * self.island_size + j).collect()
-    }
-
-    /// The phase-1 intra reduce-scatter cut: one gradient row per
-    /// island-local rank, 2-element aligned for the nibble-packed wire.
-    pub fn rows(&self, total: usize) -> Vec<Range<usize>> {
-        Partition::flat_even(total, self.island_size, 2).ranges
-    }
-
-    /// The two-level Zero-2 partition: row `j` cut into one piece per
-    /// island; `ranges[g * island_size + j]` is piece `g` of row `j`.
-    /// Pieces tile the model exactly and every boundary is 2-aligned.
-    pub fn partition(&self, total: usize) -> Partition {
-        let mut ranges = vec![0..0; self.n];
-        for (j, row) in self.rows(total).iter().enumerate() {
-            let pieces = Partition::flat_even(row.len(), self.islands, 2).ranges;
-            for (g, p) in pieces.iter().enumerate() {
-                ranges[g * self.island_size + j] = row.start + p.start..row.start + p.end;
+        match &self.groups {
+            Some(gs) => gs[island].clone(),
+            None => {
+                let m = self.tiers[0];
+                (island * m..(island + 1) * m).collect()
             }
+        }
+    }
+
+    /// The outermost-cut peer group of `rank` on even topologies: the
+    /// matching node of every outermost group (phase-3 participants for
+    /// its row), ordered by group. On the two-level topology this is
+    /// "the node with the same island-local rank in every island".
+    /// Uneven topologies have no peer symmetry and route slices instead.
+    pub fn peer_group(&self, rank: usize) -> Vec<usize> {
+        assert!(self.groups.is_none(), "uneven topologies have no peer groups");
+        let stride: usize = self.tiers[..self.tiers.len() - 1].iter().product();
+        let k = *self.tiers.last().unwrap();
+        let low = rank % stride;
+        (0..k).map(|g| low + g * stride).collect()
+    }
+
+    /// The leaf-tier reduce-scatter cut: one gradient row per leaf-island
+    /// member, 2-element aligned for the nibble-packed wire. On uneven
+    /// topologies use [`Topology::island_rows`] (islands cut differently).
+    pub fn rows(&self, total: usize) -> Vec<Range<usize>> {
+        assert!(self.groups.is_none(), "uneven islands cut rows per island");
+        cut_range(&(0..total), self.tiers[0])
+    }
+
+    /// The row cut of one specific island: one row per member, 2-aligned.
+    pub fn island_rows(&self, island: usize, total: usize) -> Vec<Range<usize>> {
+        let m = match &self.groups {
+            Some(gs) => gs[island].len(),
+            None => self.tiers[0],
+        };
+        cut_range(&(0..total), m)
+    }
+
+    /// The recursive Zero-2 partition. Even topologies cut row-by-tier:
+    /// tier 0 cuts the model into one row per leaf member, each further
+    /// tier cuts the rank's row by its coordinate at that tier, and the
+    /// outermost cut yields the shard. Every boundary is 2-aligned;
+    /// shards may be *empty* at extreme fan-outs (`total < n * 2` or a
+    /// deep tree over a short row) — every consumer tolerates
+    /// zero-length ranges. Uneven topologies shard evenly by rank; the
+    /// slice router handles the row/shard mismatch.
+    pub fn partition(&self, total: usize) -> Partition {
+        if self.groups.is_some() {
+            return Partition::flat_even(total, self.n, 2);
+        }
+        let mut ranges = vec![0..0; self.n];
+        for (r, out) in ranges.iter_mut().enumerate() {
+            let mut span = 0..total;
+            let mut stride = 1usize;
+            for &m in &self.tiers {
+                let j = (r / stride) % m;
+                span = cut_range(&span, m)[j].clone();
+                stride *= m;
+            }
+            *out = span;
         }
         Partition { ranges }
     }
+
+    /// The matching [`ClusterSpec`] (per-tier byte counters and link
+    /// levels) for [`crate::collective::run_cluster_topo`].
+    pub fn cluster_spec(&self) -> ClusterSpec {
+        if let Some(gs) = &self.groups {
+            ClusterSpec::uneven(gs.clone())
+        } else if self.is_hierarchical() {
+            ClusterSpec::tiered(self.tiers.clone())
+        } else {
+            ClusterSpec::flat()
+        }
+    }
+}
+
+/// One intra tier of the recursive engine, from this rank's viewpoint:
+/// the group it reduces with at that tier and the row cut they share.
+struct Level {
+    /// global ranks of the tier group, ordered by tier coordinate
+    members: Vec<usize>,
+    /// the shared span cut into one row per member
+    rows: Vec<Range<usize>>,
+    /// this rank's position in `members`
+    my_idx: usize,
+}
+
+/// Even recursive plan: fp32 reduce at every intra tier, the bucketed
+/// low-bit engine across the outermost cut, broadcast back down.
+struct TieredPlan {
+    inner: SyncEngine,
+    /// intra tiers, innermost first
+    levels: Vec<Level>,
+    /// outermost-cut peer group (global ranks)
+    peers: Vec<usize>,
+    /// the row this rank carries into the outer exchange
+    my_row: Range<usize>,
+    /// product of the intra tier sizes: the row is encoded as the mean
+    /// over that many nodes and the decoded sum rescaled by it
+    scale: f32,
+}
+
+/// One routed slice on an uneven topology: the overlap of `holder`'s
+/// gradient row with `owner`'s Zero-2 shard. Gradients flow holder →
+/// owner, parameters owner → holder. Slice ids double as wire tags.
+struct Slice {
+    holder: usize,
+    owner: usize,
+    range: Range<usize>,
+}
+
+/// Uneven-island plan: per-island rows, slice routing across the single
+/// outer cut, island broadcast back down.
+struct UnevenPlan {
+    /// my leaf island (global ranks, ascending)
+    island: Vec<usize>,
+    /// my island's row cut (one row per member)
+    rows: Vec<Range<usize>>,
+    my_idx: usize,
+    my_row: Range<usize>,
+    my_shard: Range<usize>,
+    /// the deterministic global slice table (identical on every rank)
+    slices: Vec<Slice>,
+    /// slice ids this rank holds (encodes on the gradient path, receives
+    /// on the parameter path), in table order
+    held: Vec<usize>,
+    /// slice ids this rank owns (receives on the gradient path, encodes
+    /// on the parameter path), in table order
+    owned: Vec<usize>,
+    /// island size of every rank's island, for the per-island rescale
+    holder_scale: Vec<f32>,
+    /// row-domain encoder (error feedback sized to the row) + decoder
+    enc: Mutex<Box<dyn Encoder>>,
+    dec: Mutex<Box<dyn Decoder>>,
+    n_slices: u64,
+}
+
+impl UnevenPlan {
+    /// Wire tag of gradient slice `i` at `step`; the parameter and
+    /// stale-gradient namespaces are disjoint (stride `3 * n_slices`),
+    /// mirroring [`crate::comm::BucketPlan::grad_tag`].
+    fn grad_tag(&self, step: u64, i: usize) -> u64 {
+        step.wrapping_mul(3 * self.n_slices).wrapping_add(i as u64)
+    }
+
+    fn param_tag(&self, step: u64, i: usize) -> u64 {
+        step.wrapping_mul(3 * self.n_slices)
+            .wrapping_add(self.n_slices)
+            .wrapping_add(i as u64)
+    }
+
+    fn stale_grad_tag(&self, step: u64, i: usize) -> u64 {
+        step.wrapping_mul(3 * self.n_slices)
+            .wrapping_add(2 * self.n_slices)
+            .wrapping_add(i as u64)
+    }
+
+    /// Phase 1 + encode/send: island fp32 reduce-scatter, scale the row
+    /// to the island mean, encode every held slice in table order (the
+    /// deterministic error-feedback order) and push the remote ones onto
+    /// the tagged wire. Returns the own-destination slices.
+    fn grad_launch(
+        &self,
+        ctx: &NodeCtx,
+        rank: usize,
+        grad: &mut [f32],
+        step: u64,
+        stale: bool,
+    ) -> Vec<(usize, WireMsg)> {
+        let intra = ctx.group(&self.island);
+        intra.ring_reduce_scatter(grad, &self.rows);
+        let m = self.island.len() as f32;
+        for x in grad[self.my_row.clone()].iter_mut() {
+            *x /= m;
+        }
+        let mut own = Vec::new();
+        let mut enc = self.enc.lock().unwrap();
+        for &i in &self.held {
+            let s = &self.slices[i];
+            let msg = enc.encode(grad, s.range.clone(), step);
+            if s.owner == rank {
+                own.push((i, msg));
+            } else {
+                let tag =
+                    if stale { self.stale_grad_tag(step, i) } else { self.grad_tag(step, i) };
+                ctx.send_wire_tagged(s.owner, tag, msg);
+            }
+        }
+        own
+    }
+
+    /// Receive/decode every owned slice in table order: each island's
+    /// slices decode into a scratch strip, are rescaled by that island's
+    /// size (its mean → its exact sum) and accumulated, so `shard_acc`
+    /// ends as the unaveraged sum over all `n` nodes — the flat contract.
+    fn grad_drain(
+        &self,
+        ctx: &NodeCtx,
+        rank: usize,
+        step: u64,
+        mut own: Vec<(usize, WireMsg)>,
+        shard_acc: &mut [f32],
+        stale: bool,
+    ) {
+        debug_assert_eq!(shard_acc.len(), self.my_shard.len());
+        shard_acc.fill(0.0);
+        let mut tmp = vec![0.0f32; self.my_shard.len()];
+        let mut dec = self.dec.lock().unwrap();
+        for &i in &self.owned {
+            let s = &self.slices[i];
+            let msg = if s.holder == rank {
+                let at = own
+                    .iter()
+                    .position(|(id, _)| *id == i)
+                    .expect("own slice stashed at launch");
+                own.swap_remove(at).1
+            } else {
+                let tag =
+                    if stale { self.stale_grad_tag(step, i) } else { self.grad_tag(step, i) };
+                ctx.recv_wire_tagged(s.holder, tag)
+            };
+            let rel = s.range.start - self.my_shard.start..s.range.end - self.my_shard.start;
+            let strip = &mut tmp[rel.clone()];
+            strip.fill(0.0);
+            dec.decode_accumulate(s.holder, &msg, strip);
+            let mg = self.holder_scale[s.holder];
+            for (a, &t) in shard_acc[rel].iter_mut().zip(strip.iter()) {
+                *a += t * mg;
+            }
+        }
+    }
+
+    /// Encode every owned slice of the updated shard at wire precision
+    /// and push it to its row holder. Returns the own-destination slices.
+    fn param_launch(
+        &self,
+        ctx: &NodeCtx,
+        rank: usize,
+        master: &[f32],
+        step: u64,
+        bf16: bool,
+    ) -> Vec<(usize, WireMsg)> {
+        debug_assert_eq!(master.len(), self.my_shard.len());
+        let mut own = Vec::new();
+        for &i in &self.owned {
+            let s = &self.slices[i];
+            let rel = s.range.start - self.my_shard.start..s.range.end - self.my_shard.start;
+            let msg = crate::comm::encode_params(&master[rel], bf16);
+            if s.holder == rank {
+                own.push((i, msg));
+            } else {
+                ctx.send_wire_tagged(s.holder, self.param_tag(step, i), msg);
+            }
+        }
+        own
+    }
+
+    /// Receive every held slice into the row, then ring-broadcast whole
+    /// rows inside the island so every member ends with the full vector.
+    /// Returns the time spent receiving the slices themselves (the
+    /// drain *wait*); the island broadcast is excluded.
+    fn param_drain(
+        &self,
+        ctx: &NodeCtx,
+        rank: usize,
+        step: u64,
+        mut own: Vec<(usize, WireMsg)>,
+        params: &mut [f32],
+        bf16: bool,
+    ) -> std::time::Duration {
+        let t0 = std::time::Instant::now();
+        for &i in &self.held {
+            let s = &self.slices[i];
+            let msg = if s.owner == rank {
+                let at = own
+                    .iter()
+                    .position(|(id, _)| *id == i)
+                    .expect("own slice stashed at launch");
+                own.swap_remove(at).1
+            } else {
+                ctx.recv_wire_tagged(s.owner, self.param_tag(step, i))
+            };
+            compress::write_wire(&msg, &mut params[s.range.clone()]);
+        }
+        let wait = t0.elapsed();
+        broadcast_group_rows(ctx, &self.island, &self.rows, self.my_idx, params, bf16);
+        wait
+    }
+}
+
+/// The engine's shape, picked at construction from the topology.
+enum EnginePlan {
+    Flat(SyncEngine),
+    Tiered(TieredPlan),
+    Uneven(UnevenPlan),
 }
 
 /// The hierarchical Zero-2 gradient/parameter synchronization engine.
-/// Wraps one [`SyncEngine`]: over the full cluster when the topology is
-/// flat (bit-identical to the pre-topology trainer), over this node's
-/// cross-island peer group otherwise, with all compressor state sized to
-/// the node's gradient row.
+/// Flat topologies delegate to one [`SyncEngine`] over the full cluster
+/// (bit-identical to the pre-topology trainer); even tier trees run the
+/// recursive reduce → outer low-bit exchange → broadcast schedule with
+/// the bucketed engine over the outermost peer group; uneven groups run
+/// the slice-routed variant. Compressor state is sized to this node's
+/// gradient row in every hierarchical shape.
 pub struct HierSyncEngine {
     topo: Topology,
     rank: usize,
-    inner: SyncEngine,
-    /// phase-1 reduce-scatter cut (empty when flat)
-    rows: Vec<Range<usize>>,
-    /// my island's members (empty when flat)
-    island: Vec<usize>,
-    /// my cross-island peer group (empty when flat)
-    peers: Vec<usize>,
-    /// my gradient row (`0..0` when flat)
-    my_row: Range<usize>,
+    plan: EnginePlan,
 }
 
 impl HierSyncEngine {
@@ -215,40 +624,123 @@ impl HierSyncEngine {
             return Ok(HierSyncEngine {
                 topo: topo.clone(),
                 rank,
-                inner,
-                rows: Vec::new(),
-                island: Vec::new(),
-                peers: Vec::new(),
-                my_row: 0..0,
+                plan: EnginePlan::Flat(inner),
             });
         }
         ensure!(
             cfg.method != Method::PowerSgd,
             "PowerSGD needs whole tensors and the DDP path; it cannot run hierarchically"
         );
-        let rows = topo.rows(layout.total);
-        let my_row = rows[topo.local_rank(rank)].clone();
-        let peers = topo.peer_group(rank);
+        if let Some(groups) = topo.groups() {
+            ensure!(
+                cfg.method != Method::Ef21,
+                "EF21 keeps per-source decoder state; uneven islands route \
+                 variable per-slice contributions and cannot host it"
+            );
+            ensure!(
+                cfg.bucket_bytes == 0,
+                "uneven islands route monolithic slices; the bucketed overlap path \
+                 (compress.bucket_bytes, incl. \"auto\") is not available on \
+                 topology.groups — set it to 0"
+            );
+            let n = topo.n();
+            let island_id = topo.island_of(rank);
+            let island = groups[island_id].clone();
+            let my_idx = topo.local_rank(rank);
+            let rows = topo.island_rows(island_id, layout.total);
+            let my_row = rows[my_idx].clone();
+            let my_shard = part.ranges[rank].clone();
+            let mut slices = Vec::new();
+            for (g, members) in groups.iter().enumerate() {
+                let g_rows = topo.island_rows(g, layout.total);
+                for (j, &holder) in members.iter().enumerate() {
+                    let row = &g_rows[j];
+                    for (owner, shard) in part.ranges.iter().enumerate() {
+                        let start = row.start.max(shard.start);
+                        let end = row.end.min(shard.end);
+                        if start < end {
+                            slices.push(Slice { holder, owner, range: start..end });
+                        }
+                    }
+                }
+            }
+            let held: Vec<usize> = slices
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.holder == rank)
+                .map(|(i, _)| i)
+                .collect();
+            let owned: Vec<usize> = slices
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.owner == rank)
+                .map(|(i, _)| i)
+                .collect();
+            let holder_scale: Vec<f32> =
+                (0..n).map(|r| groups[topo.island_of(r)].len() as f32).collect();
+            let (enc, dec) =
+                compress::build_domain(cfg, layout, my_row.clone(), my_shard.len(), n);
+            let n_slices = (slices.len() as u64).max(1);
+            return Ok(HierSyncEngine {
+                topo: topo.clone(),
+                rank,
+                plan: EnginePlan::Uneven(UnevenPlan {
+                    island,
+                    rows,
+                    my_idx,
+                    my_row,
+                    my_shard,
+                    slices,
+                    held,
+                    owned,
+                    holder_scale,
+                    enc: Mutex::new(enc),
+                    dec: Mutex::new(dec),
+                    n_slices,
+                }),
+            });
+        }
+        // even recursive tier tree
+        let tiers = topo.tiers().to_vec();
+        let depth = tiers.len();
+        let mut levels = Vec::with_capacity(depth - 1);
+        let mut span = 0..layout.total;
+        let mut stride = 1usize;
+        for &m in &tiers[..depth - 1] {
+            let my_idx = (rank / stride) % m;
+            let base = rank - my_idx * stride;
+            let members: Vec<usize> = (0..m).map(|j| base + j * stride).collect();
+            let rows = cut_range(&span, m);
+            span = rows[my_idx].clone();
+            levels.push(Level { members, rows, my_idx });
+            stride *= m;
+        }
+        let k = *tiers.last().unwrap();
+        let my_outer = rank / stride;
+        let low = rank - my_outer * stride;
+        let peers: Vec<usize> = (0..k).map(|g| low + g * stride).collect();
         let jpart = Partition {
             ranges: peers.iter().map(|&r| part.ranges[r].clone()).collect(),
         };
         ensure!(
-            jpart.ranges.iter().all(|r| my_row.start <= r.start && r.end <= my_row.end),
-            "partition is not the two-level topology cut"
+            jpart.ranges.iter().all(|r| span.start <= r.start && r.end <= span.end),
+            "partition is not the recursive topology cut"
         );
-        let inner = SyncEngine::new(cfg, layout, &jpart, topo.island_of(rank), topo.islands());
+        let inner = SyncEngine::new(cfg, layout, &jpart, my_outer, k);
         Ok(HierSyncEngine {
             topo: topo.clone(),
             rank,
-            inner,
-            rows,
-            island: topo.island_members(topo.island_of(rank)),
-            peers,
-            my_row,
+            plan: EnginePlan::Tiered(TieredPlan {
+                inner,
+                levels,
+                peers,
+                my_row: span,
+                scale: stride as f32,
+            }),
         })
     }
 
-    /// True when this engine runs the three-phase island schedule.
+    /// True when this engine runs a multi-level schedule.
     pub fn is_hierarchical(&self) -> bool {
         self.topo.is_hierarchical()
     }
@@ -256,77 +748,112 @@ impl HierSyncEngine {
     /// Bytes of persistent compressor state (sized to the gradient row on
     /// hierarchical topologies, to the model on flat ones).
     pub fn state_bytes(&self) -> usize {
-        self.inner.state_bytes()
+        match &self.plan {
+            EnginePlan::Flat(e) => e.state_bytes(),
+            EnginePlan::Tiered(t) => t.inner.state_bytes(),
+            EnginePlan::Uneven(u) => {
+                u.enc.lock().unwrap().state_bytes() + u.dec.lock().unwrap().state_bytes()
+            }
+        }
     }
 
-    /// The wrapped per-communicator engine (tests, diagnostics).
-    pub fn engine(&self) -> &SyncEngine {
-        &self.inner
+    /// The wrapped per-communicator engine (tests, diagnostics); uneven
+    /// topologies route slices directly and have none.
+    pub fn engine(&self) -> Option<&SyncEngine> {
+        match &self.plan {
+            EnginePlan::Flat(e) => Some(e),
+            EnginePlan::Tiered(t) => Some(&t.inner),
+            EnginePlan::Uneven(_) => None,
+        }
+    }
+
+    /// Run the fp32 reduce-scatter of every intra tier, innermost first,
+    /// then scale this rank's row to the mean over the `scale` nodes it
+    /// now aggregates (so the wire scale `s` keeps seeing per-node
+    /// gradient magnitudes).
+    fn reduce_intra(&self, t: &TieredPlan, ctx: &NodeCtx, grad: &mut [f32]) {
+        for lv in &t.levels {
+            let g = ctx.group(&lv.members);
+            g.ring_reduce_scatter(grad, &lv.rows);
+        }
+        for x in grad[t.my_row.clone()].iter_mut() {
+            *x /= t.scale;
+        }
+    }
+
+    /// Broadcast the updated parameters back down the tier tree: at each
+    /// intra tier, outermost first, all-gather the members' rows so the
+    /// shared span fills; after tier 0 every node holds the full vector.
+    fn broadcast_down(&self, t: &TieredPlan, ctx: &NodeCtx, params: &mut [f32], bf16: bool) {
+        for lv in t.levels.iter().rev() {
+            broadcast_group_rows(ctx, &lv.members, &lv.rows, lv.my_idx, params, bf16);
+        }
     }
 
     /// One gradient synchronization. `grad` is this node's full local
-    /// gradient and is clobbered (the intra reduce-scatter runs in place).
-    /// `shard_acc` receives the equivalent *unaveraged* sum over all `n`
-    /// nodes for this node's shard — the same contract as
+    /// gradient and is clobbered (the intra reduce-scatters run in
+    /// place). `shard_acc` receives the equivalent *unaveraged* sum over
+    /// all `n` nodes for this node's shard — the same contract as
     /// [`SyncEngine::sync`], so the caller divides by `n` either way.
     pub fn sync(&self, ctx: &NodeCtx, grad: &mut [f32], shard_acc: &mut [f32], step: u64) {
-        if !self.is_hierarchical() {
-            self.inner.sync(ctx, grad, shard_acc, step);
-            return;
-        }
-        // phase 1: exact fp32 reduce inside the island, one row per member
-        let intra = ctx.group(&self.island);
-        intra.ring_reduce_scatter(grad, &self.rows);
-        // encode the island *mean* so the fixed wire scale s keeps seeing
-        // per-node gradient magnitudes
-        let m = self.topo.island_size() as f32;
-        for x in grad[self.my_row.clone()].iter_mut() {
-            *x /= m;
-        }
-        // phase 2: low-bit bucketed all-to-all across islands, row-local
-        let inter = ctx.group(&self.peers);
-        self.inner.sync(&inter, grad, shard_acc, step);
-        // decoded = sum of k island means; rescale so the flat contract
-        // (sum over all n sources, caller divides by n) holds
-        for x in shard_acc.iter_mut() {
-            *x *= m;
+        match &self.plan {
+            EnginePlan::Flat(e) => e.sync(ctx, grad, shard_acc, step),
+            EnginePlan::Tiered(t) => {
+                self.reduce_intra(t, ctx, grad);
+                let inter = ctx.group(&t.peers);
+                t.inner.sync(&inter, grad, shard_acc, step);
+                // decoded = sum of the outer groups' means; rescale so the
+                // flat contract (sum over all n sources) holds
+                for x in shard_acc.iter_mut() {
+                    *x *= t.scale;
+                }
+            }
+            EnginePlan::Uneven(u) => {
+                let own = u.grad_launch(ctx, self.rank, grad, step, false);
+                u.grad_drain(ctx, self.rank, step, own, shard_acc, false);
+            }
         }
     }
 
     /// Launch one gradient synchronization without blocking on the slow
-    /// hop: on hierarchical topologies the (fast, intra) phase-1 island
-    /// reduce-scatter runs here — the inter-island encode needs the
-    /// island-mean row — and only the low-bit inter-island buckets are
-    /// pushed onto the tagged wire; flat topologies launch over the whole
-    /// cluster. `grad` is clobbered (the intra reduce runs in place).
-    /// The caller runs the next step's forward/backward with the exchange
-    /// in flight, then completes it with
-    /// [`HierSyncEngine::grad_sync_drain`] — the one-step-stale schedule
-    /// of `train.grad_sync = "stale"`.
+    /// hop: the fast intra reduce phases run here — the outer encode
+    /// needs the aggregated row — and only the low-bit outer-cut
+    /// messages are pushed onto the tagged wire; flat topologies launch
+    /// over the whole cluster. `grad` is clobbered. The caller runs the
+    /// next step's forward/backward with the exchange in flight, then
+    /// completes it with [`HierSyncEngine::grad_sync_drain`] — the
+    /// one-step-stale schedule of `train.grad_sync = "stale"`.
     pub fn grad_sync_launch(
         &self,
         ctx: &NodeCtx,
         grad: &mut [f32],
         step: u64,
     ) -> PendingHierGrads {
-        if !self.is_hierarchical() {
-            return PendingHierGrads { inner: self.inner.grad_sync_launch(ctx, grad, step) };
+        match &self.plan {
+            EnginePlan::Flat(e) => {
+                PendingHierGrads { kind: GradsPending::Engine(e.grad_sync_launch(ctx, grad, step)) }
+            }
+            EnginePlan::Tiered(t) => {
+                self.reduce_intra(t, ctx, grad);
+                let inter = ctx.group(&t.peers);
+                PendingHierGrads {
+                    kind: GradsPending::Engine(t.inner.grad_sync_launch(&inter, grad, step)),
+                }
+            }
+            EnginePlan::Uneven(u) => PendingHierGrads {
+                kind: GradsPending::Uneven {
+                    step,
+                    own: u.grad_launch(ctx, self.rank, grad, step, true),
+                },
+            },
         }
-        let intra = ctx.group(&self.island);
-        intra.ring_reduce_scatter(grad, &self.rows);
-        let m = self.topo.island_size() as f32;
-        for x in grad[self.my_row.clone()].iter_mut() {
-            *x /= m;
-        }
-        let inter = ctx.group(&self.peers);
-        PendingHierGrads { inner: self.inner.grad_sync_launch(&inter, grad, step) }
     }
 
     /// Complete an exchange started by
     /// [`HierSyncEngine::grad_sync_launch`]: receive and decode the
-    /// outstanding inter-island (or flat) buckets into `shard_acc` and —
-    /// on hierarchical topologies — rescale the decoded island means so
-    /// the flat contract (unaveraged sum over all `n` sources, caller
+    /// outstanding outer-cut (or flat) messages into `shard_acc` and —
+    /// on hierarchical topologies — rescale the decoded means so the
+    /// flat contract (unaveraged sum over all `n` sources, caller
     /// divides by `n`) holds, exactly as after [`HierSyncEngine::sync`].
     /// A launch immediately followed by its drain is bitwise
     /// [`HierSyncEngine::sync`].
@@ -340,25 +867,31 @@ impl HierSyncEngine {
         shard_acc: &mut [f32],
     ) -> std::time::Duration {
         let t0 = std::time::Instant::now();
-        if !self.is_hierarchical() {
-            self.inner.grad_sync_drain(ctx, pending.inner, shard_acc);
-            return t0.elapsed();
-        }
-        let inter = ctx.group(&self.peers);
-        self.inner.grad_sync_drain(&inter, pending.inner, shard_acc);
-        let m = self.topo.island_size() as f32;
-        for x in shard_acc.iter_mut() {
-            *x *= m;
+        match (&self.plan, pending.kind) {
+            (EnginePlan::Flat(e), GradsPending::Engine(p)) => {
+                e.grad_sync_drain(ctx, p, shard_acc);
+            }
+            (EnginePlan::Tiered(t), GradsPending::Engine(p)) => {
+                let inter = ctx.group(&t.peers);
+                t.inner.grad_sync_drain(&inter, p, shard_acc);
+                for x in shard_acc.iter_mut() {
+                    *x *= t.scale;
+                }
+            }
+            (EnginePlan::Uneven(u), GradsPending::Uneven { step, own }) => {
+                u.grad_drain(ctx, self.rank, step, own, shard_acc, true);
+            }
+            _ => panic!("pending gradient handle from a different engine shape"),
         }
         t0.elapsed()
     }
 
-    /// Parameter synchronization (phase 3): `master` is the updated fp32
-    /// shard; on return `params` holds the full parameter vector at wire
-    /// precision, identical on every node. Flat topologies use the
-    /// engine's (possibly bucketed) gather directly; hierarchical ones
-    /// gather shards across the peer group (inter, once per byte) and
-    /// then ring-broadcast whole rows down each island (intra).
+    /// Parameter synchronization (the downward phase): `master` is the
+    /// updated fp32 shard; on return `params` holds the full parameter
+    /// vector at wire precision, identical on every node. Flat
+    /// topologies use the engine's (possibly bucketed) gather directly;
+    /// hierarchical ones gather across the outermost cut and then
+    /// broadcast rows back down the intra tiers.
     pub fn param_sync(
         &self,
         ctx: &NodeCtx,
@@ -367,23 +900,28 @@ impl HierSyncEngine {
         step: u64,
         bf16: bool,
     ) {
-        if !self.is_hierarchical() {
-            self.inner.param_gather(ctx, master, params, step, bf16);
-            return;
+        match &self.plan {
+            EnginePlan::Flat(e) => e.param_gather(ctx, master, params, step, bf16),
+            EnginePlan::Tiered(t) => {
+                let inter = ctx.group(&t.peers);
+                t.inner.param_gather(&inter, master, params, step, bf16);
+                self.broadcast_down(t, ctx, params, bf16);
+            }
+            EnginePlan::Uneven(u) => {
+                let own = u.param_launch(ctx, self.rank, master, step, bf16);
+                let _ = u.param_drain(ctx, self.rank, step, own, params, bf16);
+            }
         }
-        let inter = ctx.group(&self.peers);
-        self.inner.param_gather(&inter, master, params, step, bf16);
-        self.broadcast_rows(ctx, params, bf16);
     }
 
-    /// Launch phase 3 without blocking: the own shard is encoded and
-    /// pushed to the cross-island peer group on the tagged wire (the slow
-    /// hop — flat topologies launch over the whole cluster), and a
-    /// [`PendingHierParams`] handle is returned. The caller runs the next
-    /// step's forward/backward (and gradient sync) on the previous
-    /// parameter view, then completes the gather with
-    /// [`HierSyncEngine::param_sync_drain`] — the one-step-stale schedule
-    /// of `train.sync_params = "async"`.
+    /// Launch the downward phase without blocking: the own shard is
+    /// encoded and pushed across the outermost cut on the tagged wire
+    /// (the slow hop — flat topologies launch over the whole cluster),
+    /// and a [`PendingHierParams`] handle is returned. The caller runs
+    /// the next step's forward/backward (and gradient sync) on the
+    /// previous parameter view, then completes the gather with
+    /// [`HierSyncEngine::param_sync_drain`] — the one-step-stale
+    /// schedule of `train.sync_params = "async"`.
     pub fn param_sync_launch(
         &self,
         ctx: &NodeCtx,
@@ -391,100 +929,119 @@ impl HierSyncEngine {
         step: u64,
         bf16: bool,
     ) -> PendingHierParams {
-        let inner = if self.is_hierarchical() {
-            let inter = ctx.group(&self.peers);
-            self.inner.param_gather_launch(&inter, master, step, bf16)
-        } else {
-            self.inner.param_gather_launch(ctx, master, step, bf16)
+        let kind = match &self.plan {
+            EnginePlan::Flat(e) => {
+                ParamsPending::Engine(e.param_gather_launch(ctx, master, step, bf16))
+            }
+            EnginePlan::Tiered(t) => {
+                let inter = ctx.group(&t.peers);
+                ParamsPending::Engine(t.inner.param_gather_launch(&inter, master, step, bf16))
+            }
+            EnginePlan::Uneven(u) => {
+                let own = u.param_launch(ctx, self.rank, master, step, bf16);
+                let outstanding = u
+                    .held
+                    .iter()
+                    .filter(|&&i| u.slices[i].owner != self.rank)
+                    .count();
+                ParamsPending::Uneven { step, own, outstanding }
+            }
         };
-        PendingHierParams { inner, bf16 }
+        PendingHierParams { kind, bf16 }
     }
 
     /// Complete a gather started by [`HierSyncEngine::param_sync_launch`]:
-    /// drain the inter-island (or flat) tagged receives into `params`,
-    /// then — on hierarchical topologies — run the island row broadcast,
-    /// which rides the fast intra links and is therefore cheap at the
-    /// drain point. On return `params` is the full parameter vector at
-    /// wire precision, bitwise identical on every node and to the
-    /// synchronous [`HierSyncEngine::param_sync`].
+    /// drain the outer-cut (or flat) tagged receives into `params`, then
+    /// — on hierarchical topologies — run the downward broadcast, which
+    /// rides the fast intra links and is therefore cheap at the drain
+    /// point. On return `params` is the full parameter vector at wire
+    /// precision, bitwise identical on every node and to the synchronous
+    /// [`HierSyncEngine::param_sync`].
     ///
     /// Returns the time spent receiving the gather itself (the drain
     /// *wait*, [`crate::metrics::RunMetrics::param_sync_wait_s`]); the
-    /// island broadcast is excluded — it is ordinary critical-path work,
-    /// not exposure of the hidden gather.
+    /// downward broadcast is excluded — it is ordinary critical-path
+    /// work, not exposure of the hidden gather.
     pub fn param_sync_drain(
         &self,
         ctx: &NodeCtx,
         pending: PendingHierParams,
         params: &mut [f32],
     ) -> std::time::Duration {
-        let PendingHierParams { inner, bf16 } = pending;
+        let PendingHierParams { kind, bf16 } = pending;
         let t0 = std::time::Instant::now();
-        if !self.is_hierarchical() {
-            self.inner.param_gather_drain(ctx, inner, params);
-            return t0.elapsed();
-        }
-        let inter = ctx.group(&self.peers);
-        self.inner.param_gather_drain(&inter, inner, params);
-        let wait = t0.elapsed();
-        self.broadcast_rows(ctx, params, bf16);
-        wait
-    }
-
-    /// Phase-3 tail: my row is complete in `params`; ring-broadcast whole
-    /// rows inside the island (intra traffic only) so every member ends
-    /// with the full vector.
-    fn broadcast_rows(&self, ctx: &NodeCtx, params: &mut [f32], bf16: bool) {
-        // the row already holds wire-decoded values, so this re-encoding
-        // (same encoder as the gather) is lossless and every node stays
-        // bitwise identical
-        let mine = crate::comm::encode_params(&params[self.my_row.clone()], bf16);
-        let intra = ctx.group(&self.island);
-        let all = intra.all_gather_wire(mine);
-        let j = self.topo.local_rank(self.rank);
-        for (src, msg) in all.iter().enumerate() {
-            if src != j {
-                compress::write_wire(msg, &mut params[self.rows[src].clone()]);
+        match (&self.plan, kind) {
+            (EnginePlan::Flat(e), ParamsPending::Engine(p)) => {
+                e.param_gather_drain(ctx, p, params);
+                t0.elapsed()
             }
+            (EnginePlan::Tiered(t), ParamsPending::Engine(p)) => {
+                let inter = ctx.group(&t.peers);
+                t.inner.param_gather_drain(&inter, p, params);
+                let wait = t0.elapsed();
+                self.broadcast_down(t, ctx, params, bf16);
+                wait
+            }
+            (EnginePlan::Uneven(u), ParamsPending::Uneven { step, own, .. }) => {
+                u.param_drain(ctx, self.rank, step, own, params, bf16)
+            }
+            _ => panic!("pending parameter handle from a different engine shape"),
         }
     }
 }
 
 /// Completion handle for an asynchronous (one-step-stale) hierarchical
-/// gradient exchange ([`HierSyncEngine::grad_sync_launch`]): wraps the
-/// inter-hop [`crate::comm::PendingGrads`]. The phase-1 island reduce
-/// already ran at launch; only the slow-hop receives are outstanding.
+/// gradient exchange ([`HierSyncEngine::grad_sync_launch`]): the intra
+/// reduces already ran at launch; only the slow-hop receives (outer
+/// peer-group buckets, or routed slices on uneven topologies) are
+/// outstanding.
 pub struct PendingHierGrads {
-    inner: crate::comm::PendingGrads,
+    kind: GradsPending,
+}
+
+enum GradsPending {
+    Engine(crate::comm::PendingGrads),
+    Uneven { step: u64, own: Vec<(usize, WireMsg)> },
 }
 
 impl PendingHierGrads {
     /// The step this exchange was launched at.
     pub fn step(&self) -> u64 {
-        self.inner.step()
+        match &self.kind {
+            GradsPending::Engine(p) => p.step(),
+            GradsPending::Uneven { step, .. } => *step,
+        }
     }
 }
 
 /// Completion handle for an asynchronous hierarchical parameter sync
-/// ([`HierSyncEngine::param_sync_launch`]): wraps the inter-hop
-/// [`crate::comm::PendingParams`] plus the wire precision the island
-/// broadcast must reuse at drain time.
+/// ([`HierSyncEngine::param_sync_launch`]): the outstanding slow-hop
+/// receives plus the wire precision the downward broadcast must reuse at
+/// drain time.
 pub struct PendingHierParams {
-    inner: crate::comm::PendingParams,
+    kind: ParamsPending,
     bf16: bool,
 }
 
+enum ParamsPending {
+    Engine(crate::comm::PendingParams),
+    Uneven { step: u64, own: Vec<(usize, WireMsg)>, outstanding: usize },
+}
+
 impl PendingHierParams {
-    /// Number of inter-hop wire messages the drain still has to receive.
+    /// Number of slow-hop wire messages the drain still has to receive.
     pub fn outstanding(&self) -> usize {
-        self.inner.outstanding()
+        match &self.kind {
+            ParamsPending::Engine(p) => p.outstanding(),
+            ParamsPending::Uneven { outstanding, .. } => *outstanding,
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::collective::{run_cluster, run_cluster_topo, ClusterSpec};
+    use crate::collective::{run_cluster, run_cluster_topo};
     use crate::util::rng::Rng;
 
     #[test]
@@ -494,6 +1051,45 @@ mod tests {
         assert!(Topology::new(0, 1).is_err());
         let t = Topology::new(8, 1).unwrap();
         assert!(!t.is_hierarchical());
+    }
+
+    #[test]
+    fn tiers_validate_and_normalize() {
+        assert!(Topology::from_tiers(8, &[4, 2]).is_ok());
+        assert!(Topology::from_tiers(16, &[4, 2, 2]).is_ok());
+        // non-dividing tier lists error instead of truncating
+        let err = Topology::from_tiers(10, &[4, 2]).unwrap_err();
+        assert!(err.to_string().contains("does not factor"), "{err}");
+        assert!(Topology::from_tiers(8, &[0, 8]).is_err());
+        assert!(Topology::from_tiers(8, &[]).is_err());
+        // 1-wide tiers are no-op levels and collapse away
+        let t = Topology::from_tiers(8, &[4, 1, 2]).unwrap();
+        assert_eq!(t.tiers(), &[4, 2]);
+        let flat = Topology::from_tiers(4, &[4, 1]).unwrap();
+        assert!(!flat.is_hierarchical());
+        assert!(Topology::from_tiers(1, &[1]).is_ok());
+    }
+
+    #[test]
+    fn groups_validate_tiling() {
+        assert!(Topology::from_groups(5, vec![vec![0, 1, 2], vec![3, 4]]).is_ok());
+        assert!(Topology::from_groups(5, vec![vec![0, 1], vec![3, 4]]).is_err());
+        assert!(Topology::from_groups(5, vec![vec![0, 1, 2], vec![3]]).is_err());
+        assert!(Topology::from_groups(4, vec![vec![0, 1], vec![2, 3], vec![]]).is_err());
+        let t = Topology::from_groups(5, vec![vec![0, 1, 2], vec![3, 4]]).unwrap();
+        assert!(t.is_hierarchical());
+        assert_eq!(t.islands(), 2);
+        assert_eq!(t.island_of(3), 1);
+        assert_eq!(t.local_rank(4), 1);
+        assert_eq!(t.island_size(), 3);
+        // a single group has no outer cut to compress: flat degradation
+        let single = Topology::from_groups(3, vec![vec![0, 1, 2]]).unwrap();
+        assert!(!single.is_hierarchical());
+        // and bucketed overlap is loudly rejected on uneven islands
+        let layout = ParamLayout::single("flat", &[512]);
+        let part = t.partition(512);
+        let cfg = CompressorConfig { bucket_bytes: 256, ..Default::default() };
+        assert!(HierSyncEngine::new(&cfg, &layout, &part, &t, 0).is_err());
     }
 
     #[test]
@@ -508,27 +1104,69 @@ mod tests {
     }
 
     #[test]
+    fn three_tier_maps_ranks() {
+        // [2, 2, 2]: leaf islands {0,1},{2,3},{4,5},{6,7}; racks {0..3},
+        // {4..7}; outer peers differ only in the rack coordinate
+        let t = Topology::from_tiers(8, &[2, 2, 2]).unwrap();
+        assert_eq!(t.island_size(), 2);
+        assert_eq!(t.islands(), 4);
+        assert_eq!(t.island_of(5), 2);
+        assert_eq!(t.local_rank(5), 1);
+        assert_eq!(t.peer_group(3), vec![3, 7]);
+        assert_eq!(t.peer_group(4), vec![0, 4]);
+    }
+
+    #[test]
     fn partition_tiles_the_model() {
-        for (n, islands, total) in [(8, 2, 4096), (8, 4, 1000), (6, 3, 502), (4, 1, 64)] {
-            let t = Topology::new(n, islands).unwrap();
+        let topos: Vec<(Topology, usize)> = vec![
+            (Topology::new(8, 2).unwrap(), 4096),
+            (Topology::new(8, 4).unwrap(), 1000),
+            (Topology::new(6, 3).unwrap(), 502),
+            (Topology::new(4, 1).unwrap(), 64),
+            (Topology::from_tiers(8, &[2, 2, 2]).unwrap(), 4096),
+            (Topology::from_tiers(16, &[4, 2, 2]).unwrap(), 5000),
+            (Topology::from_tiers(16, &[2, 2, 2, 2]).unwrap(), 1 << 12),
+            // extreme fan-out: empty shards must still tile
+            (Topology::from_tiers(8, &[2, 2, 2]).unwrap(), 8),
+            (Topology::from_tiers(8, &[2, 2, 2]).unwrap(), 2),
+            (Topology::from_groups(8, vec![vec![0, 1, 2], (3..8).collect()]).unwrap(), 4096),
+            (Topology::from_groups(5, vec![vec![0, 1, 2], vec![3, 4]]).unwrap(), 701),
+        ];
+        for (t, total) in topos {
             let part = t.partition(total);
-            assert_eq!(part.ranges.len(), n);
+            assert_eq!(part.ranges.len(), t.n());
             // disjoint cover: sort by start and walk
             let mut ranges = part.ranges.clone();
-            ranges.sort_by_key(|r| r.start);
+            ranges.sort_by_key(|r| (r.start, r.end));
             let mut cursor = 0;
             for r in &ranges {
+                assert!(r.start <= r.end);
+                if r.is_empty() {
+                    continue;
+                }
                 assert_eq!(r.start, cursor, "gap or overlap at {cursor}");
-                assert!(r.start % 2 == 0, "unaligned cut");
+                assert!(r.start % 2 == 0, "unaligned cut at {}", r.start);
                 cursor = r.end;
             }
-            assert_eq!(cursor, total);
-            // every piece sits inside its owner's row
+            assert_eq!(cursor, total, "partition does not cover the model");
+        }
+    }
+
+    #[test]
+    fn recursive_pieces_sit_inside_leaf_rows() {
+        for tiers in [vec![4usize, 2], vec![2, 2, 2], vec![2, 2, 2, 2]] {
+            let n: usize = tiers.iter().product();
+            let t = Topology::from_tiers(n, &tiers).unwrap();
+            let total = 4096;
             let rows = t.rows(total);
+            let part = t.partition(total);
             for rank in 0..n {
                 let row = &rows[t.local_rank(rank)];
                 let piece = &part.ranges[rank];
-                assert!(row.start <= piece.start && piece.end <= row.end);
+                assert!(
+                    row.start <= piece.start && piece.end <= row.end,
+                    "rank {rank}: {piece:?} outside row {row:?}"
+                );
             }
         }
     }
@@ -540,24 +1178,22 @@ mod tests {
         g
     }
 
-    /// One engine-level sync on an islanded cluster; returns each node's
-    /// *averaged* shard plus the counters.
-    fn run_hier_sync(
+    /// One engine-level sync on a cluster shaped by `topo`; returns each
+    /// node's *averaged* shard plus the counters.
+    fn run_topo_sync(
         cfg: &CompressorConfig,
         total: usize,
-        n: usize,
-        islands: usize,
+        topo: &Topology,
     ) -> (Vec<Vec<f32>>, std::sync::Arc<crate::collective::Counters>) {
-        let topo = Topology::new(n, islands).unwrap();
+        let n = topo.n();
         let layout = ParamLayout::single("flat", &[total]);
         let part = if topo.is_hierarchical() {
             topo.partition(total)
         } else {
             Partition::flat_even(total, n, 2)
         };
-        let spec = ClusterSpec::islands(topo.island_size());
-        let (results, counters) = run_cluster_topo(n, spec, |ctx| {
-            let engine = HierSyncEngine::new(cfg, &layout, &part, &topo, ctx.rank).unwrap();
+        let (results, counters) = run_cluster_topo(n, topo.cluster_spec(), |ctx| {
+            let engine = HierSyncEngine::new(cfg, &layout, &part, topo, ctx.rank).unwrap();
             let mut grad = node_grad(ctx.rank, total);
             let mut acc = vec![0.0f32; part.ranges[ctx.rank].len()];
             engine.sync(&ctx, &mut grad, &mut acc, 1);
@@ -569,16 +1205,23 @@ mod tests {
         (results, counters)
     }
 
-    #[test]
-    fn hier_fp32_sync_is_the_exact_mean() {
-        // with the fp32 "compressor" the three-phase schedule must produce
-        // exactly the mean gradient on every shard
-        let total = 1024;
-        let n = 8;
-        let cfg = CompressorConfig::with_method(Method::Fp32);
-        let topo = Topology::new(n, 2).unwrap();
-        let part = topo.partition(total);
-        let (results, _) = run_hier_sync(&cfg, total, n, 2);
+    fn run_hier_sync(
+        cfg: &CompressorConfig,
+        total: usize,
+        n: usize,
+        islands: usize,
+    ) -> (Vec<Vec<f32>>, std::sync::Arc<crate::collective::Counters>) {
+        let topo = Topology::new(n, islands).unwrap();
+        run_topo_sync(cfg, total, &topo)
+    }
+
+    fn check_exact_mean(topo: &Topology, total: usize, results: &[Vec<f32>]) {
+        let n = topo.n();
+        let part = if topo.is_hierarchical() {
+            topo.partition(total)
+        } else {
+            Partition::flat_even(total, n, 2)
+        };
         let mut want = vec![0.0f64; total];
         for r in 0..n {
             for (w, x) in want.iter_mut().zip(node_grad(r, total)) {
@@ -594,6 +1237,35 @@ mod tests {
                 assert!((*a as f64 - b).abs() < 1e-5, "rank {rank}");
             }
         }
+    }
+
+    #[test]
+    fn hier_fp32_sync_is_the_exact_mean() {
+        // with the fp32 "compressor" the tiered schedule must produce
+        // exactly the mean gradient on every shard
+        let total = 1024;
+        let cfg = CompressorConfig::with_method(Method::Fp32);
+        let topo = Topology::new(8, 2).unwrap();
+        let (results, _) = run_topo_sync(&cfg, total, &topo);
+        check_exact_mean(&topo, total, &results);
+    }
+
+    #[test]
+    fn three_tier_fp32_sync_is_the_exact_mean() {
+        let total = 1024;
+        let cfg = CompressorConfig::with_method(Method::Fp32);
+        let topo = Topology::from_tiers(8, &[2, 2, 2]).unwrap();
+        let (results, _) = run_topo_sync(&cfg, total, &topo);
+        check_exact_mean(&topo, total, &results);
+    }
+
+    #[test]
+    fn uneven_fp32_sync_is_the_exact_mean() {
+        let total = 1024;
+        let cfg = CompressorConfig::with_method(Method::Fp32);
+        let topo = Topology::from_groups(8, vec![vec![0, 1, 2], (3..8).collect()]).unwrap();
+        let (results, _) = run_topo_sync(&cfg, total, &topo);
+        check_exact_mean(&topo, total, &results);
     }
 
     #[test]
@@ -666,42 +1338,73 @@ mod tests {
             HierSyncEngine::new(&cfg, &layout, &Partition::flat_even(total, n, 2), &flat, 0)
                 .unwrap();
         assert_eq!(flat_engine.state_bytes(), total);
+        // three tiers: the row shrinks by the product of the intra tiers
+        let t3 = Topology::from_tiers(n, &[2, 2, 2]).unwrap();
+        let p3 = t3.partition(total);
+        let e3 = HierSyncEngine::new(&cfg, &layout, &p3, &t3, 0).unwrap();
+        assert_eq!(e3.state_bytes(), total / 4);
+        // uneven: state sized to this member's row (island of 3 -> the
+        // leading third, rounded to the 2-aligned cut)
+        let tu = Topology::from_groups(8, vec![vec![0, 1, 2], (3..8).collect()]).unwrap();
+        let pu = tu.partition(total);
+        let eu = HierSyncEngine::new(&cfg, &layout, &pu, &tu, 0).unwrap();
+        assert_eq!(eu.state_bytes(), tu.island_rows(0, total)[0].len());
+    }
+
+    fn roundtrip_params_want(i: usize) -> f32 {
+        (i as f32 * 0.37).sin() * 0.1
+    }
+
+    fn run_param_sync_cluster(topo: &Topology, total: usize) -> Vec<Vec<f32>> {
+        let n = topo.n();
+        let layout = ParamLayout::single("flat", &[total]);
+        let part = if topo.is_hierarchical() {
+            topo.partition(total)
+        } else {
+            Partition::flat_even(total, n, 2)
+        };
+        let cfg = CompressorConfig::default();
+        let (results, _) = run_cluster(n, |ctx| {
+            let engine = HierSyncEngine::new(&cfg, &layout, &part, topo, ctx.rank).unwrap();
+            let my = part.ranges[ctx.rank].clone();
+            let master: Vec<f32> = my.clone().map(roundtrip_params_want).collect();
+            let mut params = vec![0.0f32; total];
+            engine.param_sync(&ctx, &master, &mut params, 1, true);
+            params
+        });
+        results
     }
 
     #[test]
     fn hier_param_sync_agrees_across_nodes() {
         // all nodes must end with the identical full parameter vector,
-        // equal to the bf16 roundtrip of each owner's master shard
+        // equal to the bf16 roundtrip of each owner's master shard —
+        // two-level, three-tier and uneven alike
         let total = 2048;
-        let n = 8;
-        for islands in [1usize, 2, 4] {
-            let topo = Topology::new(n, islands).unwrap();
-            let layout = ParamLayout::single("flat", &[total]);
+        let topos = vec![
+            Topology::new(8, 1).unwrap(),
+            Topology::new(8, 2).unwrap(),
+            Topology::new(8, 4).unwrap(),
+            Topology::from_tiers(8, &[2, 2, 2]).unwrap(),
+            Topology::from_groups(8, vec![vec![0, 1, 2], (3..8).collect()]).unwrap(),
+        ];
+        for topo in topos {
             let part = if topo.is_hierarchical() {
                 topo.partition(total)
             } else {
-                Partition::flat_even(total, n, 2)
+                Partition::flat_even(total, topo.n(), 2)
             };
-            let cfg = CompressorConfig::default();
-            let (results, _) = run_cluster(n, |ctx| {
-                let engine = HierSyncEngine::new(&cfg, &layout, &part, &topo, ctx.rank).unwrap();
-                let my = part.ranges[ctx.rank].clone();
-                let master: Vec<f32> =
-                    my.clone().map(|i| (i as f32 * 0.37).sin() * 0.1).collect();
-                let mut params = vec![0.0f32; total];
-                engine.param_sync(&ctx, &master, &mut params, 1, true);
-                params
-            });
+            let results = run_param_sync_cluster(&topo, total);
             for r in &results {
-                assert_eq!(r, &results[0], "islands={islands}: nodes diverged");
+                assert_eq!(r, &results[0], "{:?}: nodes diverged", topo.tiers());
             }
             // every position equals the bf16 roundtrip of its owner's value
-            for rank in 0..n {
+            for rank in 0..topo.n() {
                 for i in part.ranges[rank].clone() {
                     let want = compress::fp::bf16_to_f32(compress::fp::f32_to_bf16(
-                        (i as f32 * 0.37).sin() * 0.1,
+                        roundtrip_params_want(i),
                     ));
-                    assert_eq!(results[0][i], want, "islands={islands} flat index {i}");
+                    assert_eq!(results[0][i], want, "{:?} flat index {i}", topo.tiers());
                 }
             }
         }
@@ -710,11 +1413,16 @@ mod tests {
     #[test]
     fn hier_launch_drain_matches_param_sync() {
         // the asynchronous split must deliver bitwise the parameters of
-        // the synchronous three-phase path, flat and hierarchical alike
+        // the synchronous path on every topology shape
         let total = 2048;
-        let n = 8;
-        for islands in [1usize, 2, 4] {
-            let topo = Topology::new(n, islands).unwrap();
+        let topos = vec![
+            Topology::new(8, 1).unwrap(),
+            Topology::new(8, 2).unwrap(),
+            Topology::from_tiers(8, &[2, 2, 2]).unwrap(),
+            Topology::from_groups(8, vec![vec![0, 1, 2], (3..8).collect()]).unwrap(),
+        ];
+        for topo in topos {
+            let n = topo.n();
             let layout = ParamLayout::single("flat", &[total]);
             let part = if topo.is_hierarchical() {
                 topo.partition(total)
@@ -722,31 +1430,21 @@ mod tests {
                 Partition::flat_even(total, n, 2)
             };
             let cfg = CompressorConfig::default();
-            let run = |asynchronous: bool| {
-                let (results, _) = run_cluster(n, |ctx| {
-                    let engine =
-                        HierSyncEngine::new(&cfg, &layout, &part, &topo, ctx.rank).unwrap();
-                    let my = part.ranges[ctx.rank].clone();
-                    let master: Vec<f32> =
-                        my.clone().map(|i| (i as f32 * 0.37).sin() * 0.1).collect();
-                    let mut params = vec![0.0f32; total];
-                    if asynchronous {
-                        let pending = engine.param_sync_launch(&ctx, &master, 1, true);
-                        let _ = engine.param_sync_drain(&ctx, pending, &mut params);
-                    } else {
-                        engine.param_sync(&ctx, &master, &mut params, 1, true);
-                    }
-                    params
-                });
-                results
-            };
-            let a = run(false);
-            let b = run(true);
-            for (ra, rb) in a.iter().zip(&b) {
-                assert_eq!(ra, rb, "islands={islands}");
+            let (asynchronous, _) = run_cluster(n, |ctx| {
+                let engine = HierSyncEngine::new(&cfg, &layout, &part, &topo, ctx.rank).unwrap();
+                let my = part.ranges[ctx.rank].clone();
+                let master: Vec<f32> = my.clone().map(roundtrip_params_want).collect();
+                let mut params = vec![0.0f32; total];
+                let pending = engine.param_sync_launch(&ctx, &master, 1, true);
+                let _ = engine.param_sync_drain(&ctx, pending, &mut params);
+                params
+            });
+            let sync = run_param_sync_cluster(&topo, total);
+            for (ra, rb) in sync.iter().zip(&asynchronous) {
+                assert_eq!(ra, rb, "{:?}", topo.tiers());
             }
-            for r in &b {
-                assert_eq!(r, &b[0], "islands={islands}: nodes diverged");
+            for r in &asynchronous {
+                assert_eq!(r, &asynchronous[0], "{:?}: nodes diverged", topo.tiers());
             }
         }
     }
@@ -754,13 +1452,21 @@ mod tests {
     #[test]
     fn hier_grad_launch_drain_matches_sync() {
         // the split gradient exchange must reproduce the synchronous
-        // three-phase schedule bitwise, flat and hierarchical alike,
-        // including error-state evolution over multiple steps
+        // schedule bitwise on every topology shape, including error-state
+        // evolution over multiple steps
         let total = 4096;
-        let n = 8;
         let cfg = CompressorConfig { s: 64.0, bucket_bytes: 256, ..Default::default() };
-        for islands in [1usize, 2, 4] {
-            let topo = Topology::new(n, islands).unwrap();
+        let mono = CompressorConfig { s: 64.0, ..Default::default() };
+        let topos = vec![
+            (Topology::new(8, 1).unwrap(), cfg),
+            (Topology::new(8, 2).unwrap(), cfg),
+            (Topology::new(8, 4).unwrap(), cfg),
+            (Topology::from_tiers(8, &[2, 2, 2]).unwrap(), cfg),
+            // uneven islands route monolithic slices
+            (Topology::from_groups(8, vec![vec![0, 1, 2], (3..8).collect()]).unwrap(), mono),
+        ];
+        for (topo, cfg) in topos {
+            let n = topo.n();
             let layout = ParamLayout::single("flat", &[total]);
             let part = if topo.is_hierarchical() {
                 topo.partition(total)
@@ -789,7 +1495,7 @@ mod tests {
             let a = run(false);
             let b = run(true);
             for (ra, rb) in a.iter().zip(&b) {
-                assert_eq!(ra, rb, "islands={islands}");
+                assert_eq!(ra, rb, "{:?}", topo.tiers());
             }
         }
     }
@@ -801,5 +1507,54 @@ mod tests {
         let part = topo.partition(layout.total);
         let cfg = CompressorConfig::with_method(Method::PowerSgd);
         assert!(HierSyncEngine::new(&cfg, &layout, &part, &topo, 0).is_err());
+    }
+
+    #[test]
+    fn ef21_rejected_on_uneven_islands() {
+        let topo = Topology::from_groups(5, vec![vec![0, 1, 2], vec![3, 4]]).unwrap();
+        let layout = ParamLayout::single("flat", &[512]);
+        let part = topo.partition(layout.total);
+        let cfg = CompressorConfig::with_method(Method::Ef21);
+        assert!(HierSyncEngine::new(&cfg, &layout, &part, &topo, 0).is_err());
+        // but EF21 still runs on even tier trees (peer-group engine)
+        let t3 = Topology::from_tiers(8, &[2, 2, 2]).unwrap();
+        let p3 = t3.partition(layout.total);
+        assert!(HierSyncEngine::new(&cfg, &layout, &p3, &t3, 0).is_ok());
+    }
+
+    #[test]
+    fn empty_shards_sync_without_panicking() {
+        // 8 ranks over 8 elements with a [2,2,2] tree: the deepest cuts
+        // produce empty shards; the engine must still deliver the exact
+        // mean on the non-empty ones, monolithic and bucketed alike
+        let total = 8;
+        let topo = Topology::from_tiers(8, &[2, 2, 2]).unwrap();
+        for bucket_bytes in [0usize, 64] {
+            let cfg = CompressorConfig {
+                bucket_bytes,
+                ..CompressorConfig::with_method(Method::Fp32)
+            };
+            let (results, _) = run_topo_sync(&cfg, total, &topo);
+            check_exact_mean(&topo, total, &results);
+        }
+        // and the stale launch/drain lifecycle tolerates them too
+        let layout = ParamLayout::single("flat", &[total]);
+        let part = topo.partition(total);
+        let cfg = CompressorConfig::with_method(Method::Fp32);
+        let (results, _) = run_cluster(8, |ctx| {
+            let engine = HierSyncEngine::new(&cfg, &layout, &part, &topo, ctx.rank).unwrap();
+            let mut grad = node_grad(ctx.rank, total);
+            let pending = engine.grad_sync_launch(&ctx, &mut grad, 1);
+            let mut acc = vec![0.0f32; part.ranges[ctx.rank].len()];
+            let _ = engine.grad_sync_drain(&ctx, pending, &mut acc);
+            let master: Vec<f32> =
+                part.ranges[ctx.rank].clone().map(roundtrip_params_want).collect();
+            let mut params = vec![0.0f32; total];
+            engine.param_sync(&ctx, &master, &mut params, 1, true);
+            params
+        });
+        for r in &results {
+            assert_eq!(r, &results[0], "nodes diverged with empty shards");
+        }
     }
 }

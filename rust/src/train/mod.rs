@@ -47,7 +47,7 @@ use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
-use crate::collective::{run_cluster_topo, ClusterSpec, NodeCtx};
+use crate::collective::{run_cluster_topo, NodeCtx};
 use crate::compress::{
     self, powersgd::PowerSgd, CompressorConfig, Decoder, Encoder, Method,
 };
@@ -154,8 +154,17 @@ pub struct TrainConfig {
     pub lr: LrSchedule,
     pub compressor: CompressorConfig,
     /// number of NVLink islands for the two-level topology (Zero-2 only);
-    /// 0/1 = flat cluster, the pre-topology engine bit-for-bit
+    /// 0/1 = flat cluster, the pre-topology engine bit-for-bit. The
+    /// legacy spelling of `tiers = [nodes/islands, islands]`.
     pub islands: usize,
+    /// recursive tier tree, innermost (leaf island size) first —
+    /// `[4, 2, 2]` = 2 racks of 2 islands of 4 nodes (`topology.tiers`;
+    /// Zero-2 only). Empty = use `islands`. `[n]` degrades bitwise to
+    /// the flat engine, `[m, k]` to the two-level one.
+    pub tiers: Vec<usize>,
+    /// explicit uneven leaf islands (`topology.groups`, e.g.
+    /// `[[0,1,2],[3,4,5,6,7]]`; Zero-2 only, excludes `tiers`/`islands`)
+    pub topo_groups: Vec<Vec<usize>>,
     /// global-norm clip on the averaged gradient (0 = off)
     pub global_clip: f32,
     pub eval_every: u64,
@@ -185,6 +194,8 @@ impl TrainConfig {
             lr: LrSchedule::constant(1e-3),
             compressor: CompressorConfig::default(),
             islands: 1,
+            tiers: Vec::new(),
+            topo_groups: Vec::new(),
             global_clip: 1.0,
             eval_every: 0,
             eval_batches: 4,
@@ -218,10 +229,24 @@ impl Trainer {
         let cfg = &self.cfg;
         let meta = crate::runtime::load_meta(&cfg.art_dir, &cfg.model)?;
         let n = cfg.nodes;
-        let topo = Topology::new(n, cfg.islands.max(1))?;
+        let topo = if !cfg.topo_groups.is_empty() {
+            anyhow::ensure!(
+                cfg.tiers.is_empty() && cfg.islands <= 1,
+                "topology.groups excludes topology.tiers and topology.islands"
+            );
+            Topology::from_groups(n, cfg.topo_groups.clone())?
+        } else if !cfg.tiers.is_empty() {
+            anyhow::ensure!(
+                cfg.islands <= 1,
+                "set topology.tiers or topology.islands, not both"
+            );
+            Topology::from_tiers(n, &cfg.tiers)?
+        } else {
+            Topology::new(n, cfg.islands.max(1))?
+        };
         anyhow::ensure!(
             !topo.is_hierarchical() || cfg.mode == Mode::Zero2,
-            "topology.islands > 1 requires train.mode = zero2"
+            "hierarchical topologies (islands / tiers / groups) require train.mode = zero2"
         );
         anyhow::ensure!(
             cfg.sync_params == SyncParams::Sync || cfg.mode != Mode::Ddp,
@@ -249,12 +274,9 @@ impl Trainer {
         let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
 
         // flat clusters keep the run_cluster convention (every byte is
-        // "inter-island": there is no fast level to hide traffic on)
-        let spec = if topo.is_hierarchical() {
-            ClusterSpec::islands(topo.island_size())
-        } else {
-            ClusterSpec::flat()
-        };
+        // "inter-island": there is no fast level to hide traffic on);
+        // hierarchical ones count bytes per tier level
+        let spec = topo.cluster_spec();
         let (_, counters) = run_cluster_topo(n, spec, |ctx| {
             match self.node_main(&ctx, &meta, &part, &topo) {
                 Ok(Some(r)) => {
@@ -389,6 +411,7 @@ impl Trainer {
         };
         let mut round_base = if local_h > 0 { params.clone() } else { Vec::new() };
         let mut round_lr_sum = 0.0f64;
+        let mut local_degenerate_rounds = 0u64;
 
         // fp32 byte volume an uncompressed *synchronous* run would send
         // per step across all ranks, for the compression ratio. Summed
@@ -481,16 +504,15 @@ impl Trainer {
                             *p -= lr * g;
                         }
                         round_lr_sum += lr as f64;
-                        if (step + 1) % h == 0 || step + 1 == cfg.steps {
+                        if ((step + 1) % h == 0 || step + 1 == cfg.steps)
+                            && round_lr_sum > 0.0
+                        {
                             // pseudo-gradient: the round's parameter
                             // delta, normalized by the summed inner lrs
                             // so its magnitude (and the wire scale s)
                             // matches an ordinary averaged gradient;
                             // H = 1 reduces to the synchronous schedule
-                            // (lr = 0 degenerates to a zero delta — keep
-                            // the pseudo-gradient zero rather than NaN)
-                            let inv =
-                                if round_lr_sum > 0.0 { 1.0 / round_lr_sum as f32 } else { 0.0 };
+                            let inv = 1.0 / round_lr_sum as f32;
                             for (g, (&b, &p)) in
                                 grad.iter_mut().zip(round_base.iter().zip(params.iter()))
                             {
@@ -502,6 +524,21 @@ impl Trainer {
                             util::scale(&mut shard_acc, 1.0 / n as f32);
                             grad_sync_rounds += 1;
                         } else {
+                            // mid-round — or a *degenerate* round whose
+                            // inner lrs summed to zero: the parameters
+                            // never moved, so the pseudo-gradient is
+                            // identically zero. Skip the exchange
+                            // entirely (shipping it would pay the wire,
+                            // evolve the error feedback and reset it on
+                            // reset steps — all for a zero update) and
+                            // count it; round_lr_sum stays zero, so the
+                            // next round accumulates from the same base.
+                            // The lr schedule is deterministic and
+                            // identical on every rank, so all ranks skip
+                            // in lockstep.
+                            if (step + 1) % h == 0 || step + 1 == cfg.steps {
+                                local_degenerate_rounds += 1;
+                            }
                             have_update = false;
                         }
                     }
@@ -706,6 +743,7 @@ impl Trainer {
             m.grad_sync_launch_s = grad_launch_s;
             m.grad_stale_steps = grad_stale_steps;
             m.grad_sync_rounds = grad_sync_rounds;
+            m.local_degenerate_rounds = local_degenerate_rounds;
             Ok(Some(RunResult { metrics: m, final_params: params }))
         } else {
             Ok(None)

@@ -7,7 +7,9 @@
 
 use std::sync::Arc;
 
-use loco::collective::{run_cluster, run_cluster_net, run_cluster_topo, ClusterSpec, LinkSim};
+use loco::collective::{
+    run_cluster, run_cluster_net, run_cluster_topo, ClusterSpec, FaultSchedule, LinkSim,
+};
 use loco::comm::SyncEngine;
 use loco::compress::fp::f32_to_bf16;
 use loco::compress::CompressorConfig;
@@ -397,7 +399,72 @@ fn main() {
         );
     }
 
-    // 12. L2 train step (tiny model) — end-to-end gradient latency through
+    // 12. §Tentpole PR6: fault replay at scale — cluster sync throughput
+    //    at 16/64 simulated ranks, fault-free vs one 4x straggler, over a
+    //    LinkSim egress sized to ~2 ms of serial wire per exchange. The
+    //    rows feed BENCH_hotpath.json (the per-PR perf trajectory ROADMAP
+    //    asks for): paste the printed JSON under a new entry after a run
+    //    on quiet hardware.
+    {
+        let rank_counts: &[usize] = if fast { &[8, 16] } else { &[16, 64] };
+        let steps = 4u64;
+        let mut rows = Vec::new();
+        for &nodes in rank_counts {
+            let total: usize = if fast { 1 << 14 } else { 1 << 18 };
+            let layout = ParamLayout::single("flat", &[total]);
+            let part = Partition::flat_even(total, nodes, 2);
+            let cfg = CompressorConfig { s: 64.0, ..Default::default() };
+            // 4-bit wire volume per node: (n-1)/n of the model at 0.5 B
+            let grad_bytes = 0.5 * (total - total / nodes) as f64;
+            let net = LinkSim { bw: grad_bytes / 2e-3, latency_s: 20e-6 };
+            let straggler = Arc::new(
+                FaultSchedule::parse(
+                    &format!("straggler:rank=0:steps=0-{steps}:slow=4"),
+                    6,
+                )
+                .expect("schedule"),
+            );
+            let run_once = |faults: Option<Arc<FaultSchedule>>| {
+                let t0 = std::time::Instant::now();
+                let spec = ClusterSpec {
+                    island_size: 1,
+                    inter: Some(net),
+                    faults,
+                    ..Default::default()
+                };
+                run_cluster_topo(nodes, spec, |ctx| {
+                    let engine = SyncEngine::new(&cfg, &layout, &part, ctx.rank, nodes);
+                    let mut acc = vec![0.0f32; part.ranges[ctx.rank].len()];
+                    let mut g = vec![0.0f32; total];
+                    Rng::new(7 + ctx.rank as u64).fill_normal(&mut g, 0.1);
+                    for step in 1..=steps {
+                        ctx.set_sim_step(step);
+                        engine.sync(&ctx, &g, &mut acc, step);
+                    }
+                });
+                t0.elapsed().as_secs_f64()
+            };
+            let t_free = (0..2).map(|_| run_once(None)).fold(f64::INFINITY, f64::min);
+            let t_slow = (0..2)
+                .map(|_| run_once(Some(straggler.clone())))
+                .fold(f64::INFINITY, f64::min);
+            let free = steps as f64 / t_free;
+            let slow = steps as f64 / t_slow;
+            println!(
+                "fault replay n={nodes}: fault-free {free:7.1} steps/s, \
+                 1 straggler (4x) {slow:7.1} steps/s  ({:.2}x slowdown)",
+                t_slow / t_free
+            );
+            rows.push(format!(
+                "        {{\"ranks\": {nodes}, \"fault_free_steps_per_s\": {free:.2}, \
+                 \"one_straggler_steps_per_s\": {slow:.2}}}"
+            ));
+        }
+        println!("BENCH_hotpath.json rows (paste into a new \"measured\" entry):");
+        println!("{}\n", rows.join(",\n"));
+    }
+
+    // 13. L2 train step (tiny model) — end-to-end gradient latency through
     //    the PJRT artifacts when present, the builtin engine otherwise
     let art = loco::runtime::artifacts_dir();
     {

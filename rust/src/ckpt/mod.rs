@@ -1,0 +1,218 @@
+//! Bitwise checkpoint/resume (DESIGN.md §3.10).
+//!
+//! A checkpoint freezes everything the trainer needs to continue a run
+//! exactly: the replicated parameter vector at a step boundary plus, per
+//! rank, the fp32 master shard, the optimizer moments, the sync engine's
+//! error-feedback state, and the node RNG stream position. Every field is
+//! stored as its exact little-endian bit pattern ([`crate::util::bytes`]),
+//! so save → load → save reproduces identical bytes and a resumed run
+//! replays the same trajectory as one that never stopped.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::bytes::{self, Reader};
+
+/// File magic at offset 0.
+pub const MAGIC: [u8; 8] = *b"LOCOCKPT";
+/// Format version written by this build; loads reject anything else.
+pub const VERSION: u32 = 1;
+
+/// State owned by one rank at the checkpointed step boundary.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RankState {
+    /// fp32 master copy of the rank's own parameter shard (Zero-2).
+    pub master: Vec<f32>,
+    /// Opaque optimizer state (`Optimizer::export_state`).
+    pub opt: Vec<u8>,
+    /// Opaque sync-engine state: compressor error feedback, auto-scale
+    /// EMA, quantizer RNG (`HierSyncEngine::export_state`).
+    pub engine: Vec<u8>,
+    /// Node RNG stream position (`util::Rng::state()`).
+    pub rng: [u64; 6],
+}
+
+/// A full training checkpoint taken at a step boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// First step the resumed run executes (steps `< step` are done).
+    pub step: u64,
+    /// Cluster size the run was launched with.
+    pub n: usize,
+    /// Total parameter count.
+    pub total: usize,
+    /// Run seed (init + node RNG derivation).
+    pub seed: u64,
+    /// Corpus seed (data order).
+    pub corpus_seed: u64,
+    /// Replicated parameter vector all ranks agree on at `step`.
+    pub params: Vec<f32>,
+    /// Per-rank state, indexed by rank id; length must equal `n`.
+    pub ranks: Vec<RankState>,
+}
+
+impl Checkpoint {
+    /// Serialize to the on-disk format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        bytes::push_u32(&mut out, VERSION);
+        bytes::push_u64(&mut out, self.step);
+        bytes::push_u64(&mut out, self.n as u64);
+        bytes::push_u64(&mut out, self.total as u64);
+        bytes::push_u64(&mut out, self.seed);
+        bytes::push_u64(&mut out, self.corpus_seed);
+        bytes::push_f32s(&mut out, &self.params);
+        bytes::push_u64(&mut out, self.ranks.len() as u64);
+        for r in &self.ranks {
+            bytes::push_f32s(&mut out, &r.master);
+            bytes::push_bytes(&mut out, &r.opt);
+            bytes::push_bytes(&mut out, &r.engine);
+            bytes::push_u64s(&mut out, &r.rng);
+        }
+        out
+    }
+
+    /// Parse the on-disk format, validating magic, version, internal
+    /// consistency, and exact length.
+    pub fn from_bytes(data: &[u8]) -> Result<Self> {
+        ensure!(
+            data.len() >= MAGIC.len() + 4 && data[..MAGIC.len()] == MAGIC,
+            "not a loco checkpoint (bad magic)"
+        );
+        let mut r = Reader::new(&data[MAGIC.len()..]);
+        let version = r.u32()?;
+        ensure!(
+            version == VERSION,
+            "checkpoint format version {version}; this build reads {VERSION}"
+        );
+        let step = r.u64()?;
+        let n = r.u64()? as usize;
+        let total = r.u64()? as usize;
+        let seed = r.u64()?;
+        let corpus_seed = r.u64()?;
+        let params = r.f32s()?;
+        let nr = r.u64()? as usize;
+        ensure!(nr == n, "checkpoint lists {nr} rank states for n = {n}");
+        let mut ranks = Vec::with_capacity(nr);
+        for rank in 0..nr {
+            let master = r.f32s()?;
+            let opt = r.bytes()?;
+            let engine = r.bytes()?;
+            let words = r.u64s()?;
+            let rng: [u64; 6] = words.as_slice().try_into().map_err(|_| {
+                anyhow::anyhow!(
+                    "rank {rank}: rng state must be 6 words, got {}",
+                    words.len()
+                )
+            })?;
+            ranks.push(RankState { master, opt, engine, rng });
+        }
+        r.finish()?;
+        ensure!(
+            params.len() == total,
+            "checkpoint holds {} params, header says {total}",
+            params.len()
+        );
+        Ok(Checkpoint { step, n, total, seed, corpus_seed, params, ranks })
+    }
+
+    /// Write to `path`, creating parent directories as needed.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+
+    /// Read and parse a checkpoint from `path`.
+    pub fn load(path: &Path) -> Result<Self> {
+        let data = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::from_bytes(&data)
+            .with_context(|| format!("parsing checkpoint {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            step: 7,
+            n: 2,
+            total: 6,
+            seed: 42,
+            corpus_seed: 9,
+            params: vec![0.5, -1.25, 3.0, 0.0, f32::MIN_POSITIVE, 2e8],
+            ranks: vec![
+                RankState {
+                    master: vec![0.5, -1.25, 3.0],
+                    opt: vec![1, 2, 3],
+                    engine: Vec::new(),
+                    rng: [1, 2, 3, 4, 5, 6],
+                },
+                RankState {
+                    master: vec![0.0, f32::MIN_POSITIVE, 2e8],
+                    opt: Vec::new(),
+                    engine: vec![9; 17],
+                    rng: [7, 8, 9, 10, 11, 0],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn bitwise_roundtrip() {
+        let c = sample();
+        let b1 = c.to_bytes();
+        let c2 = Checkpoint::from_bytes(&b1).unwrap();
+        assert_eq!(c, c2);
+        assert_eq!(b1, c2.to_bytes());
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let mut b = sample().to_bytes();
+        b[0] ^= 0xFF;
+        assert!(Checkpoint::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn wrong_version_is_rejected() {
+        let mut b = sample().to_bytes();
+        b[8] = 0xEE; // first LE byte of the version field
+        assert!(Checkpoint::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn truncation_is_an_error_at_any_cut() {
+        let b = sample().to_bytes();
+        for cut in [10, b.len() / 2, b.len() - 1] {
+            assert!(Checkpoint::from_bytes(&b[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn rank_count_mismatch_is_rejected() {
+        let mut c = sample();
+        c.ranks.pop();
+        assert!(Checkpoint::from_bytes(&c.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let c = sample();
+        let path = std::env::temp_dir().join("loco_ckpt_test").join("ck.bin");
+        c.save(&path).unwrap();
+        let c2 = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, c2);
+        let _ = std::fs::remove_file(&path);
+    }
+}

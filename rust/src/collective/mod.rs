@@ -45,7 +45,272 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use anyhow::{bail, Context, Result};
+
 use crate::compress::WireMsg;
+
+/// One class of injected fault (see [`FaultSchedule`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The rank's simulated egress bandwidth is divided by `slow` (a
+    /// straggling sender: its messages serialize `slow`× longer on the
+    /// wire). Pure timing — payloads are untouched.
+    Straggler {
+        /// slowdown factor (> 1.0)
+        slow: f64,
+    },
+    /// Transient link jitter: each of the rank's messages is stretched by
+    /// a deterministic per-message factor in `[1, 1 + max]`, derived from
+    /// the schedule seed + (src, dst, message index). Pure timing.
+    Jitter {
+        /// maximum fractional stretch (e.g. 0.5 = up to +50%)
+        max: f64,
+    },
+    /// Rank death: the rank contributes no compute over the window (zero
+    /// gradient, zero loss weight) and its compressor error-feedback
+    /// state is re-zeroed at onset; it rejoins at the step after the
+    /// window ends. The rank keeps serving its parameter shard — the
+    /// "compute died, parameter service migrated" model — so collectives
+    /// stay mechanically intact on every topology plan.
+    Drop,
+}
+
+/// One scheduled fault: `kind` applies to `rank` for steps
+/// `from..=until` (inclusive on both ends).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// affected rank
+    pub rank: usize,
+    /// what happens
+    pub kind: FaultKind,
+    /// first affected step (inclusive)
+    pub from: u64,
+    /// last affected step (inclusive)
+    pub until: u64,
+}
+
+impl FaultEvent {
+    /// Whether this event is active at `step`.
+    pub fn active(&self, step: u64) -> bool {
+        self.from <= step && step <= self.until
+    }
+}
+
+/// A seeded, deterministic fault schedule: the single source of truth for
+/// *when* stragglers slow down, links jitter, and ranks die/rejoin.
+///
+/// Determinism contract: every rank consults the same schedule at the
+/// same step boundaries, so all skip/defer/dropout *decisions* are pure
+/// functions of (schedule, step) — identical on every rank, every run.
+/// Timing faults (straggler, jitter) only stretch the simulated wire
+/// ([`LinkSim`]); they never change payloads, so fault-free numerics are
+/// reproduced bitwise under a pure-timing schedule.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSchedule {
+    /// seed for per-message jitter (threaded from `train.seed` unless
+    /// `faults.seed` overrides it)
+    pub seed: u64,
+    /// the scheduled events
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultSchedule {
+    /// Schedule with no events (the default).
+    pub fn empty() -> Self {
+        FaultSchedule::default()
+    }
+
+    /// Whether any event is scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse a `;`-separated event list. Each event is
+    /// `kind:key=val:key=val...` with kinds:
+    ///
+    /// * `straggler:rank=R:steps=A-B:slow=F` — rank R's egress is F× slower
+    /// * `jitter:rank=R:steps=A-B:max=F` — up to +F fractional per-message stretch
+    /// * `drop:rank=R:steps=A-B` — rank R is dead for steps A..=B
+    ///
+    /// `steps=A` is shorthand for `steps=A-A`. Whitespace around
+    /// separators is ignored. Errors name the offending event.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultSchedule> {
+        let mut events = Vec::new();
+        for ev in spec.split(';') {
+            let ev = ev.trim();
+            if ev.is_empty() {
+                continue;
+            }
+            let mut parts = ev.split(':');
+            let kind_name = parts.next().unwrap().trim();
+            let mut rank: Option<usize> = None;
+            let mut steps: Option<(u64, u64)> = None;
+            let mut slow: Option<f64> = None;
+            let mut max: Option<f64> = None;
+            for kv in parts {
+                let (k, v) = kv
+                    .split_once('=')
+                    .with_context(|| format!("fault event {ev:?}: expected key=value, got {kv:?}"))?;
+                let (k, v) = (k.trim(), v.trim());
+                match k {
+                    "rank" => {
+                        rank = Some(v.parse().with_context(|| {
+                            format!("fault event {ev:?}: bad rank {v:?}")
+                        })?)
+                    }
+                    "steps" => {
+                        let (a, b) = match v.split_once('-') {
+                            Some((a, b)) => (
+                                a.trim().parse::<u64>(),
+                                b.trim().parse::<u64>(),
+                            ),
+                            None => (v.parse::<u64>(), v.parse::<u64>()),
+                        };
+                        let (a, b) = (
+                            a.with_context(|| format!("fault event {ev:?}: bad steps {v:?}"))?,
+                            b.with_context(|| format!("fault event {ev:?}: bad steps {v:?}"))?,
+                        );
+                        if a > b {
+                            bail!("fault event {ev:?}: empty step range {a}-{b}");
+                        }
+                        steps = Some((a, b));
+                    }
+                    "slow" => {
+                        slow = Some(v.parse().with_context(|| {
+                            format!("fault event {ev:?}: bad slow {v:?}")
+                        })?)
+                    }
+                    "max" => {
+                        max = Some(v.parse().with_context(|| {
+                            format!("fault event {ev:?}: bad max {v:?}")
+                        })?)
+                    }
+                    other => bail!("fault event {ev:?}: unknown key {other:?}"),
+                }
+            }
+            let rank = rank.with_context(|| format!("fault event {ev:?}: missing rank="))?;
+            let (from, until) =
+                steps.with_context(|| format!("fault event {ev:?}: missing steps="))?;
+            let kind = match kind_name {
+                "straggler" => {
+                    let slow = slow
+                        .with_context(|| format!("fault event {ev:?}: missing slow="))?;
+                    if slow <= 1.0 {
+                        bail!("fault event {ev:?}: slow must be > 1.0, got {slow}");
+                    }
+                    FaultKind::Straggler { slow }
+                }
+                "jitter" => {
+                    let max =
+                        max.with_context(|| format!("fault event {ev:?}: missing max="))?;
+                    if max <= 0.0 {
+                        bail!("fault event {ev:?}: max must be > 0, got {max}");
+                    }
+                    FaultKind::Jitter { max }
+                }
+                "drop" => FaultKind::Drop,
+                other => bail!(
+                    "fault event {ev:?}: unknown kind {other:?} (straggler | jitter | drop)"
+                ),
+            };
+            events.push(FaultEvent { rank, kind, from, until });
+        }
+        Ok(FaultSchedule { seed, events })
+    }
+
+    /// Combined straggler slowdown of `rank` at `step` (1.0 = none;
+    /// overlapping events multiply).
+    pub fn straggler_slow(&self, rank: usize, step: u64) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| e.rank == rank && e.active(step))
+            .filter_map(|e| match e.kind {
+                FaultKind::Straggler { slow } => Some(slow),
+                _ => None,
+            })
+            .product::<f64>()
+            .max(1.0)
+    }
+
+    /// Maximum jitter fraction for `rank` at `step` (0.0 = none).
+    pub fn jitter_max(&self, rank: usize, step: u64) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| e.rank == rank && e.active(step))
+            .filter_map(|e| match e.kind {
+                FaultKind::Jitter { max } => Some(max),
+                _ => None,
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Whether `rank` is dead (dropped) at `step`.
+    pub fn is_dead(&self, rank: usize, step: u64) -> bool {
+        self.events
+            .iter()
+            .any(|e| e.rank == rank && e.active(step) && e.kind == FaultKind::Drop)
+    }
+
+    /// Ranks straggling at `step`, ascending, deduplicated.
+    pub fn stragglers_at(&self, step: u64) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .events
+            .iter()
+            .filter(|e| e.active(step) && matches!(e.kind, FaultKind::Straggler { .. }))
+            .map(|e| e.rank)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Ranks dead at `step`, ascending, deduplicated.
+    pub fn dead_at(&self, step: u64) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .events
+            .iter()
+            .filter(|e| e.active(step) && e.kind == FaultKind::Drop)
+            .map(|e| e.rank)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Whether `rank` dies at `step` (dead now, alive at `step - 1`).
+    pub fn died_at(&self, rank: usize, step: u64) -> bool {
+        self.is_dead(rank, step) && (step == 0 || !self.is_dead(rank, step - 1))
+    }
+
+    /// Whether `rank` rejoins at `step` (alive now, dead at `step - 1`).
+    pub fn rejoined_at(&self, rank: usize, step: u64) -> bool {
+        !self.is_dead(rank, step) && step > 0 && self.is_dead(rank, step - 1)
+    }
+
+    /// Deterministic per-message timing stretch factor in
+    /// `[1, 1 + jitter_max]` for message `msg_idx` from `src` to `dst` at
+    /// `step`. Pure function of (seed, src, dst, msg_idx) so replays are
+    /// exact.
+    pub fn jitter_factor(&self, src: usize, dst: usize, msg_idx: u64, step: u64) -> f64 {
+        let max = self.jitter_max(src, step);
+        if max <= 0.0 {
+            return 1.0;
+        }
+        let mut h = self
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(((src as u64) << 32) | dst as u64)
+            .wrapping_add(msg_idx.wrapping_mul(0xA24BAED4963EE407));
+        // one splitmix64 round: decorrelates consecutive message indices
+        h = h.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = h;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^= z >> 31;
+        let u = (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        1.0 + max * u
+    }
+}
 
 /// Simulated point-to-point interconnect for benchmarks
 /// ([`run_cluster_net`]). In-process channels deliver instantly, which
@@ -99,6 +364,11 @@ pub struct ClusterSpec {
     /// per-level simulated links (index = level; must cover every level
     /// when non-empty). Empty = `[intra, inter, inter, ...]`.
     pub links: Vec<Option<LinkSim>>,
+    /// seeded fault schedule replayed deterministically by the link
+    /// simulation (straggler egress slowdowns, per-message jitter) and
+    /// consulted by the lifecycles for dropout decisions. `None` = no
+    /// faults.
+    pub faults: Option<Arc<FaultSchedule>>,
 }
 
 impl ClusterSpec {
@@ -325,6 +595,13 @@ pub struct NodeCtx {
     /// independently)
     nets: Arc<Vec<Option<LinkSim>>>,
     egress: Vec<Cell<Instant>>,
+    /// fault schedule replayed by the simulated wire, if any
+    faults: Option<Arc<FaultSchedule>>,
+    /// current training step, advanced by [`NodeCtx::set_sim_step`]; the
+    /// wire model looks faults up at this step
+    sim_step: Cell<u64>,
+    /// per-node outgoing message index (jitter replay key)
+    msg_idx: Cell<u64>,
     pub counters: Arc<Counters>,
 }
 
@@ -341,6 +618,18 @@ impl NodeCtx {
         self.levels[dst] as usize
     }
 
+    /// Advance the step the simulated wire looks faults up at. The
+    /// trainer calls this once per step on every rank; clusters without a
+    /// fault schedule never need to.
+    pub fn set_sim_step(&self, step: u64) {
+        self.sim_step.set(step);
+    }
+
+    /// The fault schedule this cluster runs under, if any.
+    pub fn faults(&self) -> Option<&FaultSchedule> {
+        self.faults.as_deref()
+    }
+
     pub fn send(&self, dst: usize, p: Payload) {
         let bytes = p.wire_bytes();
         self.counters.sent[self.rank].fetch_add(bytes, Ordering::Relaxed);
@@ -351,8 +640,18 @@ impl NodeCtx {
         self.counters.by_level[lvl][self.rank].fetch_add(bytes, Ordering::Relaxed);
         let (net, egress) = (self.nets[lvl], &self.egress[lvl]);
         let ready_at = net.map(|l| {
+            // fault replay: a straggling sender's egress is `slow`× lower
+            // bandwidth, and jitter stretches this message by a
+            // deterministic per-message factor. Timing only — payloads
+            // (and therefore numerics) are untouched.
+            let stretch = self.faults.as_deref().map_or(1.0, |f| {
+                let step = self.sim_step.get();
+                let idx = self.msg_idx.get();
+                self.msg_idx.set(idx + 1);
+                f.straggler_slow(self.rank, step) * f.jitter_factor(self.rank, dst, idx, step)
+            });
             let start = egress.get().max(Instant::now());
-            let done = start + Duration::from_secs_f64(bytes as f64 / l.bw);
+            let done = start + Duration::from_secs_f64(stretch * bytes as f64 / l.bw);
             egress.set(done);
             done + Duration::from_secs_f64(l.latency_s)
         });
@@ -822,6 +1121,9 @@ pub fn run_cluster_topo<T: Send>(
             hierarchical,
             nets: nets.clone(),
             egress: (0..n_levels).map(|_| Cell::new(Instant::now())).collect(),
+            faults: spec.faults.clone(),
+            sim_step: Cell::new(0),
+            msg_idx: Cell::new(0),
             counters: counters.clone(),
         });
     }
@@ -1316,6 +1618,95 @@ mod tests {
         // recv is delayed by > 50 ms of pure scheduling.
         assert!(inter_t >= 0.09, "inter link did not delay: {inter_t}");
         assert!(inter_t > 2.0 * intra_t, "levels not independent: {intra_t} vs {inter_t}");
+    }
+
+    #[test]
+    fn fault_schedule_parses_and_queries() {
+        let f = FaultSchedule::parse(
+            "straggler:rank=1:steps=2-4:slow=3.0; drop:rank=2:steps=5-6; jitter:rank=0:steps=0-9:max=0.5",
+            7,
+        )
+        .unwrap();
+        assert_eq!(f.events.len(), 3);
+        assert_eq!(f.straggler_slow(1, 1), 1.0);
+        assert_eq!(f.straggler_slow(1, 2), 3.0);
+        assert_eq!(f.straggler_slow(1, 4), 3.0);
+        assert_eq!(f.straggler_slow(1, 5), 1.0);
+        assert_eq!(f.stragglers_at(3), vec![1]);
+        assert!(f.stragglers_at(5).is_empty());
+        assert!(!f.is_dead(2, 4) && f.is_dead(2, 5) && f.is_dead(2, 6) && !f.is_dead(2, 7));
+        assert!(f.died_at(2, 5) && !f.died_at(2, 6));
+        assert!(f.rejoined_at(2, 7) && !f.rejoined_at(2, 6));
+        assert_eq!(f.dead_at(5), vec![2]);
+        assert_eq!(f.jitter_max(0, 3), 0.5);
+        assert_eq!(f.jitter_max(1, 3), 0.0);
+        // single-step shorthand
+        let g = FaultSchedule::parse("drop:rank=0:steps=3", 0).unwrap();
+        assert!(g.is_dead(0, 3) && !g.is_dead(0, 2) && !g.is_dead(0, 4));
+        // empty spec
+        assert!(FaultSchedule::parse("", 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn fault_schedule_rejects_malformed() {
+        for bad in [
+            "straggler:rank=1:steps=2-4",          // missing slow
+            "straggler:rank=1:steps=2-4:slow=0.5", // slow <= 1
+            "straggler:steps=2-4:slow=2",          // missing rank
+            "drop:rank=1",                         // missing steps
+            "drop:rank=1:steps=4-2",               // empty range
+            "drop:rank=x:steps=1",                 // bad rank
+            "jitter:rank=0:steps=1:max=-1",        // bad max
+            "explode:rank=0:steps=1",              // unknown kind
+            "drop:rank=0:steps=1:bogus=2",         // unknown key
+            "drop:rank 0",                         // not key=value
+        ] {
+            assert!(FaultSchedule::parse(bad, 0).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn jitter_factor_is_deterministic_and_bounded() {
+        let f = FaultSchedule::parse("jitter:rank=0:steps=0-100:max=0.5", 9).unwrap();
+        for idx in 0..200u64 {
+            let a = f.jitter_factor(0, 1, idx, 5);
+            let b = f.jitter_factor(0, 1, idx, 5);
+            assert_eq!(a, b);
+            assert!((1.0..1.5 + 1e-12).contains(&a), "factor {a}");
+        }
+        // different message indices decorrelate
+        let x = f.jitter_factor(0, 1, 0, 5);
+        let y = f.jitter_factor(0, 1, 1, 5);
+        assert_ne!(x, y);
+        // no jitter scheduled => exactly 1.0
+        assert_eq!(f.jitter_factor(1, 0, 0, 5), 1.0);
+    }
+
+    #[test]
+    fn straggler_slows_simulated_sends() {
+        // rank 0 straggling 10x at 100 MB/s: 250 KB takes >= ~25 ms
+        // (vs 2.5 ms fault-free)
+        let faults =
+            Arc::new(FaultSchedule::parse("straggler:rank=0:steps=0-9:slow=10", 1).unwrap());
+        let spec = ClusterSpec {
+            island_size: 1,
+            inter: Some(LinkSim { bw: 100e6, latency_s: 0.0 }),
+            faults: Some(faults),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        run_cluster_topo(2, spec, |ctx| {
+            ctx.set_sim_step(0);
+            if ctx.rank == 0 {
+                ctx.send(1, Payload::F32(vec![0.0; 62_500]));
+            } else {
+                ctx.recv(0);
+            }
+        });
+        assert!(
+            t0.elapsed().as_secs_f64() >= 0.02,
+            "straggler did not slow the wire"
+        );
     }
 
     #[test]

@@ -235,6 +235,72 @@ impl SyncEngine {
         e + d
     }
 
+    /// Serialize the persistent compressor state of every encoder and
+    /// decoder (error-feedback residuals, auto-scale EMA, quantizer RNG)
+    /// as one length-prefixed blob per component, in plan order — the
+    /// checkpoint payload behind [`crate::ckpt::RankState::engine`].
+    /// Round-trips bitwise through [`SyncEngine::import_state`].
+    pub fn export_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        if let Some(m) = &self.mono {
+            let pair = m.lock().unwrap();
+            crate::util::bytes::push_bytes(&mut out, &pair.0.export_state());
+            crate::util::bytes::push_bytes(&mut out, &pair.1.export_state());
+            return out;
+        }
+        for e in &self.enc {
+            crate::util::bytes::push_bytes(&mut out, &e.lock().unwrap().export_state());
+        }
+        for d in &self.dec {
+            crate::util::bytes::push_bytes(&mut out, &d.lock().unwrap().export_state());
+        }
+        out
+    }
+
+    /// Restore state captured by [`SyncEngine::export_state`] on an
+    /// engine built from the same config, layout, and partition. Errors
+    /// (without partial application beyond the failing component) when
+    /// the blob count or any component's shape disagrees.
+    pub fn import_state(&self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = crate::util::bytes::Reader::new(bytes);
+        if let Some(m) = &self.mono {
+            let mut pair = m.lock().unwrap();
+            let eb = r.bytes()?;
+            pair.0.import_state(&eb)?;
+            let db = r.bytes()?;
+            pair.1.import_state(&db)?;
+            return r.finish();
+        }
+        for e in &self.enc {
+            let b = r.bytes()?;
+            e.lock().unwrap().import_state(&b)?;
+        }
+        for d in &self.dec {
+            let b = r.bytes()?;
+            d.lock().unwrap().import_state(&b)?;
+        }
+        r.finish()
+    }
+
+    /// Re-zero every encoder's and decoder's persistent state (the
+    /// rank-death reconciliation path — DESIGN.md §3.10). No-op for
+    /// stateless methods; the trainer skips it entirely for EF21, whose
+    /// sender/receiver `w` invariant re-zeroing would desync.
+    pub fn reset_state(&self) {
+        if let Some(m) = &self.mono {
+            let mut pair = m.lock().unwrap();
+            pair.0.reset_state();
+            pair.1.reset_state();
+            return;
+        }
+        for e in &self.enc {
+            e.lock().unwrap().reset_state();
+        }
+        for d in &self.dec {
+            d.lock().unwrap().reset_state();
+        }
+    }
+
     /// One gradient exchange: compress `grad` towards every destination,
     /// all-to-all, and accumulate the decoded contributions of all `n`
     /// sources into `shard_acc` (this node's shard, *not* yet averaged —

@@ -110,6 +110,28 @@ impl Encoder for StochasticQuantEncoder {
     fn wire_bits_per_elem(&self) -> f64 {
         self.cfg.bits as f64
     }
+
+    fn export_state(&self) -> Vec<u8> {
+        // the stochastic-rounding stream is state: a resumed run must
+        // continue the same sequence to stay bitwise reproducible
+        let mut out = Vec::new();
+        crate::util::bytes::push_u64s(&mut out, &self.rng.state());
+        out
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = crate::util::bytes::Reader::new(bytes);
+        let words = r.u64s()?;
+        let st: [u64; 6] = words.as_slice().try_into().map_err(|_| {
+            anyhow::anyhow!("intsgd rng state must be 6 words, got {}", words.len())
+        })?;
+        self.rng = Rng::from_state(&st);
+        r.finish()
+    }
+
+    fn reset_state(&mut self) {
+        self.rng = Rng::new(0xC0FFEE);
+    }
 }
 
 #[cfg(test)]

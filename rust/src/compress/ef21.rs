@@ -59,6 +59,30 @@ impl Encoder for Ef21Encoder {
     fn state_bytes(&self) -> usize {
         4 * self.w.len()
     }
+
+    fn export_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        crate::util::bytes::push_f32s(&mut out, &self.w);
+        out
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = crate::util::bytes::Reader::new(bytes);
+        let got = r.f32s()?;
+        anyhow::ensure!(
+            got.len() == self.w.len(),
+            "ef21 reconstruction: saved {} elements, encoder covers {}",
+            got.len(),
+            self.w.len()
+        );
+        self.w = got;
+        r.finish()
+    }
+
+    // NOTE: reset_state is deliberately the no-op default. EF21's
+    // invariant is that every receiver's per-source reconstruction
+    // mirrors the sender's `w`; re-zeroing only the sender would desync
+    // them, so the dropout path skips EF reset for this method.
 }
 
 /// Receiver-side per-source reconstructions over this node's shard.
@@ -83,6 +107,37 @@ impl Decoder for Ef21Decoder {
 
     fn state_bytes(&self) -> usize {
         self.w.iter().map(|v| 4 * v.len()).sum()
+    }
+
+    fn export_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        crate::util::bytes::push_u64(&mut out, self.w.len() as u64);
+        for w in &self.w {
+            crate::util::bytes::push_f32s(&mut out, w);
+        }
+        out
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = crate::util::bytes::Reader::new(bytes);
+        let n = r.u64()? as usize;
+        anyhow::ensure!(
+            n == self.w.len(),
+            "ef21 decoder: saved {} sources, decoder has {}",
+            n,
+            self.w.len()
+        );
+        for w in &mut self.w {
+            let got = r.f32s()?;
+            anyhow::ensure!(
+                got.len() == w.len(),
+                "ef21 decoder: saved shard of {} elements, decoder covers {}",
+                got.len(),
+                w.len()
+            );
+            *w = got;
+        }
+        r.finish()
     }
 }
 

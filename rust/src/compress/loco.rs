@@ -235,6 +235,80 @@ impl Encoder for LocoEncoder {
             ErrorStore::None => 0,
         }
     }
+
+    fn export_state(&self) -> Vec<u8> {
+        use crate::util::bytes as by;
+        let mut out = Vec::new();
+        match &self.err {
+            ErrorStore::I8(v) => {
+                by::push_u32(&mut out, 1);
+                by::push_i8s(&mut out, v);
+            }
+            ErrorStore::F32(v) => {
+                by::push_u32(&mut out, 2);
+                by::push_f32s(&mut out, v);
+            }
+            ErrorStore::None => by::push_u32(&mut out, 0),
+        }
+        by::push_f32(&mut out, self.maxabs_ema);
+        by::push_u64(&mut out, self.last_scale_step);
+        by::push_f64(&mut out, self.scale_obs_sq);
+        by::push_f64(&mut out, self.scale_obs_n);
+        by::push_u32(&mut out, self.ema_is_partial_seed as u32);
+        out
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        use crate::util::bytes as by;
+        let mut r = by::Reader::new(bytes);
+        let tag = r.u32()?;
+        match (&mut self.err, tag) {
+            (ErrorStore::I8(v), 1) => {
+                let got = r.i8s()?;
+                anyhow::ensure!(
+                    got.len() == v.len(),
+                    "loco error store: saved {} elements, encoder covers {}",
+                    got.len(),
+                    v.len()
+                );
+                *v = got;
+            }
+            (ErrorStore::F32(v), 2) => {
+                let got = r.f32s()?;
+                anyhow::ensure!(
+                    got.len() == v.len(),
+                    "loco error store: saved {} elements, encoder covers {}",
+                    got.len(),
+                    v.len()
+                );
+                *v = got;
+            }
+            (ErrorStore::None, 0) => {}
+            (_, tag) => anyhow::bail!(
+                "loco error-store kind mismatch (saved tag {tag}) — \
+                 checkpoint taken under a different compressor config"
+            ),
+        }
+        self.maxabs_ema = r.f32()?;
+        self.last_scale_step = r.u64()?;
+        self.scale_obs_sq = r.f64()?;
+        self.scale_obs_n = r.f64()?;
+        self.ema_is_partial_seed = r.u32()? != 0;
+        r.finish()
+    }
+
+    fn reset_state(&mut self) {
+        match &mut self.err {
+            ErrorStore::I8(v) => v.fill(0),
+            ErrorStore::F32(v) => v.fill(0.0),
+            ErrorStore::None => {}
+        }
+        self.maxabs_ema = 0.0;
+        self.last_scale_step = u64::MAX;
+        self.scale_obs_sq = 0.0;
+        self.scale_obs_n = 0.0;
+        self.ema_is_partial_seed = false;
+    }
 }
 
 /// LoCo-Zero++: LoCo's error feedback (int8 moving-average store, reset)
@@ -303,6 +377,29 @@ impl Encoder for LocoBlockEncoder {
 
     fn state_bytes(&self) -> usize {
         self.err.len()
+    }
+
+    fn export_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        crate::util::bytes::push_i8s(&mut out, &self.err);
+        out
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = crate::util::bytes::Reader::new(bytes);
+        let got = r.i8s()?;
+        anyhow::ensure!(
+            got.len() == self.err.len(),
+            "loco-zero++ error store: saved {} elements, encoder covers {}",
+            got.len(),
+            self.err.len()
+        );
+        self.err = got;
+        r.finish()
+    }
+
+    fn reset_state(&mut self) {
+        self.err.fill(0);
     }
 }
 

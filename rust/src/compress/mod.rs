@@ -259,6 +259,27 @@ pub trait Encoder: Send {
     fn state_bytes(&self) -> usize {
         0
     }
+    /// Serialize the persistent state (error stores, adaptive-scale EMAs,
+    /// RNG streams) for checkpointing. Stateless encoders return empty;
+    /// stateful ones must round-trip bitwise through
+    /// [`Encoder::import_state`].
+    fn export_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+    /// Restore state captured by [`Encoder::export_state`] on an encoder
+    /// built from the same config over the same range. The default
+    /// (stateless) accepts only an empty blob.
+    fn import_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            bytes.is_empty(),
+            "stateless encoder given {} bytes of state",
+            bytes.len()
+        );
+        Ok(())
+    }
+    /// Re-zero the persistent state (a dead rank's orphaned compensation
+    /// residual on dropout — counted as a quality event by the trainer).
+    fn reset_state(&mut self) {}
 }
 
 /// Receiver side: decode a shard from `src` and accumulate into `acc`
@@ -283,6 +304,23 @@ pub trait Decoder: Send {
     fn state_bytes(&self) -> usize {
         0
     }
+    /// Serialize receiver-side state (per-source reconstructions) for
+    /// checkpointing; see [`Encoder::export_state`].
+    fn export_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+    /// Restore state captured by [`Decoder::export_state`]. The default
+    /// (stateless) accepts only an empty blob.
+    fn import_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            bytes.is_empty(),
+            "stateless decoder given {} bytes of state",
+            bytes.len()
+        );
+        Ok(())
+    }
+    /// Re-zero receiver-side state; see [`Encoder::reset_state`].
+    fn reset_state(&mut self) {}
 }
 
 /// Decode-accumulate for the stateless wire formats (shared by most

@@ -72,6 +72,29 @@ impl Encoder for OneBitEncoder {
     fn state_bytes(&self) -> usize {
         4 * self.err.len()
     }
+
+    fn export_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        crate::util::bytes::push_f32s(&mut out, &self.err);
+        out
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = crate::util::bytes::Reader::new(bytes);
+        let got = r.f32s()?;
+        anyhow::ensure!(
+            got.len() == self.err.len(),
+            "onebit error store: saved {} elements, encoder covers {}",
+            got.len(),
+            self.err.len()
+        );
+        self.err = got;
+        r.finish()
+    }
+
+    fn reset_state(&mut self) {
+        self.err.fill(0.0);
+    }
 }
 
 #[cfg(test)]

@@ -47,7 +47,8 @@
 //!
 //! | module | role | DESIGN.md |
 //! |---|---|---|
-//! | [`collective`] | in-process cluster, tagged wire, sub-communicators, `LinkSim` | §2 |
+//! | [`collective`] | in-process cluster, tagged wire, sub-communicators, `LinkSim`, `FaultSchedule` | §2 |
+//! | [`ckpt`] | bitwise checkpoint format: params + moments + EF state + RNG | §3.10 |
 //! | [`comm`] | bucketed/overlapped sync engine + async param/grad launch-drain | §3, §3.7, §3.8 |
 //! | [`topology`] | recursive tier-tree / uneven-island schedule | §3.6, §3.9 |
 //! | [`compress`], [`quant`] | LoCo + every baseline; the scalar kernel twin | §2 |
@@ -59,10 +60,12 @@
 //! See DESIGN.md for the system inventory and the per-experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
 
+#[warn(missing_docs)]
+pub mod ckpt;
 pub mod collective;
 // The sync-engine surface is documentation-complete; CI's clippy/doc
 // jobs run with -D warnings, so a new undocumented public item in these
-// three modules fails the build rather than silently regressing.
+// modules fails the build rather than silently regressing.
 #[warn(missing_docs)]
 pub mod comm;
 pub mod compress;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train [--config FILE] [sec.key=val ...]   run a training job
+//!   faults [--config FILE] [--replay] [...]   resolve (and replay) a fault schedule
 //!   table1 | table8 | throughput              print analytic tables
 //!   topology [--gpus N] [--tiers m0,m1,...]   tiered (island/rack/spine) model
 //!   quant-selftest                            Rust hot path vs L1 kernel
@@ -13,12 +14,13 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
+use loco::collective::{FaultKind, FaultSchedule};
 use loco::compress::{CompressorConfig, Method};
 use loco::config::Config;
 use loco::netsim::{self, throughput::{analytic_throughput_hier, analytic_throughput_hier_async, analytic_throughput_local, analytic_throughput_overlapped, analytic_throughput_stale_hier, analytic_throughput_tiered, analytic_throughput_tiered_async, analytic_throughput_tiered_stale, local_step_wire_bytes_per_param, outer_tier_grad_bytes_per_param, paper_speedup, predict_speedup, ACCUMS, PAPER_BASELINES}};
 use loco::optim::{LrSchedule, OptimConfig, OptimizerKind};
 use loco::report::Table;
-use loco::train::{GradSync, Mode, ParamSync, SyncParams, TrainConfig, Trainer};
+use loco::train::{FaultPolicy, GradSync, Mode, ParamSync, SyncParams, TrainConfig, Trainer};
 use loco::util::rng::Rng;
 
 fn main() {
@@ -36,13 +38,14 @@ fn main() {
 fn run(args: &[String]) -> Result<()> {
     match args.first().map(String::as_str) {
         Some("train") => cmd_train(&args[1..]),
+        Some("faults") => cmd_faults(&args[1..]),
         Some("table1") => cmd_table1(),
         Some("table8") => cmd_table8(),
         Some("throughput") => cmd_throughput(),
         Some("topology") => cmd_topology(&args[1..]),
         Some("quant-selftest") => cmd_quant_selftest(),
         Some("info") | None => cmd_info(),
-        Some(other) => bail!("unknown subcommand {other:?} (try: train, table1, table8, throughput, topology, quant-selftest, info)"),
+        Some(other) => bail!("unknown subcommand {other:?} (try: train, faults, table1, table8, throughput, topology, quant-selftest, info)"),
     }
 }
 
@@ -142,7 +145,117 @@ pub fn train_config_from(cfg: &Config) -> Result<TrainConfig> {
     };
     cc.sync_workers = cfg.usize("compress.sync_workers", 4)?;
     tc.compressor = cc;
+
+    // --- fault injection + checkpointing --------------------------------
+    let fp = cfg.str("train.fault_policy", "wait");
+    tc.fault_policy = FaultPolicy::parse(&fp)
+        .with_context(|| format!("unknown train.fault_policy {fp:?} (wait | skip | defer)"))?;
+    if let Some(spec) = cfg.get("faults.events") {
+        let fseed = cfg.u64("faults.seed", tc.seed)?;
+        tc.faults = FaultSchedule::parse(spec, fseed)?;
+    }
+    tc.drain_timeout_ms = cfg.u64("faults.drain_timeout_ms", 100)?;
+    tc.max_defer = cfg.u64("faults.max_defer", 3)?;
+    if let Some(p) = cfg.get("checkpoint.save_path") {
+        tc.save_path = Some(PathBuf::from(p));
+    }
+    tc.save_at = cfg.u64("checkpoint.save_at", 0)?;
+    if let Some(p) = cfg.get("checkpoint.resume_from") {
+        tc.resume_from = Some(PathBuf::from(p));
+    }
     Ok(tc)
+}
+
+/// Resolve a fault schedule from config/overrides and print it as a
+/// table; with `--replay`, additionally run the configured (default:
+/// tiny, 12-step) training job under the schedule and print the
+/// resilience counters. A malformed `faults.events` spec is a hard error
+/// (exit 1), never a silently empty schedule.
+fn cmd_faults(args: &[String]) -> Result<()> {
+    let mut cfg = Config::empty();
+    let mut replay = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => {
+                i += 1;
+                cfg = Config::load(&PathBuf::from(
+                    args.get(i).context("--config needs a path")?,
+                ))?;
+            }
+            "--replay" => replay = true,
+            kv if kv.contains('=') => cfg.set_override(kv)?,
+            other => bail!(
+                "unexpected arg {other:?} \
+                 (usage: loco faults [--config FILE] [--replay] [sec.key=val ...])"
+            ),
+        }
+        i += 1;
+    }
+    let mut tc = train_config_from(&cfg)?;
+    anyhow::ensure!(
+        !tc.faults.is_empty(),
+        "no fault schedule: set faults.events \
+         (e.g. \"straggler:rank=1:steps=2-5:slow=3\")"
+    );
+    let mut t = Table::new(
+        &format!(
+            "fault schedule — seed {}, {} events, policy {}",
+            tc.faults.seed,
+            tc.faults.events.len(),
+            tc.fault_policy.name()
+        ),
+        &["rank", "kind", "steps", "magnitude"],
+    );
+    for e in &tc.faults.events {
+        let (kind, mag) = match e.kind {
+            FaultKind::Straggler { slow } => ("straggler", format!("{slow:.2}x slower egress")),
+            FaultKind::Jitter { max } => {
+                ("jitter", format!("up to +{:.0}% per message", 100.0 * max))
+            }
+            FaultKind::Drop => ("drop", "dead (zero gradient)".to_string()),
+        };
+        t.row(vec![
+            e.rank.to_string(),
+            kind.into(),
+            format!("{}-{}", e.from, e.until),
+            mag,
+        ]);
+    }
+    println!("{}", t.render());
+    if replay {
+        // keep the replay tiny unless the config asked for more
+        if cfg.get("train.steps").is_none() {
+            tc.steps = 12;
+            tc.lr.total = 12;
+        }
+        println!(
+            "replaying {} steps: model={} nodes={} policy={}",
+            tc.steps,
+            tc.model,
+            tc.nodes,
+            tc.fault_policy.name()
+        );
+        let result = Trainer::new(tc).run()?;
+        let m = &result.metrics;
+        println!("final train loss {:.4}", m.train_loss.tail_mean(5));
+        println!(
+            "straggler waits: {} events, modeled {:.1} ms; timeouts {}; skipped sources {}",
+            m.fault_wait_events,
+            1e3 * m.fault_wait_s,
+            m.fault_timeout_events,
+            m.fault_skipped_sources
+        );
+        println!(
+            "deferred updates {}; dropped grads {}; degraded rounds {}",
+            m.fault_deferred_updates, m.fault_dropped_grads, m.degraded_rounds
+        );
+        println!(
+            "rank deaths {}; rejoins {}; dead rank-steps {}; EF resets {}",
+            m.rank_death_events, m.rank_rejoin_events, m.dead_rank_steps, m.ef_reset_events
+        );
+    }
+    Ok(())
 }
 
 /// Parse a comma-separated tier list (`"4,2,2"`, innermost first).
@@ -227,6 +340,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     );
     let async_params = tc.sync_params == SyncParams::Async;
     let grad_sync = tc.grad_sync;
+    let have_faults = !tc.faults.is_empty();
     let result = Trainer::new(tc).run()?;
     let m = &result.metrics;
     println!(
@@ -265,6 +379,29 @@ fn cmd_train(args: &[String]) -> Result<()> {
             m.grad_sync_rounds, m.steps, m.local_degenerate_rounds,
         ),
         GradSync::Sync => {}
+    }
+    if have_faults {
+        println!(
+            "faults: {} waits ({:.1} ms modeled), {} timeouts, {} skipped sources, \
+             {} deferred updates, {} degraded rounds, {} deaths / {} rejoins \
+             ({} dead rank-steps, {} EF resets)",
+            m.fault_wait_events,
+            1e3 * m.fault_wait_s,
+            m.fault_timeout_events,
+            m.fault_skipped_sources,
+            m.fault_deferred_updates,
+            m.degraded_rounds,
+            m.rank_death_events,
+            m.rank_rejoin_events,
+            m.dead_rank_steps,
+            m.ef_reset_events
+        );
+    }
+    if m.checkpoint_saves > 0 {
+        println!("checkpoints written: {}", m.checkpoint_saves);
+    }
+    if m.resumed_from_step > 0 {
+        println!("resumed from step {}", m.resumed_from_step);
     }
     if let Some(path) = out_csv {
         m.write_csv(&path)?;
@@ -582,6 +719,6 @@ fn cmd_info() -> Result<()> {
     } else {
         println!("  (missing — run `make artifacts`)");
     }
-    println!("subcommands: train, table1, table8, throughput, topology, quant-selftest, info");
+    println!("subcommands: train, faults, table1, table8, throughput, topology, quant-selftest, info");
     Ok(())
 }

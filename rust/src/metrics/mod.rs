@@ -88,6 +88,46 @@ pub struct RunMetrics {
     /// it would have driven — is skipped instead of shipping a zero
     /// update at full wire cost (0 outside local mode)
     pub local_degenerate_rounds: u64,
+    /// modeled seconds rank 0 spent waiting out stragglers at drain
+    /// barriers (deterministic accounting derived from the replayed
+    /// fault schedule, not wall clock — runs stay bitwise reproducible)
+    pub fault_wait_s: f64,
+    /// drain barriers at which at least one active straggler stretched
+    /// the wait (any `fault_policy`)
+    pub fault_wait_events: u64,
+    /// straggler waits that exceeded `faults.drain_timeout_ms`, taking
+    /// the policy's degraded path (`skip` drops the stragglers' fresh
+    /// gradients; `defer` reuses the stale view another step)
+    pub fault_timeout_events: u64,
+    /// rank-steps whose fresh gradient was dropped because the rank was
+    /// a timed-out straggler under `fault_policy = "skip"` (its
+    /// error-feedback residual still ships — only the new gradient is
+    /// excluded from the average)
+    pub fault_skipped_sources: u64,
+    /// optimizer updates deferred under `fault_policy = "defer"`: the
+    /// pending stale exchange stayed in flight and the step applied no
+    /// update
+    pub fault_deferred_updates: u64,
+    /// fresh gradients discarded by `defer`: each deferred step drops
+    /// the gradient every live rank just computed
+    pub fault_dropped_grads: u64,
+    /// steps that ran with fewer than `n` contributing ranks (rank
+    /// death or skipped stragglers)
+    pub degraded_rounds: u64,
+    /// error-feedback residual resets triggered by rank death (one per
+    /// dying rank, skipped for EF21 — see DESIGN.md §3.10)
+    pub ef_reset_events: u64,
+    /// rank-death onsets in the replayed fault schedule
+    pub rank_death_events: u64,
+    /// rank rejoins (first step after a death window ends)
+    pub rank_rejoin_events: u64,
+    /// total rank-steps spent dead, summed over ranks
+    pub dead_rank_steps: u64,
+    /// checkpoints written during the run (`checkpoint.save_at`)
+    pub checkpoint_saves: u64,
+    /// step this run resumed from (`checkpoint.resume_from`); 0 means a
+    /// fresh run
+    pub resumed_from_step: u64,
     pub steps: u64,
 }
 

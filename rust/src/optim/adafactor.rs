@@ -148,6 +148,45 @@ impl Optimizer for Adafactor {
     fn name(&self) -> &'static str {
         "adafactor"
     }
+
+    fn export_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        crate::util::bytes::push_u64(&mut out, self.t);
+        crate::util::bytes::push_u64(&mut out, self.slots.len() as u64);
+        for s in &self.slots {
+            crate::util::bytes::push_f32s(&mut out, &s.row_acc);
+            crate::util::bytes::push_f32s(&mut out, &s.col_acc);
+        }
+        out
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = crate::util::bytes::Reader::new(bytes);
+        let t = r.u64()?;
+        let n = r.u64()? as usize;
+        anyhow::ensure!(
+            n == self.slots.len(),
+            "adafactor: saved {} slots, shard has {}",
+            n,
+            self.slots.len()
+        );
+        for s in &mut self.slots {
+            let row = r.f32s()?;
+            let col = r.f32s()?;
+            anyhow::ensure!(
+                row.len() == s.row_acc.len() && col.len() == s.col_acc.len(),
+                "adafactor slot shape mismatch: saved {}x{}, slot is {}x{}",
+                row.len(),
+                col.len(),
+                s.row_acc.len(),
+                s.col_acc.len()
+            );
+            s.row_acc = row;
+            s.col_acc = col;
+        }
+        self.t = t;
+        r.finish()
+    }
 }
 
 #[cfg(test)]

@@ -70,6 +70,32 @@ impl Optimizer for Lamb {
     fn name(&self) -> &'static str {
         "lamb"
     }
+
+    fn export_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        crate::util::bytes::push_u64(&mut out, self.t);
+        crate::util::bytes::push_f32s(&mut out, &self.m);
+        crate::util::bytes::push_f32s(&mut out, &self.v);
+        out
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = crate::util::bytes::Reader::new(bytes);
+        let t = r.u64()?;
+        let m = r.f32s()?;
+        let v = r.f32s()?;
+        anyhow::ensure!(
+            m.len() == self.m.len() && v.len() == self.v.len(),
+            "lamb moments: saved {}/{} elements, shard has {}",
+            m.len(),
+            v.len(),
+            self.m.len()
+        );
+        self.t = t;
+        self.m = m;
+        self.v = v;
+        r.finish()
+    }
 }
 
 #[cfg(test)]

@@ -79,6 +79,22 @@ pub trait Optimizer: Send {
     /// Bytes of optimizer state held for this shard.
     fn state_bytes(&self) -> usize;
     fn name(&self) -> &'static str;
+    /// Serialize the moments and step counter for checkpointing; must
+    /// round-trip bitwise through [`Optimizer::import_state`].
+    fn export_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+    /// Restore state captured by [`Optimizer::export_state`] on an
+    /// optimizer built from the same config over the same shard.
+    fn import_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            bytes.is_empty(),
+            "optimizer {} carries no state but was given {} bytes",
+            self.name(),
+            bytes.len()
+        );
+        Ok(())
+    }
 }
 
 /// Build an optimizer for a shard. `tensors` lists the tensors inside the

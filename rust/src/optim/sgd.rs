@@ -42,6 +42,25 @@ impl Optimizer for Sgd {
     fn name(&self) -> &'static str {
         "sgd"
     }
+
+    fn export_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        crate::util::bytes::push_f32s(&mut out, &self.buf);
+        out
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = crate::util::bytes::Reader::new(bytes);
+        let got = r.f32s()?;
+        anyhow::ensure!(
+            got.len() == self.buf.len(),
+            "sgd momentum buffer: saved {} elements, shard has {}",
+            got.len(),
+            self.buf.len()
+        );
+        self.buf = got;
+        r.finish()
+    }
 }
 
 #[cfg(test)]

@@ -757,6 +757,56 @@ impl HierSyncEngine {
         }
     }
 
+    /// Serialize the persistent compressor state (error-feedback
+    /// residuals, auto-scale EMA, quantizer RNG) of whatever plan this
+    /// engine runs — the checkpoint payload behind
+    /// [`crate::ckpt::RankState::engine`]. Round-trips bitwise through
+    /// [`HierSyncEngine::import_state`].
+    pub fn export_state(&self) -> Vec<u8> {
+        match &self.plan {
+            EnginePlan::Flat(e) => e.export_state(),
+            EnginePlan::Tiered(t) => t.inner.export_state(),
+            EnginePlan::Uneven(u) => {
+                let mut out = Vec::new();
+                crate::util::bytes::push_bytes(&mut out, &u.enc.lock().unwrap().export_state());
+                crate::util::bytes::push_bytes(&mut out, &u.dec.lock().unwrap().export_state());
+                out
+            }
+        }
+    }
+
+    /// Restore state captured by [`HierSyncEngine::export_state`] on an
+    /// engine built from the same config, layout, partition, and
+    /// topology; errors on any shape mismatch.
+    pub fn import_state(&self, bytes: &[u8]) -> Result<()> {
+        match &self.plan {
+            EnginePlan::Flat(e) => e.import_state(bytes),
+            EnginePlan::Tiered(t) => t.inner.import_state(bytes),
+            EnginePlan::Uneven(u) => {
+                let mut r = crate::util::bytes::Reader::new(bytes);
+                let eb = r.bytes()?;
+                u.enc.lock().unwrap().import_state(&eb)?;
+                let db = r.bytes()?;
+                u.dec.lock().unwrap().import_state(&db)?;
+                r.finish()
+            }
+        }
+    }
+
+    /// Re-zero the persistent compressor state (rank-death
+    /// reconciliation — DESIGN.md §3.10). No-op for stateless methods;
+    /// the trainer skips it for EF21 (sender/receiver `w` invariant).
+    pub fn reset_state(&self) {
+        match &self.plan {
+            EnginePlan::Flat(e) => e.reset_state(),
+            EnginePlan::Tiered(t) => t.inner.reset_state(),
+            EnginePlan::Uneven(u) => {
+                u.enc.lock().unwrap().reset_state();
+                u.dec.lock().unwrap().reset_state();
+            }
+        }
+    }
+
     /// The wrapped per-communicator engine (tests, diagnostics); uneven
     /// topologies route slices directly and have none.
     pub fn engine(&self) -> Option<&SyncEngine> {

@@ -43,11 +43,12 @@
 //! optimizer state on every node.
 
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::collective::{run_cluster_topo, NodeCtx};
+use crate::ckpt::{Checkpoint, RankState};
+use crate::collective::{run_cluster_topo, FaultSchedule, NodeCtx};
 use crate::compress::{
     self, powersgd::PowerSgd, CompressorConfig, Decoder, Encoder, Method,
 };
@@ -131,6 +132,53 @@ impl GradSync {
     }
 }
 
+/// How the trainer reacts when the replayed fault schedule
+/// ([`FaultSchedule`]) says a drain barrier would block on a straggler
+/// (`train.fault_policy`). Rank death is handled the same way under every
+/// policy: the dead rank contributes a zero gradient (its error-feedback
+/// residual is re-zeroed at death onset, except for EF21), stays in every
+/// collective, and resumes computing on rejoin.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPolicy {
+    /// Wait the straggler out (default): numerics are bitwise the
+    /// fault-free run; the modeled wait is charged to
+    /// [`crate::metrics::RunMetrics::fault_wait_s`].
+    Wait,
+    /// Time the straggler out: it skips its forward/backward and ships a
+    /// zero gradient (its error-feedback residual still rides the
+    /// exchange — only the fresh gradient is dropped), and every rank
+    /// divides by the contributor count. Works in every sync mode and on
+    /// every topology.
+    Skip,
+    /// Reuse the one-step-stale view another step instead of draining:
+    /// the in-flight exchange stays on the wire, this step's fresh
+    /// gradients are dropped, and after `faults.max_defer` consecutive
+    /// deferrals the drain happens anyway. Requires
+    /// `train.grad_sync = stale`.
+    Defer,
+}
+
+impl FaultPolicy {
+    /// Parse `"wait" | "skip" | "defer"`.
+    pub fn parse(s: &str) -> Option<FaultPolicy> {
+        match s {
+            "wait" => Some(FaultPolicy::Wait),
+            "skip" => Some(FaultPolicy::Skip),
+            "defer" => Some(FaultPolicy::Defer),
+            _ => None,
+        }
+    }
+
+    /// The config spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultPolicy::Wait => "wait",
+            FaultPolicy::Skip => "skip",
+            FaultPolicy::Defer => "defer",
+        }
+    }
+}
+
 /// Everything one training run needs.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -175,6 +223,28 @@ pub struct TrainConfig {
     /// corpus noise level (distribution shift for fine-tuning experiments)
     pub corpus_noise: Option<f64>,
     pub corpus_seed: u64,
+    /// seeded fault schedule replayed deterministically at step
+    /// boundaries (`faults.events` / `faults.seed`; empty = fault-free).
+    /// Zero-2 mode only.
+    pub faults: FaultSchedule,
+    /// straggler handling at drain barriers (`train.fault_policy`)
+    pub fault_policy: FaultPolicy,
+    /// modeled drain-barrier budget in milliseconds: the unit of the
+    /// per-straggler wait charged under `wait`, and the timeout that
+    /// `skip`/`defer` treat as exceeded (`faults.drain_timeout_ms`)
+    pub drain_timeout_ms: u64,
+    /// maximum consecutive `defer` deferrals before draining anyway
+    /// (`faults.max_defer`)
+    pub max_defer: u64,
+    /// write a [`Checkpoint`] here when `save_at` is reached
+    /// (`checkpoint.save_path`)
+    pub save_path: Option<PathBuf>,
+    /// step boundary to checkpoint at — the checkpoint is taken after
+    /// step `save_at - 1` completes; 0 = never (`checkpoint.save_at`)
+    pub save_at: u64,
+    /// resume from this checkpoint instead of a fresh init
+    /// (`checkpoint.resume_from`)
+    pub resume_from: Option<PathBuf>,
 }
 
 impl TrainConfig {
@@ -203,6 +273,13 @@ impl TrainConfig {
             init_params: None,
             corpus_noise: None,
             corpus_seed: 1234,
+            faults: FaultSchedule::empty(),
+            fault_policy: FaultPolicy::Wait,
+            drain_timeout_ms: 100,
+            max_defer: 3,
+            save_path: None,
+            save_at: 0,
+            resume_from: None,
         }
     }
 }
@@ -265,6 +342,89 @@ impl Trainer {
                  (the round-end gather must complete before the next round's local steps)"
             );
         }
+        if !cfg.faults.is_empty() {
+            anyhow::ensure!(
+                cfg.mode == Mode::Zero2,
+                "fault injection (faults.events) requires train.mode = zero2"
+            );
+            for e in &cfg.faults.events {
+                anyhow::ensure!(
+                    e.rank < n,
+                    "fault event targets rank {} of a {n}-node cluster",
+                    e.rank
+                );
+            }
+        }
+        anyhow::ensure!(
+            cfg.fault_policy != FaultPolicy::Defer || cfg.grad_sync == GradSync::Stale,
+            "train.fault_policy = defer reuses the in-flight stale exchange; \
+             it requires train.grad_sync = stale"
+        );
+        if cfg.save_at > 0 || cfg.resume_from.is_some() {
+            anyhow::ensure!(
+                cfg.mode == Mode::Zero2,
+                "checkpointing (checkpoint.save_at / checkpoint.resume_from) \
+                 requires train.mode = zero2"
+            );
+            anyhow::ensure!(
+                cfg.compressor.method != Method::PowerSgd,
+                "PowerSGD holds unserialized low-rank state; it cannot checkpoint"
+            );
+        }
+        if cfg.save_at > 0 {
+            anyhow::ensure!(
+                cfg.save_path.is_some(),
+                "checkpoint.save_at needs checkpoint.save_path"
+            );
+            anyhow::ensure!(
+                cfg.save_at <= cfg.steps,
+                "checkpoint.save_at {} is past train.steps {}",
+                cfg.save_at,
+                cfg.steps
+            );
+            if let GradSync::Local(h) = cfg.grad_sync {
+                anyhow::ensure!(
+                    cfg.save_at % h == 0,
+                    "checkpoint.save_at {} must land on a local:{h} round boundary",
+                    cfg.save_at
+                );
+            }
+        }
+        let resume = match &cfg.resume_from {
+            Some(path) => {
+                let ck = Checkpoint::load(path)?;
+                anyhow::ensure!(
+                    ck.n == n && ck.total == meta.layout.total,
+                    "checkpoint was taken on {} ranks / {} params; this run has {n} / {}",
+                    ck.n,
+                    ck.total,
+                    meta.layout.total
+                );
+                anyhow::ensure!(
+                    ck.seed == cfg.seed && ck.corpus_seed == cfg.corpus_seed,
+                    "checkpoint seeds ({}, {}) do not match the run's ({}, {})",
+                    ck.seed,
+                    ck.corpus_seed,
+                    cfg.seed,
+                    cfg.corpus_seed
+                );
+                anyhow::ensure!(
+                    ck.step < cfg.steps,
+                    "checkpoint at step {} has nothing left to run (train.steps = {})",
+                    ck.step,
+                    cfg.steps
+                );
+                if let GradSync::Local(h) = cfg.grad_sync {
+                    anyhow::ensure!(
+                        ck.step % h == 0,
+                        "checkpoint step {} is not a local:{h} round boundary",
+                        ck.step
+                    );
+                }
+                Some(ck)
+            }
+            None => None,
+        };
         let part = match cfg.mode {
             Mode::Ddp => Partition { ranges: vec![0..meta.layout.total] },
             Mode::Zero2 if topo.is_hierarchical() => topo.partition(meta.layout.total),
@@ -276,9 +436,14 @@ impl Trainer {
         // flat clusters keep the run_cluster convention (every byte is
         // "inter-island": there is no fast level to hide traffic on);
         // hierarchical ones count bytes per tier level
-        let spec = topo.cluster_spec();
+        let mut spec = topo.cluster_spec();
+        spec.faults = (!cfg.faults.is_empty()).then(|| Arc::new(cfg.faults.clone()));
+        // each rank parks its frozen state here at the save barrier;
+        // rank 0 assembles the checkpoint once every slot is filled
+        let save_slots: Mutex<Vec<Option<RankState>>> =
+            Mutex::new((0..n).map(|_| None).collect());
         let (_, counters) = run_cluster_topo(n, spec, |ctx| {
-            match self.node_main(&ctx, &meta, &part, &topo) {
+            match self.node_main(&ctx, &meta, &part, &topo, resume.as_ref(), &save_slots) {
                 Ok(Some(r)) => {
                     *result0.lock().unwrap() = Some(r);
                 }
@@ -302,12 +467,15 @@ impl Trainer {
         Ok(result)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn node_main(
         &self,
         ctx: &NodeCtx,
         meta: &ModelMeta,
         part: &Partition,
         topo: &Topology,
+        resume: Option<&Checkpoint>,
+        save_slots: &Mutex<Vec<Option<RankState>>>,
     ) -> Result<Option<RunResult>> {
         let cfg = &self.cfg;
         let rank = ctx.rank;
@@ -354,6 +522,41 @@ impl Trainer {
             Some(PowerSgd::new(&meta.layout, cfg.compressor.rank, cfg.seed ^ 0x505753))
         } else {
             None
+        };
+
+        // per-rank RNG for the modeled fault-wait jitter. It is advanced
+        // exactly once per step whether or not faults are configured, so
+        // its stream position is a pure function of the step count —
+        // which is what makes it checkpointable.
+        let mut node_rng = crate::util::rng::Rng::new(
+            cfg.seed ^ 0xFA17 ^ (rank as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+
+        // --- checkpoint restore (checkpoint.resume_from) ----------------
+        // everything downstream is keyed by the absolute step (corpus
+        // microbatches, lr schedule, compressor reset cadence), so after
+        // restoring the per-rank state the loop simply starts at ck.step.
+        let start_step = match resume {
+            Some(ck) => {
+                let rs = &ck.ranks[rank];
+                anyhow::ensure!(
+                    rs.master.len() == my_range.len(),
+                    "checkpoint shard for rank {rank} has {} params, this partition wants {}",
+                    rs.master.len(),
+                    my_range.len()
+                );
+                params.copy_from_slice(&ck.params);
+                master.copy_from_slice(&rs.master);
+                opt.import_state(&rs.opt)
+                    .with_context(|| format!("rank {rank}: optimizer state"))?;
+                if let Some(se) = &sync {
+                    se.import_state(&rs.engine)
+                        .with_context(|| format!("rank {rank}: sync-engine state"))?;
+                }
+                node_rng = crate::util::rng::Rng::from_state(&rs.rng);
+                ck.step
+            }
+            None => 0,
         };
 
         let mut grad = vec![0.0f32; total];
@@ -431,25 +634,85 @@ impl Trainer {
                 .sum(),
         };
 
+        // --- fault replay state (faults.events) -------------------------
+        // the schedule is consulted identically on every rank at each
+        // step boundary, so contribution decisions are symmetric and need
+        // no extra communication. With the schedule empty every derived
+        // set is empty and contrib == n: the arithmetic below reduces
+        // bitwise to the fault-free trainer.
+        let fs = (!cfg.faults.is_empty()).then_some(&cfg.faults);
+        let mut defer_streak = 0u64;
+        // contributor count of the step whose stale exchange is in
+        // flight: the drain divides by the count at *launch* time
+        let mut pending_contrib = n;
+        let mut fault_wait_s = 0.0f64;
+        let mut fault_wait_events = 0u64;
+        let mut fault_timeout_events = 0u64;
+        let mut fault_skipped_sources = 0u64;
+        let mut fault_deferred_updates = 0u64;
+        let mut fault_dropped_grads = 0u64;
+        let mut degraded_rounds = 0u64;
+        let mut ef_reset_events = 0u64;
+        let mut rank_death_events = 0u64;
+        let mut rank_rejoin_events = 0u64;
+        let mut dead_rank_steps = 0u64;
+        let mut checkpoint_saves = 0u64;
+
         // --- training loop --------------------------------------------------
-        for step in 0..cfg.steps {
-            // 1-2: local gradient with accumulation
+        for step in start_step..cfg.steps {
+            // the timing layer (LinkSim stretch) reads the step through
+            // the context; the logic layer below reads the schedule
+            // directly
+            ctx.set_sim_step(step);
+            let step_salt = node_rng.next_u64();
+            let dead = fs.map(|f| f.dead_at(step)).unwrap_or_default();
+            let stragglers = fs.map(|f| f.stragglers_at(step)).unwrap_or_default();
+            // skip policy: a timed-out straggler ships a zero gradient —
+            // its error-feedback residual still rides the exchange, only
+            // the fresh gradient is dropped
+            let excluded: Vec<usize> = if cfg.fault_policy == FaultPolicy::Skip {
+                stragglers.iter().copied().filter(|r| !dead.contains(r)).collect()
+            } else {
+                Vec::new()
+            };
+            let contrib = (n - dead.len() - excluded.len()).max(1);
+            let contributes = !dead.contains(&rank) && !excluded.contains(&rank);
+            // EF reconciliation at death onset: the dying rank's
+            // compensation residual describes gradients it will never
+            // finish shipping — re-zero it (counted as a quality event)
+            // so stale compensation cannot leak into the rejoined run.
+            // EF21 is exempt: every receiver's per-source reconstruction
+            // mirrors the sender's recursion state, and resetting only
+            // the sender would desync them (DESIGN.md §3.10).
+            if let Some(f) = fs {
+                if f.died_at(rank, step) && cfg.compressor.method != Method::Ef21 {
+                    if let Some(se) = &sync {
+                        se.reset_state();
+                    }
+                }
+            }
+
+            // 1-2: local gradient with accumulation (dead ranks and
+            // timed-out stragglers skip the compute and contribute zero)
             grad.fill(0.0);
             let mut loss_acc = 0.0f64;
-            for a in 0..cfg.accum {
-                let micro = step * cfg.accum as u64 + a as u64;
-                let tokens = corpus.batch(Split::Train, rank, micro, meta.batch, meta.seq);
-                let loss = engine.train_step(&params, &tokens, &mut grad_tmp)?;
-                loss_acc += loss as f64;
-                util::add_assign(&mut grad, &grad_tmp);
-            }
-            if cfg.accum > 1 {
-                util::scale(&mut grad, 1.0 / cfg.accum as f32);
-            }
-            if cfg.compressor.elementwise_clip > 0.0 {
-                let c = cfg.compressor.elementwise_clip;
-                for g in grad.iter_mut() {
-                    *g = g.clamp(-c, c);
+            if contributes {
+                for a in 0..cfg.accum {
+                    let micro = step * cfg.accum as u64 + a as u64;
+                    let tokens =
+                        corpus.batch(Split::Train, rank, micro, meta.batch, meta.seq);
+                    let loss = engine.train_step(&params, &tokens, &mut grad_tmp)?;
+                    loss_acc += loss as f64;
+                    util::add_assign(&mut grad, &grad_tmp);
+                }
+                if cfg.accum > 1 {
+                    util::scale(&mut grad, 1.0 / cfg.accum as f32);
+                }
+                if cfg.compressor.elementwise_clip > 0.0 {
+                    let c = cfg.compressor.elementwise_clip;
+                    for g in grad.iter_mut() {
+                        *g = g.clamp(-c, c);
+                    }
                 }
             }
 
@@ -459,6 +722,7 @@ impl Trainer {
             // with no averaged gradient to apply: the stale pipeline
             // fill (step 0) and mid-round local steps.
             let mut have_update = true;
+            let mut deferred = false;
             let mut update_lr = cfg.lr.at(step);
             match cfg.mode {
                 Mode::Zero2 => match cfg.grad_sync {
@@ -466,33 +730,58 @@ impl Trainer {
                         sync.as_ref()
                             .expect("Zero2 has a sync engine")
                             .sync(ctx, &mut grad, &mut shard_acc, step + 1);
-                        util::scale(&mut shard_acc, 1.0 / n as f32);
+                        util::scale(&mut shard_acc, 1.0 / contrib as f32);
                         grad_sync_rounds += 1;
                     }
                     GradSync::Stale => {
                         let se = sync.as_ref().expect("Zero2 has a sync engine");
-                        // launch step k's exchange before draining step
-                        // k-1's: its wire window then spans the drain,
-                        // the optimizer step and the whole next
-                        // forward/backward; disjoint per-step tags keep
-                        // the two exchanges apart
-                        let t_launch = std::time::Instant::now();
-                        let next = se.grad_sync_launch(ctx, &mut grad, step + 1);
-                        grad_launch_s += t_launch.elapsed().as_secs_f64();
-                        match pending_grads.replace(next) {
-                            Some(p) => {
-                                // apply the stale gradient with the lr of
-                                // the step it was computed at, so the
-                                // trajectory is the synchronous one with
-                                // a one-step lag rather than an lr shift
-                                update_lr = cfg.lr.at(p.step().saturating_sub(1));
-                                let wait = se.grad_sync_drain(ctx, p, &mut shard_acc);
-                                grad_wait_s += wait.as_secs_f64();
-                                util::scale(&mut shard_acc, 1.0 / n as f32);
-                                grad_stale_steps += 1;
-                                grad_sync_rounds += 1;
+                        // defer policy: leave the in-flight exchange on
+                        // the wire and run another step on the stale
+                        // view; this step's fresh gradients are dropped.
+                        // The decision reads only the schedule and the
+                        // deterministic streak counter, so every rank
+                        // defers in lockstep.
+                        if cfg.fault_policy == FaultPolicy::Defer
+                            && !stragglers.is_empty()
+                            && defer_streak < cfg.max_defer
+                            && pending_grads.is_some()
+                        {
+                            defer_streak += 1;
+                            deferred = true;
+                            have_update = false;
+                        } else {
+                            defer_streak = 0;
+                            // launch step k's exchange before draining
+                            // step k-1's: its wire window then spans the
+                            // drain, the optimizer step and the whole
+                            // next forward/backward; disjoint per-step
+                            // tags keep the two exchanges apart
+                            let t_launch = std::time::Instant::now();
+                            let next = se.grad_sync_launch(ctx, &mut grad, step + 1);
+                            grad_launch_s += t_launch.elapsed().as_secs_f64();
+                            let next_contrib = contrib;
+                            match pending_grads.replace(next) {
+                                Some(p) => {
+                                    // apply the stale gradient with the lr
+                                    // of the step it was computed at, so
+                                    // the trajectory is the synchronous
+                                    // one with a one-step lag rather than
+                                    // an lr shift
+                                    update_lr = cfg.lr.at(p.step().saturating_sub(1));
+                                    let wait = se.grad_sync_drain(ctx, p, &mut shard_acc);
+                                    grad_wait_s += wait.as_secs_f64();
+                                    // divide by the contributor count of
+                                    // the launch step, not this one
+                                    util::scale(
+                                        &mut shard_acc,
+                                        1.0 / pending_contrib as f32,
+                                    );
+                                    grad_stale_steps += 1;
+                                    grad_sync_rounds += 1;
+                                }
+                                None => have_update = false, // pipeline fill (step 0)
                             }
-                            None => have_update = false, // pipeline fill (step 0)
+                            pending_contrib = next_contrib;
                         }
                     }
                     GradSync::Local(h) => {
@@ -512,16 +801,25 @@ impl Trainer {
                             // so its magnitude (and the wire scale s)
                             // matches an ordinary averaged gradient;
                             // H = 1 reduces to the synchronous schedule
-                            let inv = 1.0 / round_lr_sum as f32;
-                            for (g, (&b, &p)) in
-                                grad.iter_mut().zip(round_base.iter().zip(params.iter()))
-                            {
-                                *g = (b - p) * inv;
+                            // a rank dead (or skipped) at the round
+                            // boundary ships a zero pseudo-gradient: even
+                            // if it moved earlier in the round while
+                            // alive, its partial delta is dropped with
+                            // the rest of its contribution
+                            if contributes {
+                                let inv = 1.0 / round_lr_sum as f32;
+                                for (g, (&b, &p)) in
+                                    grad.iter_mut().zip(round_base.iter().zip(params.iter()))
+                                {
+                                    *g = (b - p) * inv;
+                                }
+                            } else {
+                                grad.fill(0.0);
                             }
                             sync.as_ref()
                                 .expect("Zero2 has a sync engine")
                                 .sync(ctx, &mut grad, &mut shard_acc, step + 1);
-                            util::scale(&mut shard_acc, 1.0 / n as f32);
+                            util::scale(&mut shard_acc, 1.0 / contrib as f32);
                             grad_sync_rounds += 1;
                         } else {
                             // mid-round — or a *degenerate* round whose
@@ -654,7 +952,7 @@ impl Trainer {
 
             // --- metrics / eval --------------------------------------------
             let mean_loss =
-                ctx.tree_all_reduce_scalar(loss_acc / cfg.accum as f64) / n as f64;
+                ctx.tree_all_reduce_scalar(loss_acc / cfg.accum as f64) / contrib as f64;
             // periodic evals score the current compute view (possibly
             // one step stale in async mode, mid-round in local:H); the
             // *final* eval runs after the loop on the gathered fp32
@@ -682,6 +980,119 @@ impl Trainer {
                 }
                 m.comm_bytes_fp32 += fp32_step_bytes;
             }
+
+            // --- fault accounting (rank 0; derived from the schedule,
+            // which every rank reads identically — no extra traffic) ----
+            if rank == 0 {
+                if let Some(f) = fs {
+                    dead_rank_steps += dead.len() as u64;
+                    for r in 0..n {
+                        if f.died_at(r, step) {
+                            rank_death_events += 1;
+                            if cfg.compressor.method != Method::Ef21 {
+                                ef_reset_events += 1;
+                            }
+                        }
+                        if f.rejoined_at(r, step) {
+                            rank_rejoin_events += 1;
+                        }
+                    }
+                    if !stragglers.is_empty() {
+                        let max_slow = stragglers
+                            .iter()
+                            .map(|&r| f.straggler_slow(r, step))
+                            .fold(1.0f64, f64::max);
+                        if max_slow > 1.0 {
+                            fault_wait_events += 1;
+                            // modeled wait: slowdown excess × the drain
+                            // budget, jittered deterministically from the
+                            // per-step RNG salt (never wall clock)
+                            let u = (step_salt >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+                            fault_wait_s += (max_slow - 1.0).min(10.0)
+                                * (cfg.drain_timeout_ms as f64 / 1000.0)
+                                * (0.5 + u);
+                        }
+                    }
+                    if !excluded.is_empty() || deferred {
+                        fault_timeout_events += 1;
+                    }
+                    fault_skipped_sources += excluded.len() as u64;
+                    if deferred {
+                        fault_deferred_updates += 1;
+                        fault_dropped_grads += (n - dead.len()) as u64;
+                    }
+                    if contrib < n {
+                        degraded_rounds += 1;
+                    }
+                }
+            }
+
+            // --- checkpoint (checkpoint.save_at) ---------------------------
+            // the save is a resync barrier: every in-flight exchange is
+            // completed first, so the frozen state is self-contained and
+            // the continuing run and a resumed run follow the same
+            // trajectory bitwise from this boundary (tests/faults.rs
+            // pins save-run ≡ resume-run for every sync mode).
+            if cfg.save_at > 0 && step + 1 == cfg.save_at {
+                let se = sync.as_ref().expect("checkpointing runs on the Zero-2 engine");
+                if let Some(p) = pending.take() {
+                    if let Some(t0) = launched_at.take() {
+                        param_window_s += t0.elapsed().as_secs_f64();
+                    }
+                    let wait = se.param_sync_drain(ctx, p, &mut params_back);
+                    param_wait_s += wait.as_secs_f64();
+                    std::mem::swap(&mut params, &mut params_back);
+                }
+                if let Some(p) = pending_grads.take() {
+                    let grad_step = p.step().saturating_sub(1);
+                    let wait = se.grad_sync_drain(ctx, p, &mut shard_acc);
+                    grad_wait_s += wait.as_secs_f64();
+                    util::scale(&mut shard_acc, 1.0 / pending_contrib as f32);
+                    grad_stale_steps += 1;
+                    grad_sync_rounds += 1;
+                    if cfg.global_clip > 0.0 {
+                        let local_sq: f64 =
+                            shard_acc.iter().map(|&x| (x as f64) * (x as f64)).sum();
+                        let norm = ctx.tree_all_reduce_scalar(local_sq).sqrt();
+                        if norm > cfg.global_clip as f64 {
+                            util::scale(
+                                &mut shard_acc,
+                                (cfg.global_clip as f64 / norm) as f32,
+                            );
+                        }
+                    }
+                    opt.step(&mut master, &shard_acc, cfg.lr.at(grad_step));
+                }
+                save_slots.lock().unwrap()[rank] = Some(RankState {
+                    master: master.clone(),
+                    opt: opt.export_state(),
+                    engine: se.export_state(),
+                    rng: node_rng.state(),
+                });
+                // barrier: every slot is filled before rank 0 assembles
+                ctx.tree_all_reduce_scalar(0.0);
+                if rank == 0 {
+                    let ranks: Vec<RankState> = save_slots
+                        .lock()
+                        .unwrap()
+                        .iter_mut()
+                        .map(|s| s.take().expect("every rank filled its slot"))
+                        .collect();
+                    let ck = Checkpoint {
+                        step: step + 1,
+                        n,
+                        total,
+                        seed: cfg.seed,
+                        corpus_seed: cfg.corpus_seed,
+                        params: params.clone(),
+                        ranks,
+                    };
+                    ck.save(cfg.save_path.as_ref().expect("validated in run()"))?;
+                    checkpoint_saves += 1;
+                }
+                // keep peers from racing ahead while the file is written
+                ctx.tree_all_reduce_scalar(0.0);
+            }
         }
 
         // grad_sync = "stale": the final step's exchange is still in
@@ -697,7 +1108,7 @@ impl Trainer {
             let grad_step = p.step().saturating_sub(1);
             let wait = se.grad_sync_drain(ctx, p, &mut shard_acc);
             grad_wait_s += wait.as_secs_f64();
-            util::scale(&mut shard_acc, 1.0 / n as f32);
+            util::scale(&mut shard_acc, 1.0 / pending_contrib as f32);
             grad_stale_steps += 1;
             grad_sync_rounds += 1;
             if cfg.global_clip > 0.0 {
@@ -744,6 +1155,19 @@ impl Trainer {
             m.grad_stale_steps = grad_stale_steps;
             m.grad_sync_rounds = grad_sync_rounds;
             m.local_degenerate_rounds = local_degenerate_rounds;
+            m.fault_wait_s = fault_wait_s;
+            m.fault_wait_events = fault_wait_events;
+            m.fault_timeout_events = fault_timeout_events;
+            m.fault_skipped_sources = fault_skipped_sources;
+            m.fault_deferred_updates = fault_deferred_updates;
+            m.fault_dropped_grads = fault_dropped_grads;
+            m.degraded_rounds = degraded_rounds;
+            m.ef_reset_events = ef_reset_events;
+            m.rank_death_events = rank_death_events;
+            m.rank_rejoin_events = rank_rejoin_events;
+            m.dead_rank_steps = dead_rank_steps;
+            m.checkpoint_saves = checkpoint_saves;
+            m.resumed_from_step = start_step;
             Ok(Some(RunResult { metrics: m, final_params: params }))
         } else {
             Ok(None)

@@ -1,0 +1,225 @@
+//! Little-endian byte (de)serialization helpers shared by the
+//! checkpoint format ([`crate::ckpt`]) and the per-compressor /
+//! per-optimizer state round-trips (the offline registry has no `serde`).
+//!
+//! Writers append length-prefixed fields to a `Vec<u8>`; [`Reader`]
+//! consumes them in the same order, failing loudly (never panicking) on
+//! truncated or oversized input so a corrupt checkpoint surfaces as an
+//! error instead of UB or an abort.
+
+use anyhow::{ensure, Context, Result};
+
+/// Append a `u32` (LE).
+pub fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a `u64` (LE).
+pub fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append an `f32` (LE bit pattern — round-trips NaN payloads too).
+pub fn push_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append an `f64` (LE bit pattern).
+pub fn push_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a length-prefixed `f32` slice.
+pub fn push_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    push_u64(out, xs.len() as u64);
+    for &x in xs {
+        push_f32(out, x);
+    }
+}
+
+/// Append a length-prefixed `u64` slice.
+pub fn push_u64s(out: &mut Vec<u8>, xs: &[u64]) {
+    push_u64(out, xs.len() as u64);
+    for &x in xs {
+        push_u64(out, x);
+    }
+}
+
+/// Append a length-prefixed `i8` slice.
+pub fn push_i8s(out: &mut Vec<u8>, xs: &[i8]) {
+    push_u64(out, xs.len() as u64);
+    out.extend(xs.iter().map(|&x| x as u8));
+}
+
+/// Append a length-prefixed opaque byte blob.
+pub fn push_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    push_u64(out, b.len() as u64);
+    out.extend_from_slice(b);
+}
+
+/// Sequential reader over a byte buffer written with the `push_*`
+/// helpers. Every accessor validates bounds and returns an error (with
+/// the offset) on truncation.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Start reading `buf` from the beginning.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .with_context(|| {
+                format!(
+                    "truncated state: wanted {n} bytes at offset {} of {}",
+                    self.pos,
+                    self.buf.len()
+                )
+            })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    /// Read a `u32`.
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read a `u64`.
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read an `f32` bit pattern.
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read an `f64` bit pattern.
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a length-prefixed `f32` slice.
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len_prefix(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Read a length-prefixed `u64` slice.
+    pub fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.len_prefix(8)?;
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Read a length-prefixed `i8` slice.
+    pub fn i8s(&mut self) -> Result<Vec<i8>> {
+        let n = self.len_prefix(1)?;
+        Ok(self.take(n)?.iter().map(|&b| b as i8).collect())
+    }
+
+    /// Read a length-prefixed opaque byte blob.
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.len_prefix(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    /// Read a length prefix and sanity-check it against the remaining
+    /// bytes (so a corrupt 2^60 length errors instead of allocating).
+    fn len_prefix(&mut self, elem_size: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        let remaining = self.buf.len() - self.pos;
+        ensure!(
+            n.checked_mul(elem_size).is_some_and(|b| b <= remaining),
+            "corrupt length prefix {n} at offset {} ({} bytes remain)",
+            self.pos,
+            remaining
+        );
+        Ok(n)
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Assert the buffer was fully consumed (catches format drift).
+    pub fn finish(self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "trailing bytes: {} of {} consumed",
+            self.pos,
+            self.buf.len()
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_field_kinds() {
+        let mut out = Vec::new();
+        push_u32(&mut out, 7);
+        push_u64(&mut out, u64::MAX - 1);
+        push_f32(&mut out, -0.125);
+        push_f64(&mut out, 1e-300);
+        push_f32s(&mut out, &[1.0, f32::NEG_INFINITY, 3.5]);
+        push_u64s(&mut out, &[9, 8]);
+        push_i8s(&mut out, &[-128, 0, 127]);
+        push_bytes(&mut out, b"blob");
+        let mut r = Reader::new(&out);
+        assert_eq!(r.u32().unwrap(), 7);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f32().unwrap(), -0.125);
+        assert_eq!(r.f64().unwrap(), 1e-300);
+        assert_eq!(r.f32s().unwrap(), vec![1.0, f32::NEG_INFINITY, 3.5]);
+        assert_eq!(r.u64s().unwrap(), vec![9, 8]);
+        assert_eq!(r.i8s().unwrap(), vec![-128, 0, 127]);
+        assert_eq!(r.bytes().unwrap(), b"blob".to_vec());
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut out = Vec::new();
+        push_f32s(&mut out, &[1.0, 2.0]);
+        out.truncate(out.len() - 1);
+        assert!(Reader::new(&out).f32s().is_err());
+    }
+
+    #[test]
+    fn corrupt_length_prefix_is_rejected() {
+        let mut out = Vec::new();
+        push_u64(&mut out, u64::MAX); // absurd element count
+        assert!(Reader::new(&out).f32s().is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut out = Vec::new();
+        push_u32(&mut out, 1);
+        push_u32(&mut out, 2);
+        let mut r = Reader::new(&out);
+        r.u32().unwrap();
+        assert!(r.finish().is_err());
+    }
+}

@@ -2,6 +2,7 @@
 //! `serde`, or `criterion`, so the crate carries its own PRNG, timers and
 //! property-test helpers).
 
+pub mod bytes;
 pub mod prop;
 pub mod rng;
 pub mod timer;

@@ -1,0 +1,501 @@
+//! Deterministic failure-scenario suite (DESIGN.md §3.10): replayed
+//! straggler slowdowns, rank dropout + rejoin with error-feedback
+//! reconciliation, and bitwise checkpoint/resume — each crossed with the
+//! sync modes (`sync`, `stale`, `local:H`) and exercised on flat, tiered
+//! and uneven topologies. Every scenario is a pure function of
+//! (config, seed, schedule): repeat runs must agree bitwise.
+
+use std::path::PathBuf;
+
+use loco::ckpt::Checkpoint;
+use loco::collective::FaultSchedule;
+use loco::compress::{CompressorConfig, Method};
+use loco::optim::{LrSchedule, OptimConfig, OptimizerKind};
+use loco::train::{FaultPolicy, GradSync, Mode, SyncParams, TrainConfig, Trainer};
+
+/// The quickstart configuration (examples/quickstart.rs): tiny model,
+/// 4 nodes, Zero-2, LoCo 4-bit, Adam with warmup+cosine.
+fn quickstart_cfg(steps: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::new("tiny");
+    cfg.nodes = 4;
+    cfg.steps = steps;
+    cfg.optim = OptimConfig { kind: OptimizerKind::Adam, ..Default::default() };
+    cfg.lr = LrSchedule { base: 3e-3, warmup: 10, total: steps, min_ratio: 0.2 };
+    cfg.compressor = CompressorConfig {
+        s: (1u32 << 17) as f32,
+        ..CompressorConfig::with_method(Method::Loco)
+    };
+    cfg
+}
+
+fn faults(spec: &str) -> FaultSchedule {
+    FaultSchedule::parse(spec, 7).expect("schedule")
+}
+
+fn ckpt_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("loco_faults_{tag}_{}.ckpt", std::process::id()))
+}
+
+const MODES: [GradSync; 3] = [GradSync::Sync, GradSync::Stale, GradSync::Local(2)];
+
+fn mode_tag(m: GradSync) -> &'static str {
+    match m {
+        GradSync::Sync => "sync",
+        GradSync::Stale => "stale",
+        GradSync::Local(_) => "local2",
+    }
+}
+
+#[test]
+fn fault_policy_parse() {
+    assert_eq!(FaultPolicy::parse("wait"), Some(FaultPolicy::Wait));
+    assert_eq!(FaultPolicy::parse("skip"), Some(FaultPolicy::Skip));
+    assert_eq!(FaultPolicy::parse("defer"), Some(FaultPolicy::Defer));
+    assert_eq!(FaultPolicy::parse("nope"), None);
+    assert_eq!(FaultPolicy::Wait.name(), "wait");
+}
+
+#[test]
+fn straggler_wait_is_bitwise_fault_free_in_every_mode() {
+    // pure-timing faults under the default `wait` policy: the trajectory
+    // is the fault-free one bitwise (the schedule only stretches the
+    // simulated wire and charges modeled wait), in every sync mode
+    for mode in MODES {
+        let mut base = quickstart_cfg(10);
+        base.grad_sync = mode;
+        let mut faulted = base.clone();
+        faulted.faults =
+            faults("straggler:rank=1:steps=2-5:slow=4;jitter:rank=2:steps=0-9:max=0.5");
+        let rb = Trainer::new(base).run().expect("fault-free run");
+        let rf = Trainer::new(faulted).run().expect("faulted run");
+        assert_eq!(rb.final_params, rf.final_params, "{mode:?}: wait must be bitwise");
+        assert_eq!(rb.metrics.train_loss.points, rf.metrics.train_loss.points, "{mode:?}");
+        let m = &rf.metrics;
+        assert_eq!(m.fault_wait_events, 4, "{mode:?}: steps 2..=5 straggle");
+        assert!(m.fault_wait_s > 0.0, "{mode:?}: no modeled wait charged");
+        assert_eq!(m.fault_timeout_events, 0, "{mode:?}");
+        assert_eq!(m.degraded_rounds, 0, "{mode:?}: wait never degrades");
+        assert_eq!(rb.metrics.fault_wait_events, 0);
+    }
+}
+
+#[test]
+fn skip_policy_drops_stragglers_deterministically() {
+    // `skip`: the timed-out straggler ships a zero gradient and every
+    // rank divides by the contributor count — a real (bounded) numeric
+    // perturbation that must be identical on repeat runs
+    let mut base = quickstart_cfg(20);
+    base.lr.total = 20;
+    let mut skip = base.clone();
+    skip.fault_policy = FaultPolicy::Skip;
+    skip.faults = faults("straggler:rank=1:steps=2-5:slow=4");
+    let rb = Trainer::new(base).run().expect("fault-free run");
+    let ra = Trainer::new(skip.clone()).run().expect("skip run");
+    let rc = Trainer::new(skip).run().expect("skip run repeat");
+    assert_eq!(ra.final_params, rc.final_params, "skip not deterministic");
+    assert_eq!(ra.metrics.train_loss.points, rc.metrics.train_loss.points);
+    let m = &ra.metrics;
+    assert_eq!(m.fault_timeout_events, 4);
+    assert_eq!(m.fault_skipped_sources, 4);
+    assert_eq!(m.degraded_rounds, 4);
+    let ls = rb.metrics.train_loss.points.last().unwrap().1;
+    let la = ra.metrics.train_loss.points.last().unwrap().1;
+    assert!(la.is_finite(), "skip diverged");
+    assert!((la - ls).abs() < 0.6, "fault-free {ls} vs skip {la}");
+}
+
+#[test]
+fn skip_policy_works_in_stale_and_local_modes() {
+    for mode in [GradSync::Stale, GradSync::Local(2)] {
+        let mut cfg = quickstart_cfg(16);
+        cfg.lr.total = 16;
+        cfg.grad_sync = mode;
+        cfg.fault_policy = FaultPolicy::Skip;
+        cfg.faults = faults("straggler:rank=1:steps=2-5:slow=4");
+        let ra = Trainer::new(cfg.clone()).run().expect("skip run");
+        let rb = Trainer::new(cfg).run().expect("skip run repeat");
+        assert_eq!(ra.final_params, rb.final_params, "{mode:?}: not deterministic");
+        let m = &ra.metrics;
+        assert!(m.fault_skipped_sources > 0, "{mode:?}");
+        assert!(m.degraded_rounds > 0, "{mode:?}");
+        let first = m.train_loss.points.first().unwrap().1;
+        let last = m.train_loss.points.last().unwrap().1;
+        assert!(last.is_finite() && last < first, "{mode:?}: {first} -> {last}");
+    }
+}
+
+#[test]
+fn defer_policy_reuses_the_stale_view() {
+    // `defer` (stale mode only): the in-flight exchange stays on the
+    // wire, the step applies no update, and after max_defer consecutive
+    // deferrals the drain happens anyway
+    let mut cfg = quickstart_cfg(12);
+    cfg.lr.total = 12;
+    cfg.grad_sync = GradSync::Stale;
+    cfg.fault_policy = FaultPolicy::Defer;
+    cfg.faults = faults("straggler:rank=1:steps=3-4:slow=8");
+    let ra = Trainer::new(cfg.clone()).run().expect("defer run");
+    let rb = Trainer::new(cfg).run().expect("defer run repeat");
+    assert_eq!(ra.final_params, rb.final_params, "defer not deterministic");
+    let m = &ra.metrics;
+    assert_eq!(m.fault_deferred_updates, 2, "steps 3 and 4 defer");
+    assert_eq!(m.fault_dropped_grads, 2 * 4, "each deferral drops all 4 fresh grads");
+    assert_eq!(m.fault_timeout_events, 2);
+    // deferred steps neither launch nor drain: 12 steps − 2 deferrals
+    // = 10 applied stale updates (incl. the post-loop drain)
+    assert_eq!(m.grad_stale_steps, 10);
+    let last = m.train_loss.points.last().unwrap().1;
+    assert!(last.is_finite(), "defer diverged");
+}
+
+#[test]
+fn defer_streak_is_bounded_by_max_defer() {
+    // a straggler outlasting max_defer forces a drain: with a 6-step
+    // straggle window and max_defer = 2, deferrals come in runs of 2
+    let mut cfg = quickstart_cfg(14);
+    cfg.lr.total = 14;
+    cfg.grad_sync = GradSync::Stale;
+    cfg.fault_policy = FaultPolicy::Defer;
+    cfg.max_defer = 2;
+    cfg.faults = faults("straggler:rank=2:steps=4-9:slow=8");
+    let r = Trainer::new(cfg).run().expect("defer run");
+    let m = &r.metrics;
+    // steps 4,5 defer; 6 drains (streak hit 2); 7,8 defer; 9 drains
+    assert_eq!(m.fault_deferred_updates, 4);
+    assert_eq!(m.fault_timeout_events, 4);
+    assert!(m.train_loss.points.last().unwrap().1.is_finite());
+}
+
+#[test]
+fn dropout_and_rejoin_in_every_mode() {
+    // rank death at a step boundary: zero contribution while dead, EF
+    // residual re-zeroed at onset (counted), rejoin resumes compute —
+    // defined, deterministic behavior in every sync mode
+    for mode in MODES {
+        let mut cfg = quickstart_cfg(20);
+        cfg.lr.total = 20;
+        cfg.grad_sync = mode;
+        cfg.faults = faults("drop:rank=2:steps=3-5");
+        let ra = Trainer::new(cfg.clone()).run().expect("dropout run");
+        let rb = Trainer::new(cfg.clone()).run().expect("dropout run repeat");
+        assert_eq!(ra.final_params, rb.final_params, "{mode:?}: not deterministic");
+        assert_eq!(ra.metrics.train_loss.points, rb.metrics.train_loss.points);
+        let m = &ra.metrics;
+        assert_eq!(m.rank_death_events, 1, "{mode:?}");
+        assert_eq!(m.rank_rejoin_events, 1, "{mode:?}");
+        assert_eq!(m.dead_rank_steps, 3, "{mode:?}");
+        assert_eq!(m.degraded_rounds, 3, "{mode:?}");
+        assert_eq!(m.ef_reset_events, 1, "{mode:?}: LoCo residual reset at onset");
+        // drift vs the fault-free run stays inside the documented band
+        cfg.faults = FaultSchedule::empty();
+        let rf = Trainer::new(cfg).run().expect("fault-free run");
+        let ls = rf.metrics.train_loss.points.last().unwrap().1;
+        let la = m.train_loss.points.last().unwrap().1;
+        assert!(la.is_finite(), "{mode:?}: dropout diverged");
+        assert!((la - ls).abs() < 0.6, "{mode:?}: fault-free {ls} vs dropout {la}");
+    }
+}
+
+#[test]
+fn ef21_dropout_skips_the_residual_reset() {
+    // EF21's receiver-side reconstruction mirrors the sender recursion;
+    // re-zeroing only the sender would desync them, so death does not
+    // reset EF21 state (DESIGN.md §3.10) — and the run stays finite
+    let mut cfg = quickstart_cfg(16);
+    cfg.lr.total = 16;
+    cfg.compressor = CompressorConfig {
+        s: (1u32 << 17) as f32,
+        ..CompressorConfig::with_method(Method::Ef21)
+    };
+    cfg.faults = faults("drop:rank=1:steps=4-6");
+    let ra = Trainer::new(cfg.clone()).run().expect("ef21 dropout run");
+    let rb = Trainer::new(cfg).run().expect("ef21 dropout run repeat");
+    assert_eq!(ra.final_params, rb.final_params);
+    let m = &ra.metrics;
+    assert_eq!(m.rank_death_events, 1);
+    assert_eq!(m.ef_reset_events, 0, "EF21 must not reset");
+    assert!(m.train_loss.points.last().unwrap().1.is_finite());
+}
+
+#[test]
+fn dropout_on_tiered_and_uneven_topologies() {
+    // death of a rank inside an island: the collectives stay mechanically
+    // intact (the dead rank keeps serving its shard) on the two-level
+    // tree and on uneven groups alike
+    let mut tiered = quickstart_cfg(14);
+    tiered.lr.total = 14;
+    tiered.islands = 2;
+    let mut uneven = quickstart_cfg(14);
+    uneven.lr.total = 14;
+    uneven.topo_groups = vec![vec![0], vec![1, 2, 3]];
+    for (tag, mut cfg) in [("tiered", tiered), ("uneven", uneven)] {
+        cfg.faults = faults("drop:rank=1:steps=2-3;straggler:rank=3:steps=5-6:slow=3");
+        let ra = Trainer::new(cfg.clone()).run().expect("topo dropout run");
+        let rb = Trainer::new(cfg).run().expect("topo dropout run repeat");
+        assert_eq!(ra.final_params, rb.final_params, "{tag}: not deterministic");
+        let m = &ra.metrics;
+        assert_eq!(m.rank_death_events, 1, "{tag}");
+        assert_eq!(m.rank_rejoin_events, 1, "{tag}");
+        assert_eq!(m.dead_rank_steps, 2, "{tag}");
+        assert_eq!(m.fault_wait_events, 2, "{tag}");
+        let first = m.train_loss.points.first().unwrap().1;
+        let last = m.train_loss.points.last().unwrap().1;
+        assert!(last.is_finite() && last < first, "{tag}: {first} -> {last}");
+    }
+}
+
+#[test]
+fn checkpoint_resume_is_bitwise_in_every_mode() {
+    // the headline invariant: a run that saves at step S and a run that
+    // resumes from that checkpoint produce bitwise-identical final
+    // parameters — for every sync mode and for async param sync. For the
+    // modes with no in-flight state at the boundary (sync, local:2) the
+    // save itself is transparent: the saving run equals the never-saved
+    // run bitwise.
+    let combos: [(GradSync, SyncParams); 4] = [
+        (GradSync::Sync, SyncParams::Sync),
+        (GradSync::Stale, SyncParams::Sync),
+        (GradSync::Local(2), SyncParams::Sync),
+        (GradSync::Sync, SyncParams::Async),
+    ];
+    for (mode, sp) in combos {
+        let tag = format!(
+            "{}_{}",
+            mode_tag(mode),
+            if sp == SyncParams::Async { "async" } else { "sync" }
+        );
+        let path = ckpt_path(&tag);
+        let mut plain = quickstart_cfg(12);
+        plain.lr.total = 12;
+        plain.grad_sync = mode;
+        plain.sync_params = sp;
+        let mut save = plain.clone();
+        save.save_at = 6;
+        save.save_path = Some(path.clone());
+        let rp = Trainer::new(plain).run().expect("plain run");
+        let rs = Trainer::new(save).run().expect("save run");
+        assert_eq!(rs.metrics.checkpoint_saves, 1, "{tag}");
+        if mode != GradSync::Stale && sp == SyncParams::Sync {
+            assert_eq!(
+                rp.final_params, rs.final_params,
+                "{tag}: saving must not perturb the run"
+            );
+        }
+        let mut resume = quickstart_cfg(12);
+        resume.lr.total = 12;
+        resume.grad_sync = mode;
+        resume.sync_params = sp;
+        resume.resume_from = Some(path.clone());
+        let rr = Trainer::new(resume).run().expect("resume run");
+        assert_eq!(
+            rs.final_params, rr.final_params,
+            "{tag}: resume is not bitwise"
+        );
+        assert_eq!(rr.metrics.resumed_from_step, 6, "{tag}");
+        assert_eq!(rr.metrics.checkpoint_saves, 0, "{tag}");
+        // the file itself round-trips bitwise through the wire format
+        let ck = Checkpoint::load(&path).expect("load checkpoint");
+        assert_eq!(ck.step, 6);
+        assert_eq!(ck.n, 4);
+        assert_eq!(Checkpoint::from_bytes(&ck.to_bytes()).expect("roundtrip"), ck);
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn resume_under_faults_is_bitwise_and_counts_recovery() {
+    // save mid-run under an active straggler, resume into a rank-death
+    // window: the resumed trajectory equals the saving run's bitwise and
+    // the recovery counters fire in the resumed segment
+    let path = ckpt_path("faulted");
+    let spec = "straggler:rank=0:steps=2-9:slow=3;drop:rank=3:steps=8-10";
+    let mut save = quickstart_cfg(14);
+    save.lr.total = 14;
+    save.grad_sync = GradSync::Stale;
+    save.fault_policy = FaultPolicy::Skip;
+    save.faults = faults(spec);
+    save.save_at = 6;
+    save.save_path = Some(path.clone());
+    let rs = Trainer::new(save).run().expect("faulted save run");
+    let mut resume = quickstart_cfg(14);
+    resume.lr.total = 14;
+    resume.grad_sync = GradSync::Stale;
+    resume.fault_policy = FaultPolicy::Skip;
+    resume.faults = faults(spec);
+    resume.resume_from = Some(path.clone());
+    let ra = Trainer::new(resume.clone()).run().expect("faulted resume run");
+    let rb = Trainer::new(resume).run().expect("faulted resume run repeat");
+    assert_eq!(ra.final_params, rb.final_params, "faulted resume not deterministic");
+    assert_eq!(rs.final_params, ra.final_params, "faulted resume is not bitwise");
+    let m = &ra.metrics;
+    assert_eq!(m.resumed_from_step, 6);
+    assert_eq!(m.rank_death_events, 1, "death at step 8 is after the resume point");
+    assert_eq!(m.rank_rejoin_events, 1);
+    assert_eq!(m.dead_rank_steps, 3);
+    assert!(m.fault_skipped_sources > 0);
+    assert!(m.fault_wait_events > 0);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn drift_bounds_under_single_faults_quickstart() {
+    // EXPERIMENTS.md §Faults: one straggler (skip), one dropout, and one
+    // mid-run save/resume each stay inside the pinned band of the
+    // fault-free quickstart loss — on the dense and the MoE model
+    for model in ["tiny", "moe_tiny"] {
+        let steps = 20;
+        let mut base = quickstart_cfg(steps);
+        base.lr.total = steps;
+        base.model = model.to_string();
+        let rf = Trainer::new(base.clone()).run().expect("fault-free run");
+        let ls = rf.metrics.train_loss.points.last().unwrap().1;
+        let first = rf.metrics.train_loss.points.first().unwrap().1;
+
+        let mut strag = base.clone();
+        strag.fault_policy = FaultPolicy::Skip;
+        strag.faults = faults("straggler:rank=1:steps=3-6:slow=5");
+        let l1 = Trainer::new(strag)
+            .run()
+            .expect("straggler run")
+            .metrics
+            .train_loss
+            .points
+            .last()
+            .unwrap()
+            .1;
+        assert!(l1.is_finite() && (l1 - ls).abs() < 0.6, "{model}: straggler {l1} vs {ls}");
+        assert!(l1 < first - 0.05, "{model}: straggler run made no progress");
+
+        let mut drop = base.clone();
+        drop.faults = faults("drop:rank=2:steps=4-6");
+        let l2 = Trainer::new(drop)
+            .run()
+            .expect("dropout run")
+            .metrics
+            .train_loss
+            .points
+            .last()
+            .unwrap()
+            .1;
+        assert!(l2.is_finite() && (l2 - ls).abs() < 0.6, "{model}: dropout {l2} vs {ls}");
+
+        let path = ckpt_path(&format!("drift_{model}"));
+        let mut save = base.clone();
+        save.save_at = 10;
+        save.save_path = Some(path.clone());
+        let rs = Trainer::new(save).run().expect("save run");
+        let mut resume = base;
+        resume.resume_from = Some(path.clone());
+        let rr = Trainer::new(resume).run().expect("resume run");
+        // sync mode: the save is transparent and the resume bitwise, so
+        // the "drift" of a mid-run resume is exactly zero
+        assert_eq!(rf.final_params, rs.final_params, "{model}: save perturbed the run");
+        assert_eq!(rs.final_params, rr.final_params, "{model}: resume not bitwise");
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn fault_determinism_under_combined_schedule() {
+    // satellite seed-path audit: same config + seed ⇒ bitwise-identical
+    // runs even with all three fault classes active at once on a
+    // hierarchical topology with stale exchanges
+    let mut cfg = quickstart_cfg(18);
+    cfg.lr.total = 18;
+    cfg.islands = 2;
+    cfg.grad_sync = GradSync::Stale;
+    cfg.fault_policy = FaultPolicy::Skip;
+    cfg.faults = faults(
+        "straggler:rank=1:steps=2-8:slow=3;jitter:rank=0:steps=0-17:max=0.4;\
+         drop:rank=3:steps=10-12",
+    );
+    let a = Trainer::new(cfg.clone()).run().expect("run a");
+    let b = Trainer::new(cfg).run().expect("run b");
+    assert_eq!(a.final_params, b.final_params, "combined schedule not deterministic");
+    assert_eq!(a.metrics.train_loss.points, b.metrics.train_loss.points);
+    assert_eq!(a.metrics.fault_wait_events, b.metrics.fault_wait_events);
+    assert_eq!(a.metrics.dead_rank_steps, b.metrics.dead_rank_steps);
+}
+
+#[test]
+fn fault_and_checkpoint_validation_rejections() {
+    // faults require Zero-2
+    for mode in [Mode::Ddp, Mode::Zero2ReduceScatter] {
+        let mut cfg = quickstart_cfg(2);
+        cfg.mode = mode;
+        if mode == Mode::Ddp {
+            cfg.compressor.method = Method::Fp32;
+        }
+        cfg.faults = faults("drop:rank=1:steps=0-1");
+        assert!(Trainer::new(cfg).run().is_err(), "{mode:?} must reject faults");
+    }
+    // a fault event must target a real rank
+    let mut cfg = quickstart_cfg(2);
+    cfg.faults = faults("drop:rank=7:steps=0-1");
+    assert!(Trainer::new(cfg).run().is_err(), "rank 7 of 4 must be rejected");
+    // defer requires stale
+    let mut cfg = quickstart_cfg(2);
+    cfg.fault_policy = FaultPolicy::Defer;
+    assert!(Trainer::new(cfg).run().is_err(), "defer requires grad_sync = stale");
+    // malformed schedules never parse into a silently empty one
+    assert!(FaultSchedule::parse("straggler:rank=1:slow=", 0).is_err());
+    assert!(FaultSchedule::parse("nonsense", 0).is_err());
+    // save_at needs a path, must lie inside the run, and must land on a
+    // local:H round boundary
+    let mut cfg = quickstart_cfg(4);
+    cfg.save_at = 2;
+    assert!(Trainer::new(cfg).run().is_err(), "save_at without save_path");
+    let mut cfg = quickstart_cfg(4);
+    cfg.save_at = 9;
+    cfg.save_path = Some(ckpt_path("never"));
+    assert!(Trainer::new(cfg).run().is_err(), "save_at past train.steps");
+    let mut cfg = quickstart_cfg(4);
+    cfg.grad_sync = GradSync::Local(2);
+    cfg.save_at = 3;
+    cfg.save_path = Some(ckpt_path("never"));
+    assert!(Trainer::new(cfg).run().is_err(), "save_at off the round boundary");
+    // PowerSGD state is not serializable
+    let mut cfg = quickstart_cfg(4);
+    cfg.compressor.method = Method::PowerSgd;
+    cfg.save_at = 2;
+    cfg.save_path = Some(ckpt_path("never"));
+    assert!(Trainer::new(cfg).run().is_err(), "PowerSGD cannot checkpoint");
+    // resume from a missing file is an error, and a seed-mismatched
+    // checkpoint is rejected
+    let mut cfg = quickstart_cfg(4);
+    cfg.resume_from = Some(ckpt_path("does_not_exist"));
+    assert!(Trainer::new(cfg).run().is_err(), "missing checkpoint file");
+    let path = ckpt_path("seed_mismatch");
+    let mut save = quickstart_cfg(4);
+    save.save_at = 2;
+    save.save_path = Some(path.clone());
+    Trainer::new(save).run().expect("save run");
+    let mut bad = quickstart_cfg(4);
+    bad.seed = 99;
+    bad.resume_from = Some(path.clone());
+    assert!(Trainer::new(bad).run().is_err(), "seed mismatch must be rejected");
+    let mut done = quickstart_cfg(2);
+    done.resume_from = Some(path.clone());
+    assert!(Trainer::new(done).run().is_err(), "nothing left to run after step 2");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn moe_straggler_dropout_composition() {
+    // the MoE model under a straggler and an overlapping dropout with the
+    // skip policy: deterministic, finite, counters firing
+    let mut cfg = quickstart_cfg(16);
+    cfg.lr.total = 16;
+    cfg.model = "moe_tiny".to_string();
+    cfg.fault_policy = FaultPolicy::Skip;
+    cfg.faults = faults("straggler:rank=0:steps=4-8:slow=4;drop:rank=2:steps=6-7");
+    let a = Trainer::new(cfg.clone()).run().expect("moe faulted run");
+    let b = Trainer::new(cfg).run().expect("moe faulted run repeat");
+    assert_eq!(a.final_params, b.final_params, "moe faulted run not deterministic");
+    let m = &a.metrics;
+    assert!(m.fault_skipped_sources > 0);
+    assert_eq!(m.rank_death_events, 1);
+    assert_eq!(m.dead_rank_steps, 2);
+    assert!(m.degraded_rounds >= 5, "steps 4..=8 all degraded");
+    assert!(m.train_loss.points.last().unwrap().1.is_finite());
+}

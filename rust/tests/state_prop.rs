@@ -1,0 +1,230 @@
+//! Property tests (`util::prop::for_cases`) for the state surfaces the
+//! checkpoint subsystem depends on: quant pack/unpack round-trips over
+//! random lengths (odd, even, empty), and per-compressor / per-optimizer
+//! state export → fresh build → import → bitwise-identical next output,
+//! over random shapes and bit-widths — the invariant that makes
+//! `ckpt::Checkpoint` resume bitwise.
+
+use loco::compress::{self, CompressorConfig, Method};
+use loco::optim::{self, OptimConfig, OptimizerKind};
+use loco::quant::{dequantize, pack_nibbles, quantize, unpack_nibbles};
+use loco::sharding::ParamLayout;
+use loco::util::prop::for_cases;
+
+#[test]
+fn pack_unpack_roundtrips_any_length() {
+    for_cases(0xA11, 64, |rng| {
+        // includes n = 0 (empty) and odd lengths (padded final nibble)
+        let n = rng.below(33);
+        let codes: Vec<i8> = (0..n).map(|_| (rng.below(16) as i32 - 8) as i8).collect();
+        let packed = pack_nibbles(&codes);
+        assert_eq!(packed.len(), n.div_ceil(2), "n={n}");
+        assert_eq!(unpack_nibbles(&packed, n), codes, "n={n}");
+    });
+}
+
+#[test]
+fn quantize_is_idempotent_over_the_decode() {
+    // decode→re-encode must reproduce the code exactly: a checkpointed
+    // wire value re-quantizes to itself (power-of-two scales keep the
+    // division exact in f32, matching the paper's 2^k scale convention)
+    for_cases(0xA12, 64, |rng| {
+        let bits = if rng.below(2) == 0 { 4u32 } else { 8 };
+        let s = (1u32 << (8 + rng.below(10))) as f32;
+        let n = 1 + rng.below(256);
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 0.02);
+        let lim = 1i32 << (bits - 1);
+        for &x in &v {
+            let q = quantize(x, s, bits);
+            assert!((q as i32) >= -lim && (q as i32) < lim, "code {q} out of range");
+            assert_eq!(quantize(dequantize(q, s), s, bits), q, "x={x} s={s} bits={bits}");
+        }
+    });
+}
+
+const METHODS: [Method; 9] = [
+    Method::Fp32,
+    Method::Bf16,
+    Method::Loco,
+    Method::Ef,
+    Method::Ef21,
+    Method::OneBit,
+    Method::Zeropp,
+    Method::LocoZeropp,
+    Method::IntSgd,
+];
+
+fn cfg_for(method: Method, bits: u32) -> CompressorConfig {
+    CompressorConfig {
+        s: 256.0,
+        bits,
+        ..CompressorConfig::with_method(method)
+    }
+}
+
+#[test]
+fn encoder_state_roundtrips_bitwise() {
+    // export after a few evolving steps, import into a freshly built
+    // encoder, and the next encode must be byte-identical — for every
+    // method (stateless ones export an empty blob and must accept it)
+    for (mi, method) in METHODS.into_iter().enumerate() {
+        for_cases(0xE5C0 ^ mi as u64, 8, |rng| {
+            let len = 8 * (1 + rng.below(24));
+            let bits = if rng.below(2) == 0 { 4u32 } else { 8 };
+            let cfg = cfg_for(method, bits);
+            let layout = ParamLayout::single("w", &[len]);
+            let (mut enc, _) = compress::build(&cfg, &layout, 0..len, 2);
+            let mut grad = vec![0.0f32; len];
+            for step in 1..=3u64 {
+                rng.fill_normal(&mut grad, 0.02);
+                let _ = enc.encode(&grad, 0..len, step);
+            }
+            let (mut fresh, _) = compress::build(&cfg, &layout, 0..len, 2);
+            fresh.import_state(&enc.export_state()).expect("import");
+            rng.fill_normal(&mut grad, 0.02);
+            let a = enc.encode(&grad, 0..len, 4);
+            let b = fresh.encode(&grad, 0..len, 4);
+            assert_eq!(
+                format!("{a:?}"),
+                format!("{b:?}"),
+                "{method:?} len={len} bits={bits}"
+            );
+        });
+    }
+}
+
+#[test]
+fn encoder_state_roundtrips_on_empty_subrange() {
+    // an empty shard is a legal encode target (uneven topologies produce
+    // them); it must neither corrupt state nor break the round-trip
+    for method in [Method::Loco, Method::Ef21, Method::OneBit] {
+        let cfg = cfg_for(method, 4);
+        let layout = ParamLayout::single("w", &[16]);
+        let (mut enc, _) = compress::build(&cfg, &layout, 0..16, 2);
+        let grad = vec![0.01f32; 16];
+        let m = enc.encode(&grad, 0..0, 1);
+        assert_eq!(m.element_count(), 0, "{method:?}: empty encode carries data");
+        let st = enc.export_state();
+        let (mut fresh, _) = compress::build(&cfg, &layout, 0..16, 2);
+        fresh.import_state(&st).expect("import");
+        let a = enc.encode(&grad, 0..16, 2);
+        let b = fresh.encode(&grad, 0..16, 2);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "{method:?}");
+    }
+}
+
+#[test]
+fn decoder_state_roundtrips_bitwise() {
+    // EF21 keeps per-source reconstruction state on the receiver; the
+    // export/import cycle must leave the decoded accumulation bitwise
+    // identical (stateless decoders pass trivially)
+    for (mi, method) in [Method::Loco, Method::Ef21, Method::Fp32].into_iter().enumerate() {
+        for_cases(0xDEC0 ^ mi as u64, 6, |rng| {
+            let len = 8 * (1 + rng.below(12));
+            let cfg = cfg_for(method, 4);
+            let layout = ParamLayout::single("w", &[len]);
+            let (mut enc0, mut dec) = compress::build(&cfg, &layout, 0..len, 2);
+            let (mut enc1, _) = compress::build(&cfg, &layout, 0..len, 2);
+            let mut grad = vec![0.0f32; len];
+            let mut scratch = vec![0.0f32; len];
+            for step in 1..=2u64 {
+                for (src, enc) in [(0usize, &mut enc0), (1, &mut enc1)] {
+                    rng.fill_normal(&mut grad, 0.02);
+                    let m = enc.encode(&grad, 0..len, step);
+                    dec.decode_accumulate(src, &m, &mut scratch);
+                }
+            }
+            let (_, mut fresh) = compress::build(&cfg, &layout, 0..len, 2);
+            fresh.import_state(&dec.export_state()).expect("import");
+            rng.fill_normal(&mut grad, 0.02);
+            let m = enc0.encode(&grad, 0..len, 3);
+            let mut acc_a = vec![0.0f32; len];
+            let mut acc_b = vec![0.0f32; len];
+            dec.decode_accumulate(0, &m, &mut acc_a);
+            fresh.decode_accumulate(0, &m, &mut acc_b);
+            assert_eq!(acc_a, acc_b, "{method:?} len={len}");
+        });
+    }
+}
+
+const OPTIMIZERS: [OptimizerKind; 5] = [
+    OptimizerKind::Sgd,
+    OptimizerKind::Adam,
+    OptimizerKind::AdamW,
+    OptimizerKind::Adafactor,
+    OptimizerKind::Lamb,
+];
+
+#[test]
+fn optimizer_state_roundtrips_bitwise() {
+    // moments (and the step counter) must survive the round-trip: after
+    // import, one more identical step must move the parameters bitwise
+    // identically to the original optimizer
+    for (oi, kind) in OPTIMIZERS.into_iter().enumerate() {
+        for_cases(0x0917 ^ oi as u64, 8, |rng| {
+            let rows = 1 + rng.below(6);
+            let cols = 1 + rng.below(6);
+            let len = rows * cols;
+            let layout = ParamLayout::single("w", &[rows, cols]);
+            let tensors = layout.tensors_in(&(0..len));
+            let cfg = OptimConfig { kind, weight_decay: 0.01, ..OptimConfig::default() };
+            let mut a = optim::build(&cfg, len, &tensors);
+            let mut pa = vec![0.0f32; len];
+            rng.fill_normal(&mut pa, 0.1);
+            let mut g = vec![0.0f32; len];
+            for _ in 0..3 {
+                rng.fill_normal(&mut g, 0.02);
+                a.step(&mut pa, &g, 1e-2);
+            }
+            let mut b = optim::build(&cfg, len, &tensors);
+            b.import_state(&a.export_state()).expect("import");
+            let mut pb = pa.clone();
+            rng.fill_normal(&mut g, 0.02);
+            a.step(&mut pa, &g, 1e-2);
+            b.step(&mut pb, &g, 1e-2);
+            assert_eq!(pa, pb, "{kind:?} {rows}x{cols}");
+        });
+    }
+}
+
+#[test]
+fn optimizer_state_roundtrips_on_empty_shard() {
+    // a zero-length shard (uneven partitions can produce one) must
+    // export and re-import cleanly
+    for kind in OPTIMIZERS {
+        let layout = ParamLayout::single("w", &[4]);
+        let tensors = layout.tensors_in(&(0..0));
+        let cfg = OptimConfig { kind, ..OptimConfig::default() };
+        let mut a = optim::build(&cfg, 0, &tensors);
+        let mut p: Vec<f32> = Vec::new();
+        a.step(&mut p, &[], 1e-2);
+        let mut b = optim::build(&cfg, 0, &tensors);
+        b.import_state(&a.export_state()).unwrap_or_else(|e| panic!("{kind:?}: {e:#}"));
+    }
+}
+
+#[test]
+fn state_import_rejects_mismatched_shapes() {
+    // a checkpoint from a different partition must fail loudly, never
+    // silently truncate
+    let layout8 = ParamLayout::single("w", &[8]);
+    let layout12 = ParamLayout::single("w", &[12]);
+    let cfg = OptimConfig { kind: OptimizerKind::Adam, ..OptimConfig::default() };
+    let mut a = optim::build(&cfg, 8, &layout8.tensors_in(&(0..8)));
+    let mut p = vec![0.1f32; 8];
+    a.step(&mut p, &[0.01; 8], 1e-2);
+    let st = a.export_state();
+    let mut b = optim::build(&cfg, 12, &layout12.tensors_in(&(0..12)));
+    assert!(b.import_state(&st).is_err(), "length mismatch must be rejected");
+
+    let ccfg = cfg_for(Method::Loco, 4);
+    let (mut enc, _) = compress::build(&ccfg, &layout8, 0..8, 2);
+    let _ = enc.encode(&[0.01; 8], 0..8, 1);
+    let mut st = enc.export_state();
+    if !st.is_empty() {
+        st.truncate(st.len() - 1);
+        let (mut fresh, _) = compress::build(&ccfg, &layout8, 0..8, 2);
+        assert!(fresh.import_state(&st).is_err(), "truncated state must be rejected");
+    }
+}

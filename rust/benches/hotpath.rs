@@ -5,6 +5,8 @@
 //!
 //! LOCO_BENCH_FAST=1 shrinks everything for CI-style smoke runs.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use loco::collective::{
@@ -18,6 +20,30 @@ use loco::sharding::{ParamLayout, Partition};
 use loco::topology::{HierSyncEngine, Topology};
 use loco::util::rng::Rng;
 use loco::util::timer::bench_seconds;
+
+/// Counting wrapper around the system allocator so §14 can *assert*
+/// (not just claim) that the disabled trace hook path never allocates.
+/// One relaxed atomic add per alloc — noise for every other section.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn main() {
     let fast = std::env::var("LOCO_BENCH_FAST").is_ok();
@@ -485,6 +511,89 @@ fn main() {
             "train_step (tiny, fwd+bwd)         {:>16}  {:7.0} tokens/s/node",
             st.display(),
             toks / st.mean
+        );
+    }
+
+    // 14. §Tentpole PR7: tracer overhead — the disabled path must be
+    //    free. (a) asserts via the counting global allocator that 1e6
+    //    trace::with hooks with no tracer installed perform *zero* heap
+    //    allocations, and times the bare hook (one const-initialized
+    //    thread-local read + branch). (b) reruns a §12-style fault-free
+    //    sync workload with a per-rank tracer installed vs without, so
+    //    the enabled cost is visible too. The <2% acceptance bound is on
+    //    the *disabled* path: hooks-per-step x ns/hook vs the step wall.
+    {
+        let iters = 1_000_000u64;
+        let mut sink = 0u64;
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for i in 0..iters {
+            loco::trace::with(|t| sink = sink.wrapping_add(t.now_ns() + i));
+        }
+        let hook_allocs = ALLOCS.load(Ordering::Relaxed) - before;
+        assert_eq!(
+            hook_allocs, 0,
+            "disabled trace::with allocated {hook_allocs} times over {iters} calls"
+        );
+        let st = bench_seconds(|| {
+            for i in 0..10_000u64 {
+                loco::trace::with(|t| sink = sink.wrapping_add(t.now_ns() + i));
+            }
+        }, min_t.min(0.2));
+        let hook_ns = st.mean * 1e9 / 1e4;
+        println!(
+            "trace::with (no tracer installed)  {hook_ns:6.2} ns/call, \
+             {hook_allocs} allocations over {iters} calls (sink {sink})"
+        );
+
+        let nodes = 8usize;
+        let total: usize = if fast { 1 << 14 } else { 1 << 17 };
+        let steps = 4u64;
+        let layout = ParamLayout::single("flat", &[total]);
+        let part = Partition::flat_even(total, nodes, 2);
+        let cfg = CompressorConfig {
+            s: 64.0,
+            bucket_bytes: 4 * (total / nodes) / 8,
+            sync_workers: 2,
+            ..Default::default()
+        };
+        let run_once = |traced: bool| {
+            let cfg = &cfg;
+            let layout = &layout;
+            let part = &part;
+            let t0 = std::time::Instant::now();
+            run_cluster(nodes, move |ctx| {
+                let _guard = traced.then(|| {
+                    loco::trace::install(std::rc::Rc::new(loco::trace::Tracer::new(
+                        ctx.rank,
+                        1 << 16,
+                    )))
+                });
+                let engine = SyncEngine::new(cfg, layout, part, ctx.rank, nodes);
+                let mut acc = vec![0.0f32; part.ranges[ctx.rank].len()];
+                let mut g = vec![0.0f32; total];
+                Rng::new(11 + ctx.rank as u64).fill_normal(&mut g, 0.1);
+                for step in 1..=steps {
+                    ctx.set_sim_step(step);
+                    engine.sync(&ctx, &g, &mut acc, step);
+                }
+            });
+            t0.elapsed().as_secs_f64()
+        };
+        let t_off = (0..3).map(|_| run_once(false)).fold(f64::INFINITY, f64::min);
+        let t_on = (0..3).map(|_| run_once(true)).fold(f64::INFINITY, f64::min);
+        let enabled_pct = 100.0 * (t_on / t_off - 1.0);
+        println!(
+            "traced sync n={nodes}: tracer off {:.2} ms/step, on {:.2} ms/step \
+             ({enabled_pct:+.2}% with spans enabled; disabled-path hooks are \
+             {hook_ns:.1} ns each)",
+            1e3 * t_off / steps as f64,
+            1e3 * t_on / steps as f64
+        );
+        println!("BENCH_hotpath.json row (pr-7, paste after a run on quiet hardware):");
+        println!(
+            "        {{\"trace_with_disabled_ns\": {hook_ns:.2}, \
+             \"disabled_hook_allocs\": {hook_allocs}, \
+             \"traced_sync_overhead_pct\": {enabled_pct:.2}}}\n"
         );
     }
 }

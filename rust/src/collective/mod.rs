@@ -630,8 +630,45 @@ impl NodeCtx {
         self.faults.as_deref()
     }
 
+    /// Deterministic straggler stretch of `rank`'s egress at the current
+    /// sim step (1.0 without a schedule). Per-message *jitter* is
+    /// deliberately excluded from the trace cost model: its replay index
+    /// advances only when a LinkSim is attached, so including it would
+    /// make trace durations depend on the harness instead of the run.
+    fn trace_stretch(&self, rank: usize) -> f64 {
+        self.faults.as_deref().map_or(1.0, |f| f.straggler_slow(rank, self.sim_step.get()))
+    }
+
+    /// Deterministic link model of the path to `peer` for the trace cost
+    /// model ([`crate::trace`]): the configured [`LinkSim`]'s
+    /// bandwidth/latency when one is attached at that level, the netsim
+    /// preset for the level otherwise, stretched by `stretch_rank`'s
+    /// straggler factor at the current sim step.
+    pub fn trace_link_to(&self, peer: usize, stretch_rank: usize) -> crate::trace::LinkModel {
+        let lvl = self.levels[peer] as usize;
+        let (bw, latency_s) = match self.nets[lvl] {
+            Some(l) => (l.bw, l.latency_s),
+            None => (crate::netsim::link_preset_for_level(lvl, self.nets.len()).bw, 20e-6),
+        };
+        crate::trace::LinkModel {
+            bw,
+            latency_s,
+            stretch: self.trace_stretch(stretch_rank),
+            level: lvl,
+        }
+    }
+
     pub fn send(&self, dst: usize, p: Payload) {
         let bytes = p.wire_bytes();
+        crate::trace::with(|t| {
+            let lm = self.trace_link_to(dst, self.rank);
+            t.span(
+                "collective",
+                "send",
+                lm.egress_ns(bytes),
+                &[("dst", dst as f64), ("bytes", bytes as f64), ("level", lm.level as f64)],
+            );
+        });
         self.counters.sent[self.rank].fetch_add(bytes, Ordering::Relaxed);
         self.counters.msgs[self.rank].fetch_add(1, Ordering::Relaxed);
         let lvl = self.levels[dst] as usize;
@@ -683,9 +720,31 @@ impl NodeCtx {
                 Payload::TaggedWire { tag, msg } => {
                     self.pending[src].borrow_mut().insert(tag, msg);
                 }
-                p => return p,
+                p => {
+                    // one span per *logical* receive (not per recv_raw
+                    // iteration, whose stash traffic depends on
+                    // nondeterministic arrival order). A straggling
+                    // source shows up as a stretched recv — the wait.
+                    self.trace_recv_span(src, p.wire_bytes());
+                    return p;
+                }
             }
         }
+    }
+
+    /// Record a modeled delivery span for a logical receive from `src`:
+    /// the source's (possibly straggler-stretched) serialization plus
+    /// link latency — the deterministic twin of the LinkSim wait.
+    fn trace_recv_span(&self, src: usize, bytes: u64) {
+        crate::trace::with(|t| {
+            let lm = self.trace_link_to(src, src);
+            t.span(
+                "collective",
+                "recv",
+                lm.delivery_ns(bytes),
+                &[("src", src as f64), ("bytes", bytes as f64), ("level", lm.level as f64)],
+            );
+        });
     }
 
     /// Send `msg` to `dst` addressed by `tag`. Multiple tagged messages to
@@ -703,13 +762,18 @@ impl NodeCtx {
     /// protocol error (panics): untagged collectives are strictly phased,
     /// so a tagged receive can never legally overtake one.
     pub fn recv_wire_tagged(&self, src: usize, tag: u64) -> WireMsg {
+        // the span is recorded per logical (src, tag) receive whether the
+        // message was already stashed or still on the wire — the stash
+        // path depends on nondeterministic arrival order, the span must not
         if let Some(m) = self.pending[src].borrow_mut().remove(&tag) {
+            self.trace_recv_span(src, m.wire_bytes() as u64);
             return m;
         }
         loop {
             match self.recv_raw(src) {
                 Payload::TaggedWire { tag: t, msg } => {
                     if t == tag {
+                        self.trace_recv_span(src, msg.wire_bytes() as u64);
                         return msg;
                     }
                     self.pending[src].borrow_mut().insert(t, msg);
@@ -873,6 +937,13 @@ pub trait Comm {
     fn peer_send_tagged(&self, dst: usize, tag: u64, msg: WireMsg);
     /// Receive the message tagged `tag` from communicator-local rank `src`.
     fn peer_recv_tagged(&self, src: usize, tag: u64) -> WireMsg;
+    /// Deterministic link model the trace layer ([`crate::trace`]) charges
+    /// for wire spans to communicator-local member `peer`, stretched by
+    /// *this* node's straggler factor (egress view). The default is the
+    /// slow-fabric preset with no faults.
+    fn trace_link(&self, _peer: usize) -> crate::trace::LinkModel {
+        crate::trace::LinkModel::default()
+    }
 
     /// Pairwise all-to-all: `msgs[j]` goes to member j; returns the
     /// messages received from every source (own message passes through).
@@ -989,6 +1060,10 @@ impl Comm for NodeCtx {
     fn peer_recv_tagged(&self, src: usize, tag: u64) -> WireMsg {
         NodeCtx::recv_wire_tagged(self, src, tag)
     }
+
+    fn trace_link(&self, peer: usize) -> crate::trace::LinkModel {
+        self.trace_link_to(peer, self.rank)
+    }
 }
 
 /// A sub-communicator: a subset of the cluster's nodes addressed by
@@ -1042,6 +1117,10 @@ impl Comm for GroupCtx<'_> {
 
     fn peer_recv_tagged(&self, src: usize, tag: u64) -> WireMsg {
         self.ctx.recv_wire_tagged(self.members[src], tag)
+    }
+
+    fn trace_link(&self, peer: usize) -> crate::trace::LinkModel {
+        self.ctx.trace_link_to(self.members[peer], self.ctx.rank)
     }
 }
 

@@ -127,6 +127,10 @@ pub struct SyncEngine {
     /// single-encoder path, bit-identical to the pre-bucketing trainer
     mono: Option<Mutex<(Box<dyn Encoder>, Box<dyn Decoder>)>>,
     workers: usize,
+    /// modeled bytes of memory traffic per encoded element
+    /// ([`crate::netsim::encode_bytes_per_param`]) — the trace layer's
+    /// cost model for encode spans
+    enc_cost_bpp: f64,
 }
 
 impl SyncEngine {
@@ -209,6 +213,7 @@ impl SyncEngine {
             sched,
             mono,
             workers: cfg.sync_workers.max(1),
+            enc_cost_bpp: crate::netsim::encode_bytes_per_param(cfg.method.name()),
         }
     }
 
@@ -301,6 +306,46 @@ impl SyncEngine {
         }
     }
 
+    /// Switch per-step compression telemetry (‖e_t‖, quantization error)
+    /// on or off for every encoder in the plan. A no-op for methods whose
+    /// encoders don't implement [`Encoder::set_telemetry`].
+    pub fn set_telemetry(&self, on: bool) {
+        if let Some(m) = &self.mono {
+            m.lock().unwrap().0.set_telemetry(on);
+            return;
+        }
+        for e in &self.enc {
+            e.lock().unwrap().set_telemetry(on);
+        }
+    }
+
+    /// Collect and reset the compression telemetry accumulated by every
+    /// encoder since the previous take, merged across buckets in plan
+    /// order. `None` when the method reports nothing (telemetry off, or a
+    /// compressor without LoCo-style error feedback).
+    pub fn take_telemetry(&self) -> Option<compress::EncoderTelemetry> {
+        fn absorb(
+            merged: &mut Option<compress::EncoderTelemetry>,
+            t: Option<compress::EncoderTelemetry>,
+        ) {
+            if let Some(t) = t {
+                match merged {
+                    Some(m) => m.merge(&t),
+                    None => *merged = Some(t),
+                }
+            }
+        }
+        let mut merged = None;
+        if let Some(m) = &self.mono {
+            absorb(&mut merged, m.lock().unwrap().0.take_telemetry());
+            return merged;
+        }
+        for e in &self.enc {
+            absorb(&mut merged, e.lock().unwrap().take_telemetry());
+        }
+        merged
+    }
+
     /// One gradient exchange: compress `grad` towards every destination,
     /// all-to-all, and accumulate the decoded contributions of all `n`
     /// sources into `shard_acc` (this node's shard, *not* yet averaged —
@@ -319,13 +364,32 @@ impl SyncEngine {
             let mut pair = m.lock().unwrap();
             let (enc, dec) = &mut *pair;
             let msgs: Vec<WireMsg> = (0..self.n)
-                .map(|dst| enc.encode(grad, self.ranges[dst].clone(), step))
+                .map(|dst| {
+                    let msg = enc.encode(grad, self.ranges[dst].clone(), step);
+                    crate::trace::with(|t| {
+                        let elems = self.ranges[dst].len() as f64;
+                        t.span(
+                            "comm",
+                            "encode",
+                            crate::trace::mem_ns(self.enc_cost_bpp * elems),
+                            &[("dst", dst as f64), ("bytes", msg.wire_bytes() as f64)],
+                        );
+                    });
+                    msg
+                })
                 .collect();
             let recvd = ctx.all_to_all(msgs);
             shard_acc.fill(0.0);
+            let mut t0 = 0;
+            crate::trace::with(|t| t0 = t.now_ns());
             for (src, msg) in recvd.iter().enumerate() {
                 dec.decode_accumulate(src, msg, shard_acc);
             }
+            let bytes: usize = recvd.iter().map(|m| m.wire_bytes()).sum();
+            crate::trace::with(|t| {
+                t.advance_ns(crate::trace::mem_ns((bytes + 8 * shard_acc.len() * self.n) as f64));
+                t.span_at(t0, "comm", "drain", &[("bytes", bytes as f64)]);
+            });
             return;
         }
         self.sync_bucketed(ctx, grad, shard_acc, step);
@@ -337,6 +401,18 @@ impl SyncEngine {
         let n = self.n;
         let b_total = self.plan.total();
         shard_acc.fill(0.0);
+
+        // The pool forwards buckets in worker-completion order, which is
+        // nondeterministic — suppress the collective-level hooks for the
+        // duration of the exchange and reconstruct the per-bucket spans in
+        // plan order afterwards ([`Self::trace_bucketed_spans`]), keeping
+        // trace files bitwise reproducible. Byte counts are captured here
+        // only when a tracer is live so the disabled path allocates
+        // nothing extra.
+        let tracing = crate::trace::active();
+        let quiet = crate::trace::suppress();
+        let mut sent_bytes: Vec<usize> = if tracing { vec![0; b_total] } else { Vec::new() };
+        let mut recv_bytes: Vec<usize> = if tracing { vec![0; self.own.len()] } else { Vec::new() };
 
         // split the accumulator into disjoint per-owned-bucket slices the
         // decode jobs can work on in parallel
@@ -406,6 +482,9 @@ impl SyncEngine {
             for _ in 0..b_total {
                 let (bi, msg) = enc_rx.recv().expect("encoder pool died");
                 let dst = self.plan.buckets[bi].dst;
+                if tracing {
+                    sent_bytes[bi] = msg.wire_bytes();
+                }
                 if dst == self.rank {
                     local_msgs[bi] = Some(msg);
                 } else {
@@ -425,12 +504,66 @@ impl SyncEngine {
                         msgs.push(ctx.peer_recv_tagged(src, tag_of(bi)));
                     }
                 }
+                if tracing {
+                    recv_bytes[local] = msgs.iter().map(|m| m.wire_bytes()).sum();
+                }
                 let acc = acc_cells[local].take().expect("bucket slice reused");
                 job_tx.send(Job::Decode { local, acc, msgs }).expect("worker pool died");
             }
             drop(job_tx); // queue drains, then idle workers exit
             for _ in 0..self.own.len() {
                 ack_rx.recv().expect("decoder pool died");
+            }
+        });
+        drop(quiet);
+        if tracing {
+            self.trace_bucketed_spans(ctx, &sent_bytes, &recv_bytes);
+        }
+    }
+
+    /// Emit the deterministic span record of one bucketed exchange, in
+    /// plan order with modeled durations — the live exchange ran with the
+    /// hooks suppressed (see [`Self::sync_bucketed`]).
+    fn trace_bucketed_spans<C: Comm>(&self, ctx: &C, sent: &[usize], recvd: &[usize]) {
+        crate::trace::with(|t| {
+            for &bi in &self.sched {
+                let b = &self.plan.buckets[bi];
+                let elems = b.range.len() as f64;
+                t.span(
+                    "comm",
+                    "encode",
+                    crate::trace::mem_ns(self.enc_cost_bpp * elems),
+                    &[("bucket", bi as f64), ("bytes", sent[bi] as f64), ("elems", elems)],
+                );
+                if b.dst != self.rank {
+                    let lm = ctx.trace_link(b.dst);
+                    t.span(
+                        "comm",
+                        "wire",
+                        lm.egress_ns(sent[bi] as u64),
+                        &[("bucket", bi as f64), ("dst", b.dst as f64), ("bytes", sent[bi] as f64)],
+                    );
+                }
+            }
+            for (local, &bi) in self.own.iter().enumerate() {
+                let b = &self.plan.buckets[bi];
+                // remote deliveries serialize on the ingress link; decoding
+                // reads the wire image and read-modify-writes the fp32
+                // accumulator once per source
+                let remote = recvd[local].saturating_sub(sent[bi]);
+                let lm = if self.n > 1 {
+                    ctx.trace_link((self.rank + 1) % self.n)
+                } else {
+                    crate::trace::LinkModel::default()
+                };
+                let dur = lm.egress_ns(remote as u64)
+                    + crate::trace::mem_ns((recvd[local] + 8 * b.range.len() * self.n) as f64);
+                t.span(
+                    "comm",
+                    "drain",
+                    dur,
+                    &[("bucket", bi as f64), ("bytes", recvd[local] as f64)],
+                );
             }
         });
     }
@@ -456,6 +589,8 @@ impl SyncEngine {
     /// `sync_workers` pool like [`SyncEngine::sync`] does would shrink
     /// that cost without changing numerics and is a known follow-up.
     pub fn grad_sync_launch<C: Comm>(&self, ctx: &C, grad: &[f32], step: u64) -> PendingGrads {
+        let mut t0 = 0;
+        crate::trace::with(|t| t0 = t.now_ns());
         let mut own = Vec::new();
         if let Some(m) = &self.mono {
             // encode in destination order, exactly like the monolithic
@@ -466,6 +601,15 @@ impl SyncEngine {
             for dst in 0..self.n {
                 let bi = self.plan.own(dst)[0];
                 let msg = enc.encode(grad, self.ranges[dst].clone(), step);
+                crate::trace::with(|t| {
+                    let elems = self.ranges[dst].len() as f64;
+                    t.span(
+                        "comm",
+                        "encode",
+                        crate::trace::mem_ns(self.enc_cost_bpp * elems),
+                        &[("bucket", bi as f64), ("bytes", msg.wire_bytes() as f64)],
+                    );
+                });
                 if dst == self.rank {
                     own.push((bi, msg));
                 } else {
@@ -479,6 +623,14 @@ impl SyncEngine {
             for &bi in &self.sched {
                 let b = &self.plan.buckets[bi];
                 let msg = self.enc[bi].lock().unwrap().encode(grad, b.range.clone(), step);
+                crate::trace::with(|t| {
+                    t.span(
+                        "comm",
+                        "encode",
+                        crate::trace::mem_ns(self.enc_cost_bpp * b.range.len() as f64),
+                        &[("bucket", bi as f64), ("bytes", msg.wire_bytes() as f64)],
+                    );
+                });
                 if b.dst == self.rank {
                     own.push((bi, msg));
                 } else {
@@ -486,6 +638,7 @@ impl SyncEngine {
                 }
             }
         }
+        crate::trace::with(|t| t.span_at(t0, "comm", "launch", &[("step", step as f64)]));
         PendingGrads { step, own }
     }
 
@@ -502,6 +655,8 @@ impl SyncEngine {
     ) {
         debug_assert_eq!(shard_acc.len(), self.my_range.len());
         let PendingGrads { step, mut own } = pending;
+        let mut t0 = 0;
+        crate::trace::with(|t| t0 = t.now_ns());
         let mut take_own = |bi: usize| -> WireMsg {
             let at = own
                 .iter()
@@ -522,6 +677,7 @@ impl SyncEngine {
                 };
                 dec.decode_accumulate(src, &msg, shard_acc);
             }
+            crate::trace::with(|t| t.span_at(t0, "comm", "drain", &[("step", step as f64)]));
             return;
         }
         let mut offset = 0;
@@ -542,6 +698,7 @@ impl SyncEngine {
             offset += b.range.len();
         }
         debug_assert_eq!(offset, shard_acc.len());
+        crate::trace::with(|t| t.span_at(t0, "comm", "drain", &[("step", step as f64)]));
     }
 
     /// Parameter all-gather at `bf16` or f32 wire precision: `master` is
@@ -599,6 +756,8 @@ impl SyncEngine {
         bf16: bool,
     ) -> PendingParams {
         debug_assert_eq!(master.len(), self.my_range.len());
+        let mut t0 = 0;
+        crate::trace::with(|t| t0 = t.now_ns());
         let n = self.n;
         let mut own = Vec::with_capacity(self.plan.own(self.rank).len());
         for &bi in self.plan.own(self.rank) {
@@ -618,6 +777,7 @@ impl SyncEngine {
                 recvs.push((src, bi));
             }
         }
+        crate::trace::with(|t| t.span_at(t0, "comm", "param_launch", &[("step", step as f64)]));
         PendingParams { step, own, recvs }
     }
 
@@ -635,6 +795,8 @@ impl SyncEngine {
         params: &mut [f32],
     ) {
         let PendingParams { step, own, recvs } = pending;
+        let mut t0 = 0;
+        crate::trace::with(|t| t0 = t.now_ns());
         for (bi, msg) in &own {
             compress::write_wire(msg, &mut params[self.plan.buckets[*bi].range.clone()]);
         }
@@ -642,6 +804,7 @@ impl SyncEngine {
             let msg = ctx.peer_recv_tagged(src, self.plan.param_tag(step, bi));
             compress::write_wire(&msg, &mut params[self.plan.buckets[bi].range.clone()]);
         }
+        crate::trace::with(|t| t.span_at(t0, "comm", "param_drain", &[("step", step as f64)]));
     }
 }
 

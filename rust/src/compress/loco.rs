@@ -13,7 +13,7 @@
 use std::ops::Range;
 
 use super::block::{dequantize_block, quantize_block};
-use super::{CompressorConfig, Encoder, WireMsg};
+use super::{CompressorConfig, Encoder, EncoderTelemetry, WireMsg};
 use crate::quant::{self, LocoParams};
 
 /// Error storage: int8 (paper default, 1 byte/param) or f32 (ablation).
@@ -52,6 +52,12 @@ pub struct LocoEncoder {
     /// *replaces* it instead of mixing, so the shard-0 bias lasts exactly
     /// one step rather than decaying over ~1/(1−0.9) steps
     ema_is_partial_seed: bool,
+    /// accumulate compression-quality stats for the trace layer — an
+    /// extra read-only pass per encode, never touching the encoded bits
+    telemetry_on: bool,
+    tel_pre_q_sq: f64,
+    tel_err_q_sq: f64,
+    tel_elems: u64,
 }
 
 impl LocoEncoder {
@@ -80,6 +86,10 @@ impl LocoEncoder {
             scale_obs_sq: 0.0,
             scale_obs_n: 0.0,
             ema_is_partial_seed: false,
+            telemetry_on: false,
+            tel_pre_q_sq: 0.0,
+            tel_err_q_sq: 0.0,
+            tel_elems: 0,
         }
     }
 
@@ -170,6 +180,29 @@ impl Encoder for LocoEncoder {
         let g = &grad[range.clone()];
         let n = g.len();
         let range = range.start - self.base..range.end - self.base;
+
+        if self.telemetry_on {
+            // read-only replica of the compensate→quantize math, run
+            // before the error store mutates (the fused kernels below
+            // never expose the intermediate h)
+            let inv_se = 1.0 / p.s_e;
+            let (mut pre_sq, mut err_sq) = (0.0f64, 0.0f64);
+            for (i, &x) in g.iter().enumerate() {
+                let e_f = match &self.err {
+                    ErrorStore::I8(e) => e[range.start + i] as f32 * inv_se,
+                    ErrorStore::F32(e) => e[range.start + i],
+                    ErrorStore::None => 0.0,
+                };
+                let h = x + e_f;
+                let q = quant::quantize(h, p.s, p.bits);
+                let r = (h - quant::dequantize(q, p.s)) as f64;
+                pre_sq += (h as f64) * (h as f64);
+                err_sq += r * r;
+            }
+            self.tel_pre_q_sq += pre_sq;
+            self.tel_err_q_sq += err_sq;
+            self.tel_elems += n as u64;
+        }
 
         match &mut self.err {
             ErrorStore::None => {
@@ -309,6 +342,41 @@ impl Encoder for LocoEncoder {
         self.scale_obs_n = 0.0;
         self.ema_is_partial_seed = false;
     }
+
+    fn set_telemetry(&mut self, on: bool) {
+        self.telemetry_on = on;
+    }
+
+    fn take_telemetry(&mut self) -> Option<EncoderTelemetry> {
+        if !self.telemetry_on {
+            return None;
+        }
+        // the residual norm is a snapshot of the store *now*, decoded to
+        // gradient units against the fixed error scale
+        let inv_se = 1.0 / (self.cfg.s_e_mult * self.cfg.s) as f64;
+        let ef_norm_sq = match &self.err {
+            ErrorStore::I8(e) => e
+                .iter()
+                .map(|&x| {
+                    let v = x as f64 * inv_se;
+                    v * v
+                })
+                .sum(),
+            ErrorStore::F32(e) => e.iter().map(|&x| (x as f64) * (x as f64)).sum(),
+            ErrorStore::None => 0.0,
+        };
+        let t = EncoderTelemetry {
+            ef_norm_sq,
+            pre_q_sq: self.tel_pre_q_sq,
+            err_q_sq: self.tel_err_q_sq,
+            elems: self.tel_elems,
+            auto_scale_ema: self.maxabs_ema as f64,
+        };
+        self.tel_pre_q_sq = 0.0;
+        self.tel_err_q_sq = 0.0;
+        self.tel_elems = 0;
+        Some(t)
+    }
 }
 
 /// LoCo-Zero++: LoCo's error feedback (int8 moving-average store, reset)
@@ -323,6 +391,11 @@ pub struct LocoBlockEncoder {
     /// (s_e = s_e_mult * s_block); we store the compensated value against a
     /// *fixed* error scale to keep the state well-defined across steps.
     s_e: f32,
+    /// compression-quality accumulation for the trace layer
+    telemetry_on: bool,
+    tel_pre_q_sq: f64,
+    tel_err_q_sq: f64,
+    tel_elems: u64,
 }
 
 impl LocoBlockEncoder {
@@ -337,6 +410,10 @@ impl LocoBlockEncoder {
             err: vec![0i8; range.len()],
             base: range.start,
             s_e: cfg.s_e_mult * cfg.s,
+            telemetry_on: false,
+            tel_pre_q_sq: 0.0,
+            tel_err_q_sq: 0.0,
+            tel_elems: 0,
         }
     }
 }
@@ -357,6 +434,20 @@ impl Encoder for LocoBlockEncoder {
         }
         // block-quantize the compensated gradient
         let (codes, scales) = quantize_block(&h, self.cfg.block, self.cfg.bits);
+        if self.telemetry_on {
+            // h and the quantized codes are both at hand here — no
+            // replica pass needed, just the roundtrip error
+            let (mut pre_sq, mut err_sq) = (0.0f64, 0.0f64);
+            for i in 0..n {
+                let d = dequantize_block(codes[i], &scales, i, self.cfg.block);
+                let r = (h[i] - d) as f64;
+                pre_sq += (h[i] as f64) * (h[i] as f64);
+                err_sq += r * r;
+            }
+            self.tel_pre_q_sq += pre_sq;
+            self.tel_err_q_sq += err_sq;
+            self.tel_elems += n as u64;
+        }
         // error update against the block-dequantized value
         if reset {
             e.fill(0);
@@ -400,6 +491,36 @@ impl Encoder for LocoBlockEncoder {
 
     fn reset_state(&mut self) {
         self.err.fill(0);
+    }
+
+    fn set_telemetry(&mut self, on: bool) {
+        self.telemetry_on = on;
+    }
+
+    fn take_telemetry(&mut self) -> Option<EncoderTelemetry> {
+        if !self.telemetry_on {
+            return None;
+        }
+        let inv_se = 1.0 / self.s_e as f64;
+        let ef_norm_sq = self
+            .err
+            .iter()
+            .map(|&x| {
+                let v = x as f64 * inv_se;
+                v * v
+            })
+            .sum();
+        let t = EncoderTelemetry {
+            ef_norm_sq,
+            pre_q_sq: self.tel_pre_q_sq,
+            err_q_sq: self.tel_err_q_sq,
+            elems: self.tel_elems,
+            auto_scale_ema: 0.0,
+        };
+        self.tel_pre_q_sq = 0.0;
+        self.tel_err_q_sq = 0.0;
+        self.tel_elems = 0;
+        Some(t)
     }
 }
 
@@ -596,6 +717,58 @@ mod tests {
             close(&n2, &bucket_scales),
             "monolithic vs bucketed auto_scale diverged: {n2:?} vs {bucket_scales:?}"
         );
+    }
+
+    #[test]
+    fn telemetry_is_consistent_and_does_not_perturb_codes() {
+        let n = 512;
+        let mut g = vec![0.0f32; n];
+        Rng::new(21).fill_normal(&mut g, 0.2);
+        let c = cfg(16.0);
+        // telemetry off: take() yields nothing
+        let mut plain = LocoEncoder::new(&c, n);
+        let ref_msg = plain.encode(&g, 0..n, 1);
+        assert!(plain.take_telemetry().is_none());
+        // telemetry on: identical wire bits, sensible stats
+        let mut tel = LocoEncoder::new(&c, n);
+        tel.set_telemetry(true);
+        let msg = tel.encode(&g, 0..n, 1);
+        match (&ref_msg, &msg) {
+            (WireMsg::I4 { packed: a, .. }, WireMsg::I4 { packed: b, .. }) => {
+                assert_eq!(a, b, "telemetry changed the encoded bits")
+            }
+            _ => panic!("expected I4"),
+        }
+        let t = tel.take_telemetry().expect("telemetry enabled");
+        assert_eq!(t.elems, n as u64);
+        assert!(t.ef_norm() > 0.0, "EF residual should be nonzero after one step");
+        assert!(t.comp_err_rms() > 0.0 && t.comp_err_rms() < 1.0 / 16.0);
+        assert!(t.comp_err_rel() > 0.0 && t.comp_err_rel() < 1.0);
+        // err_q_sq matches the actual decode roundtrip error of this step
+        // (first step: e=0, so c == g and the wire error IS the quant error)
+        let mut acc = vec![0.0f32; n];
+        decode_accumulate_stateless(&msg, &mut acc);
+        let direct: f64 =
+            g.iter().zip(&acc).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+        assert!((t.err_q_sq - direct).abs() <= 1e-9 * direct.max(1.0), "{} vs {direct}", t.err_q_sq);
+        // taking again without new encodes keeps the snapshot norm but
+        // zeroes the per-encode accumulators
+        let t2 = tel.take_telemetry().unwrap();
+        assert_eq!(t2.elems, 0);
+        assert!((t2.ef_norm_sq - t.ef_norm_sq).abs() < 1e-12);
+        // merge adds sums
+        let mut m = EncoderTelemetry::default();
+        m.merge(&t);
+        m.merge(&t);
+        assert_eq!(m.elems, 2 * t.elems);
+        assert!((m.err_q_sq - 2.0 * t.err_q_sq).abs() < 1e-12);
+        // the block variant reports too
+        let mut blk = LocoBlockEncoder::new(&CompressorConfig { block: 64, ..c }, n);
+        blk.set_telemetry(true);
+        blk.encode(&g, 0..n, 1);
+        let tb = blk.take_telemetry().unwrap();
+        assert_eq!(tb.elems, n as u64);
+        assert!(tb.comp_err_rel() > 0.0 && tb.comp_err_rel() < 1.0);
     }
 
     #[test]

@@ -230,6 +230,64 @@ impl WireMsg {
     }
 }
 
+/// Per-step compression-quality telemetry an encoder accumulates when
+/// asked ([`Encoder::set_telemetry`]) — the trace layer's view of the
+/// paper's central quantities: the error-feedback residual `e_t`, the
+/// compensated pre-quantization signal, and the quantization error.
+/// All sums are in gradient units; aggregate across bucket encoders
+/// with [`EncoderTelemetry::merge`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EncoderTelemetry {
+    /// Σe² of the stored EF residual (decoded to gradient units) at the
+    /// moment the telemetry was taken — `‖e_t‖² ` over the encoder's domain
+    pub ef_norm_sq: f64,
+    /// Σc² of the compensated pre-quantization values across the
+    /// encodes since the last take
+    pub pre_q_sq: f64,
+    /// Σ(c − Q⁻¹(Q(c)))² quantization error across the same encodes
+    pub err_q_sq: f64,
+    /// elements encoded since the last take
+    pub elems: u64,
+    /// current `auto_scale` EMA of the signal magnitude (0 when off)
+    pub auto_scale_ema: f64,
+}
+
+impl EncoderTelemetry {
+    /// Fold another encoder's stats into this aggregate: sums add; the
+    /// EMA keeps the largest (every bucket encoder tracks the same
+    /// signal, diverging at most during the seed step).
+    pub fn merge(&mut self, o: &EncoderTelemetry) {
+        self.ef_norm_sq += o.ef_norm_sq;
+        self.pre_q_sq += o.pre_q_sq;
+        self.err_q_sq += o.err_q_sq;
+        self.elems += o.elems;
+        self.auto_scale_ema = self.auto_scale_ema.max(o.auto_scale_ema);
+    }
+
+    /// `‖e_t‖`: L2 norm of the stored error-feedback residual.
+    pub fn ef_norm(&self) -> f64 {
+        self.ef_norm_sq.sqrt()
+    }
+
+    /// RMS per-element quantization error of the step's encodes.
+    pub fn comp_err_rms(&self) -> f64 {
+        if self.elems == 0 {
+            0.0
+        } else {
+            (self.err_q_sq / self.elems as f64).sqrt()
+        }
+    }
+
+    /// Relative compression error `‖c − Q⁻¹(Q(c))‖ / ‖c‖`.
+    pub fn comp_err_rel(&self) -> f64 {
+        if self.pre_q_sq <= 0.0 {
+            0.0
+        } else {
+            (self.err_q_sq / self.pre_q_sq).sqrt()
+        }
+    }
+}
+
 /// Sender side: compress `grad[range]` for one destination.
 ///
 /// `grad` is always the node's *full* flat gradient; `range` selects the
@@ -280,6 +338,16 @@ pub trait Encoder: Send {
     /// Re-zero the persistent state (a dead rank's orphaned compensation
     /// residual on dropout — counted as a quality event by the trainer).
     fn reset_state(&mut self) {}
+    /// Ask the encoder to accumulate [`EncoderTelemetry`] during future
+    /// encodes. Telemetry is an extra read-only pass and MUST NOT change
+    /// the encoded bits; the default (most encoders) ignores the request.
+    fn set_telemetry(&mut self, _on: bool) {}
+    /// Take the telemetry accumulated since the last call, resetting the
+    /// per-encode accumulators (the residual norm is a state snapshot).
+    /// `None` when telemetry is off or unsupported.
+    fn take_telemetry(&mut self) -> Option<EncoderTelemetry> {
+        None
+    }
 }
 
 /// Receiver side: decode a shard from `src` and accumulate into `acc`

@@ -55,6 +55,7 @@
 //! | [`sharding`], [`optim`], [`train`] | Zero-2 cut, sharded optimizers, the trainer | §4 |
 //! | [`runtime`], [`model`], [`data`] | PJRT/builtin backends, model zoo, corpus | §1, §5 |
 //! | [`netsim`] | fit/analytic/overlap/async cost models | §3.4 |
+//! | [`trace`] | deterministic sim-time tracer, Perfetto export, `loco trace` | §3.11 |
 //! | [`config`], [`metrics`], [`report`], [`util`] | config, metrics, tables, PRNG | §2 |
 //!
 //! See DESIGN.md for the system inventory and the per-experiment index, and
@@ -82,6 +83,8 @@ pub mod runtime;
 pub mod sharding;
 #[warn(missing_docs)]
 pub mod topology;
+#[warn(missing_docs)]
+pub mod trace;
 pub mod train;
 pub mod util;
 

@@ -5,6 +5,7 @@
 //!   faults [--config FILE] [--replay] [...]   resolve (and replay) a fault schedule
 //!   table1 | table8 | throughput              print analytic tables
 //!   topology [--gpus N] [--tiers m0,m1,...]   tiered (island/rack/spine) model
+//!   trace FILE                                summarize a --trace output file
 //!   quant-selftest                            Rust hot path vs L1 kernel
 //!   info                                      artifact + config summary
 //!
@@ -43,9 +44,10 @@ fn run(args: &[String]) -> Result<()> {
         Some("table8") => cmd_table8(),
         Some("throughput") => cmd_throughput(),
         Some("topology") => cmd_topology(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
         Some("quant-selftest") => cmd_quant_selftest(),
         Some("info") | None => cmd_info(),
-        Some(other) => bail!("unknown subcommand {other:?} (try: train, faults, table1, table8, throughput, topology, quant-selftest, info)"),
+        Some(other) => bail!("unknown subcommand {other:?} (try: train, faults, table1, table8, throughput, topology, trace, quant-selftest, info)"),
     }
 }
 
@@ -163,6 +165,11 @@ pub fn train_config_from(cfg: &Config) -> Result<TrainConfig> {
     if let Some(p) = cfg.get("checkpoint.resume_from") {
         tc.resume_from = Some(PathBuf::from(p));
     }
+    // --- tracing (DESIGN.md §3.11) --------------------------------------
+    if let Some(p) = cfg.get("trace.path") {
+        tc.trace_path = Some(PathBuf::from(p));
+    }
+    tc.trace_buf = cfg.usize("trace.buffer", tc.trace_buf)?;
     Ok(tc)
 }
 
@@ -324,6 +331,11 @@ fn cmd_train(args: &[String]) -> Result<()> {
                 i += 1;
                 out_csv = Some(PathBuf::from(args.get(i).context("--csv needs a path")?));
             }
+            "--trace" => {
+                i += 1;
+                let p = args.get(i).context("--trace needs a path")?;
+                cfg.set_override(&format!("trace.path={p}"))?;
+            }
             kv if kv.contains('=') => cfg.set_override(kv)?,
             other => bail!("unexpected arg {other:?}"),
         }
@@ -341,6 +353,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let async_params = tc.sync_params == SyncParams::Async;
     let grad_sync = tc.grad_sync;
     let have_faults = !tc.faults.is_empty();
+    let trace_path = tc.trace_path.clone();
     let result = Trainer::new(tc).run()?;
     let m = &result.metrics;
     println!(
@@ -406,6 +419,14 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if let Some(path) = out_csv {
         m.write_csv(&path)?;
         println!("wrote {}", path.display());
+    }
+    if let Some(path) = trace_path {
+        println!(
+            "wrote trace {} (load in https://ui.perfetto.dev or chrome://tracing; \
+             summarize with `loco trace {}`)",
+            path.display(),
+            path.display()
+        );
     }
     Ok(())
 }
@@ -566,7 +587,10 @@ fn cmd_topology(args: &[String]) -> Result<()> {
          wire B/param/step = bytes per parameter per optimizer step; local:H\n\
          pays the full 2.25 B/param exchange once per H steps.\n\
          island = 1 is the flat bucketed engine; the hierarchy compresses only the\n\
-         inter-island hop, so its win grows with the NVLink/NIC bandwidth gap."
+         inter-island hop, so its win grows with the NVLink/NIC bandwidth gap.\n\
+         these are analytic predictions; to see the same schedule as measured\n\
+         per-tier spans, run `loco train ... --trace out.json` and `loco trace\n\
+         out.json` (topology/reduce_scatter + topology/broadcast rows)."
     );
     Ok(())
 }
@@ -637,6 +661,58 @@ fn cmd_topology_tiers(gpus: usize, tiers: &[usize]) -> Result<()> {
          the whole cluster at that tier; intra tiers pay fp32+bf16 (6 B) on the\n\
          shrinking 1/M row, only the outermost cut carries the low-bit exchange."
     );
+    Ok(())
+}
+
+/// Summarize a Chrome-trace file written by `loco train --trace`: one
+/// row per span phase (category + name) with count, total and
+/// p50/p95/p99 durations, heaviest phase first, plus the range of every
+/// counter track. A malformed or truncated file is a hard error
+/// (exit 1), never an empty table.
+fn cmd_trace(args: &[String]) -> Result<()> {
+    let [path] = args else {
+        bail!("usage: loco trace FILE (a --trace output file)");
+    };
+    let path = PathBuf::from(path);
+    let s = loco::trace::summarize(&path)?;
+    println!(
+        "{}: {} events across {} rank(s)",
+        path.display(),
+        s.events,
+        s.ranks
+    );
+    let mut t = Table::new(
+        "span phases — simulated time, heaviest first",
+        &["category", "phase", "count", "total ms", "p50 us", "p95 us", "p99 us"],
+    );
+    for p in &s.spans {
+        t.row(vec![
+            p.cat.clone(),
+            p.name.clone(),
+            p.count.to_string(),
+            format!("{:.3}", p.total_us / 1e3),
+            format!("{:.1}", p.p50_us),
+            format!("{:.1}", p.p95_us),
+            format!("{:.1}", p.p99_us),
+        ]);
+    }
+    println!("{}", t.render());
+    if !s.counters.is_empty() {
+        let mut c = Table::new(
+            "counter tracks — per-step compression quality",
+            &["track", "samples", "last", "min", "max"],
+        );
+        for k in &s.counters {
+            c.row(vec![
+                k.name.clone(),
+                k.count.to_string(),
+                format!("{:.4e}", k.last),
+                format!("{:.4e}", k.min),
+                format!("{:.4e}", k.max),
+            ]);
+        }
+        println!("{}", c.render());
+    }
     Ok(())
 }
 
@@ -719,6 +795,10 @@ fn cmd_info() -> Result<()> {
     } else {
         println!("  (missing — run `make artifacts`)");
     }
-    println!("subcommands: train, faults, table1, table8, throughput, topology, quant-selftest, info");
+    println!(
+        "trace: deterministic sim-time tracer (train --trace FILE writes \
+         Perfetto/Chrome JSON; `loco trace FILE` summarizes; DESIGN.md §3.11)"
+    );
+    println!("subcommands: train, faults, table1, table8, throughput, topology, trace, quant-selftest, info");
     Ok(())
 }

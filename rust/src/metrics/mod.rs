@@ -33,6 +33,110 @@ impl Series {
     }
 }
 
+/// A mergeable log₂-bucketed histogram sketch over durations.
+///
+/// Bucket `i` covers `[2^i, 2^{i+1})` nanoseconds (bucket 0 also takes
+/// zero/sub-nanosecond samples), so ~64 counters span sub-nanosecond to
+/// centuries with a fixed relative error ≤ 2×. Quantiles return the
+/// geometric midpoint of the selected bucket. Two sketches from
+/// different ranks (or runs) merge by adding counts — the property the
+/// per-PR `BENCH_*.json` trajectory and multi-rank aggregation need.
+#[derive(Debug, Clone, Default)]
+pub struct LogHistogram {
+    /// per-bucket sample counts; bucket `i` = `[2^i, 2^{i+1})` ns
+    pub counts: Vec<u64>,
+    /// total samples recorded
+    pub count: u64,
+    /// exact sum of all samples, seconds
+    pub sum_s: f64,
+    /// smallest sample, seconds (0 when empty)
+    pub min_s: f64,
+    /// largest sample, seconds (0 when empty)
+    pub max_s: f64,
+}
+
+impl LogHistogram {
+    fn bucket_of(ns: u64) -> usize {
+        (63 - ns.max(1).leading_zeros()) as usize
+    }
+
+    /// Record one duration (negative/NaN samples are clamped to zero).
+    pub fn record(&mut self, seconds: f64) {
+        let s = if seconds.is_finite() && seconds > 0.0 { seconds } else { 0.0 };
+        let ns = (s * 1e9).round() as u64;
+        let b = Self::bucket_of(ns);
+        if self.counts.len() <= b {
+            self.counts.resize(b + 1, 0);
+        }
+        self.counts[b] += 1;
+        if self.count == 0 {
+            self.min_s = s;
+            self.max_s = s;
+        } else {
+            self.min_s = self.min_s.min(s);
+            self.max_s = self.max_s.max(s);
+        }
+        self.count += 1;
+        self.sum_s += s;
+    }
+
+    /// Merge another sketch into this one (bucket-wise addition).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (i, &c) in other.counts.iter().enumerate() {
+            self.counts[i] += c;
+        }
+        if self.count == 0 {
+            self.min_s = other.min_s;
+            self.max_s = other.max_s;
+        } else {
+            self.min_s = self.min_s.min(other.min_s);
+            self.max_s = self.max_s.max(other.max_s);
+        }
+        self.count += other.count;
+        self.sum_s += other.sum_s;
+    }
+
+    /// Mean sample, seconds (0 when empty).
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    /// Approximate `q`-quantile in seconds: the geometric midpoint of
+    /// the bucket holding the `q`-th sample (exact min/max at the ends).
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if q <= 0.0 {
+            return self.min_s;
+        }
+        if q >= 1.0 {
+            return self.max_s;
+        }
+        let target = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                // geometric mid of [2^i, 2^{i+1}) ns
+                let mid_ns = 2f64.powi(i as i32) * std::f64::consts::SQRT_2;
+                return (mid_ns * 1e-9).clamp(self.min_s, self.max_s);
+            }
+        }
+        self.max_s
+    }
+}
+
 /// Everything a training run reports.
 #[derive(Debug, Clone, Default)]
 pub struct RunMetrics {
@@ -128,6 +232,16 @@ pub struct RunMetrics {
     /// step this run resumed from (`checkpoint.resume_from`); 0 means a
     /// fresh run
     pub resumed_from_step: u64,
+    /// per-drain distribution behind the [`RunMetrics::grad_sync_wait_s`]
+    /// and [`RunMetrics::param_sync_wait_s`] sums: rank 0's blocked time
+    /// at each gradient/parameter drain (mergeable log₂ sketch)
+    pub wait_hist: LogHistogram,
+    /// per-launch distribution behind the `*_launch_s` sums: rank 0's
+    /// time in each asynchronous launch (encode + non-blocking sends)
+    pub launch_hist: LogHistogram,
+    /// per-exchange distribution of rank 0's serial encode time on the
+    /// synchronous path (bucketed or monolithic `sync` calls)
+    pub encode_hist: LogHistogram,
     pub steps: u64,
 }
 
@@ -173,8 +287,18 @@ impl RunMetrics {
         }
         let mut f = std::fs::File::create(path)?;
         writeln!(f, "step,train_loss,val_loss")?;
+        // Two-pointer merge over the step-sorted series: a val point
+        // whose step has no train entry gets its own `step,,val` row
+        // (final-eval steps land past the last logged train loss).
         let mut val_iter = self.val_loss.points.iter().peekable();
         for &(step, train) in &self.train_loss.points {
+            while let Some(&&(vs, vv)) = val_iter.peek() {
+                if vs >= step {
+                    break;
+                }
+                val_iter.next();
+                writeln!(f, "{vs},,{vv:.6}")?;
+            }
             let val = match val_iter.peek() {
                 Some(&&(vs, vv)) if vs == step => {
                     val_iter.next();
@@ -183,6 +307,9 @@ impl RunMetrics {
                 _ => String::new(),
             };
             writeln!(f, "{step},{train:.6},{val}")?;
+        }
+        for &(vs, vv) in val_iter {
+            writeln!(f, "{vs},,{vv:.6}")?;
         }
         Ok(())
     }
@@ -242,5 +369,86 @@ mod tests {
         assert!(text.contains("step,train_loss,val_loss"));
         assert!(text.contains("1,2.500000,2.600000"));
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn csv_keeps_unmatched_val_rows() {
+        // Pin the fix for the silent drop: val points whose step has no
+        // train entry (before, between, and after train rows) must all
+        // be emitted as their own rows.
+        let mut m = RunMetrics::new();
+        m.train_loss.push(2, 3.0);
+        m.train_loss.push(4, 2.5);
+        m.val_loss.push(0, 3.4); // before any train row
+        m.val_loss.push(3, 2.9); // between train rows
+        m.val_loss.push(4, 2.6); // exact match
+        m.val_loss.push(6, 2.4); // after the last train row (final eval)
+        let path = std::env::temp_dir().join("loco_metrics_val_rows.csv");
+        m.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(
+            lines,
+            vec![
+                "step,train_loss,val_loss",
+                "0,,3.400000",
+                "2,3.000000,",
+                "3,,2.900000",
+                "4,2.500000,2.600000",
+                "6,,2.400000",
+            ]
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn log_histogram_record_and_quantiles() {
+        let mut h = LogHistogram::default();
+        assert_eq!(h.quantile_s(0.5), 0.0);
+        for us in [1.0, 2.0, 4.0, 8.0, 1000.0] {
+            h.record(us * 1e-6);
+        }
+        assert_eq!(h.count, 5);
+        assert!((h.min_s - 1e-6).abs() < 1e-12);
+        assert!((h.max_s - 1e-3).abs() < 1e-9);
+        assert!((h.sum_s - 1.015e-3).abs() < 1e-9);
+        // p50 lands in the 4 µs bucket: within 2x of the true median
+        let p50 = h.quantile_s(0.5);
+        assert!(p50 >= 2e-6 && p50 <= 8e-6, "p50 {p50}");
+        assert_eq!(h.quantile_s(0.0), h.min_s);
+        assert_eq!(h.quantile_s(1.0), h.max_s);
+        // degenerate samples are clamped, not dropped
+        h.record(f64::NAN);
+        h.record(-1.0);
+        assert_eq!(h.count, 7);
+        assert_eq!(h.min_s, 0.0);
+    }
+
+    #[test]
+    fn log_histogram_merge_matches_combined_recording() {
+        let mut a = LogHistogram::default();
+        let mut b = LogHistogram::default();
+        let mut all = LogHistogram::default();
+        for i in 1..=20u32 {
+            let s = 1e-6 * i as f64;
+            if i % 2 == 0 {
+                a.record(s);
+            } else {
+                b.record(s);
+            }
+            all.record(s);
+        }
+        a.merge(&b);
+        assert_eq!(a.count, all.count);
+        assert_eq!(a.counts, all.counts);
+        assert_eq!(a.min_s, all.min_s);
+        assert_eq!(a.max_s, all.max_s);
+        assert!((a.sum_s - all.sum_s).abs() < 1e-15);
+        assert_eq!(a.quantile_s(0.95), all.quantile_s(0.95));
+        // merging into an empty sketch copies the other side
+        let mut e = LogHistogram::default();
+        e.merge(&all);
+        assert_eq!(e.count, all.count);
+        assert_eq!(e.min_s, all.min_s);
     }
 }

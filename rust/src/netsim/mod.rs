@@ -40,6 +40,19 @@ pub const A800_IB: Interconnect = Interconnect { name: "a800-ib", bw: 20e9 };
 /// ([`throughput::analytic_throughput_hier`]).
 pub const NVLINK: Interconnect = Interconnect { name: "nvlink", bw: 300e9 };
 
+/// Interconnect preset the trace cost model ([`crate::trace`]) assumes
+/// for link level `level` of an `n_levels`-deep tier tree when no
+/// `LinkSim` is attached: the outermost cut is the slow fabric
+/// ([`A800_IB`]), every inner level is NVLink-class. Matches the
+/// two-speed assumption of [`throughput::analytic_throughput_hier`].
+pub fn link_preset_for_level(level: usize, n_levels: usize) -> Interconnect {
+    if n_levels <= 1 || level + 1 == n_levels {
+        A800_IB
+    } else {
+        NVLINK
+    }
+}
+
 /// GPU compute preset (bf16).
 #[derive(Debug, Clone, Copy)]
 pub struct Gpu {

@@ -467,8 +467,18 @@ impl UnevenPlan {
         step: u64,
         stale: bool,
     ) -> Vec<(usize, WireMsg)> {
+        let mut t0 = 0;
+        crate::trace::with(|tr| t0 = tr.now_ns());
         let intra = ctx.group(&self.island);
         intra.ring_reduce_scatter(grad, &self.rows);
+        crate::trace::with(|tr| {
+            tr.span_at(
+                t0,
+                "topology",
+                "reduce_scatter",
+                &[("tier", 0.0), ("group", self.island.len() as f64)],
+            );
+        });
         let m = self.island.len() as f32;
         for x in grad[self.my_row.clone()].iter_mut() {
             *x /= m;
@@ -583,7 +593,17 @@ impl UnevenPlan {
             compress::write_wire(&msg, &mut params[s.range.clone()]);
         }
         let wait = t0.elapsed();
+        let mut ts = 0;
+        crate::trace::with(|tr| ts = tr.now_ns());
         broadcast_group_rows(ctx, &self.island, &self.rows, self.my_idx, params, bf16);
+        crate::trace::with(|tr| {
+            tr.span_at(
+                ts,
+                "topology",
+                "broadcast",
+                &[("tier", 0.0), ("group", self.island.len() as f64)],
+            );
+        });
         wait
     }
 }
@@ -807,6 +827,26 @@ impl HierSyncEngine {
         }
     }
 
+    /// Switch per-step compression telemetry on or off for whatever plan
+    /// this engine runs (see [`SyncEngine::set_telemetry`]).
+    pub fn set_telemetry(&self, on: bool) {
+        match &self.plan {
+            EnginePlan::Flat(e) => e.set_telemetry(on),
+            EnginePlan::Tiered(t) => t.inner.set_telemetry(on),
+            EnginePlan::Uneven(u) => u.enc.lock().unwrap().set_telemetry(on),
+        }
+    }
+
+    /// Collect and reset the compression telemetry accumulated since the
+    /// previous take (see [`SyncEngine::take_telemetry`]).
+    pub fn take_telemetry(&self) -> Option<compress::EncoderTelemetry> {
+        match &self.plan {
+            EnginePlan::Flat(e) => e.take_telemetry(),
+            EnginePlan::Tiered(t) => t.inner.take_telemetry(),
+            EnginePlan::Uneven(u) => u.enc.lock().unwrap().take_telemetry(),
+        }
+    }
+
     /// The wrapped per-communicator engine (tests, diagnostics); uneven
     /// topologies route slices directly and have none.
     pub fn engine(&self) -> Option<&SyncEngine> {
@@ -822,9 +862,19 @@ impl HierSyncEngine {
     /// now aggregates (so the wire scale `s` keeps seeing per-node
     /// gradient magnitudes).
     fn reduce_intra(&self, t: &TieredPlan, ctx: &NodeCtx, grad: &mut [f32]) {
-        for lv in &t.levels {
+        for (tier, lv) in t.levels.iter().enumerate() {
+            let mut t0 = 0;
+            crate::trace::with(|tr| t0 = tr.now_ns());
             let g = ctx.group(&lv.members);
             g.ring_reduce_scatter(grad, &lv.rows);
+            crate::trace::with(|tr| {
+                tr.span_at(
+                    t0,
+                    "topology",
+                    "reduce_scatter",
+                    &[("tier", tier as f64), ("group", lv.members.len() as f64)],
+                );
+            });
         }
         for x in grad[t.my_row.clone()].iter_mut() {
             *x /= t.scale;
@@ -835,8 +885,18 @@ impl HierSyncEngine {
     /// intra tier, outermost first, all-gather the members' rows so the
     /// shared span fills; after tier 0 every node holds the full vector.
     fn broadcast_down(&self, t: &TieredPlan, ctx: &NodeCtx, params: &mut [f32], bf16: bool) {
-        for lv in t.levels.iter().rev() {
+        for (tier, lv) in t.levels.iter().enumerate().rev() {
+            let mut t0 = 0;
+            crate::trace::with(|tr| t0 = tr.now_ns());
             broadcast_group_rows(ctx, &lv.members, &lv.rows, lv.my_idx, params, bf16);
+            crate::trace::with(|tr| {
+                tr.span_at(
+                    t0,
+                    "topology",
+                    "broadcast",
+                    &[("tier", tier as f64), ("group", lv.members.len() as f64)],
+                );
+            });
         }
     }
 

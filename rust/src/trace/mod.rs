@@ -1,0 +1,1007 @@
+//! Deterministic tracing & telemetry: sim-time spans, compression-quality
+//! counter series, Chrome-trace/Perfetto export.
+//!
+//! Every rank owns a [`Tracer`]: a preallocated ring buffer of
+//! [`Event`]s stamped against a **simulated clock**, not the wall clock.
+//! The clock only advances by *modeled* durations — wire time from the
+//! same deterministic quantities [`crate::collective::LinkSim`] uses
+//! (bytes, per-level bandwidth, the replayed fault schedule's straggler
+//! stretch), compute time from the [`crate::netsim`] analytic presets —
+//! so two runs with the same seed emit bitwise-identical trace files
+//! regardless of scheduler noise. (Per-message jitter is the one LinkSim
+//! timing effect the model omits: its replay index depends on whether a
+//! LinkSim is attached, which would make traces depend on the harness.)
+//!
+//! Instrumentation reaches the layers without threading a handle through
+//! every signature: [`install`] binds a tracer to the current node
+//! thread, and the hooks in `collective`, `comm`, `topology` and `train`
+//! call [`with`], which is a no-op (one thread-local read, zero
+//! allocation — asserted in `benches/hotpath.rs`) when tracing is off.
+//! Layers that perform sends in nondeterministic order (the bucketed
+//! engine's worker-pool forwarding loop) wrap the exchange in
+//! [`suppress`] and emit per-bucket spans in plan order afterwards.
+//!
+//! Span taxonomy (see DESIGN.md §3.11 for the full table):
+//! * `train` — `step`, `fwd_bwd`, `optimizer`, `eval`, `grad_launch`,
+//!   `grad_window`, `grad_drain`, `param_launch`, `param_window`,
+//!   `param_drain`, `grad_sync`, `checkpoint`
+//! * `comm` — per-bucket `encode` / `wire` / `drain` (+ `launch` on the
+//!   stale path), args carry bucket id and byte counts
+//! * `topology` — per-tier `reduce_scatter` / `broadcast` hops
+//! * `collective` — tagged/untagged `send` / `recv` with fault-stretched
+//!   egress (straggler waits appear as stretched `recv` spans)
+//! * counters — `loco/ef_norm`, `loco/comp_err_rms`, `loco/comp_err_rel`,
+//!   `loco/auto_scale_ema` (the per-step LoCo telemetry series)
+
+use std::cell::{Cell, RefCell};
+use std::fmt::Write as _;
+use std::path::Path;
+use std::rc::Rc;
+
+use crate::netsim;
+
+/// Maximum number of key/value args carried inline by one [`Event`]
+/// (fixed-size so recording never allocates).
+pub const MAX_ARGS: usize = 3;
+
+/// Chrome-trace phase of a recorded event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ph {
+    /// A complete duration span (`ph:"X"`).
+    Span,
+    /// A counter sample (`ph:"C"`).
+    Counter,
+    /// An instant marker (`ph:"i"`).
+    Instant,
+}
+
+/// One recorded trace event. `Copy` with inline args: pushing an event
+/// into the ring buffer touches no allocator.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Chrome-trace phase.
+    pub ph: Ph,
+    /// Start time on the rank's simulated clock, nanoseconds.
+    pub t_ns: u64,
+    /// Modeled duration (0 for counters/instants).
+    pub dur_ns: u64,
+    /// Span category (`train` / `comm` / `topology` / `collective`).
+    pub cat: &'static str,
+    /// Event (or counter-track) name.
+    pub name: &'static str,
+    args: [(&'static str, f64); MAX_ARGS],
+    n_args: u8,
+}
+
+impl Event {
+    /// The key/value args recorded with the event.
+    pub fn args(&self) -> &[(&'static str, f64)] {
+        &self.args[..self.n_args as usize]
+    }
+}
+
+fn mk_args(args: &[(&'static str, f64)]) -> ([(&'static str, f64); MAX_ARGS], u8) {
+    let mut a = [("", 0.0); MAX_ARGS];
+    let n = args.len().min(MAX_ARGS);
+    a[..n].copy_from_slice(&args[..n]);
+    (a, n as u8)
+}
+
+/// The events one rank recorded, in chronological order, plus how many
+/// fell out of the ring buffer.
+#[derive(Debug, Clone)]
+pub struct RankTrace {
+    /// Global rank that recorded these events.
+    pub rank: usize,
+    /// Events in chronological (record) order.
+    pub events: Vec<Event>,
+    /// Events overwritten because the ring buffer was full.
+    pub dropped: u64,
+}
+
+/// Per-rank trace recorder: a simulated-time clock plus a preallocated
+/// ring buffer of events. Single-threaded by design (one per node
+/// thread, bound via [`install`]).
+pub struct Tracer {
+    rank: usize,
+    cap: usize,
+    clock_ns: Cell<u64>,
+    events: RefCell<Vec<Event>>,
+    /// next overwrite position once the buffer is full
+    head: Cell<usize>,
+    dropped: Cell<u64>,
+}
+
+impl Tracer {
+    /// A tracer for `rank` holding at most `cap` events (oldest events
+    /// are overwritten ring-style beyond that).
+    pub fn new(rank: usize, cap: usize) -> Tracer {
+        let cap = cap.max(16);
+        Tracer {
+            rank,
+            cap,
+            clock_ns: Cell::new(0),
+            events: RefCell::new(Vec::with_capacity(cap)),
+            head: Cell::new(0),
+            dropped: Cell::new(0),
+        }
+    }
+
+    /// The rank this tracer records for.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Current simulated time, nanoseconds since the rank started.
+    pub fn now_ns(&self) -> u64 {
+        self.clock_ns.get()
+    }
+
+    /// Advance the simulated clock by a modeled duration.
+    pub fn advance_ns(&self, d: u64) {
+        self.clock_ns.set(self.clock_ns.get() + d);
+    }
+
+    fn push(&self, ev: Event) {
+        let mut evs = self.events.borrow_mut();
+        if evs.len() < self.cap {
+            evs.push(ev);
+        } else {
+            let h = self.head.get();
+            evs[h] = ev;
+            self.head.set((h + 1) % self.cap);
+            self.dropped.set(self.dropped.get() + 1);
+        }
+    }
+
+    /// Record a complete span of modeled duration `dur_ns` starting now,
+    /// and advance the clock past it.
+    pub fn span(&self, cat: &'static str, name: &'static str, dur_ns: u64, args: &[(&'static str, f64)]) {
+        let (a, n) = mk_args(args);
+        let t = self.clock_ns.get();
+        self.push(Event { ph: Ph::Span, t_ns: t, dur_ns, cat, name, args: a, n_args: n });
+        self.clock_ns.set(t + dur_ns);
+    }
+
+    /// Record a span covering `[t0, now]` — the enclosing-phase pattern:
+    /// take `t0 = now_ns()`, run the phase (whose inner spans advance the
+    /// clock), then stamp the wrapper. Does not advance the clock.
+    pub fn span_at(&self, t0: u64, cat: &'static str, name: &'static str, args: &[(&'static str, f64)]) {
+        let (a, n) = mk_args(args);
+        let now = self.clock_ns.get();
+        self.push(Event {
+            ph: Ph::Span,
+            t_ns: t0,
+            dur_ns: now.saturating_sub(t0),
+            cat,
+            name,
+            args: a,
+            n_args: n,
+        });
+    }
+
+    /// Record a counter sample on track `name` at the current time.
+    pub fn counter(&self, name: &'static str, value: f64) {
+        let (a, n) = mk_args(&[("value", value)]);
+        self.push(Event {
+            ph: Ph::Counter,
+            t_ns: self.clock_ns.get(),
+            dur_ns: 0,
+            cat: "counter",
+            name,
+            args: a,
+            n_args: n,
+        });
+    }
+
+    /// Record an instant marker at the current time.
+    pub fn instant(&self, cat: &'static str, name: &'static str, args: &[(&'static str, f64)]) {
+        let (a, n) = mk_args(args);
+        self.push(Event {
+            ph: Ph::Instant,
+            t_ns: self.clock_ns.get(),
+            dur_ns: 0,
+            cat,
+            name,
+            args: a,
+            n_args: n,
+        });
+    }
+
+    /// Extract the recorded events in chronological order.
+    pub fn finish(&self) -> RankTrace {
+        let evs = self.events.borrow();
+        let h = self.head.get();
+        let mut events = Vec::with_capacity(evs.len());
+        events.extend_from_slice(&evs[h..]);
+        events.extend_from_slice(&evs[..h]);
+        RankTrace { rank: self.rank, events, dropped: self.dropped.get() }
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<Rc<Tracer>>> = const { RefCell::new(None) };
+    static SUPPRESSED: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Clears the thread's tracer binding on drop (see [`install`]).
+pub struct InstallGuard(());
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        CURRENT.with(|c| *c.borrow_mut() = None);
+    }
+}
+
+/// Bind `t` as the current thread's tracer until the guard drops. The
+/// instrumentation hooks ([`with`]) only fire on threads with a binding,
+/// so worker-pool threads stay silent and untraced runs pay one
+/// thread-local read per hook.
+pub fn install(t: Rc<Tracer>) -> InstallGuard {
+    CURRENT.with(|c| *c.borrow_mut() = Some(t));
+    InstallGuard(())
+}
+
+/// Run `f` against the thread's tracer, if one is installed and not
+/// suppressed. The disabled path is a single thread-local read and a
+/// branch — no allocation (asserted in `benches/hotpath.rs`).
+pub fn with<F: FnOnce(&Tracer)>(f: F) {
+    CURRENT.with(|c| {
+        if let Some(t) = c.borrow().as_ref() {
+            if SUPPRESSED.with(|s| s.get()) == 0 {
+                f(t);
+            }
+        }
+    });
+}
+
+/// True when the current thread has an active (non-suppressed) tracer —
+/// for gating telemetry bookkeeping that has a cost of its own.
+pub fn active() -> bool {
+    CURRENT.with(|c| c.borrow().is_some()) && SUPPRESSED.with(|s| s.get()) == 0
+}
+
+/// Re-enables the thread's hooks on drop (see [`suppress`]).
+pub struct SuppressGuard(());
+
+impl Drop for SuppressGuard {
+    fn drop(&mut self) {
+        SUPPRESSED.with(|s| s.set(s.get() - 1));
+    }
+}
+
+/// Silence the thread's instrumentation hooks until the guard drops.
+/// Used around exchanges whose low-level send order is nondeterministic
+/// (the bucketed engine's worker-pool forwarding): the caller emits
+/// deterministic per-bucket spans itself afterwards.
+pub fn suppress() -> SuppressGuard {
+    SUPPRESSED.with(|s| s.set(s.get() + 1));
+    SuppressGuard(())
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic cost model
+// ---------------------------------------------------------------------------
+
+/// Deterministic link model for wire spans: the bandwidth/latency the
+/// trace clock charges for a message, plus the sender's fault-schedule
+/// straggler stretch. Mirrors [`crate::collective::LinkSim`]'s formula
+/// (`stretch * bytes / bw + latency`) with deterministic inputs only.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// effective bandwidth, bytes/s
+    pub bw: f64,
+    /// per-message latency, seconds
+    pub latency_s: f64,
+    /// sender-side straggler stretch (1.0 when not straggling)
+    pub stretch: f64,
+    /// link level (0 = leaf island, rising to the outermost cut)
+    pub level: usize,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        LinkModel { bw: netsim::A800_IB.bw, latency_s: 20e-6, stretch: 1.0, level: 0 }
+    }
+}
+
+impl LinkModel {
+    /// Modeled egress-serialization nanoseconds for `bytes` (no latency).
+    pub fn egress_ns(&self, bytes: u64) -> u64 {
+        (self.stretch * bytes as f64 / self.bw * 1e9).round() as u64
+    }
+
+    /// Modeled delivery nanoseconds for `bytes`: serialization + latency.
+    pub fn delivery_ns(&self, bytes: u64) -> u64 {
+        self.egress_ns(bytes) + (self.latency_s * 1e9).round() as u64
+    }
+}
+
+/// Modeled nanoseconds for a streaming memory-bound kernel touching
+/// `bytes` of HBM (the A100 preset — encode/decode/optimizer spans).
+pub fn mem_ns(bytes: f64) -> u64 {
+    (bytes / netsim::A100.mem_bw * 1e9).round() as u64
+}
+
+/// Modeled nanoseconds for `flops` of bf16 compute at the A100 preset's
+/// achieved MFU (forward/backward and eval spans).
+pub fn flops_ns(flops: f64) -> u64 {
+    (flops / (netsim::A100.flops * netsim::A100.mfu) * 1e9).round() as u64
+}
+
+// ---------------------------------------------------------------------------
+// Chrome-trace JSON export
+// ---------------------------------------------------------------------------
+
+/// `ts`/`dur` in microseconds with nanosecond precision, formatted as
+/// exact decimal strings (pure integer arithmetic — bitwise stable).
+fn fmt_us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+/// Deterministic JSON number: integers render without a fraction,
+/// everything else through Rust's shortest-roundtrip `f64` formatting.
+/// Non-finite values (invalid JSON) clamp to 0.
+fn fmt_num(v: f64) -> String {
+    if !v.is_finite() {
+        return "0".to_string();
+    }
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn escape_json(s: &str, out: &mut String) {
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+fn write_event(out: &mut String, pid: usize, ev: &Event) {
+    let ph = match ev.ph {
+        Ph::Span => "X",
+        Ph::Counter => "C",
+        Ph::Instant => "i",
+    };
+    let _ = write!(out, "{{\"name\":\"");
+    escape_json(ev.name, out);
+    let _ = write!(out, "\",\"cat\":\"");
+    escape_json(ev.cat, out);
+    let _ = write!(out, "\",\"ph\":\"{ph}\",\"ts\":{},", fmt_us(ev.t_ns));
+    if ev.ph == Ph::Span {
+        let _ = write!(out, "\"dur\":{},", fmt_us(ev.dur_ns));
+    }
+    if ev.ph == Ph::Instant {
+        out.push_str("\"s\":\"t\",");
+    }
+    let _ = write!(out, "\"pid\":{pid},\"tid\":0,\"args\":{{");
+    for (i, (k, v)) in ev.args().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('"');
+        escape_json(k, out);
+        let _ = write!(out, "\":{}", fmt_num(*v));
+    }
+    out.push_str("}}");
+}
+
+/// Write per-rank traces as a Chrome-trace/Perfetto JSON array (one
+/// process per rank). Deterministic: ranks in order, events in record
+/// order, integer-exact timestamp formatting — identical inputs produce
+/// a byte-identical file.
+pub fn write_chrome_trace(path: &Path, traces: &[RankTrace]) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut out = String::new();
+    out.push_str("[\n");
+    let mut first = true;
+    for tr in traces {
+        let mut sep = |out: &mut String| {
+            if !first {
+                out.push_str(",\n");
+            }
+            first = false;
+        };
+        sep(&mut out);
+        let _ = write!(
+            out,
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\"tid\":0,\
+             \"args\":{{\"name\":\"rank {}\"}}}}",
+            tr.rank, tr.rank
+        );
+        for ev in &tr.events {
+            sep(&mut out);
+            write_event(&mut out, tr.rank, ev);
+        }
+        if tr.dropped > 0 {
+            sep(&mut out);
+            let _ = write!(
+                out,
+                "{{\"name\":\"trace/dropped_events\",\"cat\":\"counter\",\"ph\":\"C\",\
+                 \"ts\":0.000,\"pid\":{},\"tid\":0,\"args\":{{\"value\":{}}}}}",
+                tr.rank, tr.dropped
+            );
+        }
+    }
+    out.push_str("\n]\n");
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Reading traces back: a minimal JSON parser + the `loco trace` summary
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value (the self-contained subset reader behind
+/// [`read_events`]; no external dependencies).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// any JSON number, as f64
+    Num(f64),
+    /// a string
+    Str(String),
+    /// an array
+    Arr(Vec<Json>),
+    /// an object, fields in source order
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup (None on non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The value as a number, if it is one.
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// The value as a string, if it is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> anyhow::Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            anyhow::bail!("expected '{}' at byte {}", c as char, self.i)
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Json) -> anyhow::Result<Json> {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(v)
+        } else {
+            anyhow::bail!("malformed literal at byte {}", self.i)
+        }
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek().ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek().ok_or_else(|| anyhow::anyhow!("unterminated escape"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            anyhow::ensure!(self.i + 4 <= self.b.len(), "truncated \\u escape");
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        _ => anyhow::bail!("bad escape at byte {}", self.i),
+                    }
+                }
+                c => {
+                    // re-decode multi-byte UTF-8 sequences
+                    if c < 0x80 {
+                        s.push(c as char);
+                    } else {
+                        let start = self.i - 1;
+                        let mut end = self.i;
+                        while end < self.b.len() && self.b[end] & 0xC0 == 0x80 {
+                            end += 1;
+                        }
+                        s.push_str(std::str::from_utf8(&self.b[start..end])?);
+                        self.i = end;
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> anyhow::Result<f64> {
+        let start = self.i;
+        while self
+            .peek()
+            .is_some_and(|c| matches!(c, b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        s.parse::<f64>().map_err(|_| anyhow::anyhow!("bad number '{s}' at byte {start}"))
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => {
+                self.i += 1;
+                let mut fields = Vec::new();
+                self.ws();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                loop {
+                    self.ws();
+                    let k = self.string()?;
+                    self.ws();
+                    self.expect(b':')?;
+                    let v = self.value()?;
+                    fields.push((k, v));
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(Json::Obj(fields));
+                        }
+                        _ => anyhow::bail!("expected ',' or '}}' at byte {}", self.i),
+                    }
+                }
+            }
+            Some(b'[') => {
+                self.i += 1;
+                let mut items = Vec::new();
+                self.ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    items.push(self.value()?);
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        _ => anyhow::bail!("expected ',' or ']' at byte {}", self.i),
+                    }
+                }
+            }
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(_) => Ok(Json::Num(self.number()?)),
+            None => anyhow::bail!("unexpected end of input at byte {}", self.i),
+        }
+    }
+}
+
+/// Parse a JSON document (the minimal reader used by `loco trace` and
+/// the determinism tests — no external dependencies).
+pub fn parse_json(s: &str) -> anyhow::Result<Json> {
+    let mut p = JsonParser { b: s.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.ws();
+    anyhow::ensure!(p.i == p.b.len(), "trailing garbage at byte {}", p.i);
+    Ok(v)
+}
+
+/// One event read back from a trace file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedEvent {
+    /// emitting rank (`pid`)
+    pub pid: i64,
+    /// Chrome phase string (`X`, `C`, `i`, `M`)
+    pub ph: String,
+    /// event name
+    pub name: String,
+    /// category (empty for metadata events)
+    pub cat: String,
+    /// start timestamp, microseconds
+    pub ts_us: f64,
+    /// duration, microseconds (0 for non-spans)
+    pub dur_us: f64,
+    /// numeric args in source order (non-numeric args are skipped)
+    pub args: Vec<(String, f64)>,
+}
+
+/// Read a Chrome-trace JSON file back into events. Fails on anything
+/// that is not a JSON array of event objects.
+pub fn read_events(path: &Path) -> anyhow::Result<Vec<ParsedEvent>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+    let doc = parse_json(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let Json::Arr(items) = doc else {
+        anyhow::bail!("{}: top-level value is not an event array", path.display());
+    };
+    let mut out = Vec::with_capacity(items.len());
+    for (i, it) in items.iter().enumerate() {
+        let obj = match it {
+            Json::Obj(_) => it,
+            _ => anyhow::bail!("{}: event {i} is not an object", path.display()),
+        };
+        let field_str = |k: &str| obj.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+        let field_num = |k: &str| obj.get(k).and_then(Json::as_num).unwrap_or(0.0);
+        let name = field_str("name");
+        let ph = field_str("ph");
+        anyhow::ensure!(!ph.is_empty(), "{}: event {i} has no ph", path.display());
+        let mut args = Vec::new();
+        if let Some(Json::Obj(fields)) = obj.get("args") {
+            for (k, v) in fields {
+                if let Some(x) = v.as_num() {
+                    args.push((k.clone(), x));
+                }
+            }
+        }
+        out.push(ParsedEvent {
+            pid: field_num("pid") as i64,
+            ph,
+            name,
+            cat: field_str("cat"),
+            ts_us: field_num("ts"),
+            dur_us: field_num("dur"),
+            args,
+        });
+    }
+    Ok(out)
+}
+
+/// Aggregate statistics for one span phase (category + name).
+#[derive(Debug, Clone)]
+pub struct PhaseStats {
+    /// span category
+    pub cat: String,
+    /// span name
+    pub name: String,
+    /// number of spans
+    pub count: usize,
+    /// summed duration, microseconds
+    pub total_us: f64,
+    /// 50th-percentile duration, microseconds
+    pub p50_us: f64,
+    /// 95th-percentile duration, microseconds
+    pub p95_us: f64,
+    /// 99th-percentile duration, microseconds
+    pub p99_us: f64,
+}
+
+/// Aggregate statistics for one counter track.
+#[derive(Debug, Clone)]
+pub struct CounterStats {
+    /// counter track name
+    pub name: String,
+    /// number of samples
+    pub count: usize,
+    /// last sampled value
+    pub last: f64,
+    /// minimum sampled value
+    pub min: f64,
+    /// maximum sampled value
+    pub max: f64,
+}
+
+/// What `loco trace` prints about a trace file.
+#[derive(Debug, Clone)]
+pub struct TraceSummary {
+    /// distinct `pid`s (ranks) seen
+    pub ranks: usize,
+    /// total events in the file
+    pub events: usize,
+    /// per-phase duration stats, heaviest first
+    pub spans: Vec<PhaseStats>,
+    /// per-track counter stats, by name
+    pub counters: Vec<CounterStats>,
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Summarize a trace file into per-phase p50/p95/p99 duration rows and
+/// counter ranges. Errors (exit 1 from `loco trace`) on malformed files.
+pub fn summarize(path: &Path) -> anyhow::Result<TraceSummary> {
+    let events = read_events(path)?;
+    let mut ranks = std::collections::BTreeSet::new();
+    let mut spans: std::collections::BTreeMap<(String, String), Vec<f64>> =
+        std::collections::BTreeMap::new();
+    let mut counters: std::collections::BTreeMap<String, CounterStats> =
+        std::collections::BTreeMap::new();
+    for ev in &events {
+        ranks.insert(ev.pid);
+        match ev.ph.as_str() {
+            "X" => {
+                spans.entry((ev.cat.clone(), ev.name.clone())).or_default().push(ev.dur_us);
+            }
+            "C" => {
+                let v = ev
+                    .args
+                    .iter()
+                    .find(|(k, _)| k == "value")
+                    .map(|&(_, v)| v)
+                    .unwrap_or(0.0);
+                counters
+                    .entry(ev.name.clone())
+                    .and_modify(|c| {
+                        c.count += 1;
+                        c.last = v;
+                        c.min = c.min.min(v);
+                        c.max = c.max.max(v);
+                    })
+                    .or_insert(CounterStats {
+                        name: ev.name.clone(),
+                        count: 1,
+                        last: v,
+                        min: v,
+                        max: v,
+                    });
+            }
+            _ => {}
+        }
+    }
+    let mut span_stats: Vec<PhaseStats> = spans
+        .into_iter()
+        .map(|((cat, name), mut durs)| {
+            durs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            PhaseStats {
+                cat,
+                name,
+                count: durs.len(),
+                total_us: durs.iter().sum(),
+                p50_us: percentile(&durs, 0.50),
+                p95_us: percentile(&durs, 0.95),
+                p99_us: percentile(&durs, 0.99),
+            }
+        })
+        .collect();
+    span_stats.sort_by(|a, b| {
+        b.total_us.partial_cmp(&a.total_us).unwrap().then_with(|| a.name.cmp(&b.name))
+    });
+    Ok(TraceSummary {
+        ranks: ranks.len(),
+        events: events.len(),
+        spans: span_stats,
+        counters: counters.into_values().collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_and_spans() {
+        let t = Tracer::new(3, 64);
+        assert_eq!(t.now_ns(), 0);
+        t.span("comm", "encode", 1_500, &[("bucket", 2.0)]);
+        assert_eq!(t.now_ns(), 1_500);
+        let t0 = t.now_ns();
+        t.advance_ns(500);
+        t.span_at(t0, "train", "step", &[]);
+        t.counter("loco/ef_norm", 0.25);
+        let tr = t.finish();
+        assert_eq!(tr.rank, 3);
+        assert_eq!(tr.events.len(), 3);
+        assert_eq!(tr.events[0].name, "encode");
+        assert_eq!(tr.events[0].args(), &[("bucket", 2.0)]);
+        assert_eq!(tr.events[1].t_ns, 1_500);
+        assert_eq!(tr.events[1].dur_ns, 500);
+        assert_eq!(tr.events[2].ph, Ph::Counter);
+        assert_eq!(tr.dropped, 0);
+    }
+
+    #[test]
+    fn ring_buffer_wraps_keeping_newest() {
+        let t = Tracer::new(0, 16); // min capacity
+        for i in 0..20u64 {
+            t.span("x", "s", 1, &[("i", i as f64)]);
+        }
+        let tr = t.finish();
+        assert_eq!(tr.events.len(), 16);
+        assert_eq!(tr.dropped, 4);
+        // chronological order preserved: oldest surviving first
+        let idx: Vec<f64> = tr.events.iter().map(|e| e.args()[0].1).collect();
+        assert_eq!(idx, (4..20).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tls_install_with_and_suppress() {
+        let hits = Cell::new(0u32);
+        with(|_| hits.set(hits.get() + 1));
+        assert_eq!(hits.get(), 0, "no tracer installed: hook must not fire");
+        assert!(!active());
+        let t = Rc::new(Tracer::new(0, 64));
+        let g = install(t.clone());
+        assert!(active());
+        with(|tr| {
+            hits.set(hits.get() + 1);
+            tr.span("c", "n", 1, &[]);
+        });
+        assert_eq!(hits.get(), 1);
+        {
+            let _s = suppress();
+            assert!(!active());
+            with(|_| hits.set(hits.get() + 10));
+            assert_eq!(hits.get(), 1, "suppressed hook fired");
+        }
+        with(|_| hits.set(hits.get() + 1));
+        assert_eq!(hits.get(), 2, "suppression must lift when the guard drops");
+        drop(g);
+        with(|_| hits.set(hits.get() + 100));
+        assert_eq!(hits.get(), 2, "hook fired after uninstall");
+        assert_eq!(t.finish().events.len(), 1);
+    }
+
+    #[test]
+    fn link_model_durations() {
+        let lm = LinkModel { bw: 1e9, latency_s: 10e-6, stretch: 2.0, level: 1 };
+        assert_eq!(lm.egress_ns(1000), 2_000); // 2 * 1000 B / 1 GB/s = 2 µs
+        assert_eq!(lm.delivery_ns(1000), 12_000);
+        assert!(mem_ns(2.0e12) > 0);
+        assert!(flops_ns(1e12) > 0);
+    }
+
+    #[test]
+    fn chrome_trace_roundtrip() {
+        let t = Tracer::new(1, 64);
+        t.span("comm", "encode", 1_234, &[("bucket", 0.0), ("bytes", 512.0)]);
+        t.counter("loco/ef_norm", 0.5);
+        t.instant("train", "step_begin", &[("step", 3.0)]);
+        let path = std::env::temp_dir().join("loco_trace_roundtrip.json");
+        write_chrome_trace(&path, &[t.finish()]).unwrap();
+        let evs = read_events(&path).unwrap();
+        // metadata + 3 events
+        assert_eq!(evs.len(), 4);
+        let enc = evs.iter().find(|e| e.name == "encode").unwrap();
+        assert_eq!(enc.ph, "X");
+        assert_eq!(enc.pid, 1);
+        assert!((enc.dur_us - 1.234).abs() < 1e-9);
+        assert_eq!(enc.args, vec![("bucket".to_string(), 0.0), ("bytes".to_string(), 512.0)]);
+        let c = evs.iter().find(|e| e.name == "loco/ef_norm").unwrap();
+        assert_eq!(c.ph, "C");
+        assert_eq!(c.args[0].1, 0.5);
+        let i = evs.iter().find(|e| e.name == "step_begin").unwrap();
+        assert_eq!(i.ph, "i");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let t = Tracer::new(0, 256);
+        for i in 1..=100u64 {
+            t.span("comm", "wire", i * 1_000, &[]);
+        }
+        let path = std::env::temp_dir().join("loco_trace_summary.json");
+        write_chrome_trace(&path, &[t.finish()]).unwrap();
+        let s = summarize(&path).unwrap();
+        assert_eq!(s.ranks, 1);
+        let w = &s.spans[0];
+        assert_eq!((w.cat.as_str(), w.name.as_str()), ("comm", "wire"));
+        assert_eq!(w.count, 100);
+        assert!((w.p50_us - 50.0).abs() <= 1.0, "p50 {}", w.p50_us);
+        assert!((w.p95_us - 95.0).abs() <= 1.0, "p95 {}", w.p95_us);
+        assert!((w.p99_us - 99.0).abs() <= 1.0, "p99 {}", w.p99_us);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn malformed_trace_files_error() {
+        let dir = std::env::temp_dir();
+        for (name, text) in [
+            ("loco_trace_bad1.json", "{"),
+            ("loco_trace_bad2.json", "{\"a\": 1}"),
+            ("loco_trace_bad3.json", "[1, 2"),
+            ("loco_trace_bad4.json", "[{\"name\": \"x\"}]"), // no ph
+            ("loco_trace_bad5.json", "[] trailing"),
+        ] {
+            let p = dir.join(name);
+            std::fs::write(&p, text).unwrap();
+            assert!(summarize(&p).is_err(), "{name} should fail");
+            let _ = std::fs::remove_file(&p);
+        }
+        assert!(summarize(Path::new("/nonexistent/trace.json")).is_err());
+    }
+
+    #[test]
+    fn json_parser_handles_the_grammar() {
+        let doc = r#" {"a": [1, -2.5e3, "x\n\"y\"", true, false, null], "b": {} } "#;
+        let v = parse_json(doc).unwrap();
+        let a = v.get("a").unwrap();
+        match a {
+            Json::Arr(items) => {
+                assert_eq!(items[0].as_num(), Some(1.0));
+                assert_eq!(items[1].as_num(), Some(-2500.0));
+                assert_eq!(items[2].as_str(), Some("x\n\"y\""));
+                assert_eq!(items[3], Json::Bool(true));
+                assert_eq!(items[4], Json::Bool(false));
+                assert_eq!(items[5], Json::Null);
+            }
+            _ => panic!("expected array"),
+        }
+        assert_eq!(v.get("b"), Some(&Json::Obj(vec![])));
+        assert!(parse_json("[1,]").is_err());
+        assert!(parse_json("nope").is_err());
+    }
+
+    #[test]
+    fn fmt_num_is_json_safe() {
+        assert_eq!(fmt_num(3.0), "3");
+        assert_eq!(fmt_num(-2.0), "-2");
+        assert_eq!(fmt_num(0.5), "0.5");
+        assert_eq!(fmt_num(f64::NAN), "0");
+        assert_eq!(fmt_num(f64::INFINITY), "0");
+    }
+}

@@ -245,6 +245,15 @@ pub struct TrainConfig {
     /// resume from this checkpoint instead of a fresh init
     /// (`checkpoint.resume_from`)
     pub resume_from: Option<PathBuf>,
+    /// write a Chrome-trace/Perfetto JSON of the run here (`trace.path`
+    /// / `loco train --trace`); `None` = tracing off, zero overhead on
+    /// the hot path. Traces are keyed to each rank's deterministic
+    /// simulated clock, so identically-seeded runs emit byte-identical
+    /// files (DESIGN.md §3.11).
+    pub trace_path: Option<PathBuf>,
+    /// per-rank trace ring-buffer capacity in events (`trace.buffer`);
+    /// the oldest events are dropped — and counted — once it fills
+    pub trace_buf: usize,
 }
 
 impl TrainConfig {
@@ -280,6 +289,8 @@ impl TrainConfig {
             save_path: None,
             save_at: 0,
             resume_from: None,
+            trace_path: None,
+            trace_buf: 1 << 20,
         }
     }
 }
@@ -442,8 +453,14 @@ impl Trainer {
         // rank 0 assembles the checkpoint once every slot is filled
         let save_slots: Mutex<Vec<Option<RankState>>> =
             Mutex::new((0..n).map(|_| None).collect());
+        // each rank parks its finished trace here; rank order in the
+        // output file is fixed so identically-seeded runs emit identical
+        // bytes regardless of thread scheduling
+        let trace_slots: Mutex<Vec<Option<crate::trace::RankTrace>>> =
+            Mutex::new((0..n).map(|_| None).collect());
         let (_, counters) = run_cluster_topo(n, spec, |ctx| {
-            match self.node_main(&ctx, &meta, &part, &topo, resume.as_ref(), &save_slots) {
+            match self.node_main(&ctx, &meta, &part, &topo, resume.as_ref(), &save_slots, &trace_slots)
+            {
                 Ok(Some(r)) => {
                     *result0.lock().unwrap() = Some(r);
                 }
@@ -456,6 +473,16 @@ impl Trainer {
         let errs = errors.into_inner().unwrap();
         if !errs.is_empty() {
             anyhow::bail!("training failed: {}", errs.join("; "));
+        }
+        if let Some(path) = &cfg.trace_path {
+            let traces: Vec<crate::trace::RankTrace> = trace_slots
+                .into_inner()
+                .unwrap()
+                .into_iter()
+                .map(|t| t.context("a rank finished without parking its trace"))
+                .collect::<Result<_>>()?;
+            crate::trace::write_chrome_trace(path, &traces)
+                .with_context(|| format!("writing trace to {}", path.display()))?;
         }
         let mut result = result0
             .into_inner()
@@ -476,6 +503,7 @@ impl Trainer {
         topo: &Topology,
         resume: Option<&Checkpoint>,
         save_slots: &Mutex<Vec<Option<RankState>>>,
+        trace_slots: &Mutex<Vec<Option<crate::trace::RankTrace>>>,
     ) -> Result<Option<RunResult>> {
         let cfg = &self.cfg;
         let rank = ctx.rank;
@@ -483,6 +511,15 @@ impl Trainer {
         let total = meta.layout.total;
         let my_range = if cfg.mode == Mode::Ddp { 0..total } else { part.ranges[rank].clone() };
         let t0 = std::time::Instant::now();
+
+        // deterministic sim-time tracer (trace.path): installed for this
+        // node thread only; every span below carries modeled durations,
+        // never wall clock, so the file is a pure function of the seed
+        let tracer = cfg
+            .trace_path
+            .as_ref()
+            .map(|_| std::rc::Rc::new(crate::trace::Tracer::new(rank, cfg.trace_buf)));
+        let _trace_guard = tracer.clone().map(crate::trace::install);
 
         // --- per-node setup -------------------------------------------------
         let with_eval = cfg.eval_every > 0 && rank == 0;
@@ -518,6 +555,11 @@ impl Trainer {
                 None,
             ),
         };
+        if tracer.is_some() {
+            if let Some(se) = &sync {
+                se.set_telemetry(true);
+            }
+        }
         let mut powersgd = if cfg.compressor.method == Method::PowerSgd {
             Some(PowerSgd::new(&meta.layout, cfg.compressor.rank, cfg.seed ^ 0x505753))
         } else {
@@ -585,6 +627,9 @@ impl Trainer {
         let async_params = cfg.sync_params == SyncParams::Async && cfg.mode != Mode::Ddp;
         let mut params_back = if async_params { params.clone() } else { Vec::new() };
         let mut pending: Option<PendingHierParams> = None;
+        // sim-time instant the in-flight gather's launch completed: start
+        // of its `param_window` span (the window the wire has to itself)
+        let mut param_window_t0 = 0u64;
         // wall-clock instant the last launch completed: the launch→drain
         // interval is the window the in-flight gather has to itself
         // (RunMetrics::param_sync_window_s)
@@ -599,6 +644,9 @@ impl Trainer {
         // step k+1 (or after the loop, for the final step) and its
         // one-step-stale average feeds that step's optimizer update
         let mut pending_grads: Option<PendingHierGrads> = None;
+        // sim-time instant the in-flight exchange's launch completed:
+        // start of its `grad_window` span
+        let mut grad_window_t0 = 0u64;
         let mut grad_wait_s = 0.0f64;
         let mut grad_launch_s = 0.0f64;
         let mut grad_stale_steps = 0u64;
@@ -664,6 +712,7 @@ impl Trainer {
             // the context; the logic layer below reads the schedule
             // directly
             ctx.set_sim_step(step);
+            crate::trace::with(|t| t.instant("train", "step_begin", &[("step", step as f64)]));
             let step_salt = node_rng.next_u64();
             let dead = fs.map(|f| f.dead_at(step)).unwrap_or_default();
             let stragglers = fs.map(|f| f.stragglers_at(step)).unwrap_or_default();
@@ -714,6 +763,17 @@ impl Trainer {
                         *g = g.clamp(-c, c);
                     }
                 }
+                // modeled compute span: ~6 flops per parameter per token
+                // through the analytic GPU preset (netsim::A100)
+                crate::trace::with(|t| {
+                    let tokens = (meta.batch * meta.seq * cfg.accum) as f64;
+                    t.span(
+                        "train",
+                        "fwd_bwd",
+                        crate::trace::flops_ns(6.0 * total as f64 * tokens),
+                        &[("step", step as f64), ("tokens", tokens)],
+                    );
+                });
             }
 
             // 3-5: synchronize gradients — or, in stale/local modes,
@@ -727,9 +787,18 @@ impl Trainer {
             match cfg.mode {
                 Mode::Zero2 => match cfg.grad_sync {
                     GradSync::Sync => {
+                        let mut ts = 0;
+                        crate::trace::with(|t| ts = t.now_ns());
+                        let t_sync = std::time::Instant::now();
                         sync.as_ref()
                             .expect("Zero2 has a sync engine")
                             .sync(ctx, &mut grad, &mut shard_acc, step + 1);
+                        if let Some(m) = metrics.as_mut() {
+                            m.encode_hist.record(t_sync.elapsed().as_secs_f64());
+                        }
+                        crate::trace::with(|t| {
+                            t.span_at(ts, "train", "grad_sync", &[("step", step as f64)]);
+                        });
                         util::scale(&mut shard_acc, 1.0 / contrib as f32);
                         grad_sync_rounds += 1;
                     }
@@ -756,9 +825,20 @@ impl Trainer {
                             // drain, the optimizer step and the whole
                             // next forward/backward; disjoint per-step
                             // tags keep the two exchanges apart
+                            let mut ts = 0;
+                            crate::trace::with(|t| ts = t.now_ns());
                             let t_launch = std::time::Instant::now();
                             let next = se.grad_sync_launch(ctx, &mut grad, step + 1);
-                            grad_launch_s += t_launch.elapsed().as_secs_f64();
+                            let launch_el = t_launch.elapsed().as_secs_f64();
+                            grad_launch_s += launch_el;
+                            if let Some(m) = metrics.as_mut() {
+                                m.launch_hist.record(launch_el);
+                            }
+                            let mut next_window_t0 = 0;
+                            crate::trace::with(|t| {
+                                t.span_at(ts, "train", "grad_launch", &[("step", step as f64)]);
+                                next_window_t0 = t.now_ns();
+                            });
                             let next_contrib = contrib;
                             match pending_grads.replace(next) {
                                 Some(p) => {
@@ -768,8 +848,30 @@ impl Trainer {
                                     // one with a one-step lag rather than
                                     // an lr shift
                                     update_lr = cfg.lr.at(p.step().saturating_sub(1));
+                                    crate::trace::with(|t| {
+                                        t.span_at(
+                                            grad_window_t0,
+                                            "train",
+                                            "grad_window",
+                                            &[("step", step as f64)],
+                                        );
+                                    });
+                                    let mut td = 0;
+                                    crate::trace::with(|t| td = t.now_ns());
                                     let wait = se.grad_sync_drain(ctx, p, &mut shard_acc);
-                                    grad_wait_s += wait.as_secs_f64();
+                                    let wait_el = wait.as_secs_f64();
+                                    grad_wait_s += wait_el;
+                                    if let Some(m) = metrics.as_mut() {
+                                        m.wait_hist.record(wait_el);
+                                    }
+                                    crate::trace::with(|t| {
+                                        t.span_at(
+                                            td,
+                                            "train",
+                                            "grad_drain",
+                                            &[("step", step as f64)],
+                                        );
+                                    });
                                     // divide by the contributor count of
                                     // the launch step, not this one
                                     util::scale(
@@ -782,6 +884,7 @@ impl Trainer {
                                 None => have_update = false, // pipeline fill (step 0)
                             }
                             pending_contrib = next_contrib;
+                            grad_window_t0 = next_window_t0;
                         }
                     }
                     GradSync::Local(h) => {
@@ -816,9 +919,18 @@ impl Trainer {
                             } else {
                                 grad.fill(0.0);
                             }
+                            let mut ts = 0;
+                            crate::trace::with(|t| ts = t.now_ns());
+                            let t_sync = std::time::Instant::now();
                             sync.as_ref()
                                 .expect("Zero2 has a sync engine")
                                 .sync(ctx, &mut grad, &mut shard_acc, step + 1);
+                            if let Some(m) = metrics.as_mut() {
+                                m.encode_hist.record(t_sync.elapsed().as_secs_f64());
+                            }
+                            crate::trace::with(|t| {
+                                t.span_at(ts, "train", "grad_sync", &[("step", step as f64)]);
+                            });
                             util::scale(&mut shard_acc, 1.0 / contrib as f32);
                             grad_sync_rounds += 1;
                         } else {
@@ -865,6 +977,22 @@ impl Trainer {
                 }
             }
 
+            // per-step compression-quality counter tracks (‖e_t‖, pre/post
+            // quantization error, auto_scale EMA), pulled from whatever
+            // encoders ran this step — zero cost with tracing off
+            crate::trace::with(|t| {
+                if let Some(se) = &sync {
+                    if let Some(tel) = se.take_telemetry() {
+                        if tel.elems > 0 {
+                            t.counter("loco/ef_norm", tel.ef_norm());
+                            t.counter("loco/comp_err_rms", tel.comp_err_rms());
+                            t.counter("loco/comp_err_rel", tel.comp_err_rel());
+                            t.counter("loco/auto_scale_ema", tel.auto_scale_ema);
+                        }
+                    }
+                }
+            });
+
             if have_update {
                 // drain the parameter gather launched after the previous
                 // optimizer step: its messages rode the wire while this
@@ -879,12 +1007,29 @@ impl Trainer {
                     if let Some(t0) = launched_at.take() {
                         param_window_s += t0.elapsed().as_secs_f64();
                     }
+                    crate::trace::with(|t| {
+                        t.span_at(
+                            param_window_t0,
+                            "train",
+                            "param_window",
+                            &[("step", step as f64)],
+                        );
+                    });
+                    let mut td = 0;
+                    crate::trace::with(|t| td = t.now_ns());
                     let wait = sync
                         .as_ref()
                         .expect("async param sync runs on the Zero-2 engine")
                         .param_sync_drain(ctx, p, &mut params_back);
                     std::mem::swap(&mut params, &mut params_back);
-                    param_wait_s += wait.as_secs_f64();
+                    let wait_el = wait.as_secs_f64();
+                    param_wait_s += wait_el;
+                    if let Some(m) = metrics.as_mut() {
+                        m.wait_hist.record(wait_el);
+                    }
+                    crate::trace::with(|t| {
+                        t.span_at(td, "train", "param_drain", &[("step", step as f64)]);
+                    });
                 }
 
                 // global-norm clip (exact: scalar all-reduce of shard norms)
@@ -907,6 +1052,16 @@ impl Trainer {
 
                 // 6: optimizer on the fp32 master shard
                 opt.step(&mut master, &shard_acc, update_lr);
+                // modeled Adam update: ~28 bytes of memory traffic per
+                // shard element (read grad + param, rw two moments)
+                crate::trace::with(|t| {
+                    t.span(
+                        "train",
+                        "optimizer",
+                        crate::trace::mem_ns(28.0 * master.len() as f64),
+                        &[("step", step as f64)],
+                    );
+                });
 
                 // 7: parameter synchronization — through the engine, so
                 // the gather is bucketed/tagged whenever the gradient
@@ -928,17 +1083,37 @@ impl Trainer {
                             // the post-loop fp32 master all-gather produces
                             // the final parameters on a clean wire
                             if step + 1 < cfg.steps {
+                                let mut ts = 0;
+                                crate::trace::with(|t| ts = t.now_ns());
                                 let t_launch = std::time::Instant::now();
                                 pending =
                                     Some(se.param_sync_launch(ctx, &master, step + 1, bf16));
-                                param_launch_s += t_launch.elapsed().as_secs_f64();
+                                let launch_el = t_launch.elapsed().as_secs_f64();
+                                param_launch_s += launch_el;
+                                if let Some(m) = metrics.as_mut() {
+                                    m.launch_hist.record(launch_el);
+                                }
+                                crate::trace::with(|t| {
+                                    t.span_at(
+                                        ts,
+                                        "train",
+                                        "param_launch",
+                                        &[("step", step as f64)],
+                                    );
+                                    param_window_t0 = t.now_ns();
+                                });
                                 launched_at = Some(std::time::Instant::now());
                                 stale_steps += 1;
                             }
                         } else {
+                            let mut ts = 0;
+                            crate::trace::with(|t| ts = t.now_ns());
                             let t_gather = std::time::Instant::now();
                             se.param_sync(ctx, &master, &mut params, step + 1, bf16);
                             param_wait_s += t_gather.elapsed().as_secs_f64();
+                            crate::trace::with(|t| {
+                                t.span_at(ts, "train", "param_sync", &[("step", step as f64)]);
+                            });
                         }
                     }
                 }
@@ -965,8 +1140,19 @@ impl Trainer {
                 && step % cfg.eval_every == cfg.eval_every - 1
                 && step + 1 != cfg.steps;
             let val = if do_eval {
+                let mut ts = 0;
+                crate::trace::with(|t| ts = t.now_ns());
                 let v = if rank == 0 { eval_val(&params)? } else { 0.0 };
-                Some(ctx.tree_all_reduce_scalar(v))
+                let reduced = ctx.tree_all_reduce_scalar(v);
+                crate::trace::with(|t| {
+                    if rank == 0 {
+                        // modeled forward-only cost of the eval batches
+                        let tokens = (cfg.eval_batches * meta.batch * meta.seq) as f64;
+                        t.advance_ns(crate::trace::flops_ns(2.0 * total as f64 * tokens));
+                    }
+                    t.span_at(ts, "train", "eval", &[("step", step as f64)]);
+                });
+                Some(reduced)
             } else {
                 None
             };
@@ -1008,9 +1194,18 @@ impl Trainer {
                             // budget, jittered deterministically from the
                             // per-step RNG salt (never wall clock)
                             let u = (step_salt >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
-                            fault_wait_s += (max_slow - 1.0).min(10.0)
+                            let w = (max_slow - 1.0).min(10.0)
                                 * (cfg.drain_timeout_ms as f64 / 1000.0)
                                 * (0.5 + u);
+                            fault_wait_s += w;
+                            crate::trace::with(|t| {
+                                t.span(
+                                    "collective",
+                                    "straggler_wait",
+                                    (w * 1e9).round() as u64,
+                                    &[("step", step as f64), ("slow", max_slow)],
+                                );
+                            });
                         }
                     }
                     if !excluded.is_empty() || deferred {
@@ -1034,6 +1229,8 @@ impl Trainer {
             // trajectory bitwise from this boundary (tests/faults.rs
             // pins save-run ≡ resume-run for every sync mode).
             if cfg.save_at > 0 && step + 1 == cfg.save_at {
+                let mut ts = 0;
+                crate::trace::with(|t| ts = t.now_ns());
                 let se = sync.as_ref().expect("checkpointing runs on the Zero-2 engine");
                 if let Some(p) = pending.take() {
                     if let Some(t0) = launched_at.take() {
@@ -1092,6 +1289,9 @@ impl Trainer {
                 }
                 // keep peers from racing ahead while the file is written
                 ctx.tree_all_reduce_scalar(0.0);
+                crate::trace::with(|t| {
+                    t.span_at(ts, "train", "checkpoint", &[("step", step as f64)]);
+                });
             }
         }
 
@@ -1106,8 +1306,17 @@ impl Trainer {
         if let Some(p) = pending_grads.take() {
             let se = sync.as_ref().expect("stale grads run on the Zero-2 engine");
             let grad_step = p.step().saturating_sub(1);
+            let mut td = 0;
+            crate::trace::with(|t| td = t.now_ns());
             let wait = se.grad_sync_drain(ctx, p, &mut shard_acc);
-            grad_wait_s += wait.as_secs_f64();
+            let wait_el = wait.as_secs_f64();
+            grad_wait_s += wait_el;
+            if let Some(m) = metrics.as_mut() {
+                m.wait_hist.record(wait_el);
+            }
+            crate::trace::with(|t| {
+                t.span_at(td, "train", "grad_drain", &[("step", cfg.steps as f64)]);
+            });
             util::scale(&mut shard_acc, 1.0 / pending_contrib as f32);
             grad_stale_steps += 1;
             grad_sync_rounds += 1;
@@ -1134,6 +1343,12 @@ impl Trainer {
             if let Some(m) = metrics.as_mut() {
                 m.val_loss.push(cfg.steps - 1, v);
             }
+        }
+
+        // park the finished trace for the coordinator to serialize in
+        // rank order (the same slot pattern as the checkpoint barrier)
+        if let Some(tr) = &tracer {
+            trace_slots.lock().unwrap()[rank] = Some(tr.finish());
         }
 
         if let Some(mut m) = metrics {

@@ -1,0 +1,263 @@
+//! Deterministic tracing suite (DESIGN.md §3.11): the sim-time tracer
+//! must be a pure function of (config, seed, schedule) — two
+//! identically-seeded runs emit *byte-identical* trace files, a resumed
+//! run re-emits the saving run's post-resume span sequence, the span
+//! taxonomy the acceptance criteria name is actually present, and
+//! tracing never perturbs the training trajectory.
+
+use std::path::PathBuf;
+
+use loco::collective::FaultSchedule;
+use loco::compress::{CompressorConfig, Method};
+use loco::optim::{LrSchedule, OptimConfig, OptimizerKind};
+use loco::trace::{read_events, summarize, ParsedEvent};
+use loco::train::{GradSync, TrainConfig, Trainer};
+
+/// An 8-rank recursive hierarchy (2 islands x 2 racks x 2 pods) over the
+/// quickstart tiny model, with the bucketed engine on so the per-bucket
+/// encode/wire/drain path is exercised.
+fn hier_cfg(steps: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::new("tiny");
+    cfg.nodes = 8;
+    cfg.steps = steps;
+    cfg.tiers = vec![2, 2, 2];
+    cfg.optim = OptimConfig { kind: OptimizerKind::Adam, ..Default::default() };
+    cfg.lr = LrSchedule { base: 3e-3, warmup: 10, total: steps, min_ratio: 0.2 };
+    cfg.compressor = CompressorConfig {
+        s: (1u32 << 17) as f32,
+        bucket_bytes: 2048,
+        sync_workers: 2,
+        ..CompressorConfig::with_method(Method::Loco)
+    };
+    cfg
+}
+
+fn trace_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("loco_trace_{tag}_{}.json", std::process::id()))
+}
+
+/// Project an event onto its deterministic identity: everything except
+/// the absolute timestamp (which shifts by the resume offset).
+fn identity(ev: &ParsedEvent) -> (i64, String, String, String, f64, Vec<(String, f64)>) {
+    (ev.pid, ev.ph.clone(), ev.cat.clone(), ev.name.clone(), ev.dur_us, ev.args.clone())
+}
+
+#[test]
+fn seeded_hier_stale_fault_runs_are_byte_identical() {
+    // the headline determinism claim: same config + seed + schedule
+    // => the same trace file, byte for byte, on a run combining the
+    // hierarchy, the stale gradient exchange and an active straggler
+    let mut cfg = hier_cfg(10);
+    cfg.grad_sync = GradSync::Stale;
+    cfg.faults =
+        FaultSchedule::parse("straggler:rank=3:steps=2-6:slow=4", 7).expect("schedule");
+    let pa = trace_path("det_a");
+    let pb = trace_path("det_b");
+    let mut ca = cfg.clone();
+    ca.trace_path = Some(pa.clone());
+    let mut cb = cfg;
+    cb.trace_path = Some(pb.clone());
+    let ra = Trainer::new(ca).run().expect("traced run a");
+    let rb = Trainer::new(cb).run().expect("traced run b");
+    assert_eq!(ra.final_params, rb.final_params, "runs diverged");
+    let ba = std::fs::read(&pa).expect("trace a");
+    let bb = std::fs::read(&pb).expect("trace b");
+    assert!(!ba.is_empty(), "empty trace file");
+    assert_eq!(ba, bb, "trace files are not byte-identical");
+    // and the file round-trips through the reader (Perfetto loadability
+    // proxy: a strict parse of the Chrome-trace array)
+    let events = read_events(&pa).expect("parse trace");
+    let ranks: std::collections::BTreeSet<i64> = events.iter().map(|e| e.pid).collect();
+    assert_eq!(ranks.len(), 8, "expected one pid per rank");
+    // straggler spans from the fault window made it in
+    assert!(
+        events.iter().any(|e| e.cat == "collective" && e.name == "straggler_wait"),
+        "no straggler_wait span in a straggled run"
+    );
+    let _ = std::fs::remove_file(&pa);
+    let _ = std::fs::remove_file(&pb);
+}
+
+#[test]
+fn traced_hier_run_emits_the_expected_taxonomy() {
+    // acceptance criteria: per-bucket encode/wire/drain spans, per-tier
+    // hop spans, per-step compression-quality counter tracks
+    let path = trace_path("taxonomy");
+    let mut cfg = hier_cfg(6);
+    cfg.eval_every = 3;
+    cfg.trace_path = Some(path.clone());
+    let r = Trainer::new(cfg).run().expect("traced run");
+    let events = read_events(&path).expect("parse trace");
+
+    let has_span = |cat: &str, name: &str| {
+        events.iter().any(|e| e.ph == "X" && e.cat == cat && e.name == name)
+    };
+    let has_arg = |cat: &str, name: &str, arg: &str| {
+        events.iter().any(|e| {
+            e.ph == "X" && e.cat == cat && e.name == name
+                && e.args.iter().any(|(k, _)| k == arg)
+        })
+    };
+    // comm: the bucketed engine's per-bucket pipeline
+    assert!(has_arg("comm", "encode", "bucket"), "per-bucket encode spans");
+    assert!(has_arg("comm", "wire", "bucket"), "per-bucket wire spans");
+    assert!(has_arg("comm", "wire", "dst"), "wire spans carry the destination");
+    assert!(has_arg("comm", "drain", "bytes"), "drain spans carry byte counts");
+    // topology: one hop span per tier of the 2x2x2 tree
+    assert!(has_arg("topology", "reduce_scatter", "tier"), "per-tier reduce spans");
+    assert!(has_arg("topology", "broadcast", "tier"), "per-tier broadcast spans");
+    let tiers: std::collections::BTreeSet<i64> = events
+        .iter()
+        .filter(|e| e.cat == "topology" && e.name == "reduce_scatter")
+        .filter_map(|e| e.args.iter().find(|(k, _)| k == "tier").map(|&(_, v)| v as i64))
+        .collect();
+    assert_eq!(tiers.len(), 2, "2x2x2 has two intra tiers, saw {tiers:?}");
+    // collective: the tagged wire
+    assert!(has_arg("collective", "send", "bytes"), "tagged send spans");
+    assert!(has_span("collective", "recv"), "tagged recv spans");
+    // train: the step skeleton
+    for name in ["fwd_bwd", "grad_sync", "optimizer", "eval", "param_sync"] {
+        assert!(has_span("train", name), "missing train/{name} span");
+    }
+    assert!(
+        events.iter().any(|e| e.ph == "i" && e.name == "step_begin"),
+        "step_begin instants"
+    );
+    // counters: the LoCo compression-quality series — one track per
+    // rank (each rank traces its own encoders), one sample per step
+    for track in ["loco/ef_norm", "loco/comp_err_rms", "loco/comp_err_rel"] {
+        let samples: Vec<&ParsedEvent> =
+            events.iter().filter(|e| e.ph == "C" && e.name == track).collect();
+        assert_eq!(samples.len(), 8 * 6, "{track}: one sample per rank per step");
+        let pids: std::collections::BTreeSet<i64> = samples.iter().map(|e| e.pid).collect();
+        assert_eq!(pids.len(), 8, "{track}: every rank carries the track");
+    }
+    assert!(
+        events
+            .iter()
+            .filter(|e| e.ph == "C" && e.name == "loco/ef_norm")
+            .any(|e| e.args.iter().any(|(k, v)| k == "value" && *v > 0.0)),
+        "EF norm never became positive"
+    );
+    // the summary the `loco trace` subcommand prints
+    let s = summarize(&path).expect("summarize");
+    assert_eq!(s.ranks, 8);
+    assert!(s.spans.iter().any(|p| p.cat == "comm" && p.name == "encode"));
+    assert!(s.counters.iter().any(|c| c.name == "loco/ef_norm" && c.count == 8 * 6));
+    // the mergeable histograms behind the trace (rank 0, sync path)
+    assert!(r.metrics.encode_hist.count > 0, "encode_hist empty on the sync path");
+    assert_eq!(r.metrics.encode_hist.count, 6, "one encode sample per exchange");
+    assert!(r.metrics.encode_hist.quantile_s(0.95) >= r.metrics.encode_hist.quantile_s(0.5));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn stale_runs_emit_launch_window_drain_lifecycles() {
+    let path = trace_path("stale");
+    let mut cfg = hier_cfg(8);
+    cfg.grad_sync = GradSync::Stale;
+    cfg.trace_path = Some(path.clone());
+    let r = Trainer::new(cfg).run().expect("traced stale run");
+    let events = read_events(&path).expect("parse trace");
+    let count = |name: &str| {
+        events.iter().filter(|e| e.ph == "X" && e.cat == "train" && e.name == name).count()
+    };
+    // 8 launches per rank; the window/drain pair starts one step later,
+    // and the post-loop drain closes the last in-flight exchange
+    assert_eq!(count("grad_launch"), 8 * 8, "one launch per rank per step");
+    assert_eq!(count("grad_window"), 8 * 7, "windows pair with the next step's drain");
+    assert_eq!(count("grad_drain"), 8 * 8, "7 in-loop drains + the post-loop drain");
+    assert!(r.metrics.launch_hist.count > 0, "launch_hist empty in stale mode");
+    assert!(r.metrics.wait_hist.count > 0, "wait_hist empty in stale mode");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn tracing_never_perturbs_the_trajectory() {
+    // the observer effect must be zero: a traced run and an untraced run
+    // of the same config produce bitwise-identical final parameters
+    // (telemetry reads encoder state, never mutates it)
+    let base = hier_cfg(8);
+    let mut traced = base.clone();
+    let path = trace_path("observer");
+    traced.trace_path = Some(path.clone());
+    let ru = Trainer::new(base).run().expect("untraced run");
+    let rt = Trainer::new(traced).run().expect("traced run");
+    assert_eq!(ru.final_params, rt.final_params, "tracing perturbed the run");
+    assert_eq!(
+        ru.metrics.train_loss.points, rt.metrics.train_loss.points,
+        "tracing perturbed the loss curve"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn resumed_run_re_emits_the_saving_runs_post_resume_spans() {
+    // a traced run that saves at step S and a traced run resumed from
+    // that checkpoint must emit the same span sequence from S on —
+    // same order, names, durations and args; only the absolute clock
+    // (which counts from the start of each process) shifts
+    let ckpt = std::env::temp_dir()
+        .join(format!("loco_trace_resume_{}.ckpt", std::process::id()));
+    let save_at = 6u64;
+    let mut save = hier_cfg(10);
+    save.save_at = save_at;
+    save.save_path = Some(ckpt.clone());
+    let p_save = trace_path("save");
+    save.trace_path = Some(p_save.clone());
+    let rs = Trainer::new(save).run().expect("saving run");
+    let mut resume = hier_cfg(10);
+    resume.resume_from = Some(ckpt.clone());
+    let p_res = trace_path("resume");
+    resume.trace_path = Some(p_res.clone());
+    let rr = Trainer::new(resume).run().expect("resumed run");
+    assert_eq!(rs.final_params, rr.final_params, "resume is not bitwise");
+
+    // slice each trace to the events at/after each rank's step_begin(S)
+    let tail = |path: &PathBuf| {
+        let mut started = std::collections::BTreeSet::new();
+        read_events(path)
+            .expect("parse trace")
+            .iter()
+            .filter(|e| {
+                if e.ph == "i"
+                    && e.name == "step_begin"
+                    && e.args.iter().any(|(k, v)| k == "step" && *v == save_at as f64)
+                {
+                    started.insert(e.pid);
+                }
+                started.contains(&e.pid)
+            })
+            .map(identity)
+            .collect::<Vec<_>>()
+    };
+    let t_save = tail(&p_save);
+    let t_res = tail(&p_res);
+    assert!(!t_save.is_empty(), "saving run has no post-save events");
+    assert_eq!(t_save, t_res, "post-resume span sequences differ");
+    // the resumed trace contains nothing from before the resume point
+    let head: Vec<ParsedEvent> = read_events(&p_res)
+        .expect("parse trace")
+        .into_iter()
+        .filter(|e| {
+            e.ph == "i"
+                && e.name == "step_begin"
+                && e.args.iter().any(|(k, v)| k == "step" && *v < save_at as f64)
+        })
+        .collect();
+    assert!(head.is_empty(), "resumed trace replays pre-resume steps");
+    let _ = std::fs::remove_file(&ckpt);
+    let _ = std::fs::remove_file(&p_save);
+    let _ = std::fs::remove_file(&p_res);
+}
+
+#[test]
+fn malformed_trace_files_are_hard_errors() {
+    let path = trace_path("malformed");
+    std::fs::write(&path, b"{\"not\": \"an array\"}").expect("write");
+    assert!(summarize(&path).is_err(), "non-array JSON must fail");
+    std::fs::write(&path, b"[{\"name\": \"x\"").expect("write");
+    assert!(read_events(&path).is_err(), "truncated JSON must fail");
+    assert!(summarize(&trace_path("does_not_exist")).is_err(), "missing file");
+    let _ = std::fs::remove_file(&path);
+}

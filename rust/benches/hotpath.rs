@@ -596,4 +596,71 @@ fn main() {
              \"traced_sync_overhead_pct\": {enabled_pct:.2}}}\n"
         );
     }
+
+    // 15. §Tentpole PR8: scaling sweep — the one-step-stale tiered
+    //    schedule at 64/256/1024 simulated ranks (the 1024 case runs even
+    //    in fast mode: CI proves the hot path *completes* at that scale).
+    //    Reports stale steps/s and the steady-state allocation count per
+    //    rank-step, measured with the counting global allocator as the
+    //    delta between a short and a long run so setup allocations
+    //    cancel. tests/scaling.rs asserts the mechanics (determinism,
+    //    O(n) bookkeeping, kernel zero-alloc); this section prints the
+    //    per-PR trajectory rows for BENCH_hotpath.json.
+    {
+        let cases: &[(usize, &[usize])] =
+            &[(64, &[4, 4, 4]), (256, &[4, 4, 4, 4]), (1024, &[4, 4, 4, 4, 4])];
+        let steps_short = 2u64;
+        let steps_long = if fast { 4u64 } else { 8u64 };
+        let total: usize = if fast { 1 << 13 } else { 1 << 16 };
+        let mut rows = Vec::new();
+        for &(nodes, tiers) in cases {
+            let topo = Topology::from_tiers(nodes, tiers).expect("tiers");
+            let layout = ParamLayout::single("flat", &[total]);
+            let part = topo.partition(total);
+            let cfg = CompressorConfig { s: 64.0, ..Default::default() };
+            let run_once = |steps: u64| -> (f64, u64) {
+                let (topo, layout, part, cfg) = (&topo, &layout, &part, &cfg);
+                let a0 = ALLOCS.load(Ordering::Relaxed);
+                let t0 = std::time::Instant::now();
+                run_cluster_topo(nodes, topo.cluster_spec(), move |ctx| {
+                    let engine =
+                        HierSyncEngine::new(cfg, layout, part, topo, ctx.rank).unwrap();
+                    let mut acc = vec![0.0f32; part.ranges[ctx.rank].len()];
+                    let mut grad = vec![0.0f32; total];
+                    let mut rng = Rng::new(60 + ctx.rank as u64);
+                    let mut pending = None;
+                    for step in 1..=steps {
+                        ctx.set_sim_step(step);
+                        rng.fill_normal(&mut grad, 0.1);
+                        let next = engine.grad_sync_launch(&ctx, &mut grad, step);
+                        if let Some(p) = pending.replace(next) {
+                            engine.grad_sync_drain(&ctx, p, &mut acc);
+                        }
+                    }
+                    if let Some(p) = pending.take() {
+                        engine.grad_sync_drain(&ctx, p, &mut acc);
+                    }
+                });
+                (t0.elapsed().as_secs_f64(), ALLOCS.load(Ordering::Relaxed) - a0)
+            };
+            let (_, a_short) = run_once(steps_short);
+            let (t_long, a_long) = run_once(steps_long);
+            let steps_per_s = steps_long as f64 / t_long;
+            let allocs_per_rank_step = a_long.saturating_sub(a_short) as f64
+                / ((steps_long - steps_short) as f64 * nodes as f64);
+            let tiers_s =
+                tiers.iter().map(|t| t.to_string()).collect::<Vec<_>>().join("x");
+            println!(
+                "scaling n={nodes:4} [{tiers_s:9}]: {steps_per_s:7.2} stale steps/s, \
+                 {allocs_per_rank_step:7.1} allocs/rank-step steady-state"
+            );
+            rows.push(format!(
+                "        {{\"ranks\": {nodes}, \"tiers\": \"{tiers_s}\", \
+                 \"stale_steps_per_s\": {steps_per_s:.2}, \
+                 \"steady_allocs_per_rank_step\": {allocs_per_rank_step:.1}}}"
+            ));
+        }
+        println!("BENCH_hotpath.json rows (pr-8, paste into a new \"measured\" entry):");
+        println!("{}\n", rows.join(",\n"));
+    }
 }

@@ -1,6 +1,14 @@
 //! In-process collective communication substrate.
 //!
-//! N "GPU nodes" are OS threads connected by a full mesh of mpsc channels.
+//! N "GPU nodes" are OS threads connected by one mpsc channel per
+//! *receiver*: every sender pushes `(src, payload)` envelopes into the
+//! destination's single merged queue (mpsc preserves per-sender order, so
+//! per-(src, dst) FIFO survives the merge), and the receiver demultiplexes
+//! by source — envelopes for a source that is not currently awaited are
+//! stashed in O(in-flight) side tables, not O(n²) per-pair buffers. The
+//! whole fabric is O(n) in channels, reorder state and per-node footprint,
+//! which is what lets [`run_cluster_topo`] scale to 1024 simulated ranks
+//! (see `benches/hotpath.rs` §15 and `tests/scaling.rs`).
 //! The byte counters record exactly what each payload would occupy on a
 //! real wire (packed int4, int8 + scales, bf16, fp32 — see
 //! [`WireMsg::wire_bytes`]), so compression ratios measured here transfer
@@ -38,7 +46,7 @@
 //! hierarchical engine ([`crate::topology`]) exploits.
 
 use std::cell::{Cell, RefCell};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
@@ -394,12 +402,16 @@ impl ClusterSpec {
     }
 
     /// Resolve the spec for an `n`-node cluster into (number of link
-    /// levels, hierarchical flag, per-pair level matrix `n*n`). Panics on
+    /// levels, hierarchical flag, shared pair-level classifier). Panics on
     /// inconsistent specs — the trainer validates via
     /// [`crate::topology::Topology`] before getting here.
-    fn resolve(&self, n: usize) -> (usize, bool, Vec<u8>) {
+    ///
+    /// The classifier is O(n) state shared by every node (a stride list or
+    /// a per-rank leaf id), replacing the old n×n level matrix whose
+    /// per-node rows made cluster setup O(n²).
+    fn resolve(&self, n: usize) -> (usize, bool, LevelMap) {
         if !self.groups.is_empty() {
-            let mut leaf = vec![usize::MAX; n];
+            let mut leaf = vec![u32::MAX; n];
             let mut cursor = 0usize;
             for (g, members) in self.groups.iter().enumerate() {
                 for &r in members {
@@ -407,20 +419,16 @@ impl ClusterSpec {
                         r == cursor,
                         "groups must tile 0..{n} with consecutive ranks (rank {r} out of place)"
                     );
-                    leaf[r] = g;
+                    leaf[r] = g as u32;
                     cursor += 1;
                 }
             }
             assert!(cursor == n, "groups cover {cursor} of {n} ranks");
             let hier = self.groups.len() > 1;
-            let levels = if hier { 2 } else { 1 };
-            let mut matrix = vec![0u8; n * n];
-            for a in 0..n {
-                for b in 0..n {
-                    matrix[a * n + b] = u8::from(hier && leaf[a] != leaf[b]);
-                }
+            if !hier {
+                return (1, false, LevelMap::Flat);
             }
-            return (levels, hier, matrix);
+            return (2, true, LevelMap::Groups(Arc::new(leaf)));
         }
         let tiers: Vec<usize> = if self.tiers.is_empty() {
             let m = self.island_size.max(1);
@@ -440,34 +448,75 @@ impl ClusterSpec {
             self.tiers.clone()
         };
         let levels = tiers.len();
-        let hier = levels > 1;
-        // level of (a, b) = innermost tier whose group still contains
-        // both: smallest l with a/stride(l) == b/stride(l), where
-        // stride(l) = product of tiers[0..=l]
-        let mut matrix = vec![0u8; n * n];
-        for a in 0..n {
-            for b in 0..n {
-                let mut stride = 1usize;
-                let mut level = 0u8;
-                for (l, &m) in tiers.iter().enumerate() {
-                    stride *= m;
-                    if a / stride == b / stride {
-                        level = l as u8;
-                        break;
-                    }
-                }
-                matrix[a * n + b] = level;
-            }
+        if levels <= 1 {
+            return (1, false, LevelMap::Flat);
         }
-        (levels, hier, matrix)
+        // stride(l) = product of tiers[0..=l]; level of (a, b) = smallest
+        // l with a/stride(l) == b/stride(l) (stride(last) == n, so the
+        // scan always terminates)
+        let mut strides = Vec::with_capacity(levels);
+        let mut stride = 1usize;
+        for &m in &tiers {
+            stride *= m;
+            strides.push(stride);
+        }
+        (levels, true, LevelMap::Tiers(Arc::new(strides)))
     }
 }
 
-/// A payload plus the instant the simulated wire releases it (None when no
-/// link simulation is active).
+/// Shared O(n) pair-level classifier: which link level a (src, dst) pair
+/// travels on. Replaces the per-node rows of an n×n matrix.
+#[derive(Clone)]
+enum LevelMap {
+    /// flat cluster: every pair at level 0
+    Flat,
+    /// even tier tree: cumulative strides, `strides[l]` = product of
+    /// `tiers[0..=l]`; the level of a pair is the innermost tier whose
+    /// group contains both ranks
+    Tiers(Arc<Vec<usize>>),
+    /// explicit uneven leaf islands: leaf id per rank, two levels
+    Groups(Arc<Vec<u32>>),
+}
+
+impl LevelMap {
+    #[inline]
+    fn level_of(&self, a: usize, b: usize) -> usize {
+        match self {
+            LevelMap::Flat => 0,
+            LevelMap::Tiers(strides) => {
+                for (l, &s) in strides.iter().enumerate() {
+                    if a / s == b / s {
+                        return l;
+                    }
+                }
+                strides.len() - 1
+            }
+            LevelMap::Groups(leaf) => usize::from(leaf[a] != leaf[b]),
+        }
+    }
+}
+
+/// A payload plus its sender and the instant the simulated wire releases
+/// it (None when no link simulation is active). Every sender pushes into
+/// the destination's single merged channel; `src` is how the receiver
+/// demultiplexes.
 struct Envelope {
+    src: usize,
     ready_at: Option<Instant>,
     payload: Payload,
+}
+
+/// Sleep until the simulated wire releases the payload. Release times are
+/// absolute, so waiting at consumption (rather than at arrival) never
+/// shifts the timeline — it only stops a receiver from blocking on
+/// messages it is not yet asking for.
+fn wire_wait(ready_at: Option<Instant>) {
+    if let Some(t) = ready_at {
+        let now = Instant::now();
+        if t > now {
+            std::thread::sleep(t - now);
+        }
+    }
 }
 
 /// Anything that can travel between nodes.
@@ -575,18 +624,25 @@ impl Counters {
     }
 }
 
-/// Per-node handle: rank, channels to every peer, byte counters.
+/// Per-node handle: rank, the cluster's shared sender table plus this
+/// node's merged receive queue, byte counters. All per-node state is O(1)
+/// + O(messages in flight) — nothing scales with cluster size.
 pub struct NodeCtx {
     pub rank: usize,
     pub n: usize,
-    tx: Vec<Sender<Envelope>>,
-    rx: Vec<Receiver<Envelope>>,
-    /// per-source reorder buffer for tagged messages that arrived while a
-    /// different tag was awaited (single-threaded per node, hence RefCell)
-    pending: Vec<RefCell<HashMap<u64, WireMsg>>>,
-    /// link level per destination (`levels[dst]`, this node's row of the
-    /// cluster's pair-level matrix); level 0 = same leaf island
-    levels: Vec<u8>,
+    /// one sender per destination, shared by every node (`Sender` is Sync)
+    tx: Arc<Vec<Sender<Envelope>>>,
+    /// this node's single merged receive queue
+    rx: Receiver<Envelope>,
+    /// reorder buffer for tagged messages that arrived while something
+    /// else was awaited, keyed (src, tag) — O(in-flight tags), not O(n)
+    /// maps (single-threaded per node, hence RefCell)
+    pending: RefCell<HashMap<(usize, u64), (Option<Instant>, WireMsg)>>,
+    /// untagged payloads pulled off the merged queue while a different
+    /// source was awaited, in per-source FIFO order
+    stash: RefCell<HashMap<usize, VecDeque<(Option<Instant>, Payload)>>>,
+    /// shared pair-level classifier; level 0 = same leaf island
+    levels: LevelMap,
     /// whether the cluster declared any hierarchy at all (flat clusters
     /// count every byte as inter-island)
     hierarchical: bool,
@@ -609,13 +665,13 @@ impl NodeCtx {
     /// True when `dst` sits in this node's leaf island (flat clusters
     /// have single-node islands, so every peer is inter-island there).
     pub fn same_island(&self, dst: usize) -> bool {
-        self.hierarchical && self.levels[dst] == 0
+        self.hierarchical && self.level_of(dst) == 0
     }
 
     /// Link level of the path to `dst`: 0 = same leaf island, rising to
     /// the outermost cut (flat clusters report 0 for every peer).
     pub fn level_of(&self, dst: usize) -> usize {
-        self.levels[dst] as usize
+        self.levels.level_of(self.rank, dst)
     }
 
     /// Advance the step the simulated wire looks faults up at. The
@@ -645,7 +701,7 @@ impl NodeCtx {
     /// preset for the level otherwise, stretched by `stretch_rank`'s
     /// straggler factor at the current sim step.
     pub fn trace_link_to(&self, peer: usize, stretch_rank: usize) -> crate::trace::LinkModel {
-        let lvl = self.levels[peer] as usize;
+        let lvl = self.level_of(peer);
         let (bw, latency_s) = match self.nets[lvl] {
             Some(l) => (l.bw, l.latency_s),
             None => (crate::netsim::link_preset_for_level(lvl, self.nets.len()).bw, 20e-6),
@@ -671,7 +727,7 @@ impl NodeCtx {
         });
         self.counters.sent[self.rank].fetch_add(bytes, Ordering::Relaxed);
         self.counters.msgs[self.rank].fetch_add(1, Ordering::Relaxed);
-        let lvl = self.levels[dst] as usize;
+        let lvl = self.level_of(dst);
         let split = if self.same_island(dst) { &self.counters.intra } else { &self.counters.inter };
         split[self.rank].fetch_add(bytes, Ordering::Relaxed);
         self.counters.by_level[lvl][self.rank].fetch_add(bytes, Ordering::Relaxed);
@@ -692,41 +748,47 @@ impl NodeCtx {
             egress.set(done);
             done + Duration::from_secs_f64(l.latency_s)
         });
-        self.tx[dst].send(Envelope { ready_at, payload: p }).expect("peer hung up");
-    }
-
-    /// Pull the next envelope from `src`, honoring the simulated wire
-    /// release time. Returns tagged and untagged payloads alike — the
-    /// public receive surfaces sort them.
-    fn recv_raw(&self, src: usize) -> Payload {
-        let env = self.rx[src].recv().expect("peer hung up");
-        if let Some(t) = env.ready_at {
-            let now = Instant::now();
-            if t > now {
-                std::thread::sleep(t - now);
-            }
-        }
-        env.payload
+        self.tx[dst]
+            .send(Envelope { src: self.rank, ready_at, payload: p })
+            .expect("peer hung up");
     }
 
     /// Receive the next *untagged* payload from `src`. Tagged messages
-    /// that arrive first are stashed into the per-source reorder buffer
-    /// for a later [`NodeCtx::recv_wire_tagged`] — this is what lets an
-    /// asynchronous parameter gather stay in flight across the untagged
-    /// collectives (loss all-reduce, ring phases) of the next step.
+    /// that arrive first are stashed into the reorder buffer for a later
+    /// [`NodeCtx::recv_wire_tagged`] — this is what lets an asynchronous
+    /// parameter gather stay in flight across the untagged collectives
+    /// (loss all-reduce, ring phases) of the next step. Untagged payloads
+    /// from *other* sources are stashed in per-source FIFO order for the
+    /// receive that asks for them.
     pub fn recv(&self, src: usize) -> Payload {
+        let stashed = self.stash.borrow_mut().get_mut(&src).and_then(VecDeque::pop_front);
+        if let Some((ready_at, p)) = stashed {
+            wire_wait(ready_at);
+            self.trace_recv_span(src, p.wire_bytes());
+            return p;
+        }
         loop {
-            match self.recv_raw(src) {
+            let Envelope { src: esrc, ready_at, payload } =
+                self.rx.recv().expect("peer hung up");
+            match payload {
                 Payload::TaggedWire { tag, msg } => {
-                    self.pending[src].borrow_mut().insert(tag, msg);
+                    self.pending.borrow_mut().insert((esrc, tag), (ready_at, msg));
                 }
-                p => {
-                    // one span per *logical* receive (not per recv_raw
-                    // iteration, whose stash traffic depends on
-                    // nondeterministic arrival order). A straggling
-                    // source shows up as a stretched recv — the wait.
+                p if esrc == src => {
+                    // one span per *logical* receive (not per queue pull,
+                    // whose stash traffic depends on nondeterministic
+                    // arrival order). A straggling source shows up as a
+                    // stretched recv — the wait.
+                    wire_wait(ready_at);
                     self.trace_recv_span(src, p.wire_bytes());
                     return p;
+                }
+                p => {
+                    self.stash
+                        .borrow_mut()
+                        .entry(esrc)
+                        .or_default()
+                        .push_back((ready_at, p));
                 }
             }
         }
@@ -765,20 +827,33 @@ impl NodeCtx {
         // the span is recorded per logical (src, tag) receive whether the
         // message was already stashed or still on the wire — the stash
         // path depends on nondeterministic arrival order, the span must not
-        if let Some(m) = self.pending[src].borrow_mut().remove(&tag) {
+        if let Some((ready_at, m)) = self.pending.borrow_mut().remove(&(src, tag)) {
+            wire_wait(ready_at);
             self.trace_recv_span(src, m.wire_bytes() as u64);
             return m;
         }
         loop {
-            match self.recv_raw(src) {
+            let Envelope { src: esrc, ready_at, payload } =
+                self.rx.recv().expect("peer hung up");
+            match payload {
                 Payload::TaggedWire { tag: t, msg } => {
-                    if t == tag {
+                    if esrc == src && t == tag {
+                        wire_wait(ready_at);
                         self.trace_recv_span(src, msg.wire_bytes() as u64);
                         return msg;
                     }
-                    self.pending[src].borrow_mut().insert(t, msg);
+                    self.pending.borrow_mut().insert((esrc, t), (ready_at, msg));
                 }
-                _ => panic!("untagged payload while awaiting tag {tag} from node {src}"),
+                _ if esrc == src => {
+                    panic!("untagged payload while awaiting tag {tag} from node {src}")
+                }
+                p => {
+                    self.stash
+                        .borrow_mut()
+                        .entry(esrc)
+                        .or_default()
+                        .push_back((ready_at, p));
+                }
             }
         }
     }
@@ -1154,7 +1229,7 @@ pub fn run_cluster_topo<T: Send>(
     f: impl Fn(NodeCtx) -> T + Send + Sync,
 ) -> (Vec<T>, Arc<Counters>) {
     assert!(n > 0);
-    let (n_levels, hierarchical, level_matrix) = spec.resolve(n);
+    let (n_levels, hierarchical, levels) = spec.resolve(n);
     if !spec.links.is_empty() {
         assert!(
             spec.links.len() >= n_levels,
@@ -1176,27 +1251,27 @@ pub fn run_cluster_topo<T: Send>(
             .collect(),
     );
     let counters = Counters::new(n, n_levels);
-    // mesh[src][dst]
-    let mut txs: Vec<Vec<Option<Sender<Envelope>>>> =
-        (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
-    let mut rxs: Vec<Vec<Option<Receiver<Envelope>>>> =
-        (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
-    for src in 0..n {
-        for dst in 0..n {
-            let (tx, rx) = std::sync::mpsc::channel();
-            txs[src][dst] = Some(tx);
-            rxs[dst][src] = Some(rx);
-        }
+    // one merged channel per receiver; the sender table is shared
+    // (`Sender` is Sync), so the whole fabric is O(n) channels and O(n)
+    // setup, not an n×n mesh
+    let mut txs: Vec<Sender<Envelope>> = Vec::with_capacity(n);
+    let mut rxs: Vec<Receiver<Envelope>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = std::sync::mpsc::channel();
+        txs.push(tx);
+        rxs.push(rx);
     }
+    let tx = Arc::new(txs);
     let mut ctxs: Vec<NodeCtx> = Vec::with_capacity(n);
-    for (rank, (tx_row, rx_row)) in txs.into_iter().zip(rxs).enumerate() {
+    for (rank, rx) in rxs.into_iter().enumerate() {
         ctxs.push(NodeCtx {
             rank,
             n,
-            tx: tx_row.into_iter().map(Option::unwrap).collect(),
-            rx: rx_row.into_iter().map(Option::unwrap).collect(),
-            pending: (0..n).map(|_| RefCell::new(HashMap::new())).collect(),
-            levels: level_matrix[rank * n..(rank + 1) * n].to_vec(),
+            tx: tx.clone(),
+            rx,
+            pending: RefCell::new(HashMap::new()),
+            stash: RefCell::new(HashMap::new()),
+            levels: levels.clone(),
             hierarchical,
             nets: nets.clone(),
             egress: (0..n_levels).map(|_| Cell::new(Instant::now())).collect(),

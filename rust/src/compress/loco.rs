@@ -396,6 +396,10 @@ pub struct LocoBlockEncoder {
     tel_pre_q_sq: f64,
     tel_err_q_sq: f64,
     tel_elems: u64,
+    /// compensate scratch, reused across encode calls — steady-state
+    /// encodes of a fixed-size shard allocate nothing here (not part of
+    /// the exported state)
+    h: Vec<f32>,
 }
 
 impl LocoBlockEncoder {
@@ -414,6 +418,7 @@ impl LocoBlockEncoder {
             tel_pre_q_sq: 0.0,
             tel_err_q_sq: 0.0,
             tel_elems: 0,
+            h: Vec::new(),
         }
     }
 }
@@ -427,13 +432,15 @@ impl Encoder for LocoBlockEncoder {
         let n = g.len();
         let inv_se = 1.0 / self.s_e;
 
-        // compensate
-        let mut h = vec![0.0f32; n];
+        // compensate (into the reused scratch buffer)
+        let h = &mut self.h;
+        h.clear();
+        h.resize(n, 0.0);
         for i in 0..n {
             h[i] = g[i] + e[i] as f32 * inv_se;
         }
         // block-quantize the compensated gradient
-        let (codes, scales) = quantize_block(&h, self.cfg.block, self.cfg.bits);
+        let (codes, scales) = quantize_block(h, self.cfg.block, self.cfg.bits);
         if self.telemetry_on {
             // h and the quantized codes are both at hand here — no
             // replica pass needed, just the roundtrip error

@@ -209,9 +209,36 @@ pub fn pipelined_time(t_encode: f64, t_wire: f64, buckets: usize, per_msg_overhe
 /// [`BUCKET_OVERHEAD_S`] is what keeps the optimum finite. Deterministic,
 /// and never returns the monolithic sentinel `0`.
 pub fn auto_bucket_bytes(method: &str, shard_elems: usize, bits: u32) -> usize {
+    invert_pipeline(method, shard_elems, bits, crate::netsim::A800_IB)
+}
+
+/// Tiered-topology variant of [`auto_bucket_bytes`]: the bucketed engine
+/// runs across the *outermost* cut only, shipping this rank's gradient
+/// row (not the flat cluster's shard) over the outermost tier's link
+/// ([`crate::netsim::link_preset_for_level`] at the last level). Inverting
+/// the pipeline against that row and link gives the bucket size the outer
+/// exchange actually pipelines — on deep trees the row is tiers-product×
+/// larger than the flat shard, so the optimum lands on more, larger
+/// buckets than the flat inversion would pick.
+pub fn auto_bucket_bytes_tiered(
+    method: &str,
+    row_elems: usize,
+    bits: u32,
+    n_levels: usize,
+) -> usize {
+    let link = crate::netsim::link_preset_for_level(n_levels.saturating_sub(1), n_levels);
+    invert_pipeline(method, row_elems, bits, link)
+}
+
+/// Shared inversion core of the `auto_bucket_bytes*` entry points.
+fn invert_pipeline(
+    method: &str,
+    shard_elems: usize,
+    bits: u32,
+    link: crate::netsim::Interconnect,
+) -> usize {
     let shard_elems = shard_elems.max(1);
     let gpu = crate::netsim::A100;
-    let link = crate::netsim::A800_IB;
     // `bits` is the quantizer width knob — only the quantizing methods
     // actually put it on the wire; fixed-width formats override it
     let wire_bits = match method {
@@ -1081,6 +1108,33 @@ mod tests {
         let t_star = pipelined_time(t_enc, t_wire, buckets, BUCKET_OVERHEAD_S);
         assert!(t_star <= pipelined_time(t_enc, t_wire, 1, BUCKET_OVERHEAD_S) + 1e-12);
         assert!(t_star <= pipelined_time(t_enc, t_wire, 256, BUCKET_OVERHEAD_S) + 1e-12);
+    }
+
+    #[test]
+    fn auto_bucket_bytes_tiered_uses_outer_link_and_row() {
+        // the tiered inversion sees the whole row this rank carries into
+        // the outermost exchange; the flat inversion sees only the flat
+        // cluster shard. On a [4,4,4] tree over a paper-scale model the
+        // row is 16× the flat shard, so the tiered optimum must differ.
+        let total = 100_000_000usize;
+        let n = 64usize;
+        let row = total / 4; // row at the outermost cut of [4,4,4]
+        let flat = auto_bucket_bytes("loco", total / n, 4);
+        let tiered = auto_bucket_bytes_tiered("loco", row, 4, 3);
+        assert_ne!(
+            tiered, flat,
+            "tiered auto sizing must invert against the row, not the flat shard"
+        );
+        // outermost level of a multi-tier tree is the slow fabric — the
+        // tiered result must match an explicit inversion over A800_IB
+        let t_wire = row as f64 * 0.5 / A800_IB.bw;
+        let t_enc = encode_bytes_per_param("loco") * row as f64 / A100.mem_bw;
+        let buckets = (4 * row).div_ceil(tiered);
+        let t_star = pipelined_time(t_enc, t_wire, buckets, BUCKET_OVERHEAD_S);
+        assert!(t_star <= pipelined_time(t_enc, t_wire, 1, BUCKET_OVERHEAD_S) + 1e-12);
+        // degenerate depths stay sane: never zero, always aligned
+        assert!(auto_bucket_bytes_tiered("loco", 0, 4, 1) >= 8);
+        assert_eq!(auto_bucket_bytes_tiered("loco", total / n, 4, 1) % 8, 0);
     }
 
     #[test]

@@ -7,6 +7,13 @@
 //! * `decompressor(q; s) = q as f32 / s`
 //! * int4 codes live in `[-8, 7]` and travel nibble-packed, two per byte;
 //! * the stored LoCo error is int8 with scale `s_e` (Eqn. 7).
+//!
+//! Hot-path layout (PR 8): the fused step runs in fixed [`pack::CHUNK`]-wide
+//! blocks whose per-element math is shared with the retained
+//! [`loco_step_scalar`] reference, so chunking cannot change a single bit of
+//! the codes or the error store. `loco_step_packed` additionally fuses the
+//! nibble pack into the same block pass through a stack scratch array,
+//! eliminating the old per-call whole-shard code buffer.
 
 pub mod pack;
 
@@ -71,27 +78,17 @@ impl Default for LocoParams {
     }
 }
 
-/// Fused LoCo step over a shard (Algorithm 1, steps 1–2):
-///
-/// ```text
-/// e_f = e_q/s_e;  h = g + e_f;  q = Q(h; s, bits);  d = q/s
-/// e~  = (1-beta) e_f + beta (h - d)
-/// e_q' = reset ? 0 : Q(e~; s_e, 8)
-/// ```
-///
-/// Writes the low-bit codes into `q_out` and updates `e_q` in place.
-/// This is the scalar reference; `loco_step_packed` below is the
-/// hot-path version that emits the nibble-packed wire format directly.
-pub fn loco_step(g: &[f32], e_q: &mut [i8], q_out: &mut [i8], p: LocoParams, reset: bool) {
-    debug_assert_eq!(g.len(), e_q.len());
-    debug_assert_eq!(g.len(), q_out.len());
+/// One block of the fused LoCo step — the per-element math both the chunked
+/// drivers and the scalar reference compile down to. The `reset` branch is
+/// hoisted out of the loop and the generic `quantize` is inlined with
+/// precomputed clamp bounds so the body autovectorizes (AVX2 roundps) — see
+/// EXPERIMENTS.md §Perf.
+#[inline(always)]
+fn loco_step_block(g: &[f32], e_q: &mut [i8], q_out: &mut [i8], p: LocoParams, reset: bool) {
     let inv_se = 1.0 / p.s_e;
     let inv_s = 1.0 / p.s;
     let hi = ((1i32 << (p.bits - 1)) - 1) as f32;
     let lo = -((1i32 << (p.bits - 1)) as f32);
-    // §Perf: the reset branch is hoisted out of the loop and the generic
-    // `quantize` is inlined with precomputed clamp bounds so the body
-    // autovectorizes (AVX2 roundps) — see EXPERIMENTS.md §Perf.
     if reset {
         for i in 0..g.len() {
             let e_f = e_q[i] as f32 * inv_se;
@@ -113,13 +110,49 @@ pub fn loco_step(g: &[f32], e_q: &mut [i8], q_out: &mut [i8], p: LocoParams, res
     }
 }
 
+/// Scalar reference for the fused LoCo step — retained so
+/// `tests/kernel_parity.rs` can pin the chunked kernels bitwise against it.
+pub fn loco_step_scalar(g: &[f32], e_q: &mut [i8], q_out: &mut [i8], p: LocoParams, reset: bool) {
+    debug_assert_eq!(g.len(), e_q.len());
+    debug_assert_eq!(g.len(), q_out.len());
+    loco_step_block(g, e_q, q_out, p, reset);
+}
+
+/// Fused LoCo step over a shard (Algorithm 1, steps 1–2):
+///
+/// ```text
+/// e_f = e_q/s_e;  h = g + e_f;  q = Q(h; s, bits);  d = q/s
+/// e~  = (1-beta) e_f + beta (h - d)
+/// e_q' = reset ? 0 : Q(e~; s_e, 8)
+/// ```
+///
+/// Writes the low-bit codes into `q_out` and updates `e_q` in place.
+/// Runs in [`pack::CHUNK`]-wide blocks plus a scalar tail; every element is
+/// independent, so the result is bitwise-identical to [`loco_step_scalar`].
+pub fn loco_step(g: &[f32], e_q: &mut [i8], q_out: &mut [i8], p: LocoParams, reset: bool) {
+    debug_assert_eq!(g.len(), e_q.len());
+    debug_assert_eq!(g.len(), q_out.len());
+    let n = g.len();
+    let full = n - n % pack::CHUNK;
+    let mut i = 0;
+    while i < full {
+        let j = i + pack::CHUNK;
+        loco_step_block(&g[i..j], &mut e_q[i..j], &mut q_out[i..j], p, reset);
+        i = j;
+    }
+    if full < n {
+        loco_step_block(&g[full..], &mut e_q[full..], &mut q_out[full..], p, reset);
+    }
+}
+
 /// Hot-path fused LoCo step emitting packed nibbles (two codes per output
 /// byte). `g.len()` may be odd; the trailing nibble is zero-padded.
 ///
-/// §Perf iteration 2: runs the vectorizable fused step into a scratch code
-/// buffer, then bit-packs in a second streaming pass — 1.6x faster than the
-/// original interleaved per-pair loop, whose per-element `reset` branch and
-/// byte-push blocked autovectorization (EXPERIMENTS.md §Perf).
+/// §Perf iteration 3: the fused step and the bit-pack now share one
+/// [`pack::CHUNK`]-wide block pass through stack scratch arrays — the old
+/// per-call whole-shard `Vec<i8>` code buffer is gone, so a caller that
+/// reuses `out` allocates nothing in the steady state (asserted by
+/// `tests/scaling.rs`).
 pub fn loco_step_packed(
     g: &[f32],
     e_q: &mut [i8],
@@ -130,29 +163,76 @@ pub fn loco_step_packed(
     debug_assert_eq!(g.len(), e_q.len());
     debug_assert_eq!(p.bits, 4, "packed path is the 4-bit wire format");
     let n = g.len();
-    let mut codes = vec![0i8; n];
-    loco_step(g, e_q, &mut codes, p, reset);
     out.clear();
     out.reserve(n.div_ceil(2));
-    let pairs = n / 2;
-    for i in 0..pairs {
-        out.push(pack::pack_pair(codes[2 * i], codes[2 * i + 1]));
+    let full = n - n % pack::CHUNK;
+    let mut i = 0;
+    while i < full {
+        let j = i + pack::CHUNK;
+        let mut codes = [0i8; pack::CHUNK];
+        loco_step_block(&g[i..j], &mut e_q[i..j], &mut codes, p, reset);
+        let mut buf = [0u8; pack::CHUNK / 2];
+        for k in 0..pack::CHUNK / 2 {
+            buf[k] = pack::pack_pair(codes[2 * k], codes[2 * k + 1]);
+        }
+        out.extend_from_slice(&buf);
+        i = j;
     }
-    if n % 2 == 1 {
-        out.push(pack::pack_pair(codes[n - 1], 0));
+    let rem = n - full;
+    if rem > 0 {
+        let mut codes = [0i8; pack::CHUNK];
+        loco_step_block(&g[full..], &mut e_q[full..], &mut codes[..rem], p, reset);
+        let pairs = rem / 2;
+        for k in 0..pairs {
+            out.push(pack::pack_pair(codes[2 * k], codes[2 * k + 1]));
+        }
+        if rem % 2 == 1 {
+            out.push(pack::pack_pair(codes[rem - 1], 0));
+        }
     }
 }
 
-/// Receiver side of the 4-bit wire: `acc[i] += unpack(bytes)[i] / s`.
-/// Uses a 256-entry lookup table mapping each byte to its two signed
-/// nibbles, so the inner loop is one table load + two fmas per byte.
-pub fn dequantize_accumulate_packed(bytes: &[u8], n: usize, s: f32, acc: &mut [f32]) {
+/// Scalar reference for [`dequantize_accumulate_packed`] — retained for the
+/// kernel parity suite.
+pub fn dequantize_accumulate_packed_scalar(bytes: &[u8], n: usize, s: f32, acc: &mut [f32]) {
     debug_assert!(acc.len() >= n);
     debug_assert!(bytes.len() >= n.div_ceil(2));
     let inv = 1.0 / s;
     let lut = pack::nibble_lut();
     let pairs = n / 2;
     for i in 0..pairs {
+        let (lo, hi) = lut[bytes[i] as usize];
+        acc[2 * i] += lo as f32 * inv;
+        acc[2 * i + 1] += hi as f32 * inv;
+    }
+    if n % 2 == 1 {
+        let (lo, _) = lut[bytes[pairs] as usize];
+        acc[n - 1] += lo as f32 * inv;
+    }
+}
+
+/// Receiver side of the 4-bit wire: `acc[i] += unpack(bytes)[i] / s`.
+/// Uses a 256-entry lookup table mapping each byte to its two signed
+/// nibbles — one table load + two fmas per byte, driven in
+/// [`pack::CHUNK`]-wide blocks.
+pub fn dequantize_accumulate_packed(bytes: &[u8], n: usize, s: f32, acc: &mut [f32]) {
+    debug_assert!(acc.len() >= n);
+    debug_assert!(bytes.len() >= n.div_ceil(2));
+    let inv = 1.0 / s;
+    let lut = pack::nibble_lut();
+    let full = n / pack::CHUNK;
+    for c in 0..full {
+        let src = &bytes[c * (pack::CHUNK / 2)..(c + 1) * (pack::CHUNK / 2)];
+        let dst = &mut acc[c * pack::CHUNK..(c + 1) * pack::CHUNK];
+        for i in 0..pack::CHUNK / 2 {
+            let (lo, hi) = lut[src[i] as usize];
+            dst[2 * i] += lo as f32 * inv;
+            dst[2 * i + 1] += hi as f32 * inv;
+        }
+    }
+    let done = full * pack::CHUNK;
+    let pairs = n / 2;
+    for i in done / 2..pairs {
         let (lo, hi) = lut[bytes[i] as usize];
         acc[2 * i] += lo as f32 * inv;
         acc[2 * i + 1] += hi as f32 * inv;
@@ -222,6 +302,24 @@ mod tests {
     }
 
     #[test]
+    fn chunked_step_matches_scalar_reference() {
+        for_cases(14, 48, |rng| {
+            // lengths straddle the CHUNK boundary: tail-only, exact, +1, ...
+            let n = 1 + rng.below(3 * pack::CHUNK);
+            let g = vec_normal(rng, n, 0.1);
+            let p = LocoParams { s: 32.0, s_e: 128.0, beta: 0.25, bits: 4 };
+            let mut e1: Vec<i8> = (0..n).map(|_| (rng.below(200) as i32 - 100) as i8).collect();
+            let mut e2 = e1.clone();
+            let mut q1 = vec![0i8; n];
+            let mut q2 = vec![0i8; n];
+            loco_step_scalar(&g, &mut e1, &mut q1, p, false);
+            loco_step(&g, &mut e2, &mut q2, p, false);
+            assert_eq!(e1, e2);
+            assert_eq!(q1, q2);
+        });
+    }
+
+    #[test]
     fn packed_matches_scalar() {
         for_cases(12, 48, |rng| {
             let g = vec_normal(rng, 257, 0.1);
@@ -230,7 +328,7 @@ mod tests {
             let mut e1: Vec<i8> = (0..n).map(|_| (rng.below(200) as i32 - 100) as i8).collect();
             let mut e2 = e1.clone();
             let mut q = vec![0i8; n];
-            loco_step(&g, &mut e1, &mut q, p, false);
+            loco_step_scalar(&g, &mut e1, &mut q, p, false);
             let mut packed = Vec::new();
             loco_step_packed(&g, &mut e2, &mut packed, p, false);
             assert_eq!(e1, e2);
@@ -249,9 +347,12 @@ mod tests {
             let packed = pack_nibbles(&codes);
             let mut a = vec![1.0f32; n];
             let mut b = vec![1.0f32; n];
+            let mut c = vec![1.0f32; n];
             dequantize_accumulate(&codes, 16.0, &mut a);
             dequantize_accumulate_packed(&packed, n, 16.0, &mut b);
+            dequantize_accumulate_packed_scalar(&packed, n, 16.0, &mut c);
             assert_eq!(a, b);
+            assert_eq!(b, c);
         });
     }
 

@@ -3,8 +3,15 @@
 //! Two signed 4-bit codes per byte: code `2i` in the low nibble, `2i+1` in
 //! the high nibble, both stored two's-complement. Odd lengths zero-pad the
 //! final high nibble. A 256-entry LUT decodes a byte to its signed pair.
+//!
+//! Layout note (PR 8): the hot kernels below process fixed [`CHUNK`]-element
+//! blocks through stack scratch arrays so the autovectorizer sees a constant
+//! trip count, with a scalar tail for the remainder. The per-element math is
+//! *identical* to the retained `*_scalar` references, so the chunked kernels
+//! are bitwise-equal by construction — and `tests/kernel_parity.rs` pins it.
 
-use once_cell::sync::Lazy;
+/// Block width of the chunked pack/unpack kernels (elements, not bytes).
+pub const CHUNK: usize = 64;
 
 /// A packed int4 buffer plus its logical element count.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -36,12 +43,29 @@ pub fn pack_pair(lo: i8, hi: i8) -> u8 {
 
 /// Sign-extend a low nibble.
 #[inline(always)]
-pub fn sext4(n: u8) -> i8 {
+pub const fn sext4(n: u8) -> i8 {
     ((n << 4) as i8) >> 4
 }
 
-/// Pack a code slice (each in [-8, 7]) two-per-byte.
-pub fn pack_nibbles(codes: &[i8]) -> Vec<u8> {
+/// 256-entry decode table: byte -> (low nibble signed, high nibble signed).
+/// Built at compile time — no lazy-init branch on the decode hot path.
+pub fn nibble_lut() -> &'static [(i8, i8); 256] {
+    const fn build() -> [(i8, i8); 256] {
+        let mut t = [(0i8, 0i8); 256];
+        let mut b = 0usize;
+        while b < 256 {
+            t[b] = (sext4(b as u8 & 0x0F), sext4((b as u8) >> 4));
+            b += 1;
+        }
+        t
+    }
+    static LUT: [(i8, i8); 256] = build();
+    &LUT
+}
+
+/// Scalar reference for [`pack_nibbles_into`] — retained so the kernel
+/// parity suite can pin the chunked kernel bitwise against it.
+pub fn pack_nibbles_scalar(codes: &[i8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(codes.len().div_ceil(2));
     let pairs = codes.len() / 2;
     for i in 0..pairs {
@@ -53,8 +77,40 @@ pub fn pack_nibbles(codes: &[i8]) -> Vec<u8> {
     out
 }
 
-/// Unpack `n` codes from a packed buffer.
-pub fn unpack_nibbles(bytes: &[u8], n: usize) -> Vec<i8> {
+/// Chunked pack kernel: clears `out` and fills it with `codes` two-per-byte.
+/// Reusing `out` across steps makes the steady state allocation-free once
+/// its capacity has grown to the shard size.
+pub fn pack_nibbles_into(codes: &[i8], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(codes.len().div_ceil(2));
+    let mut chunks = codes.chunks_exact(CHUNK);
+    for c in &mut chunks {
+        let mut buf = [0u8; CHUNK / 2];
+        for i in 0..CHUNK / 2 {
+            buf[i] = pack_pair(c[2 * i], c[2 * i + 1]);
+        }
+        out.extend_from_slice(&buf);
+    }
+    let rem = chunks.remainder();
+    let pairs = rem.len() / 2;
+    for i in 0..pairs {
+        out.push(pack_pair(rem[2 * i], rem[2 * i + 1]));
+    }
+    if rem.len() % 2 == 1 {
+        out.push(pack_pair(rem[rem.len() - 1], 0));
+    }
+}
+
+/// Pack a code slice (each in [-8, 7]) two-per-byte.
+pub fn pack_nibbles(codes: &[i8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack_nibbles_into(codes, &mut out);
+    out
+}
+
+/// Scalar reference for [`unpack_nibbles_into`] — retained for the kernel
+/// parity suite.
+pub fn unpack_nibbles_scalar(bytes: &[u8], n: usize) -> Vec<i8> {
     let mut out = Vec::with_capacity(n);
     let lut = nibble_lut();
     let pairs = n / 2;
@@ -69,17 +125,40 @@ pub fn unpack_nibbles(bytes: &[u8], n: usize) -> Vec<i8> {
     out
 }
 
-/// 256-entry decode table: byte -> (low nibble signed, high nibble signed).
-pub fn nibble_lut() -> &'static [(i8, i8); 256] {
-    static LUT: Lazy<[(i8, i8); 256]> = Lazy::new(|| {
-        let mut t = [(0i8, 0i8); 256];
-        for (b, e) in t.iter_mut().enumerate() {
-            let b = b as u8;
-            *e = (sext4(b & 0x0F), sext4(b >> 4));
+/// Chunked unpack kernel: clears `out` and fills it with `n` codes decoded
+/// from `bytes`.
+pub fn unpack_nibbles_into(bytes: &[u8], n: usize, out: &mut Vec<i8>) {
+    out.clear();
+    out.reserve(n);
+    let lut = nibble_lut();
+    let full = n / CHUNK;
+    for c in 0..full {
+        let src = &bytes[c * (CHUNK / 2)..(c + 1) * (CHUNK / 2)];
+        let mut buf = [0i8; CHUNK];
+        for i in 0..CHUNK / 2 {
+            let (lo, hi) = lut[src[i] as usize];
+            buf[2 * i] = lo;
+            buf[2 * i + 1] = hi;
         }
-        t
-    });
-    &LUT
+        out.extend_from_slice(&buf);
+    }
+    let done = full * CHUNK;
+    let pairs = n / 2;
+    for i in done / 2..pairs {
+        let (lo, hi) = lut[bytes[i] as usize];
+        out.push(lo);
+        out.push(hi);
+    }
+    if n % 2 == 1 {
+        out.push(lut[bytes[pairs] as usize].0);
+    }
+}
+
+/// Unpack `n` codes from a packed buffer.
+pub fn unpack_nibbles(bytes: &[u8], n: usize) -> Vec<i8> {
+    let mut out = Vec::new();
+    unpack_nibbles_into(bytes, n, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -115,6 +194,20 @@ mod tests {
             assert_eq!(packed.unpack(), codes);
             assert_eq!(packed.wire_bytes(), n.div_ceil(2));
         });
+    }
+
+    #[test]
+    fn chunked_matches_scalar_around_chunk_boundaries() {
+        for n in [0usize, 1, 63, 64, 65, 127, 128, 129, 191, 257] {
+            let codes: Vec<i8> = (0..n).map(|i| ((i * 7) % 16) as i8 - 8).collect();
+            let packed = pack_nibbles(&codes);
+            assert_eq!(packed, pack_nibbles_scalar(&codes), "pack n={n}");
+            assert_eq!(
+                unpack_nibbles(&packed, n),
+                unpack_nibbles_scalar(&packed, n),
+                "unpack n={n}"
+            );
+        }
     }
 
     #[test]

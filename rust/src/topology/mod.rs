@@ -432,6 +432,8 @@ struct UnevenPlan {
     /// row-domain encoder (error feedback sized to the row) + decoder
     enc: Mutex<Box<dyn Encoder>>,
     dec: Mutex<Box<dyn Decoder>>,
+    /// shard-sized decode strip reused by [`UnevenPlan::grad_drain`]
+    scratch: Mutex<Vec<f32>>,
     n_slices: u64,
 }
 
@@ -514,7 +516,10 @@ impl UnevenPlan {
     ) {
         debug_assert_eq!(shard_acc.len(), self.my_shard.len());
         shard_acc.fill(0.0);
-        let mut tmp = vec![0.0f32; self.my_shard.len()];
+        // shard-sized decode strip, reused across drains: allocates on the
+        // first step only, so steady-state steps stay allocation-free here
+        let mut tmp = self.scratch.lock().unwrap();
+        tmp.resize(self.my_shard.len(), 0.0);
         let mut dec = self.dec.lock().unwrap();
         for &i in &self.owned {
             let s = &self.slices[i];
@@ -675,7 +680,16 @@ impl HierSyncEngine {
                 let g_rows = topo.island_rows(g, layout.total);
                 for (j, &holder) in members.iter().enumerate() {
                     let row = &g_rows[j];
-                    for (owner, shard) in part.ranges.iter().enumerate() {
+                    // shards are contiguous and ascending, so the owners
+                    // overlapping this row form one run: binary-search its
+                    // start and stop at its end instead of scanning all n
+                    // shards per row — the table builds in O(n log n + S)
+                    // for S slices, not O(n²)
+                    let first = part.ranges.partition_point(|s| s.end <= row.start);
+                    for (owner, shard) in part.ranges.iter().enumerate().skip(first) {
+                        if shard.start >= row.end {
+                            break;
+                        }
                         let start = row.start.max(shard.start);
                         let end = row.end.min(shard.end);
                         if start < end {
@@ -716,6 +730,7 @@ impl HierSyncEngine {
                     holder_scale,
                     enc: Mutex::new(enc),
                     dec: Mutex::new(dec),
+                    scratch: Mutex::new(Vec::new()),
                     n_slices,
                 }),
             });
@@ -746,7 +761,21 @@ impl HierSyncEngine {
             jpart.ranges.iter().all(|r| span.start <= r.start && r.end <= span.end),
             "partition is not the recursive topology cut"
         );
-        let inner = SyncEngine::new(cfg, layout, &jpart, my_outer, k);
+        // `bucket_bytes = "auto"` on a tiered tree must invert the
+        // pipeline model against the *outermost* cut — the row this rank
+        // ships over the slow fabric — not the flat cluster's shard
+        // (which is what the flat resolution inside `SyncEngine::new`
+        // would otherwise see through `jpart`)
+        let mut outer_cfg = *cfg;
+        if outer_cfg.bucket_bytes == CompressorConfig::AUTO_BUCKET_BYTES {
+            outer_cfg.bucket_bytes = crate::netsim::throughput::auto_bucket_bytes_tiered(
+                cfg.method.name(),
+                span.len(),
+                cfg.bits,
+                depth,
+            );
+        }
+        let inner = SyncEngine::new(&outer_cfg, layout, &jpart, my_outer, k);
         Ok(HierSyncEngine {
             topo: topo.clone(),
             rank,

@@ -1,0 +1,307 @@
+//! Kernel parity suite (PR 8): the chunked, autovectorizer-friendly hot
+//! kernels in `quant` must be *bitwise* equal to the retained scalar
+//! references — for every bit width, odd/unaligned length, empty shard,
+//! across multi-step error-feedback evolution, and through every
+//! compressor method's actual wire format. A vectorization rewrite that
+//! changes a single code or error byte fails here, not three PRs later
+//! in a training-curve regression.
+
+use loco::compress::{
+    build, build_bucket_encoder, decode_accumulate_stateless, CompressorConfig, Method, WireMsg,
+};
+use loco::quant::pack::{
+    pack_nibbles_into, pack_nibbles_scalar, unpack_nibbles_into, unpack_nibbles_scalar, CHUNK,
+};
+use loco::quant::{self, LocoParams};
+use loco::sharding::ParamLayout;
+use loco::util::prop::for_cases;
+use loco::util::rng::Rng;
+
+/// Lengths that straddle every interesting boundary of a CHUNK-wide
+/// kernel: empty, single element, one-off-aligned, exact multiples, and
+/// odd tails (the nibble pair split).
+fn boundary_lengths() -> Vec<usize> {
+    vec![
+        0,
+        1,
+        2,
+        3,
+        CHUNK - 1,
+        CHUNK,
+        CHUNK + 1,
+        2 * CHUNK - 1,
+        2 * CHUNK,
+        2 * CHUNK + 17,
+        3 * CHUNK + 29,
+    ]
+}
+
+fn random_codes(rng: &mut Rng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (rng.below(16) as i8) - 8).collect()
+}
+
+fn random_grad(rng: &mut Rng, n: usize, std: f32) -> Vec<f32> {
+    let mut g = vec![0.0f32; n];
+    rng.fill_normal(&mut g, std);
+    g
+}
+
+fn random_err(rng: &mut Rng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (rng.below(200) as i32 - 100) as i8).collect()
+}
+
+#[test]
+fn pack_unpack_chunked_matches_scalar_for_all_lengths() {
+    for_cases(801, 64, |rng| {
+        for n in boundary_lengths() {
+            let codes = random_codes(rng, n);
+            let scalar = pack_nibbles_scalar(&codes);
+            // the chunked kernel, through a reused output buffer (the
+            // steady-state calling convention of the sync engine)
+            let mut packed = Vec::new();
+            pack_nibbles_into(&codes, &mut packed);
+            assert_eq!(packed, scalar, "pack n={n}");
+            pack_nibbles_into(&codes, &mut packed); // reuse must not differ
+            assert_eq!(packed, scalar, "pack (reused buffer) n={n}");
+            let back_scalar = unpack_nibbles_scalar(&packed, n);
+            let mut back = Vec::new();
+            unpack_nibbles_into(&packed, n, &mut back);
+            assert_eq!(back, back_scalar, "unpack n={n}");
+            assert_eq!(back, codes, "roundtrip n={n}");
+        }
+    });
+}
+
+#[test]
+fn fused_step_matches_scalar_for_all_bit_widths() {
+    // every wire width the compressor config admits (1..=8), both the
+    // normal and the reset branch, on lengths straddling chunk cuts
+    for_cases(802, 24, |rng| {
+        for bits in 1..=8u32 {
+            for n in boundary_lengths() {
+                for reset in [false, true] {
+                    let g = random_grad(rng, n, 0.1);
+                    let p = LocoParams { s: 32.0, s_e: 128.0, beta: 0.25, bits };
+                    let mut e_ref = random_err(rng, n);
+                    let mut e_chunk = e_ref.clone();
+                    let mut q_ref = vec![0i8; n];
+                    let mut q_chunk = vec![0i8; n];
+                    quant::loco_step_scalar(&g, &mut e_ref, &mut q_ref, p, reset);
+                    quant::loco_step(&g, &mut e_chunk, &mut q_chunk, p, reset);
+                    assert_eq!(q_ref, q_chunk, "codes: bits={bits} n={n} reset={reset}");
+                    assert_eq!(e_ref, e_chunk, "error: bits={bits} n={n} reset={reset}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn packed_step_matches_scalar_step_plus_scalar_pack() {
+    // the fully fused kernel (step + nibble pack in one block pass)
+    // against the two-stage scalar pipeline, including empty and odd
+    for_cases(803, 48, |rng| {
+        for n in boundary_lengths() {
+            let g = random_grad(rng, n, 0.1);
+            let p = LocoParams { s: 32.0, s_e: 128.0, beta: 0.25, bits: 4 };
+            let mut e_ref = random_err(rng, n);
+            let mut e_fused = e_ref.clone();
+            let mut q_ref = vec![0i8; n];
+            quant::loco_step_scalar(&g, &mut e_ref, &mut q_ref, p, false);
+            let wire_ref = pack_nibbles_scalar(&q_ref);
+            let mut wire = Vec::new();
+            quant::loco_step_packed(&g, &mut e_fused, &mut wire, p, false);
+            assert_eq!(wire, wire_ref, "wire bytes n={n}");
+            assert_eq!(e_fused, e_ref, "error store n={n}");
+        }
+    });
+}
+
+#[test]
+fn dequantize_accumulate_chunked_matches_scalar() {
+    for_cases(804, 48, |rng| {
+        for n in boundary_lengths() {
+            let codes = random_codes(rng, n);
+            let mut wire = Vec::new();
+            pack_nibbles_into(&codes, &mut wire);
+            let mut acc_ref = random_grad(rng, n.max(1), 1.0);
+            acc_ref.truncate(n);
+            let mut acc = acc_ref.clone();
+            quant::dequantize_accumulate_packed_scalar(&wire, n, 16.0, &mut acc_ref);
+            quant::dequantize_accumulate_packed(&wire, n, 16.0, &mut acc);
+            assert_eq!(
+                acc_ref.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                acc.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "accumulate n={n}"
+            );
+        }
+    });
+}
+
+#[test]
+fn error_feedback_evolution_is_chunk_invariant() {
+    // EF state drifts if chunking changes even one rounding: evolve the
+    // chunked and scalar kernels side by side for many steps (with
+    // periodic resets) on an odd, unaligned length and demand bitwise
+    // lockstep at every step
+    let n = 3 * CHUNK + 29;
+    let p = LocoParams { s: 16.0, s_e: 64.0, beta: 0.125, bits: 4 };
+    let mut rng = Rng::new(805);
+    let mut e_ref = vec![0i8; n];
+    let mut e_chunk = vec![0i8; n];
+    let mut q_ref = vec![0i8; n];
+    let mut q_chunk = vec![0i8; n];
+    let mut g = vec![0.0f32; n];
+    for step in 1..=60u64 {
+        rng.fill_normal(&mut g, 0.05);
+        let reset = step % 16 == 0;
+        quant::loco_step_scalar(&g, &mut e_ref, &mut q_ref, p, reset);
+        quant::loco_step(&g, &mut e_chunk, &mut q_chunk, p, reset);
+        assert_eq!(q_ref, q_chunk, "codes diverged at step {step}");
+        assert_eq!(e_ref, e_chunk, "error store diverged at step {step}");
+    }
+}
+
+/// Unpack every wire format's payload with the scalar reference path and
+/// accumulate; the caller compares against [`decode_accumulate_stateless`]
+/// (which routes I4 through the chunked LUT kernel).
+fn decode_scalar(msg: &WireMsg, acc: &mut [f32]) {
+    match msg {
+        WireMsg::I4 { packed, n, scale } => {
+            quant::dequantize_accumulate_packed_scalar(packed, *n, *scale, acc);
+        }
+        other => decode_accumulate_stateless(other, acc),
+    }
+}
+
+#[test]
+fn every_method_wire_format_decodes_identically_chunked_and_scalar() {
+    // all 9 hierarchically-capable methods (everything except PowerSGD,
+    // which is whole-tensor/DDP-only) through their real encoders on an
+    // odd-length shard: every emitted message must decode bitwise the
+    // same through the chunked and the scalar receive path, and any
+    // nibble-packed payload must survive a scalar unpack/repack untouched
+    let n = 3 * CHUNK + 63; // odd: exercises the zero-padded tail nibble
+    let layout = ParamLayout::single("flat", &[n]);
+    let methods = [
+        Method::Fp32,
+        Method::Bf16,
+        Method::Loco,
+        Method::Ef,
+        Method::Ef21,
+        Method::OneBit,
+        Method::Zeropp,
+        Method::LocoZeropp,
+        Method::IntSgd,
+    ];
+    for method in methods {
+        let cfg = CompressorConfig { s: 32.0, ..CompressorConfig::with_method(method) };
+        let (mut enc, _dec) = build(&cfg, &layout, 0..n, 1);
+        let mut rng = Rng::new(806);
+        let mut g = vec![0.0f32; n];
+        for step in 1..=6u64 {
+            rng.fill_normal(&mut g, 0.05);
+            let msg = enc.encode(&g, 0..n, step);
+            assert_eq!(msg.element_count(), n, "{method:?} step {step}");
+            if let WireMsg::I4 { packed, n: m, .. } = &msg {
+                let codes = unpack_nibbles_scalar(packed, *m);
+                let mut chunked = Vec::new();
+                unpack_nibbles_into(packed, *m, &mut chunked);
+                assert_eq!(codes, chunked, "{method:?}: unpack parity");
+                assert_eq!(
+                    &pack_nibbles_scalar(&codes),
+                    packed,
+                    "{method:?}: scalar repack must reproduce the wire bytes"
+                );
+            }
+            let mut acc_chunked = vec![0.0f32; n];
+            let mut acc_scalar = vec![0.0f32; n];
+            decode_accumulate_stateless(&msg, &mut acc_chunked);
+            decode_scalar(&msg, &mut acc_scalar);
+            assert_eq!(
+                acc_chunked.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                acc_scalar.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "{method:?} step {step}: chunked and scalar decode disagree"
+            );
+        }
+    }
+}
+
+#[test]
+fn auto_scale_ema_is_invariant_to_encode_splits() {
+    // the auto_scale EMA folds the RMS aggregated over a step's encodes;
+    // splitting a shard into unaligned sub-encodes (so chunk boundaries
+    // land at different absolute offsets) must not move the EMA, the wire
+    // scale, the codes, or the error store by a single bit
+    let n = 517;
+    let cut = 131; // odd split: neither side is CHUNK-aligned
+    let layout = ParamLayout::single("flat", &[n]);
+    let cfg = CompressorConfig {
+        s: 32.0,
+        auto_scale: true,
+        ..CompressorConfig::with_method(Method::Loco)
+    };
+    let (mut whole, _) = build(&cfg, &layout, 0..n, 1);
+    let (mut split, _) = build(&cfg, &layout, 0..n, 1);
+    let mut rng = Rng::new(807);
+    let mut g = vec![0.0f32; n];
+    for step in 1..=12u64 {
+        rng.fill_normal(&mut g, 0.05);
+        let m = whole.encode(&g, 0..n, step);
+        let a = split.encode(&g, 0..cut, step);
+        let b = split.encode(&g, cut..n, step);
+        let (codes_m, scale_m) = match m {
+            WireMsg::I4 { packed, n, scale } => (unpack_nibbles_scalar(&packed, n), scale),
+            other => panic!("expected I4, got {other:?}"),
+        };
+        let mut codes_s = Vec::with_capacity(n);
+        for (part, label) in [(a, "low"), (b, "high")] {
+            match part {
+                WireMsg::I4 { packed, n, scale } => {
+                    assert_eq!(
+                        scale.to_bits(),
+                        scale_m.to_bits(),
+                        "step {step}: {label} half scale diverged"
+                    );
+                    codes_s.extend(unpack_nibbles_scalar(&packed, n));
+                }
+                other => panic!("expected I4, got {other:?}"),
+            }
+        }
+        assert_eq!(codes_m, codes_s, "step {step}: codes diverged across the split");
+    }
+    // the EMA and the error store end bitwise identical
+    assert_eq!(whole.export_state(), split.export_state(), "exported state diverged");
+}
+
+#[test]
+fn bucketed_encoders_stay_bitwise_equal_on_unaligned_cuts() {
+    // the sync engine's per-bucket encoders with cuts that are neither
+    // CHUNK- nor block-aligned must still evolve exactly like one
+    // monolithic encoder — the elementwise-kernel guarantee the bucketed
+    // overlap path is built on
+    let n = 4 * CHUNK; // 256, cut at odd offsets below
+    let cuts = [0usize, 37, CHUNK + 1, 3 * CHUNK - 5, n];
+    let cfg = CompressorConfig { s: 32.0, ..Default::default() };
+    let layout = ParamLayout::single("flat", &[n]);
+    let (mut mono, _) = build(&cfg, &layout, 0..n, 1);
+    let mut bucketed: Vec<_> =
+        cuts.windows(2).map(|w| build_bucket_encoder(&cfg, w[0]..w[1])).collect();
+    let mut rng = Rng::new(808);
+    let mut g = vec![0.0f32; n];
+    for step in 1..=24u64 {
+        rng.fill_normal(&mut g, 0.05);
+        let mono_codes = match mono.encode(&g, 0..n, step) {
+            WireMsg::I4 { packed, n, .. } => unpack_nibbles_scalar(&packed, n),
+            other => panic!("expected I4, got {other:?}"),
+        };
+        let mut got = Vec::with_capacity(n);
+        for (enc, w) in bucketed.iter_mut().zip(cuts.windows(2)) {
+            match enc.encode(&g, w[0]..w[1], step) {
+                WireMsg::I4 { packed, n, .. } => got.extend(unpack_nibbles_scalar(&packed, n)),
+                other => panic!("expected I4, got {other:?}"),
+            }
+        }
+        assert_eq!(mono_codes, got, "codes diverged at step {step}");
+    }
+}

@@ -14,7 +14,8 @@ use loco::collective::{
 };
 use loco::comm::SyncEngine;
 use loco::compress::fp::f32_to_bf16;
-use loco::compress::CompressorConfig;
+use loco::compress::sparse::SparseEncoder;
+use loco::compress::{pool, CompressorConfig, Encoder, Method};
 use loco::quant::{self, LocoParams};
 use loco::sharding::{ParamLayout, Partition};
 use loco::topology::{HierSyncEngine, Topology};
@@ -662,5 +663,69 @@ fn main() {
         }
         println!("BENCH_hotpath.json rows (pr-8, paste into a new \"measured\" entry):");
         println!("{}\n", rows.join(",\n"));
+    }
+
+    // 16. §Tentpole PR9: variable-length wire — the sparse chunked top-k
+    //     format against dense 4-bit LoCo and fp32. The byte columns are
+    //     counted off an actual 8-node engine exchange (the counters see
+    //     each message's wire_bytes(), a runtime property of the payload
+    //     since this PR), so the ratios are exact rather than analytic;
+    //     the encoder row times the chunked select-nth top-k itself.
+    {
+        let n_enc: usize = if fast { 1 << 16 } else { 1 << 20 };
+        let scfg = CompressorConfig { s: 64.0, ..CompressorConfig::with_method(Method::Sparse) };
+        let mut enc = SparseEncoder::new(&scfg, n_enc);
+        let mut ge = vec![0.0f32; n_enc];
+        Rng::new(3).fill_normal(&mut ge, 0.1);
+        let mut step = 0u64;
+        let st = bench_seconds(|| {
+            step += 1;
+            pool::recycle(enc.encode(&ge, 0..n_enc, step));
+        }, min_t.min(0.3));
+        let enc_ns = st.mean * 1e9 / n_enc as f64;
+        println!(
+            "sparse_topk_encode (k=16/256, 4b)  {:>16}  {enc_ns:6.3} ns/elem",
+            st.display()
+        );
+
+        let nodes = 8usize;
+        let total: usize = if fast { 1 << 15 } else { 1 << 17 }; // whole 256-chunks/shard
+        let layout = ParamLayout::single("flat", &[total]);
+        let topo = Topology::from_tiers(nodes, &[nodes]).expect("flat topology");
+        let part = topo.partition(total);
+        let count = |cfg: CompressorConfig| -> u64 {
+            let (layout, part, topo) = (&layout, &part, &topo);
+            let (_, counters) = run_cluster_topo(nodes, topo.cluster_spec(), move |ctx| {
+                let engine = HierSyncEngine::new(&cfg, layout, part, topo, ctx.rank).unwrap();
+                let mut grad = vec![0.0f32; total];
+                Rng::new(500 + ctx.rank as u64).fill_normal(&mut grad, 0.05);
+                let mut acc = vec![0.0f32; part.ranges[ctx.rank].len()];
+                engine.sync(&ctx, &mut grad, &mut acc, 1);
+            });
+            counters.total_sent()
+        };
+        let fp32 = count(CompressorConfig::with_method(Method::Fp32));
+        let dense4 = count(CompressorConfig { s: 64.0, ..Default::default() });
+        let sparse = count(scfg);
+        let bpp = |b: u64| b as f64 / (nodes * (nodes - 1) * (total / nodes)) as f64;
+        println!(
+            "grad wire B/param n={nodes}: fp32 {:.3}  loco-4bit {:.4}  sparse {:.4}  \
+             (sparse vs fp32 {:.1}x, vs dense-4bit {:.1}x)",
+            bpp(fp32),
+            bpp(dense4),
+            bpp(sparse),
+            fp32 as f64 / sparse as f64,
+            dense4 as f64 / sparse as f64
+        );
+        println!("BENCH_hotpath.json row (pr-9, paste into a new \"measured\" entry):");
+        println!(
+            "        {{\"ranks\": {nodes}, \"fp32_wire_bytes_per_param\": {:.3}, \
+             \"loco4_wire_bytes_per_param\": {:.4}, \"sparse_wire_bytes_per_param\": {:.4}, \
+             \"sparse_vs_fp32\": {:.1}, \"sparse_encode_ns_per_elem\": {enc_ns:.3}}}\n",
+            bpp(fp32),
+            bpp(dense4),
+            bpp(sparse),
+            fp32 as f64 / sparse as f64
+        );
     }
 }

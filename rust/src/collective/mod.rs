@@ -1098,15 +1098,19 @@ pub trait Comm {
         let right = (rank + 1) % n;
         let left = (rank + n - 1) % n;
         let mut out: Vec<Option<WireMsg>> = (0..n).map(|_| None).collect();
-        let mut carry = mine.clone();
+        // pooled clones: each forwarded copy comes back through the
+        // receivers' recycle calls, so the ring allocates nothing in
+        // steady state
+        let mut carry = crate::compress::pool::clone_msg(&mine);
         out[rank] = Some(mine);
         for s in 0..n - 1 {
             self.peer_send(right, Payload::Wire(carry));
             let incoming = self.peer_recv(left).into_wire();
             let src = (rank + n - s - 1) % n;
-            out[src] = Some(incoming.clone());
+            out[src] = Some(crate::compress::pool::clone_msg(&incoming));
             carry = incoming;
         }
+        crate::compress::pool::recycle(carry);
         out.into_iter().map(Option::unwrap).collect()
     }
 }

@@ -9,9 +9,13 @@
 //!
 //! Cut placement rules, in priority order:
 //! 1. buckets never straddle a shard (destination) boundary;
-//! 2. cuts keep `align`-element alignment *relative to the shard start*
-//!    (so nibble pairs and block-quantization scale groups inside a shard
-//!    land in the same groups as on the monolithic path);
+//! 2. cuts keep `align`-element alignment — *relative to the shard start*
+//!    for dense formats (so nibble pairs and block-quantization scale
+//!    groups inside a shard land in the same groups as on the monolithic
+//!    path), or on the *absolute* element grid when `align_absolute` is
+//!    set (the sparse top-k method anchors its chunk grid at absolute
+//!    offsets, so only absolute cuts keep bucketed selection identical to
+//!    monolithic);
 //! 3. when a tensor boundary from the [`ParamLayout`] falls inside the
 //!    tail of a bucket without violating rule 2, the cut snaps down onto
 //!    it, keeping whole tensors together where that is free.
@@ -44,12 +48,15 @@ impl BucketPlan {
     /// Cut `part` into buckets of at most `bucket_elems` elements each
     /// (`0` = one bucket per shard, the monolithic plan). `align` is the
     /// element alignment kept on interior cuts (2 for nibble-packed wire
-    /// formats, the quantization block size for block methods).
+    /// formats, the quantization block size for block methods);
+    /// `align_absolute` anchors it at element 0 instead of the shard start
+    /// (the sparse method's absolute chunk grid).
     pub fn new(
         part: &Partition,
         layout: &ParamLayout,
         bucket_elems: usize,
         align: usize,
+        align_absolute: bool,
     ) -> Self {
         let align = align.max(1);
         let n = part.ranges.len();
@@ -72,7 +79,7 @@ impl BucketPlan {
                 let end = if bucket_elems == 0 {
                     shard.end
                 } else {
-                    Self::cut(shard, layout, start, bucket_elems, align)
+                    Self::cut(shard, layout, start, bucket_elems, align, align_absolute)
                 };
                 by_dst[dst].push(buckets.len());
                 buckets.push(Bucket { range: start..end, dst });
@@ -89,16 +96,19 @@ impl BucketPlan {
         start: usize,
         bucket_elems: usize,
         align: usize,
+        align_absolute: bool,
     ) -> usize {
         let hard_end = (start + bucket_elems).min(shard.end);
         if hard_end == shard.end {
             return hard_end;
         }
-        // align the interior cut relative to the shard start
-        let rel = hard_end - shard.start;
+        // align the interior cut: relative to the shard start for dense
+        // formats, to the absolute element grid for the sparse method
+        let base = if align_absolute { 0 } else { shard.start };
+        let rel = hard_end - base;
         let rel_aligned = rel / align * align;
-        let mut end = if shard.start + rel_aligned > start {
-            shard.start + rel_aligned
+        let mut end = if base + rel_aligned > start {
+            base + rel_aligned
         } else {
             hard_end
         };
@@ -107,7 +117,7 @@ impl BucketPlan {
         let mut snap = None;
         for t in &layout.tensors {
             let b = t.offset + t.len;
-            if b > start && b < end && (b - shard.start) % align == 0 {
+            if b > start && b < end && (b - base) % align == 0 {
                 snap = Some(snap.map_or(b, |s: usize| s.max(b)));
             }
         }
@@ -198,7 +208,7 @@ mod tests {
         for n in [1usize, 2, 4] {
             for elems in [0usize, 64, 100, 4096] {
                 let part = Partition::flat_even(l.total, n, 2);
-                let plan = BucketPlan::new(&part, &l, elems, 2);
+                let plan = BucketPlan::new(&part, &l, elems, 2, false);
                 // buckets tile each shard without gaps or overlap
                 for (dst, shard) in part.ranges.iter().enumerate() {
                     let ids = plan.own(dst);
@@ -229,7 +239,7 @@ mod tests {
         for elems in [0usize, 64] {
             let part = Partition::flat_even(4, 4, 2);
             assert!(part.ranges.iter().any(|r| r.is_empty()), "fixture not degenerate");
-            let plan = BucketPlan::new(&part, &l, elems, 2);
+            let plan = BucketPlan::new(&part, &l, elems, 2, false);
             for dst in 0..4 {
                 assert!(!plan.own(dst).is_empty(), "dst {dst} owns no bucket");
                 let covered: usize =
@@ -250,7 +260,7 @@ mod tests {
     fn zero_bucket_elems_is_monolithic() {
         let l = layout();
         let part = Partition::flat_even(l.total, 4, 2);
-        let plan = BucketPlan::new(&part, &l, 0, 2);
+        let plan = BucketPlan::new(&part, &l, 0, 2, false);
         assert_eq!(plan.total(), 4);
         for (dst, shard) in part.ranges.iter().enumerate() {
             assert_eq!(plan.buckets[plan.own(dst)[0]].range, *shard);
@@ -261,11 +271,40 @@ mod tests {
     fn interior_cuts_keep_alignment() {
         let l = layout();
         let part = Partition::flat_even(l.total, 2, 2);
-        let plan = BucketPlan::new(&part, &l, 100, 4);
+        let plan = BucketPlan::new(&part, &l, 100, 4, false);
         for b in &plan.buckets {
             let shard = &part.ranges[b.dst];
             if b.range.end != shard.end {
                 assert_eq!((b.range.end - shard.start) % 4, 0, "{:?}", b.range);
+            }
+        }
+    }
+
+    #[test]
+    fn absolute_alignment_puts_cuts_on_the_global_grid() {
+        // a shard starting off the grid (flat_even over 1024 with 3 nodes
+        // puts shard 1 at 340) must still cut on absolute multiples of
+        // the alignment, so the sparse method's chunk grid stays intact
+        let l = ParamLayout::single("flat", &[1024]);
+        let part = Partition::flat_even(1024, 3, 2);
+        assert!(
+            part.ranges.iter().any(|r| r.start % 64 != 0),
+            "fixture: no shard starts off the 64-grid: {:?}",
+            part.ranges
+        );
+        let plan = BucketPlan::new(&part, &l, 100, 64, true);
+        for b in &plan.buckets {
+            let shard = &part.ranges[b.dst];
+            if b.range.end != shard.end {
+                assert_eq!(b.range.end % 64, 0, "{:?}", b.range);
+            }
+        }
+        // the relative mode keeps the old (shard-start-anchored) cuts
+        let rel = BucketPlan::new(&part, &l, 100, 64, false);
+        for b in &rel.buckets {
+            let shard = &part.ranges[b.dst];
+            if b.range.end != shard.end {
+                assert_eq!((b.range.end - shard.start) % 64, 0, "{:?}", b.range);
             }
         }
     }
@@ -276,7 +315,7 @@ mod tests {
         // one shard over everything; tensor "a" ends at 300, within the
         // tail of the second 256-bucket (256..512) and 300 % 2 == 0
         let part = Partition { ranges: vec![0..l.total] };
-        let plan = BucketPlan::new(&part, &l, 256, 2);
+        let plan = BucketPlan::new(&part, &l, 256, 2, false);
         assert!(
             plan.buckets.iter().any(|b| b.range.end == 300),
             "expected a cut at tensor boundary 300: {:?}",
@@ -288,7 +327,7 @@ mod tests {
     fn tag_namespaces_are_disjoint() {
         let l = layout();
         let part = Partition::flat_even(l.total, 4, 2);
-        let plan = BucketPlan::new(&part, &l, 64, 2);
+        let plan = BucketPlan::new(&part, &l, 64, 2, false);
         let mut seen = std::collections::HashSet::new();
         // all three namespaces over two adjacent steps must never collide
         for step in [1u64, 2] {
@@ -304,7 +343,7 @@ mod tests {
     fn schedule_visits_every_bucket_once() {
         let l = layout();
         let part = Partition::flat_even(l.total, 4, 2);
-        let plan = BucketPlan::new(&part, &l, 64, 2);
+        let plan = BucketPlan::new(&part, &l, 64, 2, false);
         for rank in 0..4 {
             let mut sched = plan.schedule(rank);
             assert_eq!(sched.len(), plan.total());

@@ -160,14 +160,18 @@ impl SyncEngine {
             cfg.bucket_bytes
         };
         let monolithic = bucket_bytes == 0 || cfg.method == Method::PowerSgd;
-        // alignment: keep block-scale groups intact for block methods,
-        // nibble pairs otherwise
+        // alignment: keep block-scale groups intact for block methods and
+        // top-k chunks intact for the sparse method (its chunk grid is
+        // absolute, so block-aligned cuts make bucketed == monolithic
+        // bitwise), nibble pairs otherwise
         let align = match cfg.method {
-            Method::Zeropp | Method::LocoZeropp | Method::IntSgd => cfg.block.max(1),
+            Method::Zeropp | Method::LocoZeropp | Method::IntSgd | Method::Sparse => {
+                cfg.block.max(1)
+            }
             _ => 2,
         };
         let bucket_elems = if monolithic { 0 } else { (bucket_bytes / 4).max(align) };
-        let plan = BucketPlan::new(part, layout, bucket_elems, align);
+        let plan = BucketPlan::new(part, layout, bucket_elems, align, cfg.method == Method::Sparse);
         // encoder state covers exactly the union of destination shards:
         // the full model for the flat engine, one gradient row for a
         // hierarchical peer-group engine
@@ -382,10 +386,11 @@ impl SyncEngine {
             shard_acc.fill(0.0);
             let mut t0 = 0;
             crate::trace::with(|t| t0 = t.now_ns());
-            for (src, msg) in recvd.iter().enumerate() {
-                dec.decode_accumulate(src, msg, shard_acc);
-            }
             let bytes: usize = recvd.iter().map(|m| m.wire_bytes()).sum();
+            for (src, msg) in recvd.into_iter().enumerate() {
+                dec.decode_accumulate(src, &msg, shard_acc);
+                compress::pool::recycle(msg);
+            }
             crate::trace::with(|t| {
                 t.advance_ns(crate::trace::mem_ns((bytes + 8 * shard_acc.len() * self.n) as f64));
                 t.span_at(t0, "comm", "drain", &[("bytes", bytes as f64)]);
@@ -464,6 +469,7 @@ impl SyncEngine {
                             let mut dec = self.dec[local].lock().unwrap();
                             for (src, msg) in msgs.into_iter().enumerate() {
                                 dec.decode_accumulate(src, &msg, acc);
+                                compress::pool::recycle(msg);
                             }
                             let _ = ack_tx.send(());
                         }
@@ -676,6 +682,7 @@ impl SyncEngine {
                     ctx.peer_recv_tagged(src, self.plan.stale_grad_tag(step, my_bi))
                 };
                 dec.decode_accumulate(src, &msg, shard_acc);
+                compress::pool::recycle(msg);
             }
             crate::trace::with(|t| t.span_at(t0, "comm", "drain", &[("step", step as f64)]));
             return;
@@ -694,6 +701,7 @@ impl SyncEngine {
                     ctx.peer_recv_tagged(src, self.plan.stale_grad_tag(step, bi))
                 };
                 dec.decode_accumulate(src, &msg, slice);
+                compress::pool::recycle(msg);
             }
             offset += b.range.len();
         }
@@ -725,8 +733,9 @@ impl SyncEngine {
         debug_assert_eq!(master.len(), self.my_range.len());
         if self.mono.is_some() {
             let all = ctx.all_gather_wire(encode_params(master, bf16));
-            for (src, msg) in all.iter().enumerate() {
-                compress::write_wire(msg, &mut params[self.ranges[src].clone()]);
+            for (src, msg) in all.into_iter().enumerate() {
+                compress::write_wire(&msg, &mut params[self.ranges[src].clone()]);
+                compress::pool::recycle(msg);
             }
             return;
         }
@@ -766,7 +775,10 @@ impl SyncEngine {
             let msg = encode_params(&master[rel], bf16);
             for off in 1..n {
                 let dst = (self.rank + off) % n;
-                ctx.peer_send_tagged(dst, self.plan.param_tag(step, bi), msg.clone());
+                // pooled clone: the per-peer copies circulate back through
+                // the receivers' recycle calls
+                let dup = compress::pool::clone_msg(&msg);
+                ctx.peer_send_tagged(dst, self.plan.param_tag(step, bi), dup);
             }
             own.push((bi, msg));
         }
@@ -797,12 +809,14 @@ impl SyncEngine {
         let PendingParams { step, own, recvs } = pending;
         let mut t0 = 0;
         crate::trace::with(|t| t0 = t.now_ns());
-        for (bi, msg) in &own {
-            compress::write_wire(msg, &mut params[self.plan.buckets[*bi].range.clone()]);
+        for (bi, msg) in own {
+            compress::write_wire(&msg, &mut params[self.plan.buckets[bi].range.clone()]);
+            compress::pool::recycle(msg);
         }
         for &(src, bi) in &recvs {
             let msg = ctx.peer_recv_tagged(src, self.plan.param_tag(step, bi));
             compress::write_wire(&msg, &mut params[self.plan.buckets[bi].range.clone()]);
+            compress::pool::recycle(msg);
         }
         crate::trace::with(|t| t.span_at(t0, "comm", "param_drain", &[("step", step as f64)]));
     }
@@ -814,9 +828,13 @@ impl SyncEngine {
 /// encode sites stay bitwise in lockstep.
 pub(crate) fn encode_params(xs: &[f32], bf16: bool) -> WireMsg {
     if bf16 {
-        WireMsg::Bf16(xs.iter().map(|&x| fp::f32_to_bf16(x)).collect())
+        let mut v = compress::pool::take_u16(xs.len());
+        v.extend(xs.iter().map(|&x| fp::f32_to_bf16(x)));
+        WireMsg::Bf16(v)
     } else {
-        WireMsg::F32(xs.to_vec())
+        let mut v = compress::pool::take_f32(xs.len());
+        v.extend_from_slice(xs);
+        WireMsg::F32(v)
     }
 }
 

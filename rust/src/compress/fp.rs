@@ -25,7 +25,9 @@ pub struct Fp32Encoder;
 
 impl Encoder for Fp32Encoder {
     fn encode(&mut self, grad: &[f32], range: Range<usize>, _step: u64) -> WireMsg {
-        WireMsg::F32(grad[range].to_vec())
+        let mut v = super::pool::take_f32(range.len());
+        v.extend_from_slice(&grad[range]);
+        WireMsg::F32(v)
     }
 
     fn wire_bits_per_elem(&self) -> f64 {
@@ -38,7 +40,9 @@ pub struct Bf16Encoder;
 
 impl Encoder for Bf16Encoder {
     fn encode(&mut self, grad: &[f32], range: Range<usize>, _step: u64) -> WireMsg {
-        WireMsg::Bf16(grad[range].iter().map(|&x| f32_to_bf16(x)).collect())
+        let mut v = super::pool::take_u16(range.len());
+        v.extend(grad[range].iter().map(|&x| f32_to_bf16(x)));
+        WireMsg::Bf16(v)
     }
 
     fn wire_bits_per_elem(&self) -> f64 {

@@ -208,26 +208,30 @@ impl Encoder for LocoEncoder {
             ErrorStore::None => {
                 // LoCo1: plain quantization, no feedback
                 if p.bits == 4 {
-                    let mut codes = vec![0i8; n];
+                    let mut codes = super::pool::take_i8(n);
+                    codes.resize(n, 0);
                     quant::quantize_slice_i4(g, p.s, &mut codes);
                     let packed = quant::pack_nibbles(&codes);
+                    super::pool::put_i8(codes);
                     WireMsg::I4 { packed, n, scale: p.s }
                 } else {
-                    let mut codes = vec![0i8; n];
-                    for (c, &x) in codes.iter_mut().zip(g) {
-                        *c = quant::quantize(x, p.s, p.bits);
-                    }
+                    let mut codes = super::pool::take_i8(n);
+                    codes.extend(g.iter().map(|&x| quant::quantize(x, p.s, p.bits)));
                     WireMsg::I8 { codes, scale: p.s, wire_bits: p.bits }
                 }
             }
             ErrorStore::I8(e_full) => {
                 let e = &mut e_full[range];
                 if p.bits == 4 {
-                    let mut packed = Vec::new();
+                    // wire payload comes from the buffer pool: the
+                    // receiving engine recycles it after decode, so
+                    // steady-state encodes allocate nothing
+                    let mut packed = super::pool::take_u8(n.div_ceil(2));
                     quant::loco_step_packed(g, e, &mut packed, p, reset);
                     WireMsg::I4 { packed, n, scale: p.s }
                 } else {
-                    let mut codes = vec![0i8; n];
+                    let mut codes = super::pool::take_i8(n);
+                    codes.resize(n, 0);
                     quant::loco_step(g, e, &mut codes, p, reset);
                     WireMsg::I8 { codes, scale: p.s, wire_bits: p.bits }
                 }

@@ -18,7 +18,9 @@ pub mod ef21;
 pub mod fp;
 pub mod loco;
 pub mod onebit;
+pub mod pool;
 pub mod powersgd;
+pub mod sparse;
 
 use std::ops::Range;
 
@@ -49,6 +51,12 @@ pub enum Method {
     IntSgd,
     /// PowerSGD rank-r low-rank compression (DDP path only).
     PowerSgd,
+    /// SparseLoCo-style chunked top-k: keep the `sparse_k` largest
+    /// compensated values per `block`-element chunk, low-bit quantize the
+    /// survivors, carry everything else in the error-feedback store. The
+    /// first *variable-length* wire format: payload size depends on the
+    /// data (partial chunks keep fewer than k).
+    Sparse,
 }
 
 impl Method {
@@ -64,6 +72,7 @@ impl Method {
             "loco-zeropp" | "loco_zeropp" => Method::LocoZeropp,
             "intsgd" => Method::IntSgd,
             "powersgd" => Method::PowerSgd,
+            "sparse" => Method::Sparse,
             _ => return None,
         })
     }
@@ -80,6 +89,7 @@ impl Method {
             Method::LocoZeropp => "loco-zeropp",
             Method::IntSgd => "intsgd",
             Method::PowerSgd => "powersgd",
+            Method::Sparse => "sparse",
         }
     }
 }
@@ -115,8 +125,12 @@ pub struct CompressorConfig {
     /// step's encodes — so its time constant and its statistics are both
     /// cluster-size independent.
     pub auto_scale: bool,
-    /// block size for block quantization (Zero++ paths)
+    /// block size for block quantization (Zero++ paths) and the top-k
+    /// chunk length of [`Method::Sparse`]
     pub block: usize,
+    /// survivors kept per `block`-element chunk by [`Method::Sparse`]
+    /// (`compress.sparse_k`); partial chunks keep `min(sparse_k, len)`
+    pub sparse_k: usize,
     /// PowerSGD rank
     pub rank: usize,
     /// element-wise clip applied to the local gradient before compression
@@ -148,6 +162,7 @@ impl Default for CompressorConfig {
             no_moving_average: false,
             auto_scale: false,
             block: 256,
+            sparse_k: 16,
             rank: 4,
             elementwise_clip: 0.0,
             bucket_bytes: 0,
@@ -196,6 +211,17 @@ pub enum WireMsg {
     Sign { bits: Vec<u8>, n: usize, scale: f32 },
     /// low-rank factors (PowerSGD): decoded as P (rows×rank) · Qᵀ (cols×rank)
     LowRank { p: Vec<f32>, q: Vec<f32>, rows: usize, cols: usize, rank: usize },
+    /// Chunked top-k survivors over `n` logical elements: `idx[j]` is the
+    /// message-relative position of the j-th survivor (ascending),
+    /// `codes[j]` its quantized value at the shared `scale`. In-memory
+    /// indices are `u32` for simple addressing; the *logical* wire format
+    /// is 2 bytes per index (chunk-relative `u16`, valid because
+    /// `block <= 65536`) plus `bits`-bit packed codes plus one f32 scale,
+    /// which is what [`WireMsg::wire_bytes`] accounts (same convention as
+    /// [`WireMsg::I8`], which stores codes unpacked but accounts packed).
+    /// The payload length is data-dependent: partial chunks at shard
+    /// edges keep fewer than k survivors.
+    Sparse { n: usize, idx: Vec<u32>, codes: Vec<i8>, scale: f32, bits: u32 },
 }
 
 impl WireMsg {
@@ -213,6 +239,9 @@ impl WireMsg {
             }
             WireMsg::Sign { bits, .. } => bits.len() + 4,
             WireMsg::LowRank { p, q, .. } => 4 * (p.len() + q.len()),
+            WireMsg::Sparse { idx, codes, bits, .. } => {
+                2 * idx.len() + (codes.len() * (*bits as usize)).div_ceil(8) + 4
+            }
         }
     }
 
@@ -226,6 +255,7 @@ impl WireMsg {
             WireMsg::Block { codes, .. } => codes.len(),
             WireMsg::Sign { n, .. } => *n,
             WireMsg::LowRank { rows, cols, .. } => rows * cols,
+            WireMsg::Sparse { n, .. } => *n,
         }
     }
 }
@@ -416,6 +446,9 @@ pub fn decode_accumulate_stateless(msg: &WireMsg, acc: &mut [f32]) {
         WireMsg::LowRank { p, q, rows, cols, rank } => {
             powersgd::decode_lowrank_accumulate(p, q, *rows, *cols, *rank, acc);
         }
+        WireMsg::Sparse { n, idx, codes, scale, .. } => {
+            sparse::decode_sparse_accumulate(*n, idx, codes, *scale, acc);
+        }
     }
 }
 
@@ -495,6 +528,9 @@ pub fn build_domain(
             );
             (Box::new(powersgd::PowerSgdEncoder::new(cfg, layout)), Box::new(StatelessDecoder))
         }
+        Method::Sparse => {
+            (Box::new(sparse::SparseEncoder::for_range(cfg, domain)), Box::new(StatelessDecoder))
+        }
     }
 }
 
@@ -540,6 +576,7 @@ pub fn build_bucket_encoder(cfg: &CompressorConfig, bucket: Range<usize>) -> Box
         Method::LocoZeropp => Box::new(loco::LocoBlockEncoder::for_range(cfg, bucket)),
         Method::IntSgd => Box::new(block::StochasticQuantEncoder::new(cfg)),
         Method::PowerSgd => panic!("PowerSGD cannot be bucketed (whole-tensor compressor)"),
+        Method::Sparse => Box::new(sparse::SparseEncoder::for_range(cfg, bucket)),
     }
 }
 
@@ -604,6 +641,7 @@ mod tests {
             Method::Zeropp,
             Method::LocoZeropp,
             Method::IntSgd,
+            Method::Sparse,
         ] {
             let e = roundtrip_error(m, 1000, 2);
             assert!(e.is_finite() && e < 5.0, "{m:?}: {e}");
@@ -642,6 +680,7 @@ mod tests {
             Method::LocoZeropp,
             Method::IntSgd,
             Method::PowerSgd,
+            Method::Sparse,
         ] {
             assert_eq!(Method::parse(m.name()), Some(m));
         }

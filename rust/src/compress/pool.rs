@@ -1,0 +1,231 @@
+//! Wire-buffer pool: reusable, size-classed payload buffers for the
+//! encode/decode hot path.
+//!
+//! Every encode used to allocate its payload `Vec`s fresh and every decode
+//! dropped them — fine for one shard, but at 1024 simulated ranks the
+//! allocator traffic dominates (`tests/scaling.rs`). With variable-length
+//! messages ([`WireMsg::Sparse`]) the sizes also change step to step, so a
+//! fixed per-encoder scratch buffer no longer covers the wire payloads
+//! that leave the encoder. The pool closes the loop: encoders *take*
+//! payload buffers here, the engine *recycles* the received message after
+//! decoding, and in the steady state (stable message sizes) every take is
+//! a hit — zero allocations (asserted by `tests/scaling.rs`).
+//!
+//! Bins are global and bounded ([`MAX_PER_BIN`] buffers per element type),
+//! so the pool is a cache, never an unbounded leak: a run that changes
+//! shapes simply falls back to plain allocation once a bin is cold or
+//! full. Buffers are matched by *capacity* (first fit ≥ the request), so a
+//! bin serves mixed bucket sizes without fragmentation pathologies.
+
+use std::sync::Mutex;
+
+use super::WireMsg;
+
+/// Upper bound on buffers retained per element type. Beyond it, `put`
+/// drops the buffer (plain free) instead of growing the cache.
+const MAX_PER_BIN: usize = 256;
+
+#[derive(Default)]
+struct Bins {
+    u8s: Vec<Vec<u8>>,
+    i8s: Vec<Vec<i8>>,
+    u16s: Vec<Vec<u16>>,
+    u32s: Vec<Vec<u32>>,
+    f32s: Vec<Vec<f32>>,
+}
+
+static POOL: Mutex<Bins> = Mutex::new(Bins {
+    u8s: Vec::new(),
+    i8s: Vec::new(),
+    u16s: Vec::new(),
+    u32s: Vec::new(),
+    f32s: Vec::new(),
+});
+
+fn bins() -> std::sync::MutexGuard<'static, Bins> {
+    // a panicking holder can only have been between `position` and
+    // `swap_remove` — the bins are still structurally sound
+    POOL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn take_from<T>(bin: &mut Vec<Vec<T>>, min_cap: usize) -> Vec<T> {
+    if let Some(pos) = bin.iter().position(|b| b.capacity() >= min_cap) {
+        let mut v = bin.swap_remove(pos);
+        v.clear();
+        v
+    } else {
+        Vec::with_capacity(min_cap)
+    }
+}
+
+fn put_into<T>(bin: &mut Vec<Vec<T>>, mut v: Vec<T>) {
+    if v.capacity() == 0 || bin.len() >= MAX_PER_BIN {
+        return;
+    }
+    v.clear();
+    bin.push(v);
+}
+
+/// Take an empty `Vec<u8>` with capacity ≥ `min_cap`.
+pub fn take_u8(min_cap: usize) -> Vec<u8> {
+    take_from(&mut bins().u8s, min_cap)
+}
+
+/// Take an empty `Vec<i8>` with capacity ≥ `min_cap`.
+pub fn take_i8(min_cap: usize) -> Vec<i8> {
+    take_from(&mut bins().i8s, min_cap)
+}
+
+/// Take an empty `Vec<u16>` with capacity ≥ `min_cap`.
+pub fn take_u16(min_cap: usize) -> Vec<u16> {
+    take_from(&mut bins().u16s, min_cap)
+}
+
+/// Take an empty `Vec<u32>` with capacity ≥ `min_cap`.
+pub fn take_u32(min_cap: usize) -> Vec<u32> {
+    take_from(&mut bins().u32s, min_cap)
+}
+
+/// Take an empty `Vec<f32>` with capacity ≥ `min_cap`.
+pub fn take_f32(min_cap: usize) -> Vec<f32> {
+    take_from(&mut bins().f32s, min_cap)
+}
+
+/// Return a `Vec<u8>` to the pool.
+pub fn put_u8(v: Vec<u8>) {
+    put_into(&mut bins().u8s, v);
+}
+
+/// Return a `Vec<i8>` to the pool.
+pub fn put_i8(v: Vec<i8>) {
+    put_into(&mut bins().i8s, v);
+}
+
+/// Return a `Vec<u16>` to the pool.
+pub fn put_u16(v: Vec<u16>) {
+    put_into(&mut bins().u16s, v);
+}
+
+/// Return a `Vec<u32>` to the pool.
+pub fn put_u32(v: Vec<u32>) {
+    put_into(&mut bins().u32s, v);
+}
+
+/// Return a `Vec<f32>` to the pool.
+pub fn put_f32(v: Vec<f32>) {
+    put_into(&mut bins().f32s, v);
+}
+
+/// Disassemble a consumed wire message and return its payload buffers to
+/// the pool. Engines call this after `decode_accumulate` / `write_wire`
+/// (both take the message by reference), closing the take→send→recycle
+/// cycle so steady-state encodes allocate nothing.
+pub fn recycle(msg: WireMsg) {
+    let mut b = bins();
+    match msg {
+        WireMsg::F32(v) => put_into(&mut b.f32s, v),
+        WireMsg::Bf16(v) => put_into(&mut b.u16s, v),
+        WireMsg::I8 { codes, .. } => put_into(&mut b.i8s, codes),
+        WireMsg::I4 { packed, .. } => put_into(&mut b.u8s, packed),
+        WireMsg::Block { codes, scales, .. } => {
+            put_into(&mut b.i8s, codes);
+            put_into(&mut b.f32s, scales);
+        }
+        WireMsg::Sign { bits, .. } => put_into(&mut b.u8s, bits),
+        WireMsg::LowRank { p, q, .. } => {
+            put_into(&mut b.f32s, p);
+            put_into(&mut b.f32s, q);
+        }
+        WireMsg::Sparse { idx, codes, .. } => {
+            put_into(&mut b.u32s, idx);
+            put_into(&mut b.i8s, codes);
+        }
+    }
+}
+
+/// Clone a wire message with payload buffers drawn from the pool instead
+/// of fresh allocations — the broadcast sites (`param_gather_launch`,
+/// `all_gather_wire`) send one copy per peer, and in steady state every
+/// copy's buffers are already circulating.
+pub fn clone_msg(msg: &WireMsg) -> WireMsg {
+    fn dup<T: Copy>(bin: fn(usize) -> Vec<T>, src: &[T]) -> Vec<T> {
+        let mut v = bin(src.len());
+        v.extend_from_slice(src);
+        v
+    }
+    match msg {
+        WireMsg::F32(v) => WireMsg::F32(dup(take_f32, v)),
+        WireMsg::Bf16(v) => WireMsg::Bf16(dup(take_u16, v)),
+        WireMsg::I8 { codes, scale, wire_bits } => {
+            WireMsg::I8 { codes: dup(take_i8, codes), scale: *scale, wire_bits: *wire_bits }
+        }
+        WireMsg::I4 { packed, n, scale } => {
+            WireMsg::I4 { packed: dup(take_u8, packed), n: *n, scale: *scale }
+        }
+        WireMsg::Block { codes, scales, block, bits } => WireMsg::Block {
+            codes: dup(take_i8, codes),
+            scales: dup(take_f32, scales),
+            block: *block,
+            bits: *bits,
+        },
+        WireMsg::Sign { bits, n, scale } => {
+            WireMsg::Sign { bits: dup(take_u8, bits), n: *n, scale: *scale }
+        }
+        WireMsg::LowRank { p, q, rows, cols, rank } => WireMsg::LowRank {
+            p: dup(take_f32, p),
+            q: dup(take_f32, q),
+            rows: *rows,
+            cols: *cols,
+            rank: *rank,
+        },
+        WireMsg::Sparse { n, idx, codes, scale, bits } => WireMsg::Sparse {
+            n: *n,
+            idx: dup(take_u32, idx),
+            codes: dup(take_i8, codes),
+            scale: *scale,
+            bits: *bits,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_reuses_recycled_capacity() {
+        // seed with a distinctive capacity, then verify round trips reuse
+        // it (first fit ≥ request) rather than allocating
+        let v = Vec::with_capacity(12345);
+        put_u8(v);
+        let got = take_u8(10000);
+        assert!(got.capacity() >= 10000 && got.is_empty());
+        put_u8(got);
+        let again = take_u8(12345);
+        assert!(again.capacity() >= 12345);
+    }
+
+    #[test]
+    fn recycle_returns_all_payload_kinds() {
+        recycle(WireMsg::I4 { packed: Vec::with_capacity(777), n: 4, scale: 1.0 });
+        let v = take_u8(700);
+        assert!(v.capacity() >= 700);
+        recycle(WireMsg::Sparse {
+            n: 8,
+            idx: Vec::with_capacity(555),
+            codes: Vec::with_capacity(556),
+            scale: 1.0,
+            bits: 4,
+        });
+        assert!(take_u32(500).capacity() >= 500);
+        assert!(take_i8(500).capacity() >= 500);
+    }
+
+    #[test]
+    fn zero_capacity_buffers_are_not_cached() {
+        put_f32(Vec::new());
+        // a fresh take for a real size must simply allocate, not return
+        // a useless cached handle
+        assert!(take_f32(8).capacity() >= 8);
+    }
+}

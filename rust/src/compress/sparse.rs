@@ -1,0 +1,525 @@
+//! SparseLoCo-style chunked top-k compressor (PAPERS.md): keep the
+//! `sparse_k` largest-magnitude *compensated* values per `block`-element
+//! chunk, quantize the survivors to `bits` bits at the scalar wire scale,
+//! and carry everything else — the survivors' quantization residual and
+//! the dropped values alike — in LoCo's moving-average error store
+//! (Eqn. 5/7 semantics, with `d = 0` for dropped elements).
+//!
+//! Chunks are anchored at *absolute* offsets (`chunk = floor(pos/block)`),
+//! not at the encode range's start: an encoder over `0..n` asked for a
+//! sub-range selects exactly what a per-bucket encoder over that sub-range
+//! would whenever the cut lands on a chunk boundary. The sync engine
+//! aligns bucket cuts to `cfg.block` for this method, which makes the
+//! bucketed path bitwise-identical to the monolithic one (pinned by
+//! `tests/sparse.rs`). Unaligned cuts — the uneven topology's slice
+//! routing — are still well-defined: the partial edge chunks just select
+//! over fewer elements (`min(sparse_k, chunk_len)` survive).
+//!
+//! The wire format ([`WireMsg::Sparse`]) is the first *variable-length*
+//! message in the zoo: how many survivors a shard yields depends on how
+//! its chunk grid intersects the shard, so the payload length is a runtime
+//! property the headers carry, not a plan-time constant.
+
+use std::ops::Range;
+
+use super::{pool, CompressorConfig, Encoder, EncoderTelemetry, WireMsg};
+use crate::quant;
+
+/// Error storage: int8 (paper default, 1 byte/param) or f32 (ablation).
+enum ErrorStore {
+    I8(Vec<i8>),
+    F32(Vec<f32>),
+    None,
+}
+
+/// Chunked top-k with LoCo error feedback. Selection runs on the
+/// *compensated* signal `h = g + e_f`, so a coordinate that keeps losing
+/// the top-k race accumulates error until it wins — no coordinate is
+/// starved forever (the EF analogue of SparseLoCo's accumulator).
+pub struct SparseEncoder {
+    cfg: CompressorConfig,
+    err: ErrorStore,
+    /// flat offset of the first element covered by the error store
+    base: usize,
+    /// EMA of the signal RMS for auto_scale (see [`super::loco::LocoEncoder`];
+    /// the cadence/aggregation contract is identical)
+    maxabs_ema: f32,
+    last_scale_step: u64,
+    scale_obs_sq: f64,
+    scale_obs_n: f64,
+    ema_is_partial_seed: bool,
+    telemetry_on: bool,
+    tel_pre_q_sq: f64,
+    tel_err_q_sq: f64,
+    tel_elems: u64,
+    /// compensated-chunk scratch, reused across encodes
+    h: Vec<f32>,
+    /// selection-order scratch (chunk-local indices), reused across encodes
+    order: Vec<u32>,
+}
+
+impl SparseEncoder {
+    pub fn new(cfg: &CompressorConfig, total: usize) -> Self {
+        Self::for_range(cfg, 0..total)
+    }
+
+    /// Encoder whose error state covers only `range` of the flat gradient
+    /// (one bucket / one topology row). `encode` must then only be called
+    /// with sub-ranges of `range`.
+    pub fn for_range(cfg: &CompressorConfig, range: Range<usize>) -> Self {
+        assert!(
+            cfg.block >= 1 && cfg.block <= 65536,
+            "sparse chunk length must be in 1..=65536 (wire indices are \
+             logically u16 chunk-relative), got {}",
+            cfg.block
+        );
+        let len = range.len();
+        let err = if cfg.no_error_feedback {
+            ErrorStore::None
+        } else if cfg.error_bits >= 32 {
+            ErrorStore::F32(vec![0.0; len])
+        } else {
+            ErrorStore::I8(vec![0i8; len])
+        };
+        SparseEncoder {
+            cfg: *cfg,
+            err,
+            base: range.start,
+            maxabs_ema: 0.0,
+            last_scale_step: u64::MAX,
+            scale_obs_sq: 0.0,
+            scale_obs_n: 0.0,
+            ema_is_partial_seed: false,
+            telemetry_on: false,
+            tel_pre_q_sq: 0.0,
+            tel_err_q_sq: 0.0,
+            tel_elems: 0,
+            h: Vec::new(),
+            order: Vec::new(),
+        }
+    }
+
+    /// Wire scale for this call — same once-per-(encoder, step) EMA
+    /// contract as the dense LoCo encoder (see that type's doc for why the
+    /// cadence must be cluster-size independent).
+    fn wire_scale(&mut self, g: &[f32], step: u64) -> f32 {
+        if !self.cfg.auto_scale {
+            return self.cfg.s;
+        }
+        let qmax = (((1i32 << (self.cfg.bits - 1)) - 1).max(1)) as f32;
+        if step != self.last_scale_step {
+            self.last_scale_step = step;
+            if self.scale_obs_n > 0.0 {
+                let rms = (self.scale_obs_sq / self.scale_obs_n).sqrt() as f32;
+                self.maxabs_ema = if self.maxabs_ema == 0.0 || self.ema_is_partial_seed {
+                    rms
+                } else {
+                    0.9 * self.maxabs_ema + 0.1 * rms
+                };
+                self.ema_is_partial_seed = false;
+            }
+            self.scale_obs_sq = 0.0;
+            self.scale_obs_n = 0.0;
+        }
+        self.scale_obs_sq += g.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+        self.scale_obs_n += g.len() as f64;
+        if self.maxabs_ema == 0.0 && self.scale_obs_n > 0.0 {
+            self.maxabs_ema = (self.scale_obs_sq / self.scale_obs_n).sqrt() as f32;
+            self.ema_is_partial_seed = true;
+        }
+        if self.maxabs_ema > 0.0 {
+            // survivors are the top-k — their magnitude sits in the tail,
+            // so map ~6 sigma onto the largest code like the dense path
+            qmax / (6.0 * self.maxabs_ema)
+        } else {
+            self.cfg.s
+        }
+    }
+}
+
+impl Encoder for SparseEncoder {
+    fn encode(&mut self, grad: &[f32], range: Range<usize>, step: u64) -> WireMsg {
+        let wire_s = self.wire_scale(&grad[range.clone()], step);
+        let s_e = self.cfg.s_e_mult * self.cfg.s;
+        let inv_se = 1.0 / s_e;
+        let beta = self.cfg.effective_beta();
+        let reset = self.cfg.reset_interval > 0 && step % self.cfg.reset_interval == 0;
+        let n = range.len();
+        let block = self.cfg.block.max(1);
+        let k = self.cfg.sparse_k;
+
+        let cap = (n / block + 2) * k.min(block);
+        let mut idx = pool::take_u32(cap);
+        let mut codes = pool::take_i8(cap);
+        let (mut pre_sq, mut err_sq) = (0.0f64, 0.0f64);
+
+        let mut pos = range.start;
+        while pos < range.end {
+            // chunk boundaries live on the absolute grid, so the first
+            // (and last) chunk of an unaligned range may be partial
+            let end = ((pos / block + 1) * block).min(range.end);
+            let len = end - pos;
+            let rel0 = pos - range.start;
+            let e_off = pos - self.base;
+
+            // compensate into the reused scratch
+            self.h.clear();
+            match &self.err {
+                ErrorStore::I8(e) => {
+                    for i in 0..len {
+                        self.h.push(grad[pos + i] + e[e_off + i] as f32 * inv_se);
+                    }
+                }
+                ErrorStore::F32(e) => {
+                    for i in 0..len {
+                        self.h.push(grad[pos + i] + e[e_off + i]);
+                    }
+                }
+                ErrorStore::None => self.h.extend_from_slice(&grad[pos..end]),
+            }
+
+            // deterministic top-k: |h| descending, chunk index ascending
+            // on ties (so the result never depends on sort internals)
+            let keep = k.min(len);
+            self.order.clear();
+            self.order.extend(0..len as u32);
+            if keep > 0 && keep < len {
+                let h = &self.h;
+                self.order.select_nth_unstable_by(keep - 1, |&a, &b| {
+                    h[b as usize]
+                        .abs()
+                        .total_cmp(&h[a as usize].abs())
+                        .then(a.cmp(&b))
+                });
+            }
+            // survivors go on the wire in ascending index order
+            self.order[..keep].sort_unstable();
+
+            let mut s_iter = 0usize;
+            for i in 0..len {
+                let h = self.h[i];
+                let surviving = s_iter < keep && self.order[s_iter] as usize == i;
+                let d = if surviving {
+                    let q = quant::quantize(h, wire_s, self.cfg.bits);
+                    idx.push((rel0 + i) as u32);
+                    codes.push(q);
+                    s_iter += 1;
+                    quant::dequantize(q, wire_s)
+                } else {
+                    // dropped: the receiver sees 0, the residual is all of h
+                    0.0
+                };
+                if self.telemetry_on {
+                    pre_sq += (h as f64) * (h as f64);
+                    let r = (h - d) as f64;
+                    err_sq += r * r;
+                }
+                match &mut self.err {
+                    ErrorStore::I8(e) => {
+                        e[e_off + i] = if reset {
+                            0
+                        } else {
+                            let e_f = e[e_off + i] as f32 * inv_se;
+                            let e_tilde = (1.0 - beta) * e_f + beta * (h - d);
+                            quant::quantize(e_tilde, s_e, 8)
+                        };
+                    }
+                    ErrorStore::F32(e) => {
+                        e[e_off + i] = if reset {
+                            0.0
+                        } else {
+                            (1.0 - beta) * e[e_off + i] + beta * (h - d)
+                        };
+                    }
+                    ErrorStore::None => {}
+                }
+            }
+            pos = end;
+        }
+
+        if self.telemetry_on {
+            self.tel_pre_q_sq += pre_sq;
+            self.tel_err_q_sq += err_sq;
+            self.tel_elems += n as u64;
+        }
+        WireMsg::Sparse { n, idx, codes, scale: wire_s, bits: self.cfg.bits }
+    }
+
+    fn wire_bits_per_elem(&self) -> f64 {
+        // 16 index bits + `bits` value bits per survivor, k survivors per
+        // block-element chunk (the full-chunk steady state; edge chunks
+        // only shrink it)
+        let k = self.cfg.sparse_k.min(self.cfg.block) as f64;
+        (16.0 + self.cfg.bits as f64) * k / self.cfg.block as f64
+    }
+
+    fn state_bytes(&self) -> usize {
+        match &self.err {
+            ErrorStore::I8(v) => v.len(),
+            ErrorStore::F32(v) => 4 * v.len(),
+            ErrorStore::None => 0,
+        }
+    }
+
+    fn export_state(&self) -> Vec<u8> {
+        use crate::util::bytes as by;
+        let mut out = Vec::new();
+        match &self.err {
+            ErrorStore::I8(v) => {
+                by::push_u32(&mut out, 1);
+                by::push_i8s(&mut out, v);
+            }
+            ErrorStore::F32(v) => {
+                by::push_u32(&mut out, 2);
+                by::push_f32s(&mut out, v);
+            }
+            ErrorStore::None => by::push_u32(&mut out, 0),
+        }
+        by::push_f32(&mut out, self.maxabs_ema);
+        by::push_u64(&mut out, self.last_scale_step);
+        by::push_f64(&mut out, self.scale_obs_sq);
+        by::push_f64(&mut out, self.scale_obs_n);
+        by::push_u32(&mut out, self.ema_is_partial_seed as u32);
+        out
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        use crate::util::bytes as by;
+        let mut r = by::Reader::new(bytes);
+        let tag = r.u32()?;
+        match (&mut self.err, tag) {
+            (ErrorStore::I8(v), 1) => {
+                let got = r.i8s()?;
+                anyhow::ensure!(
+                    got.len() == v.len(),
+                    "sparse error store: saved {} elements, encoder covers {}",
+                    got.len(),
+                    v.len()
+                );
+                *v = got;
+            }
+            (ErrorStore::F32(v), 2) => {
+                let got = r.f32s()?;
+                anyhow::ensure!(
+                    got.len() == v.len(),
+                    "sparse error store: saved {} elements, encoder covers {}",
+                    got.len(),
+                    v.len()
+                );
+                *v = got;
+            }
+            (ErrorStore::None, 0) => {}
+            (_, tag) => anyhow::bail!(
+                "sparse error-store kind mismatch (saved tag {tag}) — \
+                 checkpoint taken under a different compressor config"
+            ),
+        }
+        self.maxabs_ema = r.f32()?;
+        self.last_scale_step = r.u64()?;
+        self.scale_obs_sq = r.f64()?;
+        self.scale_obs_n = r.f64()?;
+        self.ema_is_partial_seed = r.u32()? != 0;
+        r.finish()
+    }
+
+    fn reset_state(&mut self) {
+        match &mut self.err {
+            ErrorStore::I8(v) => v.fill(0),
+            ErrorStore::F32(v) => v.fill(0.0),
+            ErrorStore::None => {}
+        }
+        self.maxabs_ema = 0.0;
+        self.last_scale_step = u64::MAX;
+        self.scale_obs_sq = 0.0;
+        self.scale_obs_n = 0.0;
+        self.ema_is_partial_seed = false;
+    }
+
+    fn set_telemetry(&mut self, on: bool) {
+        self.telemetry_on = on;
+    }
+
+    fn take_telemetry(&mut self) -> Option<EncoderTelemetry> {
+        if !self.telemetry_on {
+            return None;
+        }
+        let inv_se = 1.0 / (self.cfg.s_e_mult * self.cfg.s) as f64;
+        let ef_norm_sq = match &self.err {
+            ErrorStore::I8(e) => e
+                .iter()
+                .map(|&x| {
+                    let v = x as f64 * inv_se;
+                    v * v
+                })
+                .sum(),
+            ErrorStore::F32(e) => e.iter().map(|&x| (x as f64) * (x as f64)).sum(),
+            ErrorStore::None => 0.0,
+        };
+        let t = EncoderTelemetry {
+            ef_norm_sq,
+            pre_q_sq: self.tel_pre_q_sq,
+            err_q_sq: self.tel_err_q_sq,
+            elems: self.tel_elems,
+            auto_scale_ema: self.maxabs_ema as f64,
+        };
+        self.tel_pre_q_sq = 0.0;
+        self.tel_err_q_sq = 0.0;
+        self.tel_elems = 0;
+        Some(t)
+    }
+}
+
+/// Receiver side of [`WireMsg::Sparse`]: `acc[idx[j]] += codes[j]/scale`.
+/// Validates every index against the header-carried element count `n` —
+/// the wire length is runtime data now, so the recv path must not trust it
+/// blindly.
+pub fn decode_sparse_accumulate(n: usize, idx: &[u32], codes: &[i8], scale: f32, acc: &mut [f32]) {
+    assert_eq!(idx.len(), codes.len(), "sparse payload: index/code length mismatch");
+    assert!(acc.len() >= n, "sparse header claims {n} elements, buffer holds {}", acc.len());
+    let inv = 1.0 / scale;
+    for (&i, &q) in idx.iter().zip(codes) {
+        let i = i as usize;
+        assert!(i < n, "sparse index {i} out of header range {n}");
+        acc[i] += q as f32 * inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::decode_accumulate_stateless;
+    use crate::util::rng::Rng;
+
+    fn cfg(s: f32) -> CompressorConfig {
+        CompressorConfig {
+            method: crate::compress::Method::Sparse,
+            s,
+            s_e_mult: 4.0,
+            beta: 0.1,
+            reset_interval: 16,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn keeps_the_largest_magnitudes_per_chunk() {
+        let n = 512; // two default chunks of 256
+        let mut g = vec![0.001f32; n];
+        // plant known large entries in each chunk
+        for (i, v) in [(3usize, 0.9f32), (100, -0.8), (300, 0.7), (511, -0.6)] {
+            g[i] = v;
+        }
+        let c = CompressorConfig { sparse_k: 2, s: 16.0, ..cfg(16.0) };
+        let mut enc = SparseEncoder::new(&c, n);
+        match enc.encode(&g, 0..n, 1) {
+            WireMsg::Sparse { n: nn, idx, codes, .. } => {
+                assert_eq!(nn, n);
+                assert_eq!(idx, vec![3, 100, 300, 511]);
+                assert_eq!(codes.len(), 4);
+                assert!(codes[0] > 0 && codes[1] < 0);
+            }
+            _ => panic!("expected Sparse"),
+        }
+    }
+
+    #[test]
+    fn wire_is_at_least_16x_smaller_than_fp32() {
+        let n = 8192;
+        let mut g = vec![0.0f32; n];
+        Rng::new(9).fill_normal(&mut g, 0.1);
+        let mut enc = SparseEncoder::new(&cfg(16.0), n);
+        let msg = enc.encode(&g, 0..n, 1);
+        // defaults: k=16 of 256 at 4 bits + 2-byte indices
+        let ratio = (4 * n) as f64 / msg.wire_bytes() as f64;
+        assert!(ratio >= 16.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn error_feedback_time_average_tracks_constant_gradient() {
+        // every coordinate is below the top-k bar on its own; EF must
+        // rotate coverage so the *time-average* still converges. fp32
+        // error store (ablation path) so the drift bound is exact:
+        // |sum_true - sum_decoded| = |e_final|, which is bounded by the
+        // selection bar.
+        let n = 256;
+        let g = vec![0.02f32; n];
+        let c = CompressorConfig { no_moving_average: true, error_bits: 32, ..cfg(16.0) };
+        let mut enc = SparseEncoder::new(&c, n);
+        let mut sum = vec![0.0f32; n];
+        let steps = 400;
+        for k in 1..=steps {
+            let msg = enc.encode(&g, 0..n, k);
+            decode_accumulate_stateless(&msg, &mut sum);
+        }
+        for (i, &s) in sum.iter().enumerate() {
+            let avg = s / steps as f32;
+            assert!((avg - 0.02).abs() < 0.008, "coord {i}: avg {avg}");
+        }
+    }
+
+    #[test]
+    fn unaligned_range_uses_absolute_chunk_grid() {
+        // encoder over 0..n, asked for a range starting mid-chunk: the
+        // partial edge chunks keep min(k, len) each, and indices stay
+        // message-relative
+        let n = 600;
+        let mut g = vec![0.0f32; n];
+        Rng::new(11).fill_normal(&mut g, 0.5);
+        let c = CompressorConfig { sparse_k: 4, block: 64, ..cfg(16.0) };
+        let mut enc = SparseEncoder::new(&c, n);
+        // range 10..100 -> chunks [10,64) and [64,100) on the absolute grid
+        match enc.encode(&g, 10..100, 1) {
+            WireMsg::Sparse { n: nn, idx, .. } => {
+                assert_eq!(nn, 90);
+                assert_eq!(idx.len(), 8); // 4 + 4 survivors
+                assert!(idx.iter().all(|&i| (i as usize) < 90));
+                // survivors split across the grid cut at absolute 64
+                assert_eq!(idx.iter().filter(|&&i| (i as usize) < 54).count(), 4);
+            }
+            _ => panic!("expected Sparse"),
+        }
+    }
+
+    #[test]
+    fn empty_range_yields_empty_message() {
+        let mut enc = SparseEncoder::new(&cfg(16.0), 64);
+        let g = vec![0.0f32; 64];
+        let msg = enc.encode(&g, 32..32, 1);
+        assert_eq!(msg.element_count(), 0);
+        assert_eq!(msg.wire_bytes(), 4); // just the scale
+        let mut acc = [0.0f32; 0];
+        decode_accumulate_stateless(&msg, &mut acc);
+    }
+
+    #[test]
+    fn state_roundtrips_and_rejects_mismatch() {
+        let n = 300;
+        let mut g = vec![0.0f32; n];
+        Rng::new(13).fill_normal(&mut g, 0.2);
+        let c = cfg(16.0);
+        let mut a = SparseEncoder::new(&c, n);
+        for k in 1..=3 {
+            a.encode(&g, 0..n, k);
+        }
+        let blob = a.export_state();
+        let mut b = SparseEncoder::new(&c, n);
+        b.import_state(&blob).unwrap();
+        // same state -> same next message
+        let ma = format!("{:?}", a.encode(&g, 0..n, 4));
+        let mb = format!("{:?}", b.encode(&g, 0..n, 4));
+        assert_eq!(ma, mb);
+        // wrong length rejected
+        let mut short = SparseEncoder::new(&c, n - 1);
+        assert!(short.import_state(&blob).is_err());
+        // truncation rejected
+        let mut c2 = SparseEncoder::new(&c, n);
+        assert!(c2.import_state(&blob[..blob.len() - 1]).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of header range")]
+    fn decode_rejects_out_of_range_index() {
+        let mut acc = vec![0.0f32; 8];
+        decode_sparse_accumulate(4, &[5], &[1], 1.0, &mut acc);
+    }
+}

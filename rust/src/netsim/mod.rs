@@ -82,6 +82,9 @@ pub fn encode_bytes_per_param(method: &str) -> f64 {
         "ef" | "ef21" => 12.5,          // fp32 state rw
         "zeropp" | "loco-zeropp" => 6.5,
         "onebit" => 12.125,             // fp32 err rw + bit out
+        // g(4) + err rw(2) + compensated h scratch w+r(2.5 effective);
+        // the wire write itself is negligible at the default sparsity
+        "sparse" => 8.5,
         _ => 6.0,
     }
 }
@@ -99,6 +102,11 @@ pub fn wire_bytes_per_param(method: &str) -> f64 {
         "zeropp" | "loco-zeropp" => 1.5,
         "onebit" => 0.325,
         "fp32" => 8.0,
+        // data-dependent: gradient rows are bounded by the *worst case*
+        // at the default sparsity (k=16 of block=256, 16-bit chunk-local
+        // index + 4-bit code per survivor = 2.5 B · k/block ≈ 0.156 Ψ);
+        // the bf16 parameter gather (2 Ψ) dominates the budget
+        "sparse" => 2.5 * 16.0 / 256.0 + 2.0,
         _ => 4.0,
     }
 }
@@ -139,7 +147,9 @@ mod tests {
 
     #[test]
     fn param_component_never_exceeds_total() {
-        for m in ["adam", "bf16", "loco", "ef21", "zeropp", "loco-zeropp", "onebit", "fp32"] {
+        for m in
+            ["adam", "bf16", "loco", "ef21", "zeropp", "loco-zeropp", "onebit", "fp32", "sparse"]
+        {
             let p = param_wire_bytes_per_param(m);
             assert!(p > 0.0 && p <= wire_bytes_per_param(m), "{m}: {p}");
         }

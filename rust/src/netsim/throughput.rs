@@ -245,6 +245,13 @@ fn invert_pipeline(
         "fp32" => 32.0,
         "bf16" | "adam" | "sgd" => 16.0,
         "onebit" => 1.0,
+        // data-dependent width: bound by the worst case at the default
+        // sparsity (k=16 survivors per 256-element chunk, 16-bit
+        // chunk-local index + `bits`-bit code each). The signature does
+        // not carry (sparse_k, block), so the inversion deliberately
+        // uses the defaults as an upper bound — larger k only shifts
+        // the optimum toward smaller buckets, never breaks it.
+        "sparse" => (16.0 + bits as f64) * 16.0 / 256.0,
         _ => bits as f64,
     };
     let t_wire = shard_elems as f64 * wire_bits / 8.0 / link.bw;

@@ -116,10 +116,11 @@ fn broadcast_group_rows(
     let mine = crate::comm::encode_params(&params[rows[my_idx].clone()], bf16);
     let g = ctx.group(members);
     let all = g.all_gather_wire(mine);
-    for (j, msg) in all.iter().enumerate() {
+    for (j, msg) in all.into_iter().enumerate() {
         if j != my_idx {
-            compress::write_wire(msg, &mut params[rows[j].clone()]);
+            compress::write_wire(&msg, &mut params[rows[j].clone()]);
         }
+        compress::pool::recycle(msg);
     }
 }
 
@@ -538,6 +539,7 @@ impl UnevenPlan {
             let strip = &mut tmp[rel.clone()];
             strip.fill(0.0);
             dec.decode_accumulate(s.holder, &msg, strip);
+            compress::pool::recycle(msg);
             let mg = self.holder_scale[s.holder];
             for (a, &t) in shard_acc[rel].iter_mut().zip(strip.iter()) {
                 *a += t * mg;
@@ -596,6 +598,7 @@ impl UnevenPlan {
                 ctx.recv_wire_tagged(s.owner, self.param_tag(step, i))
             };
             compress::write_wire(&msg, &mut params[s.range.clone()]);
+            compress::pool::recycle(msg);
         }
         let wait = t0.elapsed();
         let mut ts = 0;

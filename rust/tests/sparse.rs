@@ -1,0 +1,322 @@
+//! The variable-length wire path end to end (PR 9): the sparse chunked
+//! top-k compressor (`compress.method = "sparse"`) through the bucketed
+//! engine, the tier/uneven topologies, and the byte accounting. Pins the
+//! properties ISSUE 9 names: EF-evolution parity between bucketed and
+//! monolithic encoders on grid-aligned cuts, empty-shard and
+//! unaligned-cut survival, counted-vs-analytic wire bytes at 8 nodes,
+//! a quickstart A/B at >=16x gradient-wire reduction vs fp32 with
+//! bounded loss drift, and sparse runs across every grad_sync mode on
+//! flat and tiered clusters.
+
+use loco::collective::run_cluster_topo;
+use loco::compress::sparse::SparseEncoder;
+use loco::compress::{CompressorConfig, Encoder, Method, WireMsg};
+use loco::optim::{LrSchedule, OptimConfig, OptimizerKind};
+use loco::sharding::{ParamLayout, Partition};
+use loco::topology::{HierSyncEngine, Topology};
+use loco::train::{GradSync, ParamSync, TrainConfig, Trainer};
+use loco::util::rng::Rng;
+
+/// The quickstart configuration with the sparse compressor: the fp32
+/// error store and classic (non-moving-average) EF accumulation are the
+/// SparseLoCo-style settings EXPERIMENTS.md documents for this method —
+/// dropped coordinates park their *whole* value in the error store, so
+/// the int8 store's +-127/s_e range is the wrong default there.
+fn quickstart_cfg(nodes: usize, steps: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::new("tiny");
+    cfg.nodes = nodes;
+    cfg.steps = steps;
+    cfg.optim = OptimConfig { kind: OptimizerKind::Adam, ..Default::default() };
+    cfg.lr = LrSchedule { base: 3e-3, warmup: 10, total: steps, min_ratio: 0.2 };
+    cfg.compressor = CompressorConfig {
+        s: (1u32 << 17) as f32,
+        no_moving_average: true,
+        error_bits: 32,
+        ..CompressorConfig::with_method(Method::Sparse)
+    };
+    cfg
+}
+
+fn sparse_parts(m: WireMsg) -> (Vec<u32>, Vec<i8>, f32) {
+    match m {
+        WireMsg::Sparse { idx, codes, scale, .. } => (idx, codes, scale),
+        other => panic!("expected Sparse, got {other:?}"),
+    }
+}
+
+#[test]
+fn bucket_encoders_match_monolithic_on_grid_aligned_cuts() {
+    // EF-evolution parity: one encoder over 0..total versus per-bucket
+    // encoders whose cuts sit on the absolute chunk grid must pick the
+    // same survivors with the same codes at every step — through error
+    // feedback evolving and a mid-window reset. This is the property the
+    // engine's absolute bucket alignment for this method relies on.
+    let total = 1024usize;
+    let c = CompressorConfig {
+        s: 64.0,
+        reset_interval: 4, // cover an EF reset inside the window
+        ..CompressorConfig::with_method(Method::Sparse)
+    };
+    let cuts = [0..256usize, 256..768, 768..1024];
+    let mut mono = SparseEncoder::new(&c, total);
+    let mut parts: Vec<SparseEncoder> =
+        cuts.iter().map(|r| SparseEncoder::for_range(&c, r.clone())).collect();
+    let mut grad = vec![0.0f32; total];
+    let mut rng = Rng::new(42);
+    for step in 1..=6u64 {
+        rng.fill_normal(&mut grad, 0.05);
+        let (idx_m, codes_m, scale_m) = sparse_parts(mono.encode(&grad, 0..total, step));
+        let mut j = 0usize;
+        for (r, enc) in cuts.iter().zip(parts.iter_mut()) {
+            let (idx_b, codes_b, scale_b) = sparse_parts(enc.encode(&grad, r.clone(), step));
+            assert_eq!(scale_m, scale_b, "step {step} cut {r:?}");
+            for (&ib, &cb) in idx_b.iter().zip(&codes_b) {
+                assert_eq!(
+                    idx_m[j],
+                    ib + r.start as u32,
+                    "step {step} cut {r:?}: survivor sets diverged"
+                );
+                assert_eq!(codes_m[j], cb, "step {step} cut {r:?}: codes diverged");
+                j += 1;
+            }
+        }
+        assert_eq!(j, idx_m.len(), "step {step}: survivor counts diverged");
+    }
+}
+
+#[test]
+fn trainer_bucketed_sparse_matches_monolithic() {
+    // the engine aligns sparse bucket cuts to the *absolute* chunk grid,
+    // so the bucketed run selects and quantizes exactly what the
+    // monolithic run does; the tolerance only absorbs fp addition-order
+    // differences in the decode reduce (same band as the LoCo pin in
+    // tests/bucketed_sync.rs)
+    let steps = 20;
+    let mono = Trainer::new(quickstart_cfg(4, steps)).run().expect("monolithic run");
+    let mut bcfg = quickstart_cfg(4, steps);
+    bcfg.compressor.bucket_bytes = 8192;
+    bcfg.compressor.sync_workers = 2;
+    let bucketed = Trainer::new(bcfg).run().expect("bucketed run");
+    for (a, b) in mono.metrics.train_loss.points.iter().zip(&bucketed.metrics.train_loss.points) {
+        assert_eq!(a.0, b.0);
+        assert!((a.1 - b.1).abs() < 1e-4, "step {}: {} vs {}", a.0, a.1, b.1);
+    }
+    let max_diff = mono
+        .final_params
+        .iter()
+        .zip(&bucketed.final_params)
+        .map(|(&x, &y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "param divergence {max_diff}");
+}
+
+/// One flat gradient exchange at `n` nodes, returning the counted wire
+/// bytes (the engine's gradient all-to-all only — no parameter gather).
+fn count_grad_bytes(cc: &CompressorConfig, n: usize, total: usize) -> u64 {
+    let topo = Topology::from_tiers(n, &[n]).unwrap();
+    let layout = ParamLayout::single("flat", &[total]);
+    let part = topo.partition(total);
+    let cfg = *cc;
+    let (_, counters) = run_cluster_topo(n, topo.cluster_spec(), |ctx| {
+        let engine = HierSyncEngine::new(&cfg, &layout, &part, &topo, ctx.rank).unwrap();
+        let mut grad = vec![0.0f32; total];
+        Rng::new(300 + ctx.rank as u64).fill_normal(&mut grad, 0.05);
+        let mut acc = vec![0.0f32; part.ranges[ctx.rank].len()];
+        engine.sync(&ctx, &mut grad, &mut acc, 1);
+    });
+    counters.total_sent()
+}
+
+#[test]
+fn counted_wire_bytes_match_analytic_at_8_nodes() {
+    // byte-accounting pin: the counters must report the *actual* encoded
+    // wire_bytes of the variable-length format. With every shard a whole
+    // number of full chunks the survivor count is exact, so the counted
+    // total is too: n*(n-1) messages of (2 B per index + packed 4-bit
+    // codes + one f32 scale)
+    let (n, total) = (8usize, 16384usize);
+    let shard = total / n; // 2048 = 8 full chunks of 256
+    let cc = CompressorConfig { s: 64.0, ..CompressorConfig::with_method(Method::Sparse) };
+    let counted = count_grad_bytes(&cc, n, total);
+    let survivors = shard / 256 * 16;
+    let per_msg = 2 * survivors + (survivors * 4).div_ceil(8) + 4;
+    assert_eq!(
+        counted,
+        (n * (n - 1) * per_msg) as u64,
+        "counted bytes are not the actual sparse wire size"
+    );
+    // and the analytic per-parameter rate (netsim's worst-case bound at
+    // the defaults) prices the same exchange within per-message overhead
+    let analytic = (n * (n - 1) * shard) as f64 * ((16.0 + 4.0) * 16.0 / 256.0) / 8.0;
+    let ratio = counted as f64 / analytic;
+    assert!(
+        (0.95..=1.10).contains(&ratio),
+        "counted {counted} vs analytic {analytic} (ratio {ratio})"
+    );
+}
+
+#[test]
+fn gradient_wire_reduction_vs_fp32_is_at_least_16x() {
+    // the format-level A/B: same cluster, same gradients, fp32 versus
+    // sparse gradient exchange — the sparse wire must be >=16x smaller
+    // (defaults price at 4 / 0.15625 = 25.6x; the floor leaves room for
+    // the per-message scale overhead)
+    let (n, total) = (8usize, 16384usize);
+    let fp = count_grad_bytes(&CompressorConfig::with_method(Method::Fp32), n, total);
+    let sp = count_grad_bytes(
+        &CompressorConfig { s: 64.0, ..CompressorConfig::with_method(Method::Sparse) },
+        n,
+        total,
+    );
+    let ratio = fp as f64 / sp as f64;
+    assert!(ratio >= 16.0, "gradient wire ratio {ratio} (fp32 {fp} vs sparse {sp})");
+}
+
+#[test]
+fn quickstart_ab_loss_drift_vs_fp32_is_bounded() {
+    // the trainer-level half of the A/B: shipping ~6% of coordinates per
+    // step (top-16 of every 256, 4-bit) must stay inside a documented
+    // band of the uncompressed trajectory on both quickstart models
+    for model in ["tiny", "moe_tiny"] {
+        let steps = 30;
+        let mut f = quickstart_cfg(4, steps);
+        f.model = model.to_string();
+        f.compressor = CompressorConfig::with_method(Method::Fp32);
+        f.param_sync = ParamSync::F32;
+        let rf = Trainer::new(f).run().expect("fp32 run");
+        let mut s = quickstart_cfg(4, steps);
+        s.model = model.to_string();
+        let rs = Trainer::new(s).run().expect("sparse run");
+        let lf = rf.metrics.train_loss.points.last().unwrap().1;
+        let ls = rs.metrics.train_loss.points.last().unwrap().1;
+        let first = rs.metrics.train_loss.points.first().unwrap().1;
+        assert!(ls.is_finite(), "{model}: sparse diverged");
+        assert!(ls < first - 0.05, "{model}: no sparse progress: {first} -> {ls}");
+        // same band the local:2 schedule is held to in tests/stale_grads.rs
+        assert!((ls - lf).abs() < 1.5, "{model}: fp32 {lf} vs sparse {ls}");
+    }
+}
+
+#[test]
+fn local8_whole_run_wire_reduction_vs_fp32_sync_is_at_least_16x() {
+    // the SparseLoCo regime the ISSUE motivates: top-k + error feedback
+    // + local steps. Whole-run bytes (gradient exchanges AND parameter
+    // gathers) of sparse + local:8 versus the synchronous fp32 trainer:
+    // fp32 moves ~24 B/param/step, sparse local:8 ~2.16 B/param every 8
+    // steps — a >=16x whole-run reduction, while still training
+    let steps = 32;
+    let mut f = quickstart_cfg(4, steps);
+    f.compressor = CompressorConfig::with_method(Method::Fp32);
+    f.param_sync = ParamSync::F32;
+    let rf = Trainer::new(f).run().expect("fp32 sync run");
+    let mut s = quickstart_cfg(4, steps);
+    s.grad_sync = GradSync::Local(8);
+    let rs = Trainer::new(s).run().expect("sparse local:8 run");
+    let ratio = rf.metrics.comm_bytes as f64 / rs.metrics.comm_bytes as f64;
+    assert!(
+        ratio >= 16.0,
+        "whole-run wire ratio {ratio} (fp32 {} vs sparse+local:8 {})",
+        rf.metrics.comm_bytes,
+        rs.metrics.comm_bytes
+    );
+    // the schedules differ by design (8 plain-SGD inner steps per Adam
+    // outer step vs Adam every step), so the quality claim here is
+    // finite + making progress; the tight drift band lives in the
+    // synchronous A/B above
+    let ls = rs.metrics.train_loss.points.last().unwrap().1;
+    let first = rs.metrics.train_loss.points.first().unwrap().1;
+    assert!(ls.is_finite(), "sparse+local:8 diverged");
+    assert!(ls < first - 0.05, "no progress: {first} -> {ls}");
+    assert_eq!(rs.metrics.grad_sync_rounds, steps / 8);
+}
+
+#[test]
+fn sparse_runs_all_grad_sync_modes_on_flat_and_tiered() {
+    // the acceptance matrix: paper-default sparse knobs (int8 error
+    // store, moving-average EF) across every grad_sync mode on a flat
+    // 4-node cluster and an 8-node three-tier tree
+    for tiers in [vec![], vec![2usize, 2, 2]] {
+        for gs in [GradSync::Sync, GradSync::Stale, GradSync::Local(2)] {
+            let nodes = if tiers.is_empty() { 4 } else { 8 };
+            let mut cfg = quickstart_cfg(nodes, 10);
+            cfg.compressor = CompressorConfig {
+                s: (1u32 << 17) as f32,
+                ..CompressorConfig::with_method(Method::Sparse)
+            };
+            cfg.tiers = tiers.clone();
+            cfg.grad_sync = gs;
+            let r = Trainer::new(cfg)
+                .run()
+                .unwrap_or_else(|e| panic!("tiers {tiers:?} {gs:?}: {e:#}"));
+            let last = r.metrics.train_loss.tail_mean(2);
+            assert!(
+                last.is_finite() && last < 8.0,
+                "tiers {tiers:?} {gs:?} diverged: {last}"
+            );
+            assert!(r.metrics.comm_bytes > 0, "tiers {tiers:?} {gs:?}: no wire traffic");
+        }
+    }
+}
+
+#[test]
+fn uneven_islands_train_sparse_deterministically() {
+    // uneven groups route gradient *slices* whose cuts land anywhere —
+    // the absolute chunk grid makes those unaligned encodes well-defined
+    // (partial edge chunks keep min(k, len) survivors); the run must
+    // train and repeat bitwise
+    let mk = || {
+        let mut cfg = quickstart_cfg(5, 10);
+        cfg.topo_groups = vec![vec![0, 1, 2], vec![3, 4]];
+        Trainer::new(cfg).run().expect("uneven sparse run")
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.metrics.train_loss.points, b.metrics.train_loss.points);
+    assert_eq!(a.final_params, b.final_params);
+    let first = a.metrics.train_loss.points.first().unwrap().1;
+    let last = a.metrics.train_loss.points.last().unwrap().1;
+    assert!(last.is_finite() && last < first, "uneven sparse failed to train");
+    assert!(a.metrics.comm_bytes_intra > 0 && a.metrics.comm_bytes_inter > 0);
+}
+
+#[test]
+fn empty_shards_survive_the_sparse_engine() {
+    // total < n * align collapses half the shards to zero length; the
+    // sparse engine must route the empty (and tiny partial-chunk) wire
+    // messages and still reproduce the exact gradient sum within
+    // quantization error
+    let (n, total) = (4usize, 4usize);
+    let topo = Topology::from_tiers(n, &[n]).unwrap();
+    let layout = ParamLayout::single("flat", &[total]);
+    let part = Partition::flat_even(total, n, 2);
+    assert!(part.ranges.iter().any(|r| r.is_empty()), "fixture not degenerate");
+    let cfg = CompressorConfig { s: 64.0, ..CompressorConfig::with_method(Method::Sparse) };
+    let (results, _) = run_cluster_topo(n, topo.cluster_spec(), |ctx| {
+        let engine = HierSyncEngine::new(&cfg, &layout, &part, &topo, ctx.rank).unwrap();
+        let mut grad = vec![0.0f32; total];
+        Rng::new(50 + ctx.rank as u64).fill_normal(&mut grad, 0.01);
+        let mut acc = vec![0.0f32; part.ranges[ctx.rank].len()];
+        engine.sync(&ctx, &mut grad, &mut acc, 1);
+        acc
+    });
+    let grads: Vec<Vec<f32>> = (0..n)
+        .map(|r| {
+            let mut g = vec![0.0f32; total];
+            Rng::new(50 + r as u64).fill_normal(&mut g, 0.01);
+            g
+        })
+        .collect();
+    for (rank, acc) in results.iter().enumerate() {
+        let r = &part.ranges[rank];
+        assert_eq!(acc.len(), r.len());
+        for (i, &a) in acc.iter().enumerate() {
+            let want: f32 = grads.iter().map(|g| g[r.start + i]).sum();
+            // elements all survive (k >= chunk length), so the only loss
+            // is one half-code of quantization per contribution
+            assert!(
+                (a - want).abs() <= n as f32 * 0.5 / 64.0 + 1e-6,
+                "rank {rank} elem {i}: {a} vs {want}"
+            );
+        }
+    }
+}

@@ -43,7 +43,7 @@ fn quantize_is_idempotent_over_the_decode() {
     });
 }
 
-const METHODS: [Method; 9] = [
+const METHODS: [Method; 10] = [
     Method::Fp32,
     Method::Bf16,
     Method::Loco,
@@ -53,6 +53,7 @@ const METHODS: [Method; 9] = [
     Method::Zeropp,
     Method::LocoZeropp,
     Method::IntSgd,
+    Method::Sparse,
 ];
 
 fn cfg_for(method: Method, bits: u32) -> CompressorConfig {
@@ -98,7 +99,7 @@ fn encoder_state_roundtrips_bitwise() {
 fn encoder_state_roundtrips_on_empty_subrange() {
     // an empty shard is a legal encode target (uneven topologies produce
     // them); it must neither corrupt state nor break the round-trip
-    for method in [Method::Loco, Method::Ef21, Method::OneBit] {
+    for method in [Method::Loco, Method::Ef21, Method::OneBit, Method::Sparse] {
         let cfg = cfg_for(method, 4);
         let layout = ParamLayout::single("w", &[16]);
         let (mut enc, _) = compress::build(&cfg, &layout, 0..16, 2);

@@ -1,0 +1,25 @@
+//! Marker attributes for the `loco-verify` static-analysis pass.
+//!
+//! The attributes here are deliberately *inert at runtime*: they expand to
+//! the unmodified item and exist only so that source-level tooling
+//! (`cargo run -p loco-verify`) can find the marked regions by token scan.
+//! Keeping the crate dependency-free (no `syn`/`quote`) means it builds
+//! offline with nothing but the compiler-provided `proc_macro` API.
+
+use proc_macro::TokenStream;
+
+/// Marks a function as a steady-state-allocation-free hot kernel.
+///
+/// `loco-verify` denies allocation calls (`Vec::new`, `Box::new`,
+/// `to_vec`, `collect::<Vec<_>>`, `format!`, `vec!`, `String::from`, …)
+/// inside the body of any function carrying this attribute. The runtime
+/// counterpart is the counting global allocator in `tests/scaling.rs`;
+/// this marker turns that spot check into a tree-wide gate.
+///
+/// The attribute itself is a no-op passthrough: it returns the item
+/// unchanged, so marked kernels compile identically with or without the
+/// verify pass installed.
+#[proc_macro_attribute]
+pub fn hot_kernel(_attr: TokenStream, item: TokenStream) -> TokenStream {
+    item
+}

@@ -45,15 +45,19 @@
 //! [`LinkSim`] — the NVLink-vs-rack-vs-spine bandwidth asymmetry the
 //! hierarchical engine ([`crate::topology`]) exploits.
 
+pub mod reorder;
+pub mod shim;
+
 use std::cell::{Cell, RefCell};
-use std::collections::{HashMap, VecDeque};
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
+
+use reorder::{Incoming, ReorderBuffer};
+use shim::{Receiver, Sender};
 
 use crate::compress::WireMsg;
 
@@ -512,8 +516,12 @@ struct Envelope {
 /// messages it is not yet asking for.
 fn wire_wait(ready_at: Option<Instant>) {
     if let Some(t) = ready_at {
+        // verify: allow(wall_clock) — LinkSim timing layer: release
+        // instants are absolute wall-clock deadlines set at egress
         let now = Instant::now();
         if t > now {
+            // verify: allow(wall_clock) — LinkSim timing layer: the modeled
+            // wire delay is realized as a real sleep; numerics never see it
             std::thread::sleep(t - now);
         }
     }
@@ -634,13 +642,12 @@ pub struct NodeCtx {
     tx: Arc<Vec<Sender<Envelope>>>,
     /// this node's single merged receive queue
     rx: Receiver<Envelope>,
-    /// reorder buffer for tagged messages that arrived while something
-    /// else was awaited, keyed (src, tag) — O(in-flight tags), not O(n)
-    /// maps (single-threaded per node, hence RefCell)
-    pending: RefCell<HashMap<(usize, u64), (Option<Instant>, WireMsg)>>,
-    /// untagged payloads pulled off the merged queue while a different
-    /// source was awaited, in per-source FIFO order
-    stash: RefCell<HashMap<usize, VecDeque<(Option<Instant>, Payload)>>>,
+    /// reorder buffer for messages that arrived while something else was
+    /// awaited — tagged parked by (src, tag), untagged in per-source FIFO
+    /// order; O(in-flight traffic), not O(n) (single-threaded per node,
+    /// hence RefCell). The routing logic lives in [`reorder`] so the
+    /// verify pass can model-check it exhaustively.
+    reorder: RefCell<ReorderBuffer<(Option<Instant>, WireMsg), (Option<Instant>, Payload)>>,
     /// shared pair-level classifier; level 0 = same leaf island
     levels: LevelMap,
     /// whether the cluster declared any hierarchy at all (flat clusters
@@ -743,6 +750,8 @@ impl NodeCtx {
                 self.msg_idx.set(idx + 1);
                 f.straggler_slow(self.rank, step) * f.jitter_factor(self.rank, dst, idx, step)
             });
+            // verify: allow(wall_clock) — LinkSim timing layer: egress
+            // serialization can never start before real now
             let start = egress.get().max(Instant::now());
             let done = start + Duration::from_secs_f64(stretch * bytes as f64 / l.bw);
             egress.set(done);
@@ -761,36 +770,34 @@ impl NodeCtx {
     /// from *other* sources are stashed in per-source FIFO order for the
     /// receive that asks for them.
     pub fn recv(&self, src: usize) -> Payload {
-        let stashed = self.stash.borrow_mut().get_mut(&src).and_then(VecDeque::pop_front);
+        let stashed = self.reorder.borrow_mut().pop_stashed(src);
         if let Some((ready_at, p)) = stashed {
             wire_wait(ready_at);
             self.trace_recv_span(src, p.wire_bytes());
             return p;
         }
         loop {
-            let Envelope { src: esrc, ready_at, payload } =
-                self.rx.recv().expect("peer hung up");
-            match payload {
-                Payload::TaggedWire { tag, msg } => {
-                    self.pending.borrow_mut().insert((esrc, tag), (ready_at, msg));
-                }
-                p if esrc == src => {
-                    // one span per *logical* receive (not per queue pull,
-                    // whose stash traffic depends on nondeterministic
-                    // arrival order). A straggling source shows up as a
-                    // stretched recv — the wait.
-                    wire_wait(ready_at);
-                    self.trace_recv_span(src, p.wire_bytes());
-                    return p;
-                }
-                p => {
-                    self.stash
-                        .borrow_mut()
-                        .entry(esrc)
-                        .or_default()
-                        .push_back((ready_at, p));
-                }
+            let inc = self.pull_incoming();
+            let routed = self.reorder.borrow_mut().route_awaiting_untagged(src, inc);
+            if let Some((ready_at, p)) = routed {
+                // one span per *logical* receive (not per queue pull,
+                // whose stash traffic depends on nondeterministic
+                // arrival order). A straggling source shows up as a
+                // stretched recv — the wait.
+                wire_wait(ready_at);
+                self.trace_recv_span(src, p.wire_bytes());
+                return p;
             }
+        }
+    }
+
+    /// Pull the next envelope off the merged queue as a routable
+    /// [`Incoming`], keeping its LinkSim release instant attached.
+    fn pull_incoming(&self) -> Incoming<(Option<Instant>, WireMsg), (Option<Instant>, Payload)> {
+        let Envelope { src, ready_at, payload } = self.rx.recv().expect("peer hung up");
+        match payload {
+            Payload::TaggedWire { tag, msg } => Incoming::Tagged { src, tag, msg: (ready_at, msg) },
+            p => Incoming::Untagged { src, payload: (ready_at, p) },
         }
     }
 
@@ -827,33 +834,22 @@ impl NodeCtx {
         // the span is recorded per logical (src, tag) receive whether the
         // message was already stashed or still on the wire — the stash
         // path depends on nondeterministic arrival order, the span must not
-        if let Some((ready_at, m)) = self.pending.borrow_mut().remove(&(src, tag)) {
+        if let Some((ready_at, m)) = self.reorder.borrow_mut().take_pending(src, tag) {
             wire_wait(ready_at);
             self.trace_recv_span(src, m.wire_bytes() as u64);
             return m;
         }
         loop {
-            let Envelope { src: esrc, ready_at, payload } =
-                self.rx.recv().expect("peer hung up");
-            match payload {
-                Payload::TaggedWire { tag: t, msg } => {
-                    if esrc == src && t == tag {
-                        wire_wait(ready_at);
-                        self.trace_recv_span(src, msg.wire_bytes() as u64);
-                        return msg;
-                    }
-                    self.pending.borrow_mut().insert((esrc, t), (ready_at, msg));
+            let inc = self.pull_incoming();
+            let routed = self.reorder.borrow_mut().route_awaiting_tagged(src, tag, inc);
+            match routed {
+                Ok(Some((ready_at, msg))) => {
+                    wire_wait(ready_at);
+                    self.trace_recv_span(src, msg.wire_bytes() as u64);
+                    return msg;
                 }
-                _ if esrc == src => {
-                    panic!("untagged payload while awaiting tag {tag} from node {src}")
-                }
-                p => {
-                    self.stash
-                        .borrow_mut()
-                        .entry(esrc)
-                        .or_default()
-                        .push_back((ready_at, p));
-                }
+                Ok(None) => {}
+                Err(violation) => panic!("{violation}"),
             }
         }
     }
@@ -1261,7 +1257,7 @@ pub fn run_cluster_topo<T: Send>(
     let mut txs: Vec<Sender<Envelope>> = Vec::with_capacity(n);
     let mut rxs: Vec<Receiver<Envelope>> = Vec::with_capacity(n);
     for _ in 0..n {
-        let (tx, rx) = std::sync::mpsc::channel();
+        let (tx, rx) = shim::channel();
         txs.push(tx);
         rxs.push(rx);
     }
@@ -1273,11 +1269,12 @@ pub fn run_cluster_topo<T: Send>(
             n,
             tx: tx.clone(),
             rx,
-            pending: RefCell::new(HashMap::new()),
-            stash: RefCell::new(HashMap::new()),
+            reorder: RefCell::new(ReorderBuffer::new()),
             levels: levels.clone(),
             hierarchical,
             nets: nets.clone(),
+            // verify: allow(wall_clock) — LinkSim timing layer: each egress
+            // engine starts free at cluster launch time
             egress: (0..n_levels).map(|_| Cell::new(Instant::now())).collect(),
             faults: spec.faults.clone(),
             sim_step: Cell::new(0),

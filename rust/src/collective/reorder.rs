@@ -1,0 +1,224 @@
+//! The per-node message reorder buffer, extracted as pure data-structure
+//! logic so it can be model-checked exhaustively.
+//!
+//! A node owns one merged receive queue fed by every peer. The mpsc
+//! channel guarantees per-sender FIFO, but messages from *different*
+//! senders interleave arbitrarily — and a receiver asking for a specific
+//! `(src, tag)` (an in-flight tagged gather) or the next untagged payload
+//! from a specific `src` (a phased collective) must set aside whatever
+//! else arrives first without losing or reordering it. [`ReorderBuffer`]
+//! is that routing core: [`NodeCtx`](super::NodeCtx) drives it from
+//! `recv`/`recv_wire_tagged`, and `loco-verify`'s interleaving explorer
+//! drives the *same type* through every arrival schedule of a message
+//! set, asserting no loss, no per-sender reordering, and that the
+//! untagged-while-tag-awaited protocol violation is always detected
+//! (DESIGN.md §3.14). Because the consumer is single-threaded and the
+//! channel is per-sender FIFO, arrival interleaving is the only
+//! nondeterminism — so enumerating interleavings over this type is a
+//! complete model check of the demux.
+//!
+//! `T` is the tagged message representation, `U` the untagged one
+//! (`collective` instantiates them with their LinkSim release instants
+//! attached; the explorer uses plain test payloads).
+
+// verify: allow(unordered_map, file) — keyed insert/remove only, never
+// iterated: lookup order is driven by the receiver's explicit (src, tag) /
+// src asks, so map ordering cannot influence delivery order or any output
+use std::collections::{HashMap, VecDeque};
+
+/// One message pulled off the merged receive queue, before routing.
+pub enum Incoming<T, U> {
+    /// A tagged wire message from `src`.
+    Tagged {
+        /// sending rank
+        src: usize,
+        /// wire tag (unique among in-flight messages of the pair)
+        tag: u64,
+        /// the message
+        msg: T,
+    },
+    /// An untagged payload from `src`.
+    Untagged {
+        /// sending rank
+        src: usize,
+        /// the payload
+        payload: U,
+    },
+}
+
+/// An untagged payload arrived from the awaited source while a tagged
+/// message was being awaited. Untagged collectives are strictly phased,
+/// so a tagged receive can never legally overtake one — the caller
+/// treats this as a fatal wire-protocol error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProtocolViolation {
+    /// the awaited source
+    pub src: usize,
+    /// the awaited tag
+    pub tag: u64,
+}
+
+impl std::fmt::Display for ProtocolViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "untagged payload while awaiting tag {} from node {}", self.tag, self.src)
+    }
+}
+
+/// Reorder state for one receiving node: tagged messages parked by
+/// `(src, tag)`, untagged payloads parked per source in FIFO order.
+/// Sized by traffic actually in flight — nothing scales with cluster
+/// size.
+pub struct ReorderBuffer<T, U> {
+    /// tagged messages that arrived while something else was awaited
+    pending: HashMap<(usize, u64), T>,
+    /// untagged payloads pulled off the merged queue while a different
+    /// source was awaited, in per-source FIFO order
+    stash: HashMap<usize, VecDeque<U>>,
+}
+
+impl<T, U> Default for ReorderBuffer<T, U> {
+    fn default() -> Self {
+        ReorderBuffer { pending: HashMap::new(), stash: HashMap::new() }
+    }
+}
+
+// Clone lets the interleaving explorer branch the buffer at every
+// nondeterministic arrival choice during its DFS.
+impl<T: Clone, U: Clone> Clone for ReorderBuffer<T, U> {
+    fn clone(&self) -> Self {
+        ReorderBuffer { pending: self.pending.clone(), stash: self.stash.clone() }
+    }
+}
+
+impl<T, U> ReorderBuffer<T, U> {
+    /// Fresh, empty buffer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pop the oldest stashed untagged payload from `src`, if any. A
+    /// receive for `src` consumes stashed payloads before touching the
+    /// queue, preserving per-sender FIFO.
+    pub fn pop_stashed(&mut self, src: usize) -> Option<U> {
+        self.stash.get_mut(&src).and_then(VecDeque::pop_front)
+    }
+
+    /// Take the parked tagged message `(src, tag)`, if it already arrived.
+    pub fn take_pending(&mut self, src: usize, tag: u64) -> Option<T> {
+        self.pending.remove(&(src, tag))
+    }
+
+    /// Route one incoming message while an *untagged* payload from
+    /// `want_src` is awaited. Returns the payload when this was it;
+    /// otherwise parks the message and returns `None` (pull again).
+    pub fn route_awaiting_untagged(&mut self, want_src: usize, inc: Incoming<T, U>) -> Option<U> {
+        match inc {
+            Incoming::Tagged { src, tag, msg } => {
+                self.park_tagged(src, tag, msg);
+                None
+            }
+            Incoming::Untagged { src, payload } if src == want_src => Some(payload),
+            Incoming::Untagged { src, payload } => {
+                self.stash.entry(src).or_default().push_back(payload);
+                None
+            }
+        }
+    }
+
+    /// Route one incoming message while tagged message `(want_src,
+    /// want_tag)` is awaited. Returns the message when this was it, an
+    /// error on an untagged payload from the awaited source (see
+    /// [`ProtocolViolation`]); otherwise parks the message and returns
+    /// `Ok(None)` (pull again).
+    pub fn route_awaiting_tagged(
+        &mut self,
+        want_src: usize,
+        want_tag: u64,
+        inc: Incoming<T, U>,
+    ) -> Result<Option<T>, ProtocolViolation> {
+        match inc {
+            Incoming::Tagged { src, tag, msg } => {
+                if src == want_src && tag == want_tag {
+                    Ok(Some(msg))
+                } else {
+                    self.park_tagged(src, tag, msg);
+                    Ok(None)
+                }
+            }
+            Incoming::Untagged { src, .. } if src == want_src => {
+                Err(ProtocolViolation { src: want_src, tag: want_tag })
+            }
+            Incoming::Untagged { src, payload } => {
+                self.stash.entry(src).or_default().push_back(payload);
+                Ok(None)
+            }
+        }
+    }
+
+    /// True when nothing is parked — every message pulled off the queue
+    /// has been delivered.
+    pub fn is_drained(&self) -> bool {
+        self.pending.is_empty() && self.stash.values().all(VecDeque::is_empty)
+    }
+
+    fn park_tagged(&mut self, src: usize, tag: u64, msg: T) {
+        let prev = self.pending.insert((src, tag), msg);
+        // a duplicate in-flight (src, tag) means two messages became
+        // indistinguishable — the disjointness the tag prover exists to
+        // rule out; losing the first silently would corrupt a run
+        debug_assert!(prev.is_none(), "duplicate in-flight tag {tag} from node {src}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stash_preserves_per_source_fifo() {
+        let mut rb: ReorderBuffer<&str, u32> = ReorderBuffer::new();
+        assert!(rb
+            .route_awaiting_untagged(0, Incoming::Untagged { src: 1, payload: 10 })
+            .is_none());
+        assert!(rb
+            .route_awaiting_untagged(0, Incoming::Untagged { src: 1, payload: 11 })
+            .is_none());
+        assert_eq!(
+            rb.route_awaiting_untagged(0, Incoming::Untagged { src: 0, payload: 7 }),
+            Some(7)
+        );
+        assert_eq!(rb.pop_stashed(1), Some(10));
+        assert_eq!(rb.pop_stashed(1), Some(11));
+        assert_eq!(rb.pop_stashed(1), None);
+        assert!(rb.is_drained());
+    }
+
+    #[test]
+    fn tagged_overtake_parks_and_matches() {
+        let mut rb: ReorderBuffer<&str, u32> = ReorderBuffer::new();
+        assert!(rb
+            .route_awaiting_untagged(0, Incoming::Tagged { src: 2, tag: 5, msg: "late" })
+            .is_none());
+        assert_eq!(rb.take_pending(2, 5), Some("late"));
+        assert_eq!(rb.take_pending(2, 5), None);
+        let got = rb.route_awaiting_tagged(2, 9, Incoming::Tagged { src: 2, tag: 9, msg: "hit" });
+        assert_eq!(got, Ok(Some("hit")));
+    }
+
+    #[test]
+    fn untagged_while_tag_awaited_is_a_protocol_violation() {
+        let mut rb: ReorderBuffer<&str, u32> = ReorderBuffer::new();
+        // other sources stash fine
+        assert_eq!(
+            rb.route_awaiting_tagged(3, 1, Incoming::Untagged { src: 2, payload: 4 }),
+            Ok(None)
+        );
+        // the awaited source may not interleave untagged traffic
+        let err = rb.route_awaiting_tagged(3, 1, Incoming::Untagged { src: 3, payload: 4 });
+        assert_eq!(err, Err(ProtocolViolation { src: 3, tag: 1 }));
+        assert_eq!(
+            err.unwrap_err().to_string(),
+            "untagged payload while awaiting tag 1 from node 3"
+        );
+    }
+}

@@ -1,0 +1,85 @@
+//! The envelope-channel construction point, swappable for model checking.
+//!
+//! Every inter-node message rides one mpsc channel per receiving rank
+//! (see [`super::run_cluster`]). This module is the *single* place that
+//! channel is named: a normal build re-exports `std::sync::mpsc`, while
+//! `--cfg loom` (see `[lints.rust]` in `rust/Cargo.toml`) swaps in a
+//! structurally identical Mutex/Condvar queue whose lock and wait points
+//! are explicit — the shape loom's model checker instruments. The `loom`
+//! crate itself is not vendorable in the offline registry, so the shim
+//! uses `std::sync` primitives; running under real loom is the one-line
+//! flip of the `use std::sync::...` import below to `use loom::sync::...`
+//! plus a loom dev-dependency. Until then, the *logic* the channel feeds
+//! (the [`super::reorder::ReorderBuffer`] demux) is checked exhaustively
+//! by `loco-verify`'s interleaving explorer, which needs no instrumented
+//! runtime: per-sender FIFO + a single-threaded consumer make arrival
+//! interleaving the only nondeterminism (DESIGN.md §3.14).
+
+#[cfg(not(loom))]
+pub use std::sync::mpsc::{channel, Receiver, Sender};
+
+#[cfg(loom)]
+mod loom_chan {
+    //! An unbounded MPSC channel with explicit lock/condvar points.
+    //! Flip this import to `use loom::sync::{Condvar, Mutex};` (and add
+    //! the loom dev-dependency) to run under the real model checker.
+    use std::collections::VecDeque;
+    use std::sync::{Arc, Condvar, Mutex};
+
+    struct Chan<T> {
+        q: Mutex<VecDeque<T>>,
+        cv: Condvar,
+    }
+
+    /// Sending half; clonable, shared by every peer.
+    pub struct Sender<T>(Arc<Chan<T>>);
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Self {
+            Sender(self.0.clone())
+        }
+    }
+
+    /// Error type mirroring `std::sync::mpsc::SendError` closely enough
+    /// for the `.expect("peer hung up")` call sites.
+    #[derive(Debug)]
+    pub struct SendError<T>(pub T);
+
+    #[derive(Debug)]
+    pub struct RecvError;
+
+    impl<T> Sender<T> {
+        pub fn send(&self, v: T) -> Result<(), SendError<T>> {
+            self.0.q.lock().unwrap().push_back(v);
+            self.0.cv.notify_one();
+            Ok(())
+        }
+    }
+
+    /// Receiving half (single consumer).
+    pub struct Receiver<T>(Arc<Chan<T>>);
+
+    impl<T> Receiver<T> {
+        /// Block until a message is available. The model shim never
+        /// reports disconnection: cluster runs join every sender before
+        /// dropping the receiver, so hangup is outside the checked model.
+        pub fn recv(&self) -> Result<T, RecvError> {
+            let mut q = self.0.q.lock().unwrap();
+            loop {
+                if let Some(v) = q.pop_front() {
+                    return Ok(v);
+                }
+                q = self.0.cv.wait(q).unwrap();
+            }
+        }
+    }
+
+    /// Construct a connected (sender, receiver) pair.
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        let chan = Arc::new(Chan { q: Mutex::new(VecDeque::new()), cv: Condvar::new() });
+        (Sender(chan.clone()), Receiver(chan))
+    }
+}
+
+#[cfg(loom)]
+pub use loom_chan::{channel, Receiver, Sender};

@@ -24,6 +24,154 @@ use std::ops::Range;
 
 use crate::sharding::{ParamLayout, Partition};
 
+/// Which of the three per-step wire-tag namespaces a message belongs to.
+///
+/// Tags must be unique among messages concurrently in flight between one
+/// `(src, dst)` pair. The three lifecycles that can overlap on a pair —
+/// synchronous gradients, the (possibly async) parameter gather, and the
+/// stale launch-now-drain-next-step gradient exchange — therefore draw
+/// from three disjoint namespaces (see [`TagNamespace`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TagNs {
+    /// Synchronous gradient buckets (`SyncEngine::sync`, stale *drain*
+    /// reuses the launch-time tags).
+    Grad,
+    /// Parameter-gather buckets (sync or async `param_gather`).
+    Param,
+    /// Stale gradient buckets: launched at step `s`, drained at `s + 1`,
+    /// so they stay in flight across the next step's collectives.
+    StaleGrad,
+}
+
+/// The wire-tag arithmetic shared by every plan.
+///
+/// A namespace owner has `slots` distinct message slots per (namespace,
+/// step); [`BucketPlan`] uses one slot per bucket, the uneven-island plan
+/// (`topology`) one slot per routed slice. The tag of slot `i` in
+/// namespace `ns` at step `s` is
+///
+/// ```text
+/// s * 3*slots  +  ns_offset(ns)  +  i      (all u64, wrapping)
+/// ```
+///
+/// with `ns_offset` ∈ {0, slots, 2*slots}. Within one step the three
+/// namespaces tile `[base, base + 3*slots)` disjointly, and adjacent
+/// steps' windows are disjoint because their bases differ by exactly
+/// `3*slots` — this holds under wrapping too, which is what lets the
+/// stale and async lifecycles keep step `s` messages in flight while
+/// step `s + 1` runs. `loco-verify`'s tag prover and
+/// `tests/tag_namespaces.rs` check the disjointness exhaustively over
+/// the lifecycle windows in [`SyncLifecycle::in_flight_window`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TagNamespace {
+    slots: u64,
+}
+
+impl TagNamespace {
+    /// Namespace with `slots` message slots per (namespace, step).
+    pub fn new(slots: u64) -> Self {
+        debug_assert!(slots >= 1, "a tag namespace needs at least one slot");
+        TagNamespace { slots }
+    }
+
+    /// Message slots per (namespace, step).
+    pub fn slots(&self) -> u64 {
+        self.slots
+    }
+
+    /// Tag of slot `slot` in namespace `ns` at `step`.
+    pub fn tag(&self, ns: TagNs, step: u64, slot: u64) -> u64 {
+        debug_assert!(slot < self.slots, "slot {slot} out of {} slots", self.slots);
+        let off = match ns {
+            TagNs::Grad => 0,
+            TagNs::Param => self.slots,
+            TagNs::StaleGrad => 2 * self.slots,
+        };
+        step.wrapping_mul(3 * self.slots).wrapping_add(off).wrapping_add(slot)
+    }
+
+    /// Tag of gradient slot `slot` at `step` (see [`Self::tag`]).
+    pub fn grad(&self, step: u64, slot: u64) -> u64 {
+        self.tag(TagNs::Grad, step, slot)
+    }
+
+    /// Tag of parameter slot `slot` at `step` (see [`Self::tag`]).
+    pub fn param(&self, step: u64, slot: u64) -> u64 {
+        self.tag(TagNs::Param, step, slot)
+    }
+
+    /// Tag of stale-gradient slot `slot` at `step` (see [`Self::tag`]).
+    pub fn stale_grad(&self, step: u64, slot: u64) -> u64 {
+        self.tag(TagNs::StaleGrad, step, slot)
+    }
+}
+
+/// The trainer lifecycles whose in-flight tag windows the wire protocol
+/// must keep disjoint.
+///
+/// This is *the* contract between the trainer and the tag arithmetic:
+/// [`Self::in_flight_window`] enumerates every (namespace, step) message
+/// family that can be concurrently in flight between one `(src, dst)`
+/// pair while the trainer sits at step `s`. The `loco-verify` prover and
+/// `tests/tag_namespaces.rs` assert pairwise tag disjointness over
+/// exactly these windows, so a lifecycle change that widens a window
+/// without a protocol change fails the proof rather than deadlocking a
+/// run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SyncLifecycle {
+    /// `train.grad_sync = sync`: gradient exchange and parameter gather
+    /// both complete within the step.
+    Sync,
+    /// `train.grad_sync = stale`: step `s` launches a stale exchange
+    /// drained at `s + 1`, so two adjacent stale windows plus the
+    /// parameter gathers of both steps can overlap.
+    Stale,
+    /// `train.grad_sync = local:H`: the round pseudo-gradient rides the
+    /// synchronous namespaces (same window as [`Self::Sync`], exercised
+    /// every H-th step).
+    Local,
+    /// `train.sync_params = async` composed with stale gradients — the
+    /// widest window this trainer can open: the async parameter gather
+    /// of step `s` drains during `s + 1` while both stale windows are in
+    /// flight.
+    AsyncParams,
+}
+
+impl SyncLifecycle {
+    /// All lifecycles, for exhaustive sweeps.
+    pub const ALL: [SyncLifecycle; 4] = [
+        SyncLifecycle::Sync,
+        SyncLifecycle::Stale,
+        SyncLifecycle::Local,
+        SyncLifecycle::AsyncParams,
+    ];
+
+    /// The (namespace, step) message families that may be concurrently in
+    /// flight between one `(src, dst)` pair while the trainer sits at
+    /// `step`. Steps use wrapping arithmetic like the tags themselves.
+    pub fn in_flight_window(&self, step: u64) -> Vec<(TagNs, u64)> {
+        let next = step.wrapping_add(1);
+        match self {
+            SyncLifecycle::Sync | SyncLifecycle::Local => {
+                vec![(TagNs::Grad, step), (TagNs::Param, step)]
+            }
+            SyncLifecycle::Stale => vec![
+                (TagNs::StaleGrad, step),
+                (TagNs::StaleGrad, next),
+                (TagNs::Param, step),
+                (TagNs::Param, next),
+            ],
+            SyncLifecycle::AsyncParams => vec![
+                (TagNs::Param, step),
+                (TagNs::StaleGrad, step),
+                (TagNs::Grad, next),
+                (TagNs::StaleGrad, next),
+                (TagNs::Param, next),
+            ],
+        }
+    }
+}
+
 /// One bucket: a contiguous sub-range of exactly one destination shard.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Bucket {
@@ -142,22 +290,26 @@ impl BucketPlan {
         self.by_dst.iter().map(Vec::len).max().unwrap_or(0)
     }
 
+    /// The plan's wire-tag namespace: one slot per bucket.
+    pub fn tags(&self) -> TagNamespace {
+        TagNamespace::new(self.total() as u64)
+    }
+
     /// Wire tag of gradient bucket `bi` at `step`. Tags must be unique
     /// among messages concurrently in flight between a (src, dst) pair;
     /// gradient, parameter and *stale*-gradient buckets of the same step
-    /// use disjoint namespaces (stride `3 * total()`), so the parameter
-    /// gather of step k can overtake a peer still draining step k's
-    /// gradient buckets, and a stale gradient exchange can stay in flight
-    /// across the following step's collectives.
+    /// use disjoint namespaces (stride `3 * total()`, see
+    /// [`TagNamespace`]), so the parameter gather of step k can overtake
+    /// a peer still draining step k's gradient buckets, and a stale
+    /// gradient exchange can stay in flight across the following step's
+    /// collectives.
     pub fn grad_tag(&self, step: u64, bi: usize) -> u64 {
-        step.wrapping_mul(3 * self.total() as u64).wrapping_add(bi as u64)
+        self.tags().grad(step, bi as u64)
     }
 
     /// Wire tag of parameter bucket `bi` at `step` (see [`Self::grad_tag`]).
     pub fn param_tag(&self, step: u64, bi: usize) -> u64 {
-        step.wrapping_mul(3 * self.total() as u64)
-            .wrapping_add(self.total() as u64)
-            .wrapping_add(bi as u64)
+        self.tags().param(step, bi as u64)
     }
 
     /// Wire tag of a *stale* (launched, drained one step later) gradient
@@ -166,9 +318,7 @@ impl BucketPlan {
     /// of step k is still in flight while step k+1's collectives (and a
     /// possible in-flight parameter gather) run on the same pairs.
     pub fn stale_grad_tag(&self, step: u64, bi: usize) -> u64 {
-        step.wrapping_mul(3 * self.total() as u64)
-            .wrapping_add(2 * self.total() as u64)
-            .wrapping_add(bi as u64)
+        self.tags().stale_grad(step, bi as u64)
     }
 
     /// Send schedule for `rank`: bucket ids interleaved round-robin across
@@ -247,7 +397,7 @@ mod tests {
                 assert_eq!(covered, part.ranges[dst].len());
             }
             // tags stay unique across namespaces even with empty buckets
-            let mut seen = std::collections::HashSet::new();
+            let mut seen = std::collections::BTreeSet::new();
             for bi in 0..plan.total() {
                 assert!(seen.insert(plan.grad_tag(1, bi)));
                 assert!(seen.insert(plan.param_tag(1, bi)));
@@ -328,7 +478,7 @@ mod tests {
         let l = layout();
         let part = Partition::flat_even(l.total, 4, 2);
         let plan = BucketPlan::new(&part, &l, 64, 2, false);
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         // all three namespaces over two adjacent steps must never collide
         for step in [1u64, 2] {
             for bi in 0..plan.total() {
@@ -348,7 +498,7 @@ mod tests {
             let mut sched = plan.schedule(rank);
             assert_eq!(sched.len(), plan.total());
             // first n entries hit n distinct destinations (pipelining)
-            let firsts: std::collections::HashSet<usize> =
+            let firsts: std::collections::BTreeSet<usize> =
                 sched[..4].iter().map(|&bi| plan.buckets[bi].dst).collect();
             assert_eq!(firsts.len(), 4);
             sched.sort_unstable();

@@ -58,7 +58,7 @@
 
 pub mod bucket;
 
-pub use bucket::{Bucket, BucketPlan};
+pub use bucket::{Bucket, BucketPlan, SyncLifecycle, TagNamespace, TagNs};
 
 use std::ops::Range;
 use std::sync::mpsc;

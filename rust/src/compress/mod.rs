@@ -654,7 +654,7 @@ mod tests {
         let layout = flat_layout(n);
         let mut g = vec![0.0f32; n];
         Rng::new(3).fill_normal(&mut g, 0.1);
-        let mut sizes = std::collections::HashMap::new();
+        let mut sizes = std::collections::BTreeMap::new();
         for m in [Method::Fp32, Method::Bf16, Method::Loco, Method::OneBit] {
             let cfg = CompressorConfig { method: m, s: 16.0, ..Default::default() };
             let (mut enc, _) = build(&cfg, &layout, 0..n, 1);

@@ -138,6 +138,7 @@ impl SparseEncoder {
 }
 
 impl Encoder for SparseEncoder {
+    #[loco::hot_kernel]
     fn encode(&mut self, grad: &[f32], range: Range<usize>, step: u64) -> WireMsg {
         let wire_s = self.wire_scale(&grad[range.clone()], step);
         let s_e = self.cfg.s_e_mult * self.cfg.s;
@@ -373,6 +374,7 @@ impl Encoder for SparseEncoder {
 /// Validates every index against the header-carried element count `n` —
 /// the wire length is runtime data now, so the recv path must not trust it
 /// blindly.
+#[loco::hot_kernel]
 pub fn decode_sparse_accumulate(n: usize, idx: &[u32], codes: &[i8], scale: f32, acc: &mut [f32]) {
     assert_eq!(idx.len(), codes.len(), "sparse payload: index/code length mismatch");
     assert!(acc.len() >= n, "sparse header claims {n} elements, buffer holds {}", acc.len());

@@ -139,7 +139,7 @@ mod tests {
         let c = corpus();
         let doc = c.document(Split::Train, 10, 4000);
         // estimate: how often does the same bigram (t -> t') repeat?
-        let mut pairs = std::collections::HashMap::new();
+        let mut pairs = std::collections::BTreeMap::new();
         for w in doc.windows(2) {
             *pairs.entry((w[0], w[1])).or_insert(0usize) += 1;
         }

@@ -61,6 +61,18 @@
 //! See DESIGN.md for the system inventory and the per-experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
 
+// Lets this crate's own modules write `#[loco::hot_kernel]` exactly like
+// downstream users would (the `serde` self-alias idiom).
+extern crate self as loco;
+
+/// Marks a function as a steady-state-allocation-free hot kernel.
+///
+/// Runtime no-op; the `loco-verify` pass (DESIGN.md §3.14) denies
+/// allocation calls inside any function carrying this attribute, and
+/// `tests/scaling.rs` asserts the same property dynamically with a
+/// counting global allocator.
+pub use loco_macros::hot_kernel;
+
 #[warn(missing_docs)]
 pub mod ckpt;
 pub mod collective;

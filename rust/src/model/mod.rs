@@ -29,7 +29,10 @@ pub struct ModelMeta {
 impl ModelMeta {
     /// Parse the text manifest emitted by `python/compile/aot.py`.
     pub fn parse(text: &str) -> Result<ModelMeta> {
-        let mut kv = std::collections::HashMap::new();
+        // BTreeMap, not HashMap: the missing-key error below lists the
+        // available keys, and diagnostics must be byte-identical across
+        // runs (pinned by `missing_key_error_lists_keys_sorted`)
+        let mut kv = std::collections::BTreeMap::new();
         let mut tensors: Vec<(String, Vec<usize>)> = Vec::new();
         let mut in_params = false;
         let mut declared_params = 0usize;
@@ -67,7 +70,12 @@ impl ModelMeta {
         }
         let get = |k: &str| -> Result<usize> {
             kv.get(k)
-                .with_context(|| format!("manifest missing {k}"))?
+                .with_context(|| {
+                    // BTreeMap iteration is key-sorted, so this listing
+                    // (user-visible output) is deterministic
+                    let have = kv.keys().cloned().collect::<Vec<_>>().join(", ");
+                    format!("manifest missing {k} (have: {have})")
+                })?
                 .parse::<usize>()
                 .with_context(|| format!("bad {k}"))
         };
@@ -195,6 +203,20 @@ head f32 8,40
         assert_eq!(m.layout.total, 512 * 8 + 8 * 16 + 16 + 8 * 40);
         assert_eq!(m.layout.find("b").unwrap().offset, 512 * 8 + 128);
         assert_eq!(m.tokens_per_step(4, 2), 8 * 64 * 4 * 2);
+    }
+
+    #[test]
+    fn missing_key_error_lists_keys_sorted() {
+        // drop one required key and pin the full diagnostic byte-for-byte:
+        // the available-keys listing must come out key-sorted on every run
+        // (this is what forces the kv map to be ordered)
+        let bad = DEMO.replace("seq 64\n", "");
+        let err = format!("{:#}", ModelMeta::parse(&bad).unwrap_err());
+        let expect = "manifest missing seq (have: batch, config, d_ff, d_model, \
+                      n_experts, n_heads, n_layers, param_count, top_k, vocab)";
+        assert!(err.contains(expect), "got: {err}");
+        let again = format!("{:#}", ModelMeta::parse(&bad).unwrap_err());
+        assert_eq!(err, again);
     }
 
     #[test]

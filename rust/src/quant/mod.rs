@@ -51,6 +51,7 @@ pub fn quantize_slice_i8(src: &[f32], s: f32, out: &mut [i8]) {
 }
 
 /// `acc[i] += q[i]/s` — the receiver-side accumulate of Eqn. (8).
+#[loco::hot_kernel]
 pub fn dequantize_accumulate(q: &[i8], s: f32, acc: &mut [f32]) {
     debug_assert_eq!(q.len(), acc.len());
     let inv = 1.0 / s;
@@ -84,6 +85,7 @@ impl Default for LocoParams {
 /// precomputed clamp bounds so the body autovectorizes (AVX2 roundps) — see
 /// EXPERIMENTS.md §Perf.
 #[inline(always)]
+#[loco::hot_kernel]
 fn loco_step_block(g: &[f32], e_q: &mut [i8], q_out: &mut [i8], p: LocoParams, reset: bool) {
     let inv_se = 1.0 / p.s_e;
     let inv_s = 1.0 / p.s;
@@ -112,6 +114,7 @@ fn loco_step_block(g: &[f32], e_q: &mut [i8], q_out: &mut [i8], p: LocoParams, r
 
 /// Scalar reference for the fused LoCo step — retained so
 /// `tests/kernel_parity.rs` can pin the chunked kernels bitwise against it.
+#[loco::hot_kernel]
 pub fn loco_step_scalar(g: &[f32], e_q: &mut [i8], q_out: &mut [i8], p: LocoParams, reset: bool) {
     debug_assert_eq!(g.len(), e_q.len());
     debug_assert_eq!(g.len(), q_out.len());
@@ -129,6 +132,7 @@ pub fn loco_step_scalar(g: &[f32], e_q: &mut [i8], q_out: &mut [i8], p: LocoPara
 /// Writes the low-bit codes into `q_out` and updates `e_q` in place.
 /// Runs in [`pack::CHUNK`]-wide blocks plus a scalar tail; every element is
 /// independent, so the result is bitwise-identical to [`loco_step_scalar`].
+#[loco::hot_kernel]
 pub fn loco_step(g: &[f32], e_q: &mut [i8], q_out: &mut [i8], p: LocoParams, reset: bool) {
     debug_assert_eq!(g.len(), e_q.len());
     debug_assert_eq!(g.len(), q_out.len());
@@ -153,6 +157,7 @@ pub fn loco_step(g: &[f32], e_q: &mut [i8], q_out: &mut [i8], p: LocoParams, res
 /// per-call whole-shard `Vec<i8>` code buffer is gone, so a caller that
 /// reuses `out` allocates nothing in the steady state (asserted by
 /// `tests/scaling.rs`).
+#[loco::hot_kernel]
 pub fn loco_step_packed(
     g: &[f32],
     e_q: &mut [i8],
@@ -194,6 +199,7 @@ pub fn loco_step_packed(
 
 /// Scalar reference for [`dequantize_accumulate_packed`] — retained for the
 /// kernel parity suite.
+#[loco::hot_kernel]
 pub fn dequantize_accumulate_packed_scalar(bytes: &[u8], n: usize, s: f32, acc: &mut [f32]) {
     debug_assert!(acc.len() >= n);
     debug_assert!(bytes.len() >= n.div_ceil(2));
@@ -215,6 +221,7 @@ pub fn dequantize_accumulate_packed_scalar(bytes: &[u8], n: usize, s: f32, acc: 
 /// Uses a 256-entry lookup table mapping each byte to its two signed
 /// nibbles — one table load + two fmas per byte, driven in
 /// [`pack::CHUNK`]-wide blocks.
+#[loco::hot_kernel]
 pub fn dequantize_accumulate_packed(bytes: &[u8], n: usize, s: f32, acc: &mut [f32]) {
     debug_assert!(acc.len() >= n);
     debug_assert!(bytes.len() >= n.div_ceil(2));

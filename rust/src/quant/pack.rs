@@ -36,6 +36,7 @@ impl PackedI4 {
 
 /// Pack one pair of int4 codes ([-8,7]) into a byte.
 #[inline(always)]
+#[loco::hot_kernel]
 pub fn pack_pair(lo: i8, hi: i8) -> u8 {
     debug_assert!((-8..=7).contains(&lo) && (-8..=7).contains(&hi));
     ((lo as u8) & 0x0F) | ((hi as u8) << 4)
@@ -43,6 +44,7 @@ pub fn pack_pair(lo: i8, hi: i8) -> u8 {
 
 /// Sign-extend a low nibble.
 #[inline(always)]
+#[loco::hot_kernel]
 pub const fn sext4(n: u8) -> i8 {
     ((n << 4) as i8) >> 4
 }
@@ -80,6 +82,7 @@ pub fn pack_nibbles_scalar(codes: &[i8]) -> Vec<u8> {
 /// Chunked pack kernel: clears `out` and fills it with `codes` two-per-byte.
 /// Reusing `out` across steps makes the steady state allocation-free once
 /// its capacity has grown to the shard size.
+#[loco::hot_kernel]
 pub fn pack_nibbles_into(codes: &[i8], out: &mut Vec<u8>) {
     out.clear();
     out.reserve(codes.len().div_ceil(2));
@@ -127,6 +130,7 @@ pub fn unpack_nibbles_scalar(bytes: &[u8], n: usize) -> Vec<i8> {
 
 /// Chunked unpack kernel: clears `out` and fills it with `n` codes decoded
 /// from `bytes`.
+#[loco::hot_kernel]
 pub fn unpack_nibbles_into(bytes: &[u8], n: usize, out: &mut Vec<i8>) {
     out.clear();
     out.reserve(n);

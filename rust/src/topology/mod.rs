@@ -404,10 +404,50 @@ struct TieredPlan {
 /// One routed slice on an uneven topology: the overlap of `holder`'s
 /// gradient row with `owner`'s Zero-2 shard. Gradients flow holder →
 /// owner, parameters owner → holder. Slice ids double as wire tags.
-struct Slice {
-    holder: usize,
-    owner: usize,
-    range: Range<usize>,
+pub struct Slice {
+    /// rank whose gradient row contains the slice (encodes on the
+    /// gradient path, receives on the parameter path)
+    pub holder: usize,
+    /// rank whose Zero-2 shard contains the slice (receives on the
+    /// gradient path, encodes on the parameter path)
+    pub owner: usize,
+    /// flat element range in the full gradient
+    pub range: Range<usize>,
+}
+
+/// The deterministic global slice table of an uneven (`topology.groups`)
+/// plan: identical on every rank, built in island-then-member-then-owner
+/// order, so slice ids double as wire-tag slots. Returns an empty table
+/// on non-group topologies. Public so the `loco-verify` tag prover
+/// enumerates exactly the production routing, not a re-derivation.
+pub fn uneven_slice_table(topo: &Topology, part: &Partition, total: usize) -> Vec<Slice> {
+    let Some(groups) = topo.groups() else {
+        return Vec::new();
+    };
+    let mut slices = Vec::new();
+    for (g, members) in groups.iter().enumerate() {
+        let g_rows = topo.island_rows(g, total);
+        for (j, &holder) in members.iter().enumerate() {
+            let row = &g_rows[j];
+            // shards are contiguous and ascending, so the owners
+            // overlapping this row form one run: binary-search its
+            // start and stop at its end instead of scanning all n
+            // shards per row — the table builds in O(n log n + S)
+            // for S slices, not O(n²)
+            let first = part.ranges.partition_point(|s| s.end <= row.start);
+            for (owner, shard) in part.ranges.iter().enumerate().skip(first) {
+                if shard.start >= row.end {
+                    break;
+                }
+                let start = row.start.max(shard.start);
+                let end = row.end.min(shard.end);
+                if start < end {
+                    slices.push(Slice { holder, owner, range: start..end });
+                }
+            }
+        }
+    }
+    slices
 }
 
 /// Uneven-island plan: per-island rows, slice routing across the single
@@ -435,27 +475,25 @@ struct UnevenPlan {
     dec: Mutex<Box<dyn Decoder>>,
     /// shard-sized decode strip reused by [`UnevenPlan::grad_drain`]
     scratch: Mutex<Vec<f32>>,
-    n_slices: u64,
+    /// per-slice wire-tag namespace (stride `3 * slice count`),
+    /// mirroring [`crate::comm::BucketPlan::tags`]
+    tags: crate::comm::TagNamespace,
 }
 
 impl UnevenPlan {
     /// Wire tag of gradient slice `i` at `step`; the parameter and
-    /// stale-gradient namespaces are disjoint (stride `3 * n_slices`),
-    /// mirroring [`crate::comm::BucketPlan::grad_tag`].
+    /// stale-gradient namespaces are disjoint (stride `3 * slice
+    /// count`), mirroring [`crate::comm::BucketPlan::grad_tag`].
     fn grad_tag(&self, step: u64, i: usize) -> u64 {
-        step.wrapping_mul(3 * self.n_slices).wrapping_add(i as u64)
+        self.tags.grad(step, i as u64)
     }
 
     fn param_tag(&self, step: u64, i: usize) -> u64 {
-        step.wrapping_mul(3 * self.n_slices)
-            .wrapping_add(self.n_slices)
-            .wrapping_add(i as u64)
+        self.tags.param(step, i as u64)
     }
 
     fn stale_grad_tag(&self, step: u64, i: usize) -> u64 {
-        step.wrapping_mul(3 * self.n_slices)
-            .wrapping_add(2 * self.n_slices)
-            .wrapping_add(i as u64)
+        self.tags.stale_grad(step, i as u64)
     }
 
     /// Phase 1 + encode/send: island fp32 reduce-scatter, scale the row
@@ -585,7 +623,7 @@ impl UnevenPlan {
         params: &mut [f32],
         bf16: bool,
     ) -> std::time::Duration {
-        let t0 = std::time::Instant::now();
+        let t0 = crate::util::timer::Stopwatch::start();
         for &i in &self.held {
             let s = &self.slices[i];
             let msg = if s.owner == rank {
@@ -678,29 +716,7 @@ impl HierSyncEngine {
             let rows = topo.island_rows(island_id, layout.total);
             let my_row = rows[my_idx].clone();
             let my_shard = part.ranges[rank].clone();
-            let mut slices = Vec::new();
-            for (g, members) in groups.iter().enumerate() {
-                let g_rows = topo.island_rows(g, layout.total);
-                for (j, &holder) in members.iter().enumerate() {
-                    let row = &g_rows[j];
-                    // shards are contiguous and ascending, so the owners
-                    // overlapping this row form one run: binary-search its
-                    // start and stop at its end instead of scanning all n
-                    // shards per row — the table builds in O(n log n + S)
-                    // for S slices, not O(n²)
-                    let first = part.ranges.partition_point(|s| s.end <= row.start);
-                    for (owner, shard) in part.ranges.iter().enumerate().skip(first) {
-                        if shard.start >= row.end {
-                            break;
-                        }
-                        let start = row.start.max(shard.start);
-                        let end = row.end.min(shard.end);
-                        if start < end {
-                            slices.push(Slice { holder, owner, range: start..end });
-                        }
-                    }
-                }
-            }
+            let slices = uneven_slice_table(topo, part, layout.total);
             let held: Vec<usize> = slices
                 .iter()
                 .enumerate()
@@ -717,7 +733,7 @@ impl HierSyncEngine {
                 (0..n).map(|r| groups[topo.island_of(r)].len() as f32).collect();
             let (enc, dec) =
                 compress::build_domain(cfg, layout, my_row.clone(), my_shard.len(), n);
-            let n_slices = (slices.len() as u64).max(1);
+            let tags = crate::comm::TagNamespace::new((slices.len() as u64).max(1));
             return Ok(HierSyncEngine {
                 topo: topo.clone(),
                 rank,
@@ -734,7 +750,7 @@ impl HierSyncEngine {
                     enc: Mutex::new(enc),
                     dec: Mutex::new(dec),
                     scratch: Mutex::new(Vec::new()),
-                    n_slices,
+                    tags,
                 }),
             });
         }
@@ -1008,7 +1024,7 @@ impl HierSyncEngine {
         pending: PendingHierGrads,
         shard_acc: &mut [f32],
     ) -> std::time::Duration {
-        let t0 = std::time::Instant::now();
+        let t0 = crate::util::timer::Stopwatch::start();
         match (&self.plan, pending.kind) {
             (EnginePlan::Flat(e), GradsPending::Engine(p)) => {
                 e.grad_sync_drain(ctx, p, shard_acc);
@@ -1111,7 +1127,7 @@ impl HierSyncEngine {
         params: &mut [f32],
     ) -> std::time::Duration {
         let PendingHierParams { kind, bf16 } = pending;
-        let t0 = std::time::Instant::now();
+        let t0 = crate::util::timer::Stopwatch::start();
         match (&self.plan, kind) {
             (EnginePlan::Flat(e), ParamsPending::Engine(p)) => {
                 e.param_gather_drain(ctx, p, params);

@@ -510,7 +510,7 @@ impl Trainer {
         let n = ctx.n;
         let total = meta.layout.total;
         let my_range = if cfg.mode == Mode::Ddp { 0..total } else { part.ranges[rank].clone() };
-        let t0 = std::time::Instant::now();
+        let t0 = util::timer::Stopwatch::start();
 
         // deterministic sim-time tracer (trace.path): installed for this
         // node thread only; every span below carries modeled durations,
@@ -633,7 +633,7 @@ impl Trainer {
         // wall-clock instant the last launch completed: the launch→drain
         // interval is the window the in-flight gather has to itself
         // (RunMetrics::param_sync_window_s)
-        let mut launched_at: Option<std::time::Instant> = None;
+        let mut launched_at: Option<util::timer::Stopwatch> = None;
         let mut param_wait_s = 0.0f64;
         let mut param_launch_s = 0.0f64;
         let mut param_window_s = 0.0f64;
@@ -789,7 +789,7 @@ impl Trainer {
                     GradSync::Sync => {
                         let mut ts = 0;
                         crate::trace::with(|t| ts = t.now_ns());
-                        let t_sync = std::time::Instant::now();
+                        let t_sync = util::timer::Stopwatch::start();
                         sync.as_ref()
                             .expect("Zero2 has a sync engine")
                             .sync(ctx, &mut grad, &mut shard_acc, step + 1);
@@ -827,7 +827,7 @@ impl Trainer {
                             // tags keep the two exchanges apart
                             let mut ts = 0;
                             crate::trace::with(|t| ts = t.now_ns());
-                            let t_launch = std::time::Instant::now();
+                            let t_launch = util::timer::Stopwatch::start();
                             let next = se.grad_sync_launch(ctx, &mut grad, step + 1);
                             let launch_el = t_launch.elapsed().as_secs_f64();
                             grad_launch_s += launch_el;
@@ -921,7 +921,7 @@ impl Trainer {
                             }
                             let mut ts = 0;
                             crate::trace::with(|t| ts = t.now_ns());
-                            let t_sync = std::time::Instant::now();
+                            let t_sync = util::timer::Stopwatch::start();
                             sync.as_ref()
                                 .expect("Zero2 has a sync engine")
                                 .sync(ctx, &mut grad, &mut shard_acc, step + 1);
@@ -1085,7 +1085,7 @@ impl Trainer {
                             if step + 1 < cfg.steps {
                                 let mut ts = 0;
                                 crate::trace::with(|t| ts = t.now_ns());
-                                let t_launch = std::time::Instant::now();
+                                let t_launch = util::timer::Stopwatch::start();
                                 pending =
                                     Some(se.param_sync_launch(ctx, &master, step + 1, bf16));
                                 let launch_el = t_launch.elapsed().as_secs_f64();
@@ -1102,13 +1102,13 @@ impl Trainer {
                                     );
                                     param_window_t0 = t.now_ns();
                                 });
-                                launched_at = Some(std::time::Instant::now());
+                                launched_at = Some(util::timer::Stopwatch::start());
                                 stale_steps += 1;
                             }
                         } else {
                             let mut ts = 0;
                             crate::trace::with(|t| ts = t.now_ns());
-                            let t_gather = std::time::Instant::now();
+                            let t_gather = util::timer::Stopwatch::start();
                             se.param_sync(ctx, &master, &mut params, step + 1, bf16);
                             param_wait_s += t_gather.elapsed().as_secs_f64();
                             crate::trace::with(|t| {

@@ -1,13 +1,49 @@
 //! Wall-clock timing helpers used by the trainer, metrics and the custom
 //! bench harness (no `criterion` in the offline registry).
+//!
+//! This module (plus the LinkSim timing layer in `collective`) is the
+//! *only* place allowed to read the wall clock: everything else measures
+//! elapsed host time through [`Stopwatch`], and `loco-verify` denies raw
+//! `Instant::now`/`SystemTime` calls outside the annotated allowlist so
+//! wall time can never leak into simulated state (DESIGN.md §3.14).
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// A started wall-clock stopwatch.
+///
+/// The one sanctioned way to time host-side work (encode wait, launch,
+/// drain, whole-run throughput). It deliberately exposes only *elapsed*
+/// durations — never the underlying `Instant` — so callers cannot
+/// compare wall-clock points against simulated time.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Stopwatch {
+        // verify: allow(wall_clock) — the Stopwatch facade is the sanctioned
+        // host-time measurement primitive; it only ever yields durations
+        Stopwatch { t0: Instant::now() }
+    }
+
+    /// Wall-clock time since [`Stopwatch::start`].
+    pub fn elapsed(&self) -> Duration {
+        self.t0.elapsed()
+    }
+
+    /// [`Stopwatch::elapsed`] in seconds.
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
 
 /// Measure one closure invocation in seconds.
 pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     let out = f();
-    (out, t0.elapsed().as_secs_f64())
+    (out, t0.elapsed_s())
 }
 
 /// Simple criterion-style micro-benchmark: warm up, then run batches until
@@ -18,16 +54,16 @@ pub fn bench_seconds(mut f: impl FnMut(), min_time: f64) -> BenchStats {
         f();
     }
     let mut samples = Vec::new();
-    let started = Instant::now();
+    let started = Stopwatch::start();
     // pick a batch size so each sample is ~1ms+
     let (_, one) = time_once(&mut f);
     let batch = (1e-3 / one.max(1e-9)).ceil().max(1.0) as usize;
-    while started.elapsed().as_secs_f64() < min_time || samples.len() < 5 {
-        let t0 = Instant::now();
+    while started.elapsed_s() < min_time || samples.len() < 5 {
+        let t0 = Stopwatch::start();
         for _ in 0..batch {
             f();
         }
-        samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+        samples.push(t0.elapsed_s() / batch as f64);
         if samples.len() > 10_000 {
             break;
         }
@@ -77,6 +113,15 @@ mod tests {
         let (v, t) = time_once(|| 21 * 2);
         assert_eq!(v, 42);
         assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed();
+        let b = sw.elapsed();
+        assert!(b >= a);
+        assert!(sw.elapsed_s() >= 0.0);
     }
 
     #[test]

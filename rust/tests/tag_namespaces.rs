@@ -1,0 +1,129 @@
+//! Tier-1 guard on wire-tag disjointness (DESIGN.md §3.14).
+//!
+//! `loco-verify` carries the full prover; this tier-1 suite pins a
+//! bounded grid under plain `cargo test` so a tag-arithmetic or
+//! lifecycle-window regression fails the repo's standard gate even if
+//! the verify pass is not run. The `--ignored` test widens the grid.
+//!
+//! Collisions are checked per `(src, dst)` pair — the reorder buffer
+//! keys pending traffic by `(src, tag)`, so uniqueness across the
+//! concurrently in-flight window of one pair is exactly what safety
+//! requires.
+
+use std::collections::BTreeSet;
+
+use loco::comm::{BucketPlan, SyncLifecycle, TagNamespace};
+use loco::sharding::{ParamLayout, Partition};
+use loco::topology::{uneven_slice_table, Topology};
+
+/// Assert every lifecycle window at every probed step is collision-free
+/// for `ns`; returns tags checked.
+fn assert_windows_disjoint(name: &str, ns: TagNamespace, steps: &[u64]) -> u64 {
+    let mut checked = 0u64;
+    for lc in SyncLifecycle::ALL {
+        for &s in steps {
+            let win = lc.in_flight_window(s);
+            let mut seen = BTreeSet::new();
+            for &(tn, ws) in &win {
+                for slot in 0..ns.slots() {
+                    assert!(
+                        seen.insert(ns.tag(tn, ws, slot)),
+                        "{name}: collision in {lc:?} window at step {s}: \
+                         ({tn:?}, step {ws}, slot {slot})"
+                    );
+                    checked += 1;
+                }
+            }
+        }
+    }
+    checked
+}
+
+fn steps_for(slots: u64) -> Vec<u64> {
+    let wrap = u64::MAX / (3 * slots.max(1));
+    vec![0, 1, 2, 1000, wrap, wrap.wrapping_add(1), u64::MAX]
+}
+
+#[test]
+fn bucket_plan_windows_are_disjoint() {
+    let mut checked = 0u64;
+    for total in [64usize, 1000] {
+        let layout = ParamLayout::new(vec![("w".to_string(), vec![total])]);
+        for n in [2usize, 4, 8] {
+            for bucket_elems in [0usize, 64] {
+                let part = Partition::flat_even(total, n, 2);
+                let plan = BucketPlan::new(&part, &layout, bucket_elems, 2, false);
+                let ns = plan.tags();
+                assert_eq!(ns.slots(), plan.total() as u64);
+                checked += assert_windows_disjoint(
+                    &format!("flat(n={n}, total={total}, be={bucket_elems})"),
+                    ns,
+                    &steps_for(ns.slots()),
+                );
+            }
+        }
+    }
+    assert!(checked > 5_000, "grid too small: {checked}");
+}
+
+#[test]
+fn uneven_island_windows_are_disjoint() {
+    for groups in [vec![vec![0, 1, 2], vec![3, 4]], vec![vec![0], vec![1, 2, 3], vec![4, 5, 6]]] {
+        let n: usize = groups.iter().map(Vec::len).sum();
+        let topo = Topology::from_groups(n, groups.clone()).unwrap();
+        for total in [64usize, 1000] {
+            let part = topo.partition(total);
+            let slices = uneven_slice_table(&topo, &part, total);
+            let ns = TagNamespace::new((slices.len() as u64).max(1));
+            assert_windows_disjoint(
+                &format!("uneven(groups={groups:?}, total={total})"),
+                ns,
+                &steps_for(ns.slots()),
+            );
+        }
+    }
+}
+
+#[test]
+fn plan_accessors_delegate_to_namespace() {
+    let layout = ParamLayout::new(vec![("w".to_string(), vec![256])]);
+    let part = Partition::flat_even(256, 4, 2);
+    let plan = BucketPlan::new(&part, &layout, 32, 2, false);
+    let ns = plan.tags();
+    for step in [0u64, 3, u64::MAX] {
+        for bi in 0..plan.total() {
+            assert_eq!(plan.grad_tag(step, bi), ns.grad(step, bi as u64));
+            assert_eq!(plan.param_tag(step, bi), ns.param(step, bi as u64));
+            assert_eq!(plan.stale_grad_tag(step, bi), ns.stale_grad(step, bi as u64));
+        }
+    }
+}
+
+#[test]
+#[ignore = "wide grid; run with --ignored (loco-verify's prove_full is wider still)"]
+fn full_grid_windows_are_disjoint() {
+    for total in [64usize, 257, 1000, 4096] {
+        let layout = ParamLayout::new(vec![("w".to_string(), vec![total])]);
+        for n in [2usize, 3, 4, 8, 16] {
+            if n > total {
+                continue;
+            }
+            for bucket_elems in [0usize, 16, 64, 256] {
+                for align in [1usize, 2] {
+                    let part = Partition::flat_even(total, n, align);
+                    let plan = BucketPlan::new(&part, &layout, bucket_elems, align, false);
+                    let ns = plan.tags();
+                    let mut steps = steps_for(ns.slots());
+                    steps.extend([5, 63, 64, 65, 1 << 32]);
+                    assert_windows_disjoint(
+                        &format!(
+                            "full flat(n={n}, total={total}, be={bucket_elems}, align={align})"
+                        ),
+                        ns,
+                        &steps,
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,245 @@
+//! Exhaustive arrival-interleaving exploration of the production
+//! [`ReorderBuffer`].
+//!
+//! ## Why this is a complete model check
+//!
+//! In the real cluster every node owns one merged mpsc receive queue.
+//! The channel guarantees per-sender FIFO; the consumer is a single
+//! thread. The *only* nondeterminism the demux ever faces is therefore
+//! the interleaving in which different senders' (internally ordered)
+//! message streams merge into the queue. This module enumerates **all**
+//! such interleavings by DFS — at every pull it branches on which
+//! sender's next message arrives — and drives the exact production
+//! routing type [`loco::collective::reorder::ReorderBuffer`] through
+//! each schedule. An invariant that holds over every explored schedule
+//! holds for the real system, the same closure argument a loom model
+//! would make for this structure (the `--cfg loom` channel shim in
+//! `loco::collective::shim` marks where a loom-backed channel drops in
+//! once the crate is vendorable; until then this explorer is the
+//! stronger check because it is exhaustive rather than bounded).
+//!
+//! ## Model
+//!
+//! Each sender has a FIFO script of [`Msg`]s; the consumer runs a
+//! script of [`Ask`]s, mirroring `NodeCtx::recv` (untagged, phased) and
+//! `NodeCtx::recv_wire_tagged` (tagged gathers). [`explore`] returns
+//! the number of distinct schedules when every schedule delivers the
+//! identical sequence (no loss, no per-sender reorder, no
+//! cross-schedule divergence), or a description of the first deviating
+//! schedule.
+
+use loco::collective::reorder::{Incoming, ProtocolViolation, ReorderBuffer};
+
+/// One message in a sender's FIFO script. `id` is a globally unique
+/// payload identity so loss/duplication/reorder are all observable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Msg {
+    /// a tagged wire message (in-flight gather traffic)
+    Tagged { tag: u64, id: u32 },
+    /// an untagged phased-collective payload
+    Untagged { id: u32 },
+}
+
+/// One consumer receive, mirroring the two `NodeCtx` receive paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ask {
+    /// `recv(src)` — next untagged payload from `src`
+    Untagged { src: usize },
+    /// `recv_wire_tagged(src, tag)`
+    Tagged { src: usize, tag: u64 },
+}
+
+/// What one schedule produced.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Outcome {
+    /// ids delivered, in consumer order
+    Delivered(Vec<u32>),
+    /// the demux rejected the schedule (expected for negative tests)
+    Violation(ProtocolViolation),
+    /// the consumer asked for a message no sender can ever produce
+    Starved { ask: Ask },
+}
+
+/// DFS state: per-sender cursor into its script + the production buffer.
+#[derive(Clone)]
+struct State {
+    cursor: Vec<usize>,
+    buf: ReorderBuffer<(usize, u64, u32), u32>,
+    delivered: Vec<u32>,
+    ask_idx: usize,
+}
+
+/// Explore every arrival interleaving of `senders` against the consumer
+/// `asks`.
+///
+/// * `Ok(n)` — all `n` schedules delivered the identical id sequence
+///   and drained the buffer (when `require_drained`).
+/// * `Err(_)` — some schedule lost, reordered, or diverged; the message
+///   says which invariant broke. Schedules ending in
+///   [`ProtocolViolation`] are collected separately: if *any* schedule
+///   violates, **all** schedules must (the protocol error must not be
+///   schedule-dependent), and the caller opts in via `expect_violation`.
+pub fn explore(
+    senders: &[Vec<Msg>],
+    asks: &[Ask],
+    expect_violation: bool,
+    require_drained: bool,
+) -> Result<u64, String> {
+    let mut outcomes: Vec<Outcome> = Vec::new();
+    let mut schedules = 0u64;
+    let init = State {
+        cursor: vec![0; senders.len()],
+        buf: ReorderBuffer::new(),
+        delivered: Vec::new(),
+        ask_idx: 0,
+    };
+    dfs(senders, asks, init, &mut outcomes, &mut schedules, require_drained)?;
+    if schedules == 0 {
+        return Err("no schedules explored".to_string());
+    }
+    let first = &outcomes[0];
+    for (i, o) in outcomes.iter().enumerate() {
+        if o != first {
+            return Err(format!(
+                "schedule divergence: schedule 0 gave {first:?}, schedule {i} gave {o:?}"
+            ));
+        }
+    }
+    match first {
+        Outcome::Violation(_) if expect_violation => Ok(schedules),
+        Outcome::Violation(v) => Err(format!("unexpected protocol violation: {v}")),
+        Outcome::Starved { ask } => Err(format!("consumer starved at {ask:?}")),
+        Outcome::Delivered(_) if expect_violation => {
+            Err("expected a protocol violation but every schedule delivered".to_string())
+        }
+        Outcome::Delivered(_) => Ok(schedules),
+    }
+}
+
+/// The id sequence every schedule must deliver (computed from the first
+/// explored schedule; [`explore`] asserts all others match). Exposed so
+/// tests can also pin the expected sequence explicitly.
+pub fn delivered_ids(
+    senders: &[Vec<Msg>],
+    asks: &[Ask],
+) -> Result<Vec<u32>, String> {
+    let mut outcomes: Vec<Outcome> = Vec::new();
+    let mut schedules = 0u64;
+    let init = State {
+        cursor: vec![0; senders.len()],
+        buf: ReorderBuffer::new(),
+        delivered: Vec::new(),
+        ask_idx: 0,
+    };
+    dfs(senders, asks, init, &mut outcomes, &mut schedules, false)?;
+    match outcomes.first() {
+        Some(Outcome::Delivered(ids)) => Ok(ids.clone()),
+        other => Err(format!("first schedule did not deliver: {other:?}")),
+    }
+}
+
+fn dfs(
+    senders: &[Vec<Msg>],
+    asks: &[Ask],
+    mut st: State,
+    outcomes: &mut Vec<Outcome>,
+    schedules: &mut u64,
+    require_drained: bool,
+) -> Result<(), String> {
+    // drive the consumer as far as it can go without pulling from the
+    // queue (stashed payloads / parked tagged messages first, exactly
+    // like NodeCtx::recv / recv_wire_tagged fast paths)
+    while st.ask_idx < asks.len() {
+        let served = match asks[st.ask_idx] {
+            Ask::Untagged { src } => st.buf.pop_stashed(src),
+            Ask::Tagged { src, tag } => st.buf.take_pending(src, tag).map(|(_, _, id)| id),
+        };
+        match served {
+            Some(id) => {
+                st.delivered.push(id);
+                st.ask_idx += 1;
+            }
+            None => break,
+        }
+    }
+    if st.ask_idx == asks.len() {
+        *schedules += 1;
+        if require_drained && !st.buf.is_drained() {
+            return Err(format!(
+                "schedule left undelivered traffic parked (delivered {:?})",
+                st.delivered
+            ));
+        }
+        outcomes.push(Outcome::Delivered(st.delivered));
+        return Ok(());
+    }
+    // branch on which sender's next message arrives
+    let ready: Vec<usize> =
+        (0..senders.len()).filter(|&s| st.cursor[s] < senders[s].len()).collect();
+    if ready.is_empty() {
+        *schedules += 1;
+        outcomes.push(Outcome::Starved { ask: asks[st.ask_idx] });
+        return Ok(());
+    }
+    for s in ready {
+        let mut nxt = st.clone();
+        nxt.cursor[s] += 1;
+        let inc = match senders[s][st.cursor[s]] {
+            Msg::Tagged { tag, id } => Incoming::Tagged { src: s, tag, msg: (s, tag, id) },
+            Msg::Untagged { id } => Incoming::Untagged { src: s, payload: id },
+        };
+        let routed = match asks[nxt.ask_idx] {
+            Ask::Untagged { src } => Ok(nxt.buf.route_awaiting_untagged(src, inc)),
+            Ask::Tagged { src, tag } => nxt
+                .buf
+                .route_awaiting_tagged(src, tag, inc)
+                .map(|m| m.map(|(_, _, id)| id)),
+        };
+        match routed {
+            Ok(Some(id)) => {
+                nxt.delivered.push(id);
+                nxt.ask_idx += 1;
+                dfs(senders, asks, nxt, outcomes, schedules, require_drained)?;
+            }
+            Ok(None) => dfs(senders, asks, nxt, outcomes, schedules, require_drained)?,
+            Err(v) => {
+                *schedules += 1;
+                outcomes.push(Outcome::Violation(v));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_senders_phased_collective_all_schedules_agree() {
+        // classic recv() demux: two peers stream untagged payloads, the
+        // consumer drains them in (src, then FIFO) order
+        let senders = vec![
+            vec![Msg::Untagged { id: 1 }, Msg::Untagged { id: 2 }],
+            vec![Msg::Untagged { id: 10 }, Msg::Untagged { id: 11 }],
+        ];
+        let asks = vec![
+            Ask::Untagged { src: 0 },
+            Ask::Untagged { src: 0 },
+            Ask::Untagged { src: 1 },
+            Ask::Untagged { src: 1 },
+        ];
+        let n = explore(&senders, &asks, false, true).unwrap();
+        // 4 messages from 2 two-message FIFO streams: C(4,2) merges
+        assert_eq!(delivered_ids(&senders, &asks).unwrap(), vec![1, 2, 10, 11]);
+        assert!(n >= 6, "expected at least the 6 full merges, got {n}");
+    }
+
+    #[test]
+    fn starvation_is_reported() {
+        let senders = vec![vec![Msg::Untagged { id: 1 }]];
+        let asks = vec![Ask::Untagged { src: 0 }, Ask::Untagged { src: 0 }];
+        let err = explore(&senders, &asks, false, true).unwrap_err();
+        assert!(err.contains("starved"), "{err}");
+    }
+}

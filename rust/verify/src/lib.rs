@@ -1,0 +1,38 @@
+//! `loco-verify` — the determinism & wire-protocol static-analysis pass.
+//!
+//! Three layers, all runnable offline (DESIGN.md §3.14):
+//!
+//! * [`lint`] — comment/string-aware token lints over `rust/src/`:
+//!   wall-clock calls outside the annotated timing layer, unordered-map
+//!   types anywhere in the deterministic tree, allocation calls inside
+//!   `#[loco::hot_kernel]` bodies, plus validation of every
+//!   `// verify: allow(...)` annotation (unknown lint, missing reason,
+//!   stale, or outside its allowlisted file are all findings).
+//! * [`tags`] — the tag-namespace collision prover: enumerates every
+//!   wire tag the real `BucketPlan` / uneven slice table can allocate
+//!   across grad-sync × param-sync lifecycles and topology plans and
+//!   proves pairwise disjointness of each lifecycle's in-flight window.
+//! * [`interleave`] — an exhaustive interleaving explorer driving the
+//!   production `ReorderBuffer` through *every* arrival schedule of a
+//!   message set. Because the envelope channel is per-sender FIFO and
+//!   each node consumes single-threaded, arrival interleaving is the
+//!   only nondeterminism — so this is a complete model check of the
+//!   demux, standing in for loom until the crate is vendorable (the
+//!   `--cfg loom` channel shim in `loco::collective::shim` marks the
+//!   swap point).
+//!
+//! `cargo run -p loco-verify` lints the tree and runs the bounded
+//! prover; `cargo test -p loco-verify` adds the explorer suites and the
+//! full prover grid (`--ignored`).
+
+pub mod interleave;
+pub mod lint;
+pub mod tags;
+
+use std::path::PathBuf;
+
+/// Absolute path of the linted source tree (`rust/src/`), anchored at
+/// this crate's manifest so the pass works from any working directory.
+pub fn src_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("src")
+}

@@ -1,0 +1,819 @@
+//! Comment/string-aware token lints over the `loco` source tree.
+//!
+//! The scanner is deliberately *token-level*, not type-resolved: it
+//! splits every `.rs` file into a parallel "code view" and "comment
+//! view" (string/char-literal contents blanked, comments moved to the
+//! comment view, raw strings and nested block comments handled), then
+//! matches deny-tokens against the code view only. That trades a class
+//! of false negatives (a type alias laundering `HashMap`, a re-export
+//! of `Instant::now`) for zero build-dependency cost — the pass runs
+//! offline with no rustc plumbing, and the tokens it hunts are exactly
+//! the spellings used in this codebase. ROADMAP.md tracks the upgrade
+//! path to a type-resolved pass.
+//!
+//! ## Lints
+//!
+//! * `wall_clock` — `Instant::now`, `SystemTime`, `thread::sleep`.
+//!   Deterministic replay (DESIGN.md §3.9) requires that numerics never
+//!   observe host time; only the `util::timer::Stopwatch` facade and the
+//!   LinkSim timing layer in `collective/` may touch the clock, and each
+//!   such site carries a `// verify: allow(wall_clock) — <reason>`
+//!   annotation. `#[cfg(test)]` regions are exempt (timing *tests*
+//!   legitimately measure).
+//! * `unordered_map` — `HashMap` / `HashSet` anywhere, tests included:
+//!   iteration order is seeded per-process, so any map that feeds
+//!   user-visible output or state is a determinism hazard. Keyed-only
+//!   uses may be annotated (`collective/reorder.rs` holds a file-scope
+//!   exemption).
+//! * `hot_alloc` — fresh-allocation calls inside a function marked
+//!   `#[loco::hot_kernel]`. Amortized operations on caller-owned
+//!   buffers (`clear`/`reserve`/`push`/`extend_from_slice`) are allowed;
+//!   the runtime counting allocator in `tests/scaling.rs` covers those.
+//!
+//! ## Annotations
+//!
+//! `// verify: allow(<lint>) — <reason>` excuses the next non-blank
+//! code line (within [`ANN_WINDOW`] lines, or the same line for a
+//! trailing comment). `// verify: allow(<lint>, file) — <reason>`
+//! excuses the whole file, and is itself only legal in a short
+//! per-lint file list. A malformed, unknown-lint, reason-less, stale
+//! (covering no finding), or wrongly-placed annotation is a finding in
+//! its own right — the allowlist cannot silently rot.
+
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+/// Lints known to the pass; an annotation naming anything else is a
+/// finding.
+pub const LINTS: &[&str] = &["wall_clock", "unordered_map", "hot_alloc"];
+
+/// Files (relative to `rust/src/`, `/`-separated) whose *annotated*
+/// sites may touch the wall clock: the Stopwatch facade and the LinkSim
+/// timing layer. An annotated wall-clock site anywhere else is still a
+/// finding.
+pub const WALL_CLOCK_ALLOWED_FILES: &[&str] = &["util/timer.rs", "collective/mod.rs"];
+
+/// Files that may carry a file-scope `allow(unordered_map, file)`.
+pub const UNORDERED_FILE_SCOPE_FILES: &[&str] = &["collective/reorder.rs"];
+
+/// How far below a comment-line annotation its covered code line may
+/// sit (continuation comment lines in between are fine).
+pub const ANN_WINDOW: usize = 5;
+
+const WALL_CLOCK_TOKENS: &[&str] = &["Instant::now", "SystemTime", "thread::sleep"];
+const UNORDERED_TOKENS: &[&str] = &["HashMap", "HashSet"];
+/// Fresh allocations only — amortized growth of caller-owned buffers
+/// (`reserve`, `push`, `extend_from_slice`, `clear`) is allowed in hot
+/// kernels and covered by the runtime counting allocator instead.
+const HOT_ALLOC_TOKENS: &[&str] = &[
+    "Vec::new",
+    "Vec::with_capacity",
+    "Vec::from",
+    "vec!",
+    "Box::new",
+    "String::new",
+    "String::from",
+    "String::with_capacity",
+    "format!",
+    ".to_vec(",
+    ".to_string(",
+    ".to_owned(",
+    ".collect(",
+    "collect::<",
+];
+
+/// One lint violation (or annotation defect), addressable as
+/// `rust/src/<file>:<line>`.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    /// path relative to `rust/src/`, `/`-separated
+    pub file: String,
+    /// 1-indexed line
+    pub line: usize,
+    /// which invariant — one of [`LINTS`] or `annotation`
+    pub lint: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "rust/src/{}:{}: {}: {}", self.file, self.line, self.lint, self.msg)
+    }
+}
+
+/// A source file split into parallel per-line code and comment views.
+/// Both vectors have identical length; column positions line up with
+/// the original text except inside blanked literal contents.
+pub struct Stripped {
+    pub code: Vec<String>,
+    pub comment: Vec<String>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Split `text` into code/comment views. Handles line comments, nested
+/// block comments, doc comments, string/byte/raw-string literals
+/// (contents blanked in both views), char literals vs lifetimes, and
+/// preserves line structure exactly.
+pub fn strip(text: &str) -> Stripped {
+    #[derive(Clone, Copy)]
+    enum St {
+        Code,
+        Line,
+        Block(u32),
+        Str { raw: Option<u32> },
+    }
+    let cs: Vec<char> = text.chars().collect();
+    let mut code = String::with_capacity(text.len());
+    let mut com = String::with_capacity(text.len());
+    let mut st = St::Code;
+    // last non-whitespace code char — disambiguates lifetimes ('a after
+    // & or <) from char literals and raw-string prefixes from idents
+    let mut prev = ' ';
+    let mut i = 0usize;
+    while i < cs.len() {
+        let c = cs[i];
+        match st {
+            St::Code => {
+                if c == '/' && cs.get(i + 1) == Some(&'/') {
+                    st = St::Line;
+                    code.push_str("  ");
+                    com.push_str("  ");
+                    i += 2;
+                } else if c == '/' && cs.get(i + 1) == Some(&'*') {
+                    st = St::Block(1);
+                    code.push_str("  ");
+                    com.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str { raw: None };
+                    code.push('"');
+                    com.push(' ');
+                    prev = '"';
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !is_ident(prev) {
+                    // possible r"..", r#".."#, b"..", br#".."# prefix
+                    let mut j = i;
+                    if cs.get(j) == Some(&'b') {
+                        j += 1;
+                    }
+                    let saw_r = cs.get(j) == Some(&'r');
+                    if saw_r {
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    while saw_r && cs.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if cs.get(j) == Some(&'"') {
+                        for k in i..=j {
+                            code.push(cs[k]);
+                            com.push(' ');
+                        }
+                        st = St::Str { raw: saw_r.then_some(hashes) };
+                        prev = '"';
+                        i = j + 1;
+                    } else {
+                        code.push(c);
+                        com.push(' ');
+                        prev = c;
+                        i += 1;
+                    }
+                } else if c == '\'' && !is_ident(prev) {
+                    if cs.get(i + 1) == Some(&'\\') {
+                        // escaped char literal: '\n', '\'', '\u{..}'
+                        let mut j = i + 3;
+                        while j < cs.len() && cs[j] != '\'' {
+                            j += 1;
+                        }
+                        let end = j.min(cs.len().saturating_sub(1));
+                        for k in i..=end {
+                            if cs[k] == '\n' {
+                                code.push('\n');
+                                com.push('\n');
+                            } else {
+                                code.push(' ');
+                                com.push(' ');
+                            }
+                        }
+                        prev = '\'';
+                        i = end + 1;
+                    } else if cs.get(i + 2) == Some(&'\'') && cs.get(i + 1).is_some() {
+                        // plain char literal 'x'
+                        code.push_str("   ");
+                        com.push_str("   ");
+                        prev = '\'';
+                        i += 3;
+                    } else {
+                        // lifetime or loop label
+                        code.push('\'');
+                        com.push(' ');
+                        prev = '\'';
+                        i += 1;
+                    }
+                } else {
+                    if c == '\n' {
+                        code.push('\n');
+                        com.push('\n');
+                    } else {
+                        code.push(c);
+                        com.push(' ');
+                    }
+                    if !c.is_whitespace() {
+                        prev = c;
+                    }
+                    i += 1;
+                }
+            }
+            St::Line => {
+                if c == '\n' {
+                    code.push('\n');
+                    com.push('\n');
+                    st = St::Code;
+                    prev = ' ';
+                } else {
+                    code.push(' ');
+                    com.push(c);
+                }
+                i += 1;
+            }
+            St::Block(d) => {
+                if c == '/' && cs.get(i + 1) == Some(&'*') {
+                    st = St::Block(d + 1);
+                    code.push_str("  ");
+                    com.push_str("  ");
+                    i += 2;
+                } else if c == '*' && cs.get(i + 1) == Some(&'/') {
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    code.push_str("  ");
+                    com.push_str("  ");
+                    i += 2;
+                } else {
+                    if c == '\n' {
+                        code.push('\n');
+                        com.push('\n');
+                    } else {
+                        code.push(' ');
+                        com.push(c);
+                    }
+                    i += 1;
+                }
+            }
+            St::Str { raw } => {
+                let ended = match raw {
+                    None => {
+                        if c == '\\' && i + 1 < cs.len() {
+                            code.push(' ');
+                            com.push(' ');
+                            if cs[i + 1] == '\n' {
+                                code.push('\n');
+                                com.push('\n');
+                            } else {
+                                code.push(' ');
+                                com.push(' ');
+                            }
+                            i += 2;
+                            continue;
+                        }
+                        c == '"'
+                    }
+                    Some(h) => {
+                        c == '"' && (0..h as usize).all(|k| cs.get(i + 1 + k) == Some(&'#'))
+                    }
+                };
+                if ended {
+                    code.push('"');
+                    com.push(' ');
+                    if let Some(h) = raw {
+                        for _ in 0..h {
+                            code.push(' ');
+                            com.push(' ');
+                        }
+                        i += h as usize;
+                    }
+                    st = St::Code;
+                    prev = '"';
+                    i += 1;
+                } else {
+                    if c == '\n' {
+                        code.push('\n');
+                        com.push('\n');
+                    } else {
+                        code.push(' ');
+                        com.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+        }
+    }
+    Stripped {
+        code: code.split('\n').map(str::to_string).collect(),
+        comment: com.split('\n').map(str::to_string).collect(),
+    }
+}
+
+/// A parsed `verify: allow(...)` annotation.
+#[derive(Debug, Clone)]
+struct Ann {
+    /// 1-indexed line of the comment
+    line: usize,
+    lint: String,
+    file_scope: bool,
+    /// non-empty reason after the `—`
+    reason_ok: bool,
+    /// did it excuse at least one site?
+    used: bool,
+}
+
+fn parse_annotations(stripped: &Stripped, file: &str, out: &mut Vec<Finding>) -> Vec<Ann> {
+    let mut anns = Vec::new();
+    for (idx, cline) in stripped.comment.iter().enumerate() {
+        let line = idx + 1;
+        let Some(pos) = cline.find("verify: allow(") else { continue };
+        let after = &cline[pos + "verify: allow(".len()..];
+        let Some(close) = after.find(')') else {
+            out.push(Finding {
+                file: file.to_string(),
+                line,
+                lint: "annotation",
+                msg: "malformed `verify: allow(...)` — missing `)`".to_string(),
+            });
+            continue;
+        };
+        let inner = &after[..close];
+        let mut parts = inner.split(',').map(str::trim);
+        let lint = parts.next().unwrap_or("").to_string();
+        let mut file_scope = false;
+        for p in parts {
+            if p == "file" {
+                file_scope = true;
+            } else {
+                out.push(Finding {
+                    file: file.to_string(),
+                    line,
+                    lint: "annotation",
+                    msg: format!("unknown annotation modifier `{p}` (only `file` is recognized)"),
+                });
+            }
+        }
+        // require `— <reason>` (or ASCII dash) after the closing paren
+        let rest = after[close + 1..].trim_start();
+        let reason_ok = ['—', '–', '-']
+            .iter()
+            .any(|d| rest.starts_with(*d))
+            && rest.trim_start_matches(['—', '–', '-']).trim().len() >= 8;
+        anns.push(Ann { line, lint, file_scope, reason_ok, used: false });
+    }
+    anns
+}
+
+/// The code line an annotation covers: its own line when it is a
+/// trailing comment on code, else the first following line with
+/// non-blank code within [`ANN_WINDOW`] lines.
+fn ann_target(stripped: &Stripped, ann_line: usize) -> Option<usize> {
+    let has_code = |l: usize| {
+        stripped
+            .code
+            .get(l - 1)
+            .is_some_and(|c| !c.trim().is_empty())
+    };
+    if has_code(ann_line) {
+        return Some(ann_line);
+    }
+    (ann_line + 1..=ann_line + ANN_WINDOW).find(|&l| has_code(l))
+}
+
+/// Byte offsets at which each line of the joined code view starts.
+fn line_starts(code_lines: &[String]) -> Vec<usize> {
+    let mut starts = Vec::with_capacity(code_lines.len());
+    let mut off = 0usize;
+    for l in code_lines {
+        starts.push(off);
+        off += l.len() + 1; // the '\n' separator
+    }
+    starts
+}
+
+fn line_of(starts: &[usize], off: usize) -> usize {
+    starts.partition_point(|&s| s <= off) // 1-indexed
+}
+
+/// Per-line flags for `#[cfg(test)]` regions: from the attribute line
+/// through the matching close brace of the item it gates.
+fn test_region_flags(code_joined: &str, starts: &[usize], n_lines: usize) -> Vec<bool> {
+    let mut flag = vec![false; n_lines];
+    for (pos, _) in code_joined.match_indices("#[cfg(test)]") {
+        let bytes = code_joined.as_bytes();
+        let mut j = pos;
+        // find the opening brace of the gated item
+        while j < bytes.len() && bytes[j] != b'{' {
+            j += 1;
+        }
+        let mut depth = 0i64;
+        let mut end = bytes.len();
+        for (k, &b) in bytes.iter().enumerate().skip(j) {
+            match b {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = k;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let (l0, l1) = (line_of(starts, pos), line_of(starts, end.min(bytes.len() - 1)));
+        for f in flag.iter_mut().take(l1.min(n_lines)).skip(l0 - 1) {
+            *f = true;
+        }
+    }
+    flag
+}
+
+/// `(line, token)` sites of fresh allocations inside
+/// `#[loco::hot_kernel]` fn bodies.
+fn hot_alloc_sites(
+    code_joined: &str,
+    starts: &[usize],
+    file: &str,
+    out: &mut Vec<Finding>,
+) -> Vec<(usize, &'static str)> {
+    let mut sites = Vec::new();
+    for (pos, _) in code_joined.match_indices("#[loco::hot_kernel]") {
+        let bytes = code_joined.as_bytes();
+        let mut j = pos;
+        while j < bytes.len() && bytes[j] != b'{' {
+            j += 1;
+        }
+        if j == bytes.len() {
+            out.push(Finding {
+                file: file.to_string(),
+                line: line_of(starts, pos),
+                lint: "hot_alloc",
+                msg: "#[loco::hot_kernel] attribute with no following fn body".to_string(),
+            });
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut end = bytes.len();
+        for (k, &b) in bytes.iter().enumerate().skip(j) {
+            match b {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = k;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let body = &code_joined[j..end];
+        for &tok in HOT_ALLOC_TOKENS {
+            for (tpos, _) in body.match_indices(tok) {
+                sites.push((line_of(starts, j + tpos), tok));
+            }
+        }
+    }
+    sites.sort_unstable();
+    sites.dedup();
+    sites
+}
+
+/// Lint one file. `file` is its path relative to `rust/src/`,
+/// `/`-separated. Pure — the unit tests feed synthetic sources.
+pub fn lint_source(file: &str, text: &str) -> Vec<Finding> {
+    let stripped = strip(text);
+    let mut out = Vec::new();
+    let mut anns = parse_annotations(&stripped, file, &mut out);
+    for ann in &anns {
+        if !LINTS.contains(&ann.lint.as_str()) {
+            out.push(Finding {
+                file: file.to_string(),
+                line: ann.line,
+                lint: "annotation",
+                msg: format!(
+                    "unknown lint `{}` in annotation (known: {})",
+                    ann.lint,
+                    LINTS.join(", ")
+                ),
+            });
+        }
+        if !ann.reason_ok {
+            out.push(Finding {
+                file: file.to_string(),
+                line: ann.line,
+                lint: "annotation",
+                msg: "annotation must carry a reason: `verify: allow(<lint>) — <why>`"
+                    .to_string(),
+            });
+        }
+        if ann.file_scope
+            && !(ann.lint == "unordered_map" && UNORDERED_FILE_SCOPE_FILES.contains(&file))
+        {
+            out.push(Finding {
+                file: file.to_string(),
+                line: ann.line,
+                lint: "annotation",
+                msg: format!(
+                    "file-scope allow({}) not permitted in {file} (allowed: unordered_map in {})",
+                    ann.lint,
+                    UNORDERED_FILE_SCOPE_FILES.join(", ")
+                ),
+            });
+        }
+    }
+
+    let code_joined = stripped.code.join("\n");
+    let starts = line_starts(&stripped.code);
+    let in_test = test_region_flags(&code_joined, &starts, stripped.code.len());
+
+    // collect raw token sites per lint: (line, lint, token)
+    let mut sites: Vec<(usize, &'static str, &'static str)> = Vec::new();
+    for (idx, cline) in stripped.code.iter().enumerate() {
+        let line = idx + 1;
+        for &tok in WALL_CLOCK_TOKENS {
+            if cline.contains(tok) && !in_test[idx] {
+                sites.push((line, "wall_clock", tok));
+            }
+        }
+        for &tok in UNORDERED_TOKENS {
+            if cline.contains(tok) {
+                sites.push((line, "unordered_map", tok));
+            }
+        }
+    }
+    for (line, tok) in hot_alloc_sites(&code_joined, &starts, file, &mut out) {
+        sites.push((line, "hot_alloc", tok));
+    }
+
+    for (line, lint, tok) in sites {
+        // file-scope exemption
+        let legal_file_scope =
+            lint == "unordered_map" && UNORDERED_FILE_SCOPE_FILES.contains(&file);
+        if legal_file_scope {
+            if let Some(a) = anns
+                .iter_mut()
+                .find(|a| a.file_scope && a.lint == lint && a.reason_ok)
+            {
+                a.used = true;
+                continue;
+            }
+        }
+        // per-site exemption
+        let site_ann = anns.iter_mut().find(|a| {
+            !a.file_scope
+                && a.lint == lint
+                && a.reason_ok
+                && ann_target(&stripped, a.line) == Some(line)
+        });
+        if let Some(a) = site_ann {
+            a.used = true;
+            if lint == "wall_clock" && !WALL_CLOCK_ALLOWED_FILES.contains(&file) {
+                out.push(Finding {
+                    file: file.to_string(),
+                    line,
+                    lint: "wall_clock",
+                    msg: format!(
+                        "`{tok}` annotated but {file} is outside the timing layer \
+                         (allowed: {}); route through util::timer::Stopwatch",
+                        WALL_CLOCK_ALLOWED_FILES.join(", ")
+                    ),
+                });
+            }
+            continue;
+        }
+        let msg = match lint {
+            "wall_clock" => format!(
+                "`{tok}` outside the annotated timing layer breaks deterministic \
+                 replay; use util::timer::Stopwatch or annotate a sanctioned site"
+            ),
+            "unordered_map" => format!(
+                "`{tok}` has seeded iteration order; use BTreeMap/BTreeSet or an \
+                 indexed Vec, or annotate a keyed-only use"
+            ),
+            _ => format!("`{tok}` allocates inside a #[loco::hot_kernel] body"),
+        };
+        out.push(Finding { file: file.to_string(), line, lint, msg });
+    }
+
+    // stale annotations: well-formed but excused nothing
+    for ann in &anns {
+        if !ann.used && ann.reason_ok && LINTS.contains(&ann.lint.as_str()) && !ann.file_scope {
+            out.push(Finding {
+                file: file.to_string(),
+                line: ann.line,
+                lint: "annotation",
+                msg: format!(
+                    "stale annotation: allow({}) covers no finding within {} lines",
+                    ann.lint, ANN_WINDOW
+                ),
+            });
+        }
+    }
+
+    out.sort();
+    out
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for
+/// deterministic output, paths relative with `/` separators.
+fn walk(root: &Path) -> Vec<String> {
+    fn rec(dir: &Path, base: &Path, out: &mut Vec<String>) {
+        let Ok(entries) = fs::read_dir(dir) else { return };
+        let mut entries: Vec<_> = entries.flatten().map(|e| e.path()).collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                rec(&p, base, out);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                let rel = p
+                    .strip_prefix(base)
+                    .unwrap_or(&p)
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                out.push(rel);
+            }
+        }
+    }
+    let mut out = Vec::new();
+    rec(root, root, &mut out);
+    out.sort();
+    out
+}
+
+/// Lint every `.rs` file under `root` (normally [`crate::src_root`]).
+/// Returns all findings plus the number of files scanned.
+pub fn lint_tree(root: &Path) -> anyhow::Result<(Vec<Finding>, usize)> {
+    let files = walk(root);
+    anyhow::ensure!(
+        !files.is_empty(),
+        "no .rs files under {} — wrong source root?",
+        root.display()
+    );
+    let mut out = Vec::new();
+    for rel in &files {
+        let text = fs::read_to_string(root.join(rel))
+            .map_err(|e| anyhow::anyhow!("reading {rel}: {e}"))?;
+        out.extend(lint_source(rel, &text));
+    }
+    Ok((out, files.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_separates_comments_and_blanks_strings() {
+        let s = strip("let x = \"Instant::now\"; // HashMap here\nlet y = 1;\n");
+        assert!(!s.code[0].contains("Instant::now"), "string contents must be blanked");
+        assert!(!s.code[0].contains("HashMap"));
+        assert!(s.comment[0].contains("HashMap here"));
+        assert!(s.code[1].contains("let y = 1;"));
+    }
+
+    #[test]
+    fn strip_handles_raw_strings_and_nested_block_comments() {
+        let s = strip(concat!(
+            "let r = r#\"HashMap \"quoted\" inside\"#;\n",
+            "/* outer /* HashSet */ still */ let z = 2;\n",
+        ));
+        assert!(!s.code.join("\n").contains("HashMap"));
+        assert!(!s.code.join("\n").contains("HashSet"));
+        assert!(s.code[1].contains("let z = 2;"));
+        assert!(s.comment[1].contains("HashSet"));
+    }
+
+    #[test]
+    fn strip_distinguishes_lifetimes_from_char_literals() {
+        let s = strip(concat!(
+            "fn f<'a>(x: &'a str) -> char { 'H' }\n",
+            "let e = '\\'';\n",
+            "let map: HashMap<u8, u8>;\n",
+        ));
+        // lifetime parsing must not swallow the following code
+        assert!(s.code[2].contains("HashMap"));
+        // char literal contents blanked
+        assert!(!s.code[0].contains("'H'"));
+        assert!(!s.code[1].contains('\\'), "escaped quote literal must be consumed whole");
+    }
+
+    #[test]
+    fn wall_clock_denied_without_annotation() {
+        let f = lint_source("x.rs", "fn f() { let t = Instant::now(); }\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].lint, "wall_clock");
+        assert_eq!(f[0].line, 1);
+        assert!(f[0].to_string().starts_with("rust/src/x.rs:1: wall_clock:"));
+    }
+
+    #[test]
+    fn wall_clock_annotation_only_valid_in_timing_layer() {
+        let src = concat!(
+            "// verify: allow(wall_clock) — totally legitimate reason here\n",
+            "let t = Instant::now();\n",
+        );
+        // annotated in an allowlisted file: clean
+        assert!(lint_source("util/timer.rs", src).is_empty());
+        // same annotation elsewhere: still a finding
+        let f = lint_source("train/mod.rs", src);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].msg.contains("outside the timing layer"));
+    }
+
+    #[test]
+    fn wall_clock_skips_cfg_test_regions() {
+        let src = concat!(
+            "fn f() {}\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    fn t() { let t0 = Instant::now(); }\n",
+            "}\n",
+        );
+        assert!(lint_source("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unordered_map_denied_even_in_tests() {
+        let src = "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n}\n";
+        let f = lint_source("x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].lint, "unordered_map");
+    }
+
+    #[test]
+    fn file_scope_allow_confined_to_reorder() {
+        let src = concat!(
+            "// verify: allow(unordered_map, file) — keyed access only, never iterated\n",
+            "use std::collections::HashMap;\n",
+            "struct S { m: HashMap<u8, u8> }\n",
+        );
+        assert!(lint_source("collective/reorder.rs", src).is_empty());
+        let f = lint_source("sim/mod.rs", src);
+        assert!(f.iter().any(|x| x.lint == "annotation" && x.msg.contains("file-scope")));
+        assert!(f.iter().any(|x| x.lint == "unordered_map"));
+    }
+
+    #[test]
+    fn hot_kernel_alloc_denied_but_amortized_ops_allowed() {
+        let src = concat!(
+            "#[loco::hot_kernel]\n",
+            "fn k(out: &mut Vec<f32>) {\n",
+            "    out.clear();\n",
+            "    out.reserve(8);\n",
+            "    out.push(1.0);\n",
+            "    let v = Vec::with_capacity(4);\n",
+            "}\n",
+            "fn cold() { let v = Vec::with_capacity(4); }\n",
+        );
+        let f = lint_source("quant/mod.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].lint, "hot_alloc");
+        assert_eq!(f[0].line, 6);
+    }
+
+    #[test]
+    fn stale_unknown_and_reasonless_annotations_are_findings() {
+        let f = lint_source(
+            "x.rs",
+            "// verify: allow(wall_clock) — a reason with no covered site below\nfn f() {}\n",
+        );
+        assert!(f.iter().any(|x| x.msg.contains("stale")));
+        let f = lint_source("x.rs", "// verify: allow(nonsense) — some reason text\nfn f() {}\n");
+        assert!(f.iter().any(|x| x.msg.contains("unknown lint")));
+        let f = lint_source(
+            "util/timer.rs",
+            "// verify: allow(wall_clock)\nlet t = Instant::now();\n",
+        );
+        assert!(f.iter().any(|x| x.msg.contains("must carry a reason")));
+    }
+
+    #[test]
+    fn annotation_inside_string_is_not_an_annotation() {
+        let src = "let s = \"verify: allow(wall_clock) — nope\";\nlet t = Instant::now();\n";
+        let f = lint_source("x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].lint, "wall_clock");
+    }
+
+    #[test]
+    fn tokens_in_comments_do_not_fire() {
+        let src = concat!(
+            "// Instant::now and HashMap and SystemTime discussed here\n",
+            "/// doc: thread::sleep\n",
+            "fn f() {}\n",
+        );
+        assert!(lint_source("x.rs", src).is_empty());
+    }
+}

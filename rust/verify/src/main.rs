@@ -1,0 +1,50 @@
+//! `cargo run -p loco-verify` — the repo's static verification gate.
+//!
+//! Runs the determinism lints over `rust/src/` and the bounded
+//! tag-namespace proof, printing findings as
+//! `rust/src/<file>:<line>: <lint>: <msg>` and exiting non-zero when
+//! anything is wrong. CI runs this on every push and additionally
+//! checks that a seeded violation makes it fail (see the `verify` job).
+
+use std::process::ExitCode;
+use std::time::Instant;
+
+fn main() -> ExitCode {
+    let t0 = Instant::now();
+    let root = loco_verify::src_root();
+    let (findings, n_files) = match loco_verify::lint::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("loco-verify: cannot lint {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    for f in &findings {
+        println!("{f}");
+    }
+    let proof = loco_verify::tags::prove_bounded();
+    let lint_ok = findings.is_empty();
+    let proof_ok = match &proof {
+        Ok(rep) => {
+            println!(
+                "tag proof: {} scenarios, {} tags, 0 collisions",
+                rep.scenarios, rep.tags_checked
+            );
+            true
+        }
+        Err(e) => {
+            println!("tag proof FAILED: {e}");
+            false
+        }
+    };
+    println!(
+        "loco-verify: {n_files} files, {} finding(s), {:.1} ms",
+        findings.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    if lint_ok && proof_ok {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,129 @@
+//! All-schedules model checks of the `NodeCtx` receive paths (the
+//! `pending`/`stash` reorder protocol), driving the production
+//! `ReorderBuffer` through every arrival interleaving — see
+//! `loco_verify::interleave` for why exhaustive enumeration is a
+//! complete check here.
+//!
+//! Every assertion below is quantified over **all** explored schedules:
+//! `explore` fails if any schedule loses a message, reorders a
+//! per-sender stream, or disagrees with any other schedule.
+
+use loco_verify::interleave::{delivered_ids, explore, Ask, Msg};
+
+/// The stale-gradient overlap: step-`s` tagged gathers still in flight
+/// while the step-`s+1` phased collective (untagged) runs, like
+/// `grad_sync = stale` with `sync_params = async`. The consumer drains
+/// the phased payloads first, then the tagged stragglers — in every
+/// schedule the delivery order must be the consumer's ask order.
+#[test]
+fn tagged_inflight_vs_untagged_phase_all_schedules() {
+    let senders = vec![
+        vec![Msg::Tagged { tag: 100, id: 1 }, Msg::Untagged { id: 2 }],
+        vec![Msg::Untagged { id: 10 }, Msg::Tagged { tag: 200, id: 11 }],
+    ];
+    let asks = vec![
+        Ask::Untagged { src: 0 },
+        Ask::Untagged { src: 1 },
+        Ask::Tagged { src: 0, tag: 100 },
+        Ask::Tagged { src: 1, tag: 200 },
+    ];
+    let n = explore(&senders, &asks, false, true).unwrap();
+    assert!(n >= 6, "two 2-message FIFO streams should merge many ways, got {n}");
+    assert_eq!(delivered_ids(&senders, &asks).unwrap(), vec![2, 10, 1, 11]);
+}
+
+/// Tagged gathers drained in the *reverse* of send order: the reorder
+/// buffer must park early arrivals and match them later, never losing
+/// or swapping them, under every interleaving.
+#[test]
+fn reverse_order_tagged_drain_all_schedules() {
+    let senders = vec![vec![
+        Msg::Tagged { tag: 7, id: 1 },
+        Msg::Tagged { tag: 8, id: 2 },
+        Msg::Tagged { tag: 9, id: 3 },
+    ]];
+    let asks = vec![
+        Ask::Tagged { src: 0, tag: 9 },
+        Ask::Tagged { src: 0, tag: 8 },
+        Ask::Tagged { src: 0, tag: 7 },
+    ];
+    explore(&senders, &asks, false, true).unwrap();
+    assert_eq!(delivered_ids(&senders, &asks).unwrap(), vec![3, 2, 1]);
+}
+
+/// The same tag value from *different* sources must never cross-match:
+/// pending is keyed by `(src, tag)`, and the prover only guarantees
+/// per-pair uniqueness, so cross-source reuse is legal and must route
+/// correctly in every schedule.
+#[test]
+fn same_tag_different_sources_never_cross_match() {
+    let senders = vec![
+        vec![Msg::Tagged { tag: 42, id: 1 }],
+        vec![Msg::Tagged { tag: 42, id: 2 }],
+        vec![Msg::Tagged { tag: 42, id: 3 }],
+    ];
+    let asks = vec![
+        Ask::Tagged { src: 2, tag: 42 },
+        Ask::Tagged { src: 0, tag: 42 },
+        Ask::Tagged { src: 1, tag: 42 },
+    ];
+    let n = explore(&senders, &asks, false, true).unwrap();
+    assert_eq!(delivered_ids(&senders, &asks).unwrap(), vec![3, 1, 2]);
+    assert!(n >= 6, "3 independent single-message streams: at least 3! merges, got {n}");
+}
+
+/// Per-sender FIFO must survive stashing: payloads from a source the
+/// consumer is not currently asking about are parked and later drained
+/// in exactly their send order, in every schedule.
+#[test]
+fn stash_preserves_fifo_across_phases() {
+    let senders = vec![
+        vec![Msg::Untagged { id: 1 }],
+        vec![Msg::Untagged { id: 10 }, Msg::Untagged { id: 11 }, Msg::Untagged { id: 12 }],
+    ];
+    let asks = vec![
+        Ask::Untagged { src: 0 },
+        Ask::Untagged { src: 1 },
+        Ask::Untagged { src: 1 },
+        Ask::Untagged { src: 1 },
+    ];
+    explore(&senders, &asks, false, true).unwrap();
+    assert_eq!(delivered_ids(&senders, &asks).unwrap(), vec![1, 10, 11, 12]);
+}
+
+/// A bigger mixed scenario: three peers, tagged and untagged traffic
+/// interleaved, asks hopping between sources and namespaces. This is
+/// the widest window the trainer opens (async params + stale grads on
+/// top of a phased collective).
+#[test]
+fn mixed_three_peer_async_window_all_schedules() {
+    let senders = vec![
+        vec![Msg::Tagged { tag: 300, id: 1 }, Msg::Untagged { id: 2 }],
+        vec![Msg::Untagged { id: 10 }, Msg::Tagged { tag: 301, id: 11 }],
+        vec![Msg::Tagged { tag: 302, id: 20 }, Msg::Untagged { id: 21 }],
+    ];
+    let asks = vec![
+        Ask::Tagged { src: 2, tag: 302 },
+        Ask::Untagged { src: 1 },
+        Ask::Untagged { src: 0 },
+        Ask::Tagged { src: 0, tag: 300 },
+        Ask::Tagged { src: 1, tag: 301 },
+        Ask::Untagged { src: 2 },
+    ];
+    let n = explore(&senders, &asks, false, true).unwrap();
+    assert_eq!(delivered_ids(&senders, &asks).unwrap(), vec![20, 10, 2, 1, 11, 21]);
+    assert!(n >= 90, "6 messages in 3 FIFO pairs: C(6;2,2,2) = 90 merges, got {n}");
+}
+
+/// Negative case: an untagged payload from the awaited source while a
+/// tagged receive is outstanding is a wire-protocol violation — and it
+/// must be *detected in every schedule*, not just unlucky ones, because
+/// untagged collectives are strictly phased (the violation is a
+/// property of the traffic, not of arrival timing).
+#[test]
+fn untagged_overtake_is_flagged_in_every_schedule() {
+    let senders = vec![vec![Msg::Untagged { id: 1 }]];
+    let asks = vec![Ask::Tagged { src: 0, tag: 5 }];
+    let n = explore(&senders, &asks, true, false).unwrap();
+    assert_eq!(n, 1);
+}
